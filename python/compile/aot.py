@@ -1,0 +1,218 @@
+"""AOT pipeline: corpus → training → weights.bin + manifest → HLO text.
+
+Runs exactly once (``make artifacts``); Python never appears on the Rust
+request path. Interchange format is HLO *text*, not a serialized
+HloModuleProto — jax ≥ 0.5 emits protos with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifact layout (consumed by rust/src/runtime + rust/src/corpus):
+
+  artifacts/
+    corpus/{chain.bin, chain_ptb.bin, train.bin, wiki.bin, ptb.bin,
+            alpaca.bin, meta.json}
+    <model>/
+      manifest.json     — config + param table + entry I/O shapes
+      weights.bin       — f32 little-endian, param_specs order
+      train_log.json    — loss curve of the build-time training run
+      <entry>.hlo.txt   — one per (entry point, shape bucket)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import corpus as corpus_mod
+from compile import model as M
+from compile import train as train_mod
+
+# Shape buckets lowered per model. GSI + Table 1 use score@(4,128); Fig 4
+# sweeps T; serving uses prefill@(1,T) and decode@(B).
+SCORE_BUCKETS = [(1, 128), (4, 64), (4, 128), (4, 256), (8, 128)]
+PROBE_BUCKETS = [(4, 128)]
+PREFILL_T = [16, 32, 64, 128]
+DECODE_B = [1, 2, 4, 8]
+
+TRAIN_PLAN = {
+    # name → (steps, batch, seqlen). Step counts sized so the induction
+    # (copy-rule) circuit emerges — see corpus.py docstring.
+    "rap-small": (600, 8, 96),
+    "qwen-sim": (420, 8, 96),
+    "rap-tiny": (600, 8, 48),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so Rust
+    unwraps a single tuple output)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_plan(cfg: M.ModelConfig):
+    """name → (fn, [input descriptors], [output descriptors])."""
+    L, H, F = cfg.n_layers, cfg.n_heads, cfg.d_ff
+    Hkv, S, Dh = cfg.n_kv_heads, cfg.max_seq, cfg.head_dim
+    gates = [("head_gate", (L, H), "f32"), ("ffn_gate", (L, F), "f32")]
+    plan = {}
+    for b, t in SCORE_BUCKETS:
+        if t > cfg.max_seq:
+            continue
+        plan[f"score_b{b}_t{t}"] = (
+            M.make_score_fn(cfg),
+            [("tokens", (b, t), "i32"), ("loss_mask", (b, t), "f32")] + gates,
+            [("nll", (b,), "f32"), ("cnt", (b,), "f32")],
+        )
+    for b, t in PROBE_BUCKETS:
+        t = min(t, cfg.max_seq)   # small models probe at their max_seq
+        plan[f"probe_b{b}_t{t}"] = (
+            M.make_probe_fn(cfg),
+            [("tokens", (b, t), "i32")] + gates,
+            [("attn_cos", (L,), "f32"), ("ffn_cos", (L,), "f32"),
+             ("head_norm", (L, H), "f32"), ("chan_norm", (L, F), "f32")],
+        )
+    for t in PREFILL_T:
+        if t > cfg.max_seq:
+            continue
+        plan[f"prefill_t{t}"] = (
+            M.make_prefill_fn(cfg),
+            [("tokens", (1, t), "i32")] + gates,
+            [("logits", (1, cfg.vocab), "f32"),
+             ("k_cache", (L, 1, Hkv, S, Dh), "f32"),
+             ("v_cache", (L, 1, Hkv, S, Dh), "f32")],
+        )
+    for b in DECODE_B:
+        plan[f"decode_b{b}"] = (
+            M.make_decode_fn(cfg),
+            [("token", (b,), "i32"), ("pos", (b,), "i32"),
+             ("k_cache", (L, b, Hkv, S, Dh), "f32"),
+             ("v_cache", (L, b, Hkv, S, Dh), "f32")] + gates,
+            [("logits", (b, cfg.vocab), "f32"),
+             ("k_cache", (L, b, Hkv, S, Dh), "f32"),
+             ("v_cache", (L, b, Hkv, S, Dh), "f32")],
+        )
+    return plan
+
+
+_DT = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def build_model(cfg: M.ModelConfig, tokens: np.ndarray | None,
+                out_root: pathlib.Path, seed: int = 0,
+                reuse_weights: bool = False):
+    out = out_root / cfg.name
+    out.mkdir(parents=True, exist_ok=True)
+
+    weights_path = out / "weights.bin"
+    if reuse_weights and weights_path.exists():
+        print(f"[aot] reusing weights for {cfg.name}", flush=True)
+        raw = np.fromfile(weights_path, np.float32)
+        params, off = {}, 0
+        for name, shape in M.param_specs(cfg):
+            n = int(np.prod(shape))
+            params[name] = jnp.asarray(raw[off:off + n].reshape(shape))
+            off += n
+    else:
+        steps, batch, seqlen = TRAIN_PLAN[cfg.name]
+        if tokens is None:
+            # rap-tiny trains on its own micro-chain (vocab differs).
+            chain = corpus_mod.build_chain(cfg.vocab, seed=4321)
+            tokens = corpus_mod.sample_tokens(chain, 60_000, seed=4322)
+        print(f"[aot] training {cfg.name} ({steps} steps, B={batch}, "
+              f"T={seqlen})", flush=True)
+        params, history = train_mod.train(cfg, tokens, steps=steps,
+                                          batch=batch, seqlen=seqlen,
+                                          seed=seed)
+        (out / "train_log.json").write_text(json.dumps(
+            {"steps": steps, "batch": batch, "seqlen": seqlen,
+             "loss": history}, indent=2))
+
+    # weights.bin + param table
+    specs = M.param_specs(cfg)
+    offset = 0
+    param_table = []
+    with open(out / "weights.bin", "wb") as f:
+        for name, shape in specs:
+            arr = np.asarray(params[name], np.float32)
+            assert arr.shape == shape, (name, arr.shape, shape)
+            f.write(arr.tobytes())
+            param_table.append({"name": name, "shape": list(shape),
+                                "dtype": "f32", "offset": offset,
+                                "nbytes": arr.nbytes})
+            offset += arr.nbytes
+
+    # lower entries
+    pspecs = [_spec(shape) for _, shape in specs]
+    entries = {}
+    for name, (fn, inputs, outputs) in entry_plan(cfg).items():
+        t0 = time.time()
+        ispecs = [_spec(shape, _DT[dt]) for _, shape, dt in inputs]
+        # keep_unused: the probe entry does not read norm_f; without this
+        # jax prunes it from the HLO signature and the Rust runtime's
+        # uniform weights-first calling convention breaks.
+        lowered = jax.jit(fn, keep_unused=True).lower(*pspecs, *ispecs)
+        text = to_hlo_text(lowered)
+        (out / f"{name}.hlo.txt").write_text(text)
+        entries[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"name": n, "shape": list(s), "dtype": d}
+                       for n, s, d in inputs],
+            "outputs": [{"name": n, "shape": list(s), "dtype": d}
+                        for n, s, d in outputs],
+        }
+        print(f"[aot]   lowered {cfg.name}/{name} "
+              f"({len(text) / 1e6:.1f} MB, {time.time() - t0:.1f}s)",
+              flush=True)
+
+    manifest = {
+        "model": cfg.to_json(),
+        "weights_file": "weights.bin",
+        "params": param_table,
+        "entries": entries,
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="rap-tiny,rap-small,qwen-sim")
+    ap.add_argument("--skip-corpus", action="store_true")
+    ap.add_argument("--reuse-weights", action="store_true",
+                    help="load existing weights.bin instead of training "
+                         "(re-lowers entries only)")
+    args = ap.parse_args()
+    out_root = pathlib.Path(args.out)
+
+    if not args.skip_corpus:
+        print("[aot] generating corpus", flush=True)
+        train_tokens = corpus_mod.generate_all(out_root / "corpus",
+                                               vocab=M.RAP_SMALL.vocab)
+    else:
+        train_tokens = np.fromfile(out_root / "corpus" / "train.bin",
+                                   np.uint16)
+
+    for name in args.models.split(","):
+        cfg = M.CONFIGS[name]
+        toks = None if cfg.vocab != M.RAP_SMALL.vocab else train_tokens
+        build_model(cfg, toks, out_root, reuse_weights=args.reuse_weights)
+    print("[aot] done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

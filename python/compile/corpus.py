@@ -1,0 +1,125 @@
+"""Synthetic structured corpus — the WikiText2/PTB/Alpaca substitute.
+
+The paper's experiments need (a) a training distribution the model can
+actually learn in a few hundred build-time steps (so block removal produces
+*graded* perplexity damage, not noise), and (b) in-domain vs. shifted eval
+splits. We use a Markov chain with an induction component:
+
+  * a sparse row-stochastic transition matrix over the vocab (each token
+    prefers ~20 Zipf-weighted successors) — learnable by the FFN/embedding
+    path alone (bigram statistics);
+  * with probability COPY_P the next token instead *copies* the token
+    COPY_LAG positions back — predictable only through attention, which
+    makes MHA blocks genuinely load-bearing (the paper's Fig. 4 block
+    heterogeneity needs both pathways to matter);
+  * splits: ``train``/``wiki-sim`` share the chain; ``ptb-sim`` interpolates
+    the chain with uniform noise (out-of-domain, higher entropy — mirrors
+    the paper's WikiText2→PTB gap); ``alpaca-sim`` is a fresh sample from
+    the training chain (the GSI calibration corpus).
+
+The chain matrix is exported to ``artifacts/corpus/chain.bin`` so the Rust
+side can deterministically generate MCQ tasks (commonsense-sim suite) and
+extra eval data with the same distribution. Everything is seeded.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+PTB_NOISE = 0.35          # uniform interpolation weight for the shifted split
+BRANCH = 20               # preferred successors per token
+COPY_P = 0.35             # probability the next token copies from the past
+COPY_LAG = 4              # copy distance (attention has to reach back)
+
+
+def build_chain(vocab: int, seed: int = 1234) -> np.ndarray:
+    """Row-stochastic transition matrix [V, V], f32."""
+    rng = np.random.default_rng(seed)
+    chain = np.zeros((vocab, vocab), np.float32)
+    ranks = np.arange(1, BRANCH + 1, dtype=np.float64)
+    zipf = (1.0 / ranks) / np.sum(1.0 / ranks)
+    for v in range(vocab):
+        succ = rng.choice(vocab, size=BRANCH, replace=False)
+        probs = rng.permutation(zipf)
+        row = np.full(vocab, 1e-4, np.float64)
+        row[succ] += probs
+        chain[v] = (row / row.sum()).astype(np.float32)
+    return chain
+
+
+def sample_tokens(chain: np.ndarray, n: int, seed: int,
+                  copy_p: float = COPY_P, copy_lag: int = COPY_LAG
+                  ) -> np.ndarray:
+    """Sample a token stream of length n (chain + copy rule)."""
+    rng = np.random.default_rng(seed)
+    vocab = chain.shape[0]
+    out = np.empty(n, np.uint16)
+    tok = rng.integers(vocab)
+    cdf = np.cumsum(chain, axis=-1)
+    for i in range(n):
+        out[i] = tok
+        if i + 1 >= copy_lag and rng.random() < copy_p:
+            tok = int(out[i + 1 - copy_lag])
+        else:
+            u = rng.random()
+            tok = int(np.searchsorted(cdf[tok], u))
+            tok = min(tok, vocab - 1)
+    return out
+
+
+def shifted_chain(chain: np.ndarray, noise: float = PTB_NOISE) -> np.ndarray:
+    """Interpolate with uniform — the 'PTB' out-of-domain distribution."""
+    vocab = chain.shape[-1]
+    uni = np.full_like(chain, 1.0 / vocab)
+    mixed = (1.0 - noise) * chain + noise * uni
+    return mixed / mixed.sum(-1, keepdims=True)
+
+
+def next_token_dist(chain: np.ndarray, context: np.ndarray,
+                    copy_p: float = COPY_P,
+                    copy_lag: int = COPY_LAG) -> np.ndarray:
+    """True predictive distribution for the token after ``context`` —
+    used by tests to sanity-check model perplexity against the oracle."""
+    vocab = chain.shape[0]
+    dist = (1.0 - copy_p) * chain[int(context[-1])].astype(np.float64)
+    if len(context) >= copy_lag:
+        d = np.zeros(vocab)
+        d[int(context[len(context) - copy_lag])] = 1.0
+        dist = dist + copy_p * d
+    else:
+        dist = dist / dist.sum()
+    return dist
+
+
+def generate_all(out_dir: pathlib.Path, vocab: int, seed: int = 1234,
+                 train_tokens: int = 400_000, eval_tokens: int = 40_000):
+    """Build chain + all splits, write artifacts, return the train stream."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    chain = build_chain(vocab, seed)
+    ptb = shifted_chain(chain)
+
+    train = sample_tokens(chain, train_tokens, seed + 1)
+    wiki = sample_tokens(chain, eval_tokens, seed + 2)
+    ptb_s = sample_tokens(ptb, eval_tokens, seed + 3)
+    alpaca = sample_tokens(chain, eval_tokens, seed + 4)
+
+    chain.tofile(out_dir / "chain.bin")
+    ptb.tofile(out_dir / "chain_ptb.bin")
+    for name, arr in [("train", train), ("wiki", wiki), ("ptb", ptb_s),
+                      ("alpaca", alpaca)]:
+        arr.tofile(out_dir / f"{name}.bin")
+    meta = {
+        "vocab": vocab,
+        "copy_p": COPY_P,
+        "copy_lag": COPY_LAG,
+        "seed": seed,
+        "splits": {"train": train_tokens, "wiki": eval_tokens,
+                   "ptb": eval_tokens, "alpaca": eval_tokens},
+        "dtype": "u16",
+        "chain_dtype": "f32",
+    }
+    (out_dir / "meta.json").write_text(json.dumps(meta, indent=2))
+    return train

@@ -1,0 +1,156 @@
+"""L1 Pallas kernels: gated causal attention (prefill) + decode attention.
+
+The paper prunes whole MHA blocks because they *create* the KV cache
+(§2.1); the attention kernel therefore takes a per-head gate so a pruned
+head (or a whole pruned layer: all heads zero) contributes nothing and —
+critically for the memory model — allocates no KV rows in the L3 cache
+manager.
+
+TPU adaptation of the usual CUDA flash kernel:
+  * grid = (heads, query tiles); the online-softmax loop walks key tiles
+    held in VMEM — BlockSpec streams [1, S, Dh] per head rather than a
+    threadblock's shared-memory staging.
+  * accumulators (m, l, acc) live in registers/VMEM scratch across the
+    fori_loop, the standard flash recurrence.
+
+GQA is handled one level up (L2 expands KV heads to query heads before the
+call) to keep the kernel's index map affine. ``interpret=True`` throughout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, g_ref, o_ref, *, key_tile: int,
+                 seq_len: int, q_len: int):
+    """One (head, query-tile) grid step with online softmax over key tiles.
+
+    q_ref [1, Tq, Dh]; k_ref/v_ref [1, S, Dh]; g_ref [1, 1]; o_ref [1, Tq, Dh].
+    """
+    i = pl.program_id(1)
+    tq = q_ref.shape[1]
+    dh = q_ref.shape[2]
+    q = q_ref[0, :, :]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    qpos = i * tq + jax.lax.iota(jnp.int32, tq) + (seq_len - q_len)
+
+    n_kt = seq_len // key_tile
+
+    def body(kt, carry):
+        m_prev, l_prev, acc = carry
+        k = jax.lax.dynamic_slice(k_ref[0, :, :], (kt * key_tile, 0),
+                                  (key_tile, dh))
+        v = jax.lax.dynamic_slice(v_ref[0, :, :], (kt * key_tile, 0),
+                                  (key_tile, dh))
+        s = (q @ k.T) * scale                      # [Tq, Kt]
+        kpos = kt * key_tile + jax.lax.iota(jnp.int32, key_tile)
+        causal = kpos[None, :] <= qpos[:, None]
+        s = jnp.where(causal, s, _NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc
+
+    m0 = jnp.full((tq,), _NEG_INF, q.dtype)
+    l0 = jnp.zeros((tq,), q.dtype)
+    a0 = jnp.zeros((tq, dh), q.dtype)
+    _, l, acc = jax.lax.fori_loop(0, n_kt, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-20)[:, None]
+    o_ref[0, :, :] = out * g_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("q_tile", "key_tile"))
+def gated_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    head_gate: jax.Array, q_tile: int = 128,
+                    key_tile: int = 128) -> jax.Array:
+    """Causal multi-head attention with per-head gates via Pallas.
+
+    q [H, T, Dh]; k, v [H, S, Dh] (already expanded to query heads);
+    head_gate [H]. Returns [H, T, Dh]. Matches ``ref.attention_ref``
+    (after GQA expansion) exactly.
+    """
+    h, t, dh = q.shape
+    s = k.shape[1]
+
+    def pick(n, target):
+        w = min(n, target)
+        while n % w != 0:
+            w -= 1
+        return w
+
+    tq = pick(t, q_tile)
+    kt = pick(s, key_tile)
+    grid = (h, t // tq)
+    gate2d = head_gate.reshape(h, 1)
+    kern = functools.partial(_attn_kernel, key_tile=kt, seq_len=s, q_len=t)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, dh), lambda hh, i: (hh, i, 0)),
+            pl.BlockSpec((1, s, dh), lambda hh, i: (hh, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda hh, i: (hh, 0, 0)),
+            pl.BlockSpec((1, 1), lambda hh, i: (hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, dh), lambda hh, i: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, gate2d)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, m_ref, g_ref, o_ref):
+    """One head of single-token decode attention.
+
+    q_ref [1, Dh]; k_ref/v_ref [1, S, Dh]; m_ref [1, S] validity mask
+    (1 = valid cache row); g_ref [1, 1]; o_ref [1, Dh].
+    """
+    dh = q_ref.shape[1]
+    q = q_ref[0, :]
+    k = k_ref[0, :, :]
+    v = v_ref[0, :, :]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    s = (k @ q) * scale                           # [S]
+    s = jnp.where(m_ref[0, :] > 0, s, _NEG_INF)
+    m = jnp.max(s)
+    p = jnp.exp(s - m)
+    out = (p @ v) / jnp.maximum(jnp.sum(p), 1e-20)
+    o_ref[0, :] = out * g_ref[0, 0]
+
+
+@jax.jit
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     valid_mask: jax.Array, head_gate: jax.Array) -> jax.Array:
+    """Single-token decode attention with per-head gates via Pallas.
+
+    q [H, Dh]; k_cache, v_cache [H, S, Dh] (expanded to query heads);
+    valid_mask [S] (1.0 for rows < current length); head_gate [H].
+    Returns [H, Dh]. Matches ``ref.decode_attention_ref``.
+    """
+    h, dh = q.shape
+    s = k_cache.shape[1]
+    mask2d = jnp.broadcast_to(valid_mask.reshape(1, s), (h, s))
+    gate2d = head_gate.reshape(h, 1)
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, dh), lambda hh: (hh, 0)),
+            pl.BlockSpec((1, s, dh), lambda hh: (hh, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda hh: (hh, 0, 0)),
+            pl.BlockSpec((1, s), lambda hh: (hh, 0)),
+            pl.BlockSpec((1, 1), lambda hh: (hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda hh: (hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, dh), q.dtype),
+        interpret=True,
+    )(q, k_cache, v_cache, mask2d, gate2d)

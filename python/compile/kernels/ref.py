@@ -1,0 +1,83 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float assoc.)
+counterpart here; ``python/tests/test_kernel.py`` asserts allclose between
+the two across a hypothesis-driven sweep of shapes/dtypes. These refs are
+also what the L2 model uses when ``use_pallas=False`` (debug path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gated_ffn_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                  w_down: jax.Array, chan_gate: jax.Array) -> jax.Array:
+    """SwiGLU FFN with per-channel gating.
+
+    x:         [T, D]
+    w_gate:    [D, F]    (SwiGLU "gate" projection)
+    w_up:      [D, F]
+    w_down:    [F, D]
+    chan_gate: [F]       multiplicative channel mask (0 = pruned channel)
+
+    Returns [T, D].
+    """
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = h * chan_gate[None, :]
+    return h @ w_down
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  head_gate: jax.Array, causal: bool = True) -> jax.Array:
+    """Multi-head attention with per-head gating.
+
+    q: [H, T, Dh]; k, v: [Hkv, S, Dh]; head_gate: [H].
+    GQA: query head h attends to kv head h // (H // Hkv).
+    Returns [H, T, Dh] with gated heads zeroed.
+    """
+    hq, t, dh = q.shape
+    hkv, s, _ = k.shape
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    logits = jnp.einsum("htd,hsd->hts", q, k) * scale
+    if causal:
+        # positions: query i (absolute s - t + i) sees keys <= that position
+        qpos = jnp.arange(t)[:, None] + (s - t)
+        kpos = jnp.arange(s)[None, :]
+        mask = kpos <= qpos
+        logits = jnp.where(mask[None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hts,hsd->htd", probs, v)
+    return out * head_gate[:, None, None]
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         length: jax.Array, head_gate: jax.Array) -> jax.Array:
+    """Single-token decode attention against a cache.
+
+    q: [H, Dh]; k_cache, v_cache: [Hkv, S, Dh]; length: scalar i32 (#valid
+    cache rows, including the current token already written); head_gate: [H].
+    Returns [H, Dh].
+    """
+    hq, dh = q.shape
+    hkv, s, _ = k_cache.shape
+    group = hq // hkv
+    k = jnp.repeat(k_cache, group, axis=0)
+    v = jnp.repeat(v_cache, group, axis=0)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    logits = jnp.einsum("hd,hsd->hs", q, k) * scale
+    valid = jnp.arange(s)[None, :] < length
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hs,hsd->hd", probs, v)
+    return out * head_gate[:, None]
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w

@@ -1,0 +1,375 @@
+"""L2: the gated transformer LM (JAX, build-time only).
+
+A single compiled HLO must serve *every* pruning configuration RAP's
+controller can pick, so the forward pass takes two multiplier tensors:
+
+  head_gate f32[L, H]   per-head attention gates (a pruned MHA block is a
+                        row of zeros: its output vanishes and — in the L3
+                        memory model — its KV cache is never allocated)
+  ffn_gate  f32[L, F]   per-FFN-channel gates (a pruned FFN block is a row
+                        of zeros; channel-granular baselines such as
+                        LLMPruner-sim / SliceGPT-sim gate subsets)
+
+Architecture: pre-norm decoder (RMSNorm), rotary embeddings, SwiGLU FFN,
+optional GQA (n_kv_heads < n_heads), tied input/output embedding — the
+Llama-family shape the paper evaluates.
+
+Entry points lowered by ``aot.py`` (HLO text → Rust/PJRT):
+  score   — per-sequence masked NLL (perplexity + MCQ scoring + GSI)
+  probe   — per-block cosine-similarity / activation-norm statistics that
+            the Rust baselines (ShortGPT, MHA-Drop, FFN-Skip, LLMPruner-sim)
+            consume
+  prefill — single-sequence prompt pass producing the KV cache
+  decode  — batched single-token step with per-sequence positions
+
+Weights are HLO *parameters* (never baked constants) in the fixed order of
+``param_specs``; Rust loads ``weights.bin`` via the manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention, gated_attention
+from compile.kernels.gated_ffn import gated_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description (mirrored by rust/src/model_meta)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    max_seq: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+# The two model families we reproduce the paper's tables with (see
+# DESIGN.md §6 for the Llama-7B → rap-small substitution argument).
+RAP_SMALL = ModelConfig(name="rap-small", vocab=512, d_model=256,
+                        n_layers=12, n_heads=8, n_kv_heads=8, d_ff=1024,
+                        max_seq=256)
+QWEN_SIM = ModelConfig(name="qwen-sim", vocab=512, d_model=256, n_layers=8,
+                       n_heads=8, n_kv_heads=2, d_ff=768, max_seq=256)
+RAP_TINY = ModelConfig(name="rap-tiny", vocab=64, d_model=64, n_layers=3,
+                       n_heads=4, n_kv_heads=2, d_ff=128, max_seq=64)
+
+CONFIGS = {c.name: c for c in (RAP_SMALL, QWEN_SIM, RAP_TINY)}
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Fixed (name, shape) order — the HLO parameter order and the
+    ``weights.bin`` layout both follow this list exactly."""
+    L, D, F = cfg.n_layers, cfg.d_model, cfg.d_ff
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return [
+        ("embed", (cfg.vocab, D)),
+        ("norm_f", (D,)),
+        ("attn_norm", (L, D)),
+        ("wq", (L, D, H * Dh)),
+        ("wk", (L, D, Hkv * Dh)),
+        ("wv", (L, D, Hkv * Dh)),
+        ("wo", (L, H * Dh, D)),
+        ("ffn_norm", (L, D)),
+        ("w_gate", (L, D, F)),
+        ("w_up", (L, D, F)),
+        ("w_down", (L, F, D)),
+    ]
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, jax.Array]:
+    """Scaled-normal init (0.02, with 1/sqrt(2L) residual-out scaling)."""
+    params = {}
+    resid_scale = 1.0 / jnp.sqrt(2.0 * cfg.n_layers)
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name in ("norm_f", "attn_norm", "ffn_norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            w = jax.random.normal(sub, shape, jnp.float32) * 0.02
+            if name in ("wo", "w_down"):
+                w = w * resid_scale
+            params[name] = w
+    return params
+
+
+def _rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x [..., T, Dh]; pos broadcastable to x's T axis."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[..., None] * freqs                       # [..., T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+def _expand_kv(k: jax.Array, group: int) -> jax.Array:
+    """[Hkv, ...] → [H, ...] by repeating each kv head ``group`` times."""
+    return jnp.repeat(k, group, axis=0)
+
+
+def _forward_seq(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                 head_gate: jax.Array, ffn_gate: jax.Array,
+                 use_pallas: bool, collect: bool):
+    """Full-sequence forward for ONE example.
+
+    tokens [T] i32. Returns (hidden [T, D], stats or None, (k, v) caches
+    [L, Hkv, T, Dh]).
+    """
+    T = tokens.shape[0]
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    group = H // Hkv
+    pos = jnp.arange(T, dtype=jnp.float32)
+    x = params["embed"][tokens]
+
+    layer_xs = (
+        {k: params[k] for k in ("attn_norm", "wq", "wk", "wv", "wo",
+                                "ffn_norm", "w_gate", "w_up", "w_down")},
+        head_gate, ffn_gate,
+    )
+
+    def body(x, inputs):
+        lp, hg, fg = inputs
+        a_in = ref.rmsnorm_ref(x, lp["attn_norm"], cfg.norm_eps)
+        q = (a_in @ lp["wq"]).reshape(T, H, Dh).transpose(1, 0, 2)
+        k = (a_in @ lp["wk"]).reshape(T, Hkv, Dh).transpose(1, 0, 2)
+        v = (a_in @ lp["wv"]).reshape(T, Hkv, Dh).transpose(1, 0, 2)
+        q = _rope(q, pos, cfg.rope_theta)
+        k = _rope(k, pos, cfg.rope_theta)
+        if use_pallas:
+            heads = gated_attention(q, _expand_kv(k, group),
+                                    _expand_kv(v, group), hg)
+        else:
+            heads = ref.attention_ref(q, k, v, hg)
+        attn_out = heads.transpose(1, 0, 2).reshape(T, H * Dh) @ lp["wo"]
+        x1 = x + attn_out
+        f_in = ref.rmsnorm_ref(x1, lp["ffn_norm"], cfg.norm_eps)
+        if use_pallas:
+            ffn_out = gated_ffn(f_in, lp["w_gate"], lp["w_up"],
+                                lp["w_down"], fg)
+        else:
+            ffn_out = ref.gated_ffn_ref(f_in, lp["w_gate"], lp["w_up"],
+                                        lp["w_down"], fg)
+        x2 = x1 + ffn_out
+
+        stats = None
+        if collect:
+            def cos(a, b):
+                num = jnp.sum(a * b, -1)
+                den = (jnp.linalg.norm(a, axis=-1)
+                       * jnp.linalg.norm(b, axis=-1))
+                return jnp.mean(num / jnp.maximum(den, 1e-9))
+
+            h_act = jax.nn.silu(f_in @ lp["w_gate"]) * (f_in @ lp["w_up"])
+            stats = (
+                cos(x, x1),                                    # attn_cos
+                cos(x1, x2),                                   # ffn_cos
+                jnp.mean(jnp.linalg.norm(heads, axis=-1), 1),  # head_norm [H]
+                jnp.mean(jnp.abs(h_act), axis=0),              # chan_norm [F]
+            )
+        return x2, (stats, k, v)
+
+    x, (stats, ks, vs) = jax.lax.scan(body, x, layer_xs)
+    x = ref.rmsnorm_ref(x, params["norm_f"], cfg.norm_eps)
+    return x, stats, (ks, vs)
+
+
+def _logits(cfg: ModelConfig, params: dict, hidden: jax.Array) -> jax.Array:
+    """Tied-embedding readout."""
+    return hidden @ params["embed"].T
+
+
+# --------------------------------------------------------------------------
+# Lowered entry points. Each takes the flat parameter list first (in
+# param_specs order), then runtime inputs — aot.py lowers them positionally.
+# --------------------------------------------------------------------------
+
+def make_score_fn(cfg: ModelConfig, use_pallas: bool = True):
+    """(params…, tokens i32[B,T], loss_mask f32[B,T], head_gate, ffn_gate)
+    → (per_seq_nll f32[B], per_seq_cnt f32[B]).
+
+    ``loss_mask[b, t]`` weights the NLL of predicting ``tokens[b, t]`` from
+    its prefix (position 0 can never be a target). Perplexity harness: mask
+    = 1 everywhere except column 0; MCQ harness: mask = 1 on ending tokens.
+    """
+    names = [n for n, _ in param_specs(cfg)]
+
+    def fn(*args):
+        params = dict(zip(names, args[:len(names)]))
+        tokens, loss_mask, head_gate, ffn_gate = args[len(names):]
+
+        def one(tok, mask):
+            h, _, _ = _forward_seq(cfg, params, tok, head_gate, ffn_gate,
+                                   use_pallas, collect=False)
+            logits = _logits(cfg, params, h)            # [T, V]
+            logp = jax.nn.log_softmax(logits[:-1], axis=-1)
+            tgt = tok[1:]
+            nll = -jnp.take_along_axis(logp, tgt[:, None], axis=-1)[:, 0]
+            m = mask[1:]
+            return jnp.sum(nll * m), jnp.sum(m)
+
+        nlls, cnts = jax.vmap(one)(tokens, loss_mask)
+        return nlls, cnts
+
+    return fn
+
+
+def make_probe_fn(cfg: ModelConfig):
+    """(params…, tokens i32[B,T], head_gate, ffn_gate) →
+    (attn_cos f32[L], ffn_cos f32[L], head_norm f32[L,H], chan_norm f32[L,F])
+
+    Block-redundancy statistics averaged over the batch; consumed by the
+    Rust baseline importance scorers (ShortGPT / MHA-Drop / FFN-Skip use
+    the cosine similarities, LLMPruner-sim the activation norms). Ref path
+    only — diagnostics, not the serving hot path.
+    """
+    names = [n for n, _ in param_specs(cfg)]
+
+    def fn(*args):
+        params = dict(zip(names, args[:len(names)]))
+        tokens, head_gate, ffn_gate = args[len(names):]
+
+        def one(tok):
+            _, stats, _ = _forward_seq(cfg, params, tok, head_gate,
+                                       ffn_gate, use_pallas=False,
+                                       collect=True)
+            return stats
+
+        a_cos, f_cos, h_norm, c_norm = jax.vmap(one)(tokens)
+        return (jnp.mean(a_cos, 0), jnp.mean(f_cos, 0),
+                jnp.mean(h_norm, 0), jnp.mean(c_norm, 0))
+
+    return fn
+
+
+def make_prefill_fn(cfg: ModelConfig, use_pallas: bool = True):
+    """(params…, tokens i32[1,T], head_gate, ffn_gate) →
+    (logits f32[1,V], k_cache f32[L,1,Hkv,S,Dh], v_cache …)
+
+    Single-sequence prompt pass; caches are right-padded to S = max_seq so
+    the Rust KV manager can splice them into decode batches.
+    """
+    names = [n for n, _ in param_specs(cfg)]
+    S = cfg.max_seq
+
+    def fn(*args):
+        params = dict(zip(names, args[:len(names)]))
+        tokens, head_gate, ffn_gate = args[len(names):]
+        tok = tokens[0]
+        T = tok.shape[0]
+        h, _, (ks, vs) = _forward_seq(cfg, params, tok, head_gate, ffn_gate,
+                                      use_pallas, collect=False)
+        logits = _logits(cfg, params, h[-1:])           # [1, V]
+        # ks/vs: [L, Hkv, T, Dh] → pad to [L, 1, Hkv, S, Dh]
+        pad = [(0, 0), (0, 0), (0, S - T), (0, 0)]
+        k_cache = jnp.pad(ks, pad)[:, None]
+        v_cache = jnp.pad(vs, pad)[:, None]
+        return logits, k_cache, v_cache
+
+    return fn
+
+
+def make_decode_fn(cfg: ModelConfig, use_pallas: bool = True):
+    """(params…, token i32[B], pos i32[B], k_cache f32[L,B,Hkv,S,Dh],
+    v_cache …, head_gate, ffn_gate) → (logits f32[B,V], k_cache', v_cache')
+
+    One autoregressive step for a continuous-batching decode batch;
+    ``pos[b]`` is the index the new token is written at (sequence b has
+    pos[b] prior tokens in the cache).
+    """
+    names = [n for n, _ in param_specs(cfg)]
+    S = cfg.max_seq
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    group = H // Hkv
+
+    def fn(*args):
+        params = dict(zip(names, args[:len(names)]))
+        token, pos, k_cache, v_cache, head_gate, ffn_gate = args[len(names):]
+        x = params["embed"][token]                      # [B, D]
+        fpos = pos.astype(jnp.float32)
+
+        layer_xs = (
+            {k: params[k] for k in ("attn_norm", "wq", "wk", "wv", "wo",
+                                    "ffn_norm", "w_gate", "w_up", "w_down")},
+            head_gate, ffn_gate, k_cache, v_cache,
+        )
+
+        def body(x, inputs):
+            lp, hg, fg, kc, vc = inputs                 # kc/vc [B,Hkv,S,Dh]
+            a_in = ref.rmsnorm_ref(x, lp["attn_norm"], cfg.norm_eps)
+            q = (a_in @ lp["wq"]).reshape(-1, H, Dh)    # [B, H, Dh]
+            k = (a_in @ lp["wk"]).reshape(-1, Hkv, Dh)
+            v = (a_in @ lp["wv"]).reshape(-1, Hkv, Dh)
+            q = _rope(q, fpos[:, None], cfg.rope_theta)
+            k = _rope(k, fpos[:, None], cfg.rope_theta)
+
+            def upd(cache_b, new_b, p):
+                return jax.lax.dynamic_update_slice(
+                    cache_b, new_b[:, None, :], (0, p, 0))
+
+            kc = jax.vmap(upd)(kc, k, pos)
+            vc = jax.vmap(upd)(vc, v, pos)
+            valid = (jnp.arange(S)[None, :] <= pos[:, None]).astype(
+                jnp.float32)                            # [B, S]
+
+            def attn_one(q_b, kc_b, vc_b, valid_b):
+                kx = _expand_kv(kc_b, group)
+                vx = _expand_kv(vc_b, group)
+                if use_pallas:
+                    return decode_attention(q_b, kx, vx, valid_b, hg)
+                length = jnp.sum(valid_b).astype(jnp.int32)
+                return ref.decode_attention_ref(q_b, kc_b, vc_b, length, hg)
+
+            heads = jax.vmap(attn_one)(q, kc, vc, valid)  # [B, H, Dh]
+            attn_out = heads.reshape(-1, H * Dh) @ lp["wo"]
+            x1 = x + attn_out
+            f_in = ref.rmsnorm_ref(x1, lp["ffn_norm"], cfg.norm_eps)
+            ffn_out = ref.gated_ffn_ref(f_in, lp["w_gate"], lp["w_up"],
+                                        lp["w_down"], fg)
+            return x1 + ffn_out, (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(body, x, layer_xs)
+        x = ref.rmsnorm_ref(x, params["norm_f"], cfg.norm_eps)
+        return _logits(cfg, params, x), k_new, v_new
+
+    return fn
+
+
+def make_loss_fn(cfg: ModelConfig):
+    """Training loss (build-time only): mean next-token NLL over the batch."""
+
+    def loss(params: dict, tokens: jax.Array) -> jax.Array:
+        hg = jnp.ones((cfg.n_layers, cfg.n_heads), jnp.float32)
+        fg = jnp.ones((cfg.n_layers, cfg.d_ff), jnp.float32)
+
+        def one(tok):
+            h, _, _ = _forward_seq(cfg, params, tok, hg, fg,
+                                   use_pallas=False, collect=False)
+            logits = _logits(cfg, params, h)
+            logp = jax.nn.log_softmax(logits[:-1], axis=-1)
+            nll = -jnp.take_along_axis(logp, tok[1:, None], axis=-1)[:, 0]
+            return jnp.mean(nll)
+
+        return jnp.mean(jax.vmap(one)(tokens))
+
+    return loss

@@ -1,0 +1,69 @@
+"""Build-time training of the substitute LMs (see DESIGN.md §6).
+
+Hand-rolled Adam (no optax dependency), jitted update step, linear warmup +
+cosine decay. This runs exactly once under ``make artifacts``; nothing here
+is on the serving path. The point is to give the model a *learned*
+distribution so that the paper's quantities — perplexity deltas under block
+removal, GSI orderings, commonsense-sim accuracy — are meaningful signals
+rather than noise around a random-init model.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import ModelConfig, init_params, make_loss_fn
+
+
+def batches(tokens: np.ndarray, batch: int, seqlen: int, steps: int,
+            seed: int):
+    """Yield [batch, seqlen] i32 windows sampled uniformly from the stream."""
+    rng = np.random.default_rng(seed)
+    hi = len(tokens) - seqlen - 1
+    for _ in range(steps):
+        idx = rng.integers(0, hi, size=batch)
+        yield np.stack([tokens[i:i + seqlen] for i in idx]).astype(np.int32)
+
+
+def train(cfg: ModelConfig, tokens: np.ndarray, steps: int = 250,
+          batch: int = 8, seqlen: int = 128, lr: float = 3e-3,
+          warmup: int = 20, seed: int = 0, log_every: int = 25):
+    """Train and return (params, loss_history)."""
+    loss_fn = make_loss_fn(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def update(params, m, v, batch_tokens, step):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch_tokens)
+        t = step + 1.0
+        sched = jnp.minimum(t / warmup, 1.0) * 0.5 * (
+            1.0 + jnp.cos(jnp.pi * jnp.minimum(t / steps, 1.0)))
+        lr_t = lr * jnp.maximum(sched, 0.05)
+        b1, b2, eps = 0.9, 0.95, 1e-8
+        m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+        v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+        mh = jax.tree.map(lambda a: a / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda a: a / (1 - b2 ** t), v)
+        params = jax.tree.map(
+            lambda p, a, b: p - lr_t * a / (jnp.sqrt(b) + eps),
+            params, mh, vh)
+        return params, m, v, loss
+
+    history = []
+    t0 = time.time()
+    for step, bt in enumerate(batches(tokens, batch, seqlen, steps, seed)):
+        params, m, v, loss = update(params, m, v, jnp.asarray(bt),
+                                    jnp.asarray(float(step)))
+        if step % log_every == 0 or step == steps - 1:
+            lv = float(loss)
+            history.append((step, lv))
+            print(f"  [{cfg.name}] step {step:4d} loss {lv:.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    return params, history

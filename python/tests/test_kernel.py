@@ -1,0 +1,194 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis is not available in this image, so the shape/dtype sweep is an
+explicit parameterized grid plus a seeded random-case fuzz loop — same
+coverage intent: many shapes, gating patterns, GQA group sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention, gated_attention
+from compile.kernels.gated_ffn import gated_ffn
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------- FFN --
+
+FFN_GRID = [
+    # (T, D, F, gate_keep_prob)
+    (8, 16, 32, 1.0),
+    (64, 32, 96, 0.7),
+    (128, 64, 256, 0.5),
+    (96, 48, 144, 0.0),     # fully pruned block
+    (256, 128, 512, 0.9),
+    (1, 16, 48, 0.5),       # single row
+]
+
+
+@pytest.mark.parametrize("t,d,f,keep", FFN_GRID)
+def test_gated_ffn_matches_ref(t, d, f, keep):
+    k = keys(t * 7 + d, 5)
+    x = rand(k[0], t, d)
+    wg, wu, wd = rand(k[1], d, f), rand(k[2], d, f), rand(k[3], f, d)
+    gate = (jax.random.uniform(k[4], (f,)) < keep).astype(jnp.float32)
+    out = gated_ffn(x, wg, wu, wd, gate)
+    want = ref.gated_ffn_ref(x, wg, wu, wd, gate)
+    # tolerance scales with the accumulation magnitude (outputs are
+    # O(d*sqrt(f)) with unit-normal inputs; tile-order reassociation
+    # perturbs the low bits)
+    scale = float(jnp.max(jnp.abs(want))) + 1.0
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-5 * scale)
+
+
+def test_gated_ffn_fully_pruned_is_zero():
+    k = keys(3, 4)
+    x, wg, wu, wd = rand(k[0], 16, 8), rand(k[1], 8, 24), \
+        rand(k[2], 8, 24), rand(k[3], 24, 8)
+    out = gated_ffn(x, wg, wu, wd, jnp.zeros(24))
+    np.testing.assert_allclose(out, jnp.zeros((16, 8)), atol=1e-7)
+
+
+def test_gated_ffn_tile_sizes_do_not_change_result():
+    k = keys(4, 5)
+    x = rand(k[0], 64, 32)
+    wg, wu, wd = rand(k[1], 32, 96), rand(k[2], 32, 96), rand(k[3], 96, 32)
+    gate = (jax.random.uniform(k[4], (96,)) < 0.6).astype(jnp.float32)
+    a = gated_ffn(x, wg, wu, wd, gate, row_tile=16, chan_tile=24)
+    b = gated_ffn(x, wg, wu, wd, gate, row_tile=64, chan_tile=96)
+    scale = float(jnp.max(jnp.abs(b))) + 1.0
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5 * scale)
+
+
+def test_gated_ffn_fuzz():
+    rng = np.random.default_rng(0)
+    for case in range(8):
+        t = int(rng.integers(1, 96))
+        d = int(rng.choice([8, 16, 32]))
+        f = int(rng.choice([24, 48, 96]))
+        k = keys(1000 + case, 5)
+        x = rand(k[0], t, d)
+        wg, wu, wd = rand(k[1], d, f), rand(k[2], d, f), rand(k[3], f, d)
+        gate = (jax.random.uniform(k[4], (f,)) < rng.random()).astype(
+            jnp.float32)
+        np.testing.assert_allclose(
+            gated_ffn(x, wg, wu, wd, gate),
+            ref.gated_ffn_ref(x, wg, wu, wd, gate), rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------------------------- attention --
+
+ATTN_GRID = [
+    # (H, Hkv, T, Dh, gate_pattern)
+    (4, 4, 32, 16, "all"),
+    (4, 2, 64, 16, "half"),
+    (8, 8, 128, 32, "one"),
+    (8, 2, 96, 8, "none"),
+    (2, 1, 16, 4, "all"),
+]
+
+
+def make_gate(h, pattern, key):
+    if pattern == "all":
+        return jnp.ones(h)
+    if pattern == "none":
+        return jnp.zeros(h)
+    if pattern == "one":
+        return jnp.zeros(h).at[h // 2].set(1.0)
+    return (jax.random.uniform(key, (h,)) < 0.5).astype(jnp.float32)
+
+
+@pytest.mark.parametrize("h,hkv,t,dh,pattern", ATTN_GRID)
+def test_gated_attention_matches_ref(h, hkv, t, dh, pattern):
+    k = keys(h * 31 + t, 4)
+    q = rand(k[0], h, t, dh)
+    kk = rand(k[1], hkv, t, dh)
+    vv = rand(k[2], hkv, t, dh)
+    gate = make_gate(h, pattern, k[3])
+    group = h // hkv
+    out = gated_attention(q, jnp.repeat(kk, group, 0),
+                          jnp.repeat(vv, group, 0), gate)
+    want = ref.attention_ref(q, kk, vv, gate)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_is_causal():
+    # Changing a future token must not change earlier outputs.
+    k = keys(9, 3)
+    h, t, dh = 2, 32, 8
+    q, kk, vv = rand(k[0], h, t, dh), rand(k[1], h, t, dh), \
+        rand(k[2], h, t, dh)
+    gate = jnp.ones(h)
+    base = gated_attention(q, kk, vv, gate)
+    kk2 = kk.at[:, -1, :].add(100.0)
+    vv2 = vv.at[:, -1, :].add(100.0)
+    pert = gated_attention(q, kk2, vv2, gate)
+    np.testing.assert_allclose(base[:, :-1], pert[:, :-1], rtol=1e-5,
+                               atol=1e-5)
+    assert not np.allclose(base[:, -1], pert[:, -1])
+
+
+def test_attention_query_tiling_invariant():
+    k = keys(10, 3)
+    h, t, dh = 4, 64, 16
+    q, kk, vv = rand(k[0], h, t, dh), rand(k[1], h, t, dh), \
+        rand(k[2], h, t, dh)
+    gate = jnp.ones(h)
+    a = gated_attention(q, kk, vv, gate, q_tile=16, key_tile=16)
+    b = gated_attention(q, kk, vv, gate, q_tile=64, key_tile=64)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+DECODE_GRID = [
+    (4, 2, 32, 16, 5),
+    (8, 8, 64, 8, 63),
+    (2, 1, 16, 4, 1),
+]
+
+
+@pytest.mark.parametrize("h,hkv,s,dh,length", DECODE_GRID)
+def test_decode_attention_matches_ref(h, hkv, s, dh, length):
+    k = keys(h * 13 + s, 4)
+    q = rand(k[0], h, dh)
+    kc = rand(k[1], hkv, s, dh)
+    vc = rand(k[2], hkv, s, dh)
+    gate = make_gate(h, "half", k[3])
+    valid = (jnp.arange(s) < length).astype(jnp.float32)
+    group = h // hkv
+    out = decode_attention(q, jnp.repeat(kc, group, 0),
+                           jnp.repeat(vc, group, 0), valid, gate)
+    want = ref.decode_attention_ref(q, kc, vc, jnp.int32(length), gate)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_ignores_invalid_rows():
+    k = keys(11, 3)
+    h, s, dh = 2, 16, 4
+    q = rand(k[0], h, dh)
+    kc, vc = rand(k[1], h, s, dh), rand(k[2], h, s, dh)
+    valid = (jnp.arange(s) < 4).astype(jnp.float32)
+    gate = jnp.ones(h)
+    base = decode_attention(q, kc, vc, valid, gate)
+    # garbage beyond the valid length must not matter
+    kc2 = kc.at[:, 10:, :].set(1e6)
+    vc2 = vc.at[:, 10:, :].set(-1e6)
+    pert = decode_attention(q, kc2, vc2, valid, gate)
+    np.testing.assert_allclose(base, pert, rtol=1e-6, atol=1e-6)
+
+
+def test_rmsnorm_ref_unit_norm():
+    k = keys(12, 1)
+    x = rand(k[0], 8, 32) * 10.0
+    out = ref.rmsnorm_ref(x, jnp.ones(32))
+    rms = jnp.sqrt(jnp.mean(out * out, axis=-1))
+    np.testing.assert_allclose(rms, jnp.ones(8), rtol=1e-3)

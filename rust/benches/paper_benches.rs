@@ -1,0 +1,148 @@
+//! Benchmark harness (criterion-free: in-tree mini harness, see
+//! `rap::util::bench`). One section per paper-relevant hot path:
+//!
+//!   runtime  — score / probe / prefill / decode entry latency (the L2+L1
+//!              compute the paper's Table 1 and Fig 11 depend on)
+//!   serving  — KV gather/scatter (the L3 hot loop)
+//!   control  — warm policy decision, DQN forward (Fig 11)
+//!   substrate— memory model, mask ops, JSON parse, PRNG
+//!
+//! Run with: cargo bench    (results land in bench_output.txt via make)
+
+use rap::corpus::{Corpus, Split};
+use rap::mask::PruneMask;
+use rap::memory::{MemoryModel, Workload};
+use rap::runtime::Runtime;
+use rap::server::kv::KvManager;
+use rap::util::bench::{bench, black_box};
+use rap::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let root = rap::artifacts_dir();
+    let have = root.join("rap-small/manifest.json").exists();
+    println!("== rap paper benches ==");
+
+    // ---------------- substrate (always available) ----------------
+    {
+        let meta =
+            rap::model_meta::ModelMeta::synthetic("b", 12, 256, 8, 8,
+                                                  1024, 512, 256);
+        let mem = MemoryModel::new(&meta);
+        let mask = PruneMask::full(&meta);
+        let w = Workload::new(16, 256);
+        println!("{}", bench("memory_model/peak_bytes", 0.3, 100_000,
+                             || {
+            black_box(mem.peak_bytes(black_box(&mask), w));
+        }).report());
+        println!("{}", bench("mask/key_hash", 0.3, 100_000, || {
+            black_box(black_box(&mask).key());
+        }).report());
+        let mut rng = Rng::new(1);
+        println!("{}", bench("rng/normal", 0.2, 1_000_000, || {
+            black_box(rng.normal());
+        }).report());
+        let json_src = std::fs::read_to_string(
+            root.join("rap-small/manifest.json")).unwrap_or_else(
+            |_| "{\"a\": [1,2,3]}".into());
+        println!("{}", bench("json/parse_manifest", 0.3, 10_000, || {
+            black_box(rap::util::json::Json::parse(&json_src).unwrap());
+        }).report());
+    }
+
+    if !have {
+        println!("(artifacts missing — runtime benches skipped)");
+        return Ok(());
+    }
+
+    // ---------------- runtime entries ----------------
+    let mut rt = Runtime::load(&root, "rap-small")?;
+    let corpus = Corpus::load(&root.join("corpus"))?;
+    let meta = rt.meta().clone();
+    let mask = PruneMask::full(&meta);
+
+    let toks_b1 = corpus.batches(Split::Wiki, 1, 128, 1, 0)?.remove(0);
+    let toks_b4 = corpus.batches(Split::Wiki, 4, 128, 1, 0)?.remove(0);
+    let toks_b4_64 = corpus.batches(Split::Wiki, 4, 64, 1, 0)?.remove(0);
+    let toks_b8 = corpus.batches(Split::Wiki, 8, 128, 1, 0)?.remove(0);
+    rt.warmup(&["score_b1_t128", "score_b4_t128", "score_b4_t64",
+                "score_b8_t128", "prefill_t64", "decode_b1",
+                "decode_b8"])?;
+
+    for (name, b, t, toks) in [("score_b1_t128", 1usize, 128usize,
+                                &toks_b1),
+                               ("score_b4_t64", 4, 64, &toks_b4_64),
+                               ("score_b4_t128", 4, 128, &toks_b4),
+                               ("score_b8_t128", 8, 128, &toks_b8)] {
+        println!("{}", bench(&format!("runtime/{name}"), 2.0, 60, || {
+            black_box(rt.mean_nll(b, t, toks, &mask).unwrap());
+        }).report());
+    }
+
+    let prompt: Vec<i32> =
+        corpus.wiki[..64].iter().map(|&t| t as i32).collect();
+    println!("{}", bench("runtime/prefill_t64", 2.0, 60, || {
+        black_box(rt.prefill(64, &prompt, &mask).unwrap());
+    }).report());
+
+    for b in [1usize, 8] {
+        let mut k = vec![0.0f32; rt.cache_elems(b)];
+        let mut v = vec![0.0f32; rt.cache_elems(b)];
+        let toks = vec![1i32; b];
+        let pos = vec![64i32; b];
+        println!("{}", bench(&format!("runtime/decode_b{b}"), 2.0, 60,
+                             || {
+            black_box(rt.decode(b, &toks, &pos, &mut k, &mut v, &mask)
+                .unwrap());
+        }).report());
+    }
+
+    // ---------------- serving hot loop ----------------
+    {
+        let mut kv = KvManager::new(&meta);
+        let n = kv.seq_elems();
+        for id in 0..8u64 {
+            kv.insert(id, vec![0.1; n], vec![0.2; n], 64, &mask)?;
+        }
+        let ids: Vec<u64> = (0..8).collect();
+        println!("{}", bench("serving/kv_gather_b8", 1.0, 2_000, || {
+            black_box(kv.gather(&ids).unwrap());
+        }).report());
+        let (k, v) = kv.gather(&ids)?;
+        println!("{}", bench("serving/kv_scatter_b8", 1.0, 2_000, || {
+            kv.scatter(&ids, &k, &v, &mask).unwrap();
+            for id in 0..8u64 {
+                if kv.seq_len(id) == Some(meta.max_seq) {
+                    kv.remove(id);
+                    kv.insert(id, k[..n].to_vec(), v[..n].to_vec(), 64,
+                              &mask).unwrap();
+                }
+            }
+        }).report());
+    }
+
+    // ---------------- controller ----------------
+    {
+        use rap::agent::dqn::{DqnAgent, DqnConfig};
+        use rap::agent::env::{EnvConfig, PruneEnv};
+        use rap::gsi::CalibratedEvaluator;
+        let mut ev = CalibratedEvaluator::new(rt, &corpus, 1, 128)?;
+        let mut rng = Rng::new(2);
+        let mut env = PruneEnv::new(&mut ev, EnvConfig::default());
+        let agent = DqnAgent::new(env.state_dim(), env.n_actions(),
+                                  DqnConfig::default(), &mut rng);
+        let state = env.reset(Workload::new(8, 256), 0.8)?;
+        println!("{}", bench("control/dqn_forward", 0.5, 100_000, || {
+            black_box(agent.q.forward(black_box(&state)));
+        }).report());
+        // warm the GSI memo, then time a full warm policy decision
+        let _ = rap::agent::online_prune(&agent, &mut env,
+                                         Workload::new(8, 256), 0.8)?;
+        println!("{}", bench("control/online_prune_warm", 1.0, 200, || {
+            black_box(rap::agent::online_prune(
+                &agent, &mut env, Workload::new(8, 256), 0.8).unwrap());
+        }).report());
+    }
+
+    println!("== done ==");
+    Ok(())
+}

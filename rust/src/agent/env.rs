@@ -1,0 +1,266 @@
+//! The pruning MDP (paper Appendix A.1): sequential single-block removal
+//! with a memory-budget termination condition and the Eq. 2 reward.
+//!
+//! State  s_t = (s^Req, s^Model, s^Sys):
+//!   [ bs/16, sql/max_seq,
+//!     GSI importance of all 2N blocks (recomputed after every removal,
+//!     normalized by the dense model's max importance),
+//!     Sys_avail / dense_peak, Sys_req / dense_peak ]
+//! Action a_t ∈ {0 = STOP, 1..2N = remove block a−1}, with an action mask
+//! (already-removed blocks invalid; STOP invalid while over budget).
+//! Reward Eq. 2: R_t = Σ_i kept_i · (α·R_ppl_i − β·R_mem_i).
+
+use anyhow::Result;
+
+use crate::gsi::GsiEngine;
+use crate::mask::PruneMask;
+use crate::memory::{MemoryModel, Workload};
+use crate::model_meta::BlockId;
+use crate::runtime::NllEvaluator;
+
+#[derive(Clone, Copy, Debug)]
+pub struct EnvConfig {
+    /// Accuracy weight α (paper default 1.0).
+    pub alpha: f64,
+    /// Memory-penalty weight β (paper default 0.3).
+    pub beta: f64,
+}
+
+impl Default for EnvConfig {
+    fn default() -> Self {
+        EnvConfig { alpha: 1.0, beta: 0.3 }
+    }
+}
+
+pub struct StepResult {
+    pub state: Vec<f32>,
+    pub reward: f32,
+    pub done: bool,
+}
+
+pub struct PruneEnv<'a, E: NllEvaluator> {
+    pub gsi: GsiEngine<'a, E>,
+    pub mem: MemoryModel,
+    pub cfg: EnvConfig,
+    n_layers: usize,
+    max_seq: usize,
+    // episode state
+    pub workload: Workload,
+    pub budget_bytes: usize,
+    pub mask: PruneMask,
+    importance: Vec<f64>,
+    imp_scale: f64,
+    dense_peak: usize,
+    steps: usize,
+}
+
+impl<'a, E: NllEvaluator> PruneEnv<'a, E> {
+    pub fn new(eval: &'a mut E, cfg: EnvConfig) -> PruneEnv<'a, E> {
+        Self::with_memo(eval, cfg, std::collections::HashMap::new())
+    }
+
+    /// Build with a pre-warmed GSI memo (serving controllers reuse their
+    /// memo across decisions).
+    pub fn with_memo(eval: &'a mut E, cfg: EnvConfig,
+                     memo: std::collections::HashMap<u64, f64>)
+                     -> PruneEnv<'a, E> {
+        let meta = eval.meta().clone();
+        PruneEnv {
+            gsi: GsiEngine::with_memo(eval, memo),
+            mem: MemoryModel::new(&meta),
+            cfg,
+            n_layers: meta.n_layers,
+            max_seq: meta.max_seq,
+            workload: Workload::new(1, 1),
+            budget_bytes: usize::MAX,
+            mask: PruneMask::full(&meta),
+            importance: Vec::new(),
+            imp_scale: 1.0,
+            dense_peak: 1,
+            steps: 0,
+        }
+    }
+
+    /// Extract the GSI memo for reuse by the caller.
+    pub fn take_memo(self) -> std::collections::HashMap<u64, f64> {
+        self.gsi.take_memo()
+    }
+
+    pub fn n_actions(&self) -> usize {
+        2 * self.n_layers + 1
+    }
+
+    pub fn state_dim(&self) -> usize {
+        2 * self.n_layers + 4
+    }
+
+    /// Begin an episode for a workload and a *relative* budget fraction.
+    pub fn reset(&mut self, workload: Workload, budget_fraction: f64)
+                 -> Result<Vec<f32>> {
+        let meta = self.mem.meta().clone();
+        self.workload = workload;
+        self.dense_peak = self.mem.dense_peak_bytes(workload).max(1);
+        self.budget_bytes =
+            (self.dense_peak as f64 * budget_fraction) as usize;
+        self.mask = PruneMask::full(&meta);
+        self.importance = self.gsi.importance(&self.mask)?;
+        self.imp_scale = self
+            .importance
+            .iter()
+            .cloned()
+            .fold(f64::MIN_POSITIVE, f64::max);
+        self.steps = 0;
+        Ok(self.state())
+    }
+
+    pub fn fits(&self) -> bool {
+        self.mem.peak_bytes(&self.mask, self.workload) <= self.budget_bytes
+    }
+
+    pub fn state(&self) -> Vec<f32> {
+        let mut s = Vec::with_capacity(self.state_dim());
+        s.push(self.workload.batch as f32 / 16.0);
+        s.push(self.workload.seqlen as f32 / self.max_seq as f32);
+        for &imp in &self.importance {
+            s.push((imp / self.imp_scale).clamp(-2.0, 2.0) as f32);
+        }
+        s.push(self.budget_bytes as f32 / self.dense_peak as f32);
+        let req = self.mem.peak_bytes(&self.mask, self.workload);
+        s.push(req as f32 / self.dense_peak as f32);
+        s
+    }
+
+    /// Action mask: STOP (0) only when within budget; block removals only
+    /// for blocks still present.
+    pub fn valid_actions(&self) -> Vec<bool> {
+        let mut v = vec![false; self.n_actions()];
+        v[0] = self.fits();
+        for i in 0..2 * self.n_layers {
+            let b = BlockId::from_index(i, self.n_layers);
+            v[i + 1] = !self.mask.block_dropped(b);
+        }
+        v
+    }
+
+    /// Eq. 2 over the current mask.
+    pub fn reward(&self) -> f32 {
+        let mut r = 0.0f64;
+        for i in 0..2 * self.n_layers {
+            let b = BlockId::from_index(i, self.n_layers);
+            if self.mask.block_dropped(b) {
+                continue;
+            }
+            let r_ppl = (self.importance[i] / self.imp_scale).clamp(-2.0,
+                                                                    2.0);
+            let r_mem = self.mem.block_bytes(&self.mask, self.workload, b)
+                as f64
+                / self.dense_peak as f64;
+            r += self.cfg.alpha * r_ppl - self.cfg.beta * r_mem;
+        }
+        // Normalize by block count so reward scale is model-size free.
+        (r / (2 * self.n_layers) as f64) as f32
+    }
+
+    pub fn step(&mut self, action: usize) -> Result<StepResult> {
+        self.steps += 1;
+        let horizon = 2 * self.n_layers;
+        if action == 0 {
+            // STOP (only legal when within budget).
+            return Ok(StepResult { state: self.state(),
+                                   reward: self.reward(), done: true });
+        }
+        let b = BlockId::from_index(action - 1, self.n_layers);
+        debug_assert!(!self.mask.block_dropped(b), "invalid action");
+        self.mask.drop_block(b);
+        // GSI recalibration (Alg 2 line 10).
+        self.importance = self.gsi.importance(&self.mask)?;
+        let done = self.fits() || self.steps >= horizon;
+        Ok(StepResult { state: self.state(), reward: self.reward(), done })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_meta::ModelMeta;
+    use crate::runtime::SyntheticEvaluator;
+
+    fn env_for(damage: Vec<f64>) -> SyntheticEvaluator {
+        let n_layers = damage.len() / 2;
+        let meta = ModelMeta::synthetic("t", n_layers, 64, 4, 2, 96, 128,
+                                        64);
+        SyntheticEvaluator::new(meta, 2.0, damage, 0.0)
+    }
+
+    #[test]
+    fn reset_gives_dense_state() {
+        let mut ev = env_for(vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6]);
+        let mut env = PruneEnv::new(&mut ev, EnvConfig::default());
+        let s = env.reset(Workload::new(4, 32), 0.8).unwrap();
+        assert_eq!(s.len(), env.state_dim());
+        assert!(!env.fits()); // 80% budget: dense can't fit
+        let v = env.valid_actions();
+        assert!(!v[0]); // STOP masked while over budget
+        assert!(v[1..].iter().all(|&x| x));
+    }
+
+    #[test]
+    fn stepping_prunes_until_fit() {
+        let mut ev = env_for(vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6]);
+        let mut env = PruneEnv::new(&mut ev, EnvConfig::default());
+        env.reset(Workload::new(4, 32), 0.8).unwrap();
+        let mut done = false;
+        let mut taken = 0;
+        while !done {
+            // always remove the first valid block
+            let v = env.valid_actions();
+            let a = (1..v.len()).find(|&i| v[i]).unwrap();
+            let r = env.step(a).unwrap();
+            done = r.done;
+            taken += 1;
+            assert!(taken <= 6);
+        }
+        assert!(env.fits());
+    }
+
+    #[test]
+    fn stop_is_terminal_and_legal_when_fitting() {
+        let mut ev = env_for(vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6]);
+        let mut env = PruneEnv::new(&mut ev, EnvConfig::default());
+        env.reset(Workload::new(1, 4), 1.1).unwrap(); // generous budget
+        assert!(env.fits());
+        assert!(env.valid_actions()[0]);
+        let r = env.step(0).unwrap();
+        assert!(r.done);
+    }
+
+    #[test]
+    fn reward_decreases_when_dropping_important_blocks_is_kept() {
+        // Keeping everything yields the max Σ importance; dropping the
+        // *most* important block reduces the kept-importance sum more
+        // than dropping the least important one.
+        let mut ev = env_for(vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.9]);
+        let mut env = PruneEnv::new(&mut ev, EnvConfig { alpha: 1.0,
+                                                         beta: 0.0 });
+        env.reset(Workload::new(4, 32), 0.5).unwrap();
+        let r_keep_all = env.reward();
+        let r_drop_least = env.step(1).unwrap().reward; // damage 0.1
+        env.reset(Workload::new(4, 32), 0.5).unwrap();
+        let r_drop_most = env.step(6).unwrap().reward; // damage 0.9
+        assert!(r_drop_least > r_drop_most,
+                "{r_drop_least} !> {r_drop_most}");
+        assert!(r_keep_all >= r_drop_least);
+    }
+
+    #[test]
+    fn beta_penalizes_memory_hungry_masks() {
+        let mut ev = env_for(vec![0.5; 6]);
+        let mut env = PruneEnv::new(&mut ev, EnvConfig { alpha: 0.0,
+                                                         beta: 1.0 });
+        env.reset(Workload::new(4, 32), 0.5).unwrap();
+        let dense_reward = env.reward();
+        // removing blocks shrinks the memory penalty → reward rises
+        let after = env.step(1).unwrap().reward;
+        assert!(after > dense_reward, "{after} !> {dense_reward}");
+    }
+}

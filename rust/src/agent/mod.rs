@@ -1,0 +1,38 @@
+//! The RL controller (paper §4.2 + Appendix A): pruning MDP environment,
+//! hand-rolled 2-layer MLP Q-network, replay buffer, masked DQN training
+//! (Algorithm 2) and online execution (Algorithm 3).
+
+pub mod dqn;
+pub mod env;
+pub mod mlp;
+pub mod replay;
+
+use anyhow::Result;
+
+use crate::mask::PruneMask;
+use crate::memory::Workload;
+use crate::runtime::NllEvaluator;
+
+/// Algorithm 3: online execution. Run the trained agent greedily from the
+/// dense model until the budget is met (or STOP). Returns the mask.
+pub fn online_prune<E: NllEvaluator>(
+    agent: &dqn::DqnAgent, env: &mut env::PruneEnv<E>, workload: Workload,
+    budget_fraction: f64) -> Result<PruneMask> {
+    let mut state = env.reset(workload, budget_fraction)?;
+    let horizon = env.n_actions() - 1;
+    for _ in 0..horizon {
+        if env.fits() {
+            break;
+        }
+        let valid = env.valid_actions();
+        if !valid.iter().any(|&v| v) {
+            break;
+        }
+        let action = agent.act_greedy(&state, &valid);
+        if action == 0 {
+            break; // STOP
+        }
+        state = env.step(action)?.state;
+    }
+    Ok(env.mask.clone())
+}

@@ -1,0 +1,93 @@
+//! Experience replay buffer for the masked DQN (paper Appendix A.3).
+
+use crate::util::rng::Rng;
+
+/// One transition (s, a, r, s', done, valid-mask of s').
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub state: Vec<f32>,
+    pub action: usize,
+    pub reward: f32,
+    pub next_state: Vec<f32>,
+    pub done: bool,
+    /// Valid actions in s' (needed for the masked max in the TD target).
+    pub next_valid: Vec<bool>,
+}
+
+/// Fixed-capacity ring buffer with uniform sampling.
+pub struct ReplayBuffer {
+    buf: Vec<Transition>,
+    cap: usize,
+    next: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(cap: usize) -> ReplayBuffer {
+        ReplayBuffer { buf: Vec::with_capacity(cap), cap, next: 0 }
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.buf.len() < self.cap {
+            self.buf.push(t);
+        } else {
+            self.buf[self.next] = t;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Sample `n` transitions uniformly with replacement.
+    pub fn sample<'a>(&'a self, n: usize, rng: &mut Rng)
+                      -> Vec<&'a Transition> {
+        (0..n).map(|_| &self.buf[rng.below(self.buf.len())]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(r: f32) -> Transition {
+        Transition { state: vec![r], action: 0, reward: r,
+                     next_state: vec![r], done: false,
+                     next_valid: vec![true] }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut rb = ReplayBuffer::new(3);
+        for i in 0..5 {
+            rb.push(t(i as f32));
+        }
+        assert_eq!(rb.len(), 3);
+        let rewards: Vec<f32> = rb.buf.iter().map(|x| x.reward).collect();
+        // slots: [3, 4, 2]
+        assert!(rewards.contains(&2.0));
+        assert!(rewards.contains(&3.0));
+        assert!(rewards.contains(&4.0));
+        assert!(!rewards.contains(&0.0));
+    }
+
+    #[test]
+    fn sampling_is_uniformish() {
+        let mut rb = ReplayBuffer::new(10);
+        for i in 0..10 {
+            rb.push(t(i as f32));
+        }
+        let mut rng = Rng::new(1);
+        let mut counts = [0usize; 10];
+        for s in rb.sample(10_000, &mut rng) {
+            counts[s.reward as usize] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 700 && c < 1300, "{counts:?}");
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! Corpus access: the synthetic Markov+copy language (WikiText2/PTB/Alpaca
+//! substitutes) produced by `python/compile/corpus.py`.
+//!
+//! Rust reads the exported chain matrix so it can (a) evaluate perplexity
+//! on the pre-sampled splits and (b) *generate* fresh data deterministically
+//! — MCQ endings for the commonsense-sim suite, prompts for the serving
+//! workload — with exactly the distribution the model was trained on.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// The generative process: sparse Markov chain + copy rule.
+#[derive(Clone)]
+pub struct MarkovChain {
+    pub vocab: usize,
+    /// Row-major [V, V] row-stochastic transitions.
+    pub trans: Vec<f32>,
+    /// Cumulative rows for O(log V) inverse-CDF sampling.
+    cdf: Vec<f32>,
+    pub copy_p: f64,
+    pub copy_lag: usize,
+}
+
+impl MarkovChain {
+    pub fn new(vocab: usize, trans: Vec<f32>, copy_p: f64, copy_lag: usize)
+               -> Result<MarkovChain> {
+        if trans.len() != vocab * vocab {
+            bail!("chain matrix has {} entries, wanted {}", trans.len(),
+                  vocab * vocab);
+        }
+        let mut cdf = trans.clone();
+        for row in cdf.chunks_exact_mut(vocab) {
+            let mut acc = 0.0f32;
+            for x in row.iter_mut() {
+                acc += *x;
+                *x = acc;
+            }
+        }
+        Ok(MarkovChain { vocab, trans, cdf, copy_p, copy_lag })
+    }
+
+    pub fn row(&self, tok: usize) -> &[f32] {
+        &self.trans[tok * self.vocab..(tok + 1) * self.vocab]
+    }
+
+    /// Sample the next token given the history so far.
+    pub fn next_token(&self, history: &[u16], rng: &mut Rng) -> u16 {
+        let cur = *history.last().expect("empty history") as usize;
+        if history.len() >= self.copy_lag && rng.chance(self.copy_p) {
+            return history[history.len() - self.copy_lag];
+        }
+        let row = &self.cdf[cur * self.vocab..(cur + 1) * self.vocab];
+        let u = rng.f32();
+        // binary search the cdf row
+        match row.binary_search_by(|x| {
+            x.partial_cmp(&u).unwrap_or(std::cmp::Ordering::Less)
+        }) {
+            Ok(i) | Err(i) => i.min(self.vocab - 1) as u16,
+        }
+    }
+
+    /// Sample a fresh sequence of length `n`.
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> Vec<u16> {
+        let mut out = Vec::with_capacity(n);
+        out.push(rng.below(self.vocab) as u16);
+        while out.len() < n {
+            let t = self.next_token(&out, rng);
+            out.push(t);
+        }
+        out
+    }
+
+    /// True predictive distribution p(next | context) — the oracle used
+    /// to construct MCQ correct answers and by sanity tests.
+    pub fn next_dist(&self, context: &[u16]) -> Vec<f64> {
+        let cur = *context.last().expect("empty context") as usize;
+        let has_copy = context.len() >= self.copy_lag;
+        let chain_w = if has_copy { 1.0 - self.copy_p } else { 1.0 };
+        let mut dist: Vec<f64> = self
+            .row(cur)
+            .iter()
+            .map(|&p| p as f64 * chain_w)
+            .collect();
+        if has_copy {
+            dist[context[context.len() - self.copy_lag] as usize] +=
+                self.copy_p;
+        }
+        dist
+    }
+}
+
+/// The full corpus: chain(s) + pre-sampled token splits.
+pub struct Corpus {
+    pub chain: MarkovChain,
+    pub chain_ptb: MarkovChain,
+    pub train: Vec<u16>,
+    pub wiki: Vec<u16>,
+    pub ptb: Vec<u16>,
+    pub alpaca: Vec<u16>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Wiki,
+    Ptb,
+    Alpaca,
+}
+
+impl Split {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Split::Train => "train",
+            Split::Wiki => "wikitext2-sim",
+            Split::Ptb => "ptb-sim",
+            Split::Alpaca => "alpaca-sim",
+        }
+    }
+}
+
+impl Corpus {
+    pub fn load(corpus_dir: &Path) -> Result<Corpus> {
+        let meta = Json::parse_file(&corpus_dir.join("meta.json"))?;
+        let vocab = meta.get("vocab")?.usize()?;
+        let copy_p = meta.get("copy_p")?.num()?;
+        let copy_lag = meta.get("copy_lag")?.usize()?;
+        let chain = MarkovChain::new(
+            vocab, read_f32(&corpus_dir.join("chain.bin"))?, copy_p,
+            copy_lag)?;
+        let chain_ptb = MarkovChain::new(
+            vocab, read_f32(&corpus_dir.join("chain_ptb.bin"))?, copy_p,
+            copy_lag)?;
+        Ok(Corpus {
+            chain,
+            chain_ptb,
+            train: read_u16(&corpus_dir.join("train.bin"))?,
+            wiki: read_u16(&corpus_dir.join("wiki.bin"))?,
+            ptb: read_u16(&corpus_dir.join("ptb.bin"))?,
+            alpaca: read_u16(&corpus_dir.join("alpaca.bin"))?,
+        })
+    }
+
+    pub fn split(&self, s: Split) -> &[u16] {
+        match s {
+            Split::Train => &self.train,
+            Split::Wiki => &self.wiki,
+            Split::Ptb => &self.ptb,
+            Split::Alpaca => &self.alpaca,
+        }
+    }
+
+    /// Deterministic non-overlapping [batch, seqlen] windows from a split,
+    /// as i32 (the score entry's token dtype). `n_batches` batches are
+    /// taken starting at `offset` windows in.
+    pub fn batches(&self, s: Split, batch: usize, seqlen: usize,
+                   n_batches: usize, offset: usize) -> Result<Vec<Vec<i32>>> {
+        let toks = self.split(s);
+        let need = (offset + n_batches * batch) * seqlen;
+        if need > toks.len() {
+            bail!("split {} too small: need {} tokens, have {}", s.name(),
+                  need, toks.len());
+        }
+        let mut out = Vec::with_capacity(n_batches);
+        for b in 0..n_batches {
+            let mut flat = Vec::with_capacity(batch * seqlen);
+            for i in 0..batch {
+                let start = (offset + b * batch + i) * seqlen;
+                flat.extend(
+                    toks[start..start + seqlen].iter().map(|&t| t as i32));
+            }
+            out.push(flat);
+        }
+        Ok(out)
+    }
+}
+
+fn read_u16(path: &Path) -> Result<Vec<u16>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 2 != 0 {
+        bail!("{}: odd byte count", path.display());
+    }
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect())
+}
+
+fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: byte count not multiple of 4", path.display());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A 4-token toy chain: 0→1, 1→2, 2→3, 3→0 (deterministic).
+    fn toy(copy_p: f64) -> MarkovChain {
+        let v = 4;
+        let mut trans = vec![0.0f32; v * v];
+        for t in 0..v {
+            trans[t * v + (t + 1) % v] = 1.0;
+        }
+        MarkovChain::new(v, trans, copy_p, 2).unwrap()
+    }
+
+    #[test]
+    fn deterministic_chain_cycles() {
+        let c = toy(0.0);
+        let mut rng = Rng::new(1);
+        let seq = c.sample(9, &mut rng);
+        for w in seq.windows(2) {
+            assert_eq!(w[1], (w[0] + 1) % 4);
+        }
+    }
+
+    #[test]
+    fn rows_are_stochastic_after_cdf() {
+        let c = toy(0.3);
+        for t in 0..4 {
+            let s: f32 = c.row(t).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn copy_rule_fires() {
+        let c = toy(1.0); // always copy from lag 2
+        let mut rng = Rng::new(2);
+        let mut seq = vec![3u16, 1u16];
+        for _ in 0..6 {
+            let t = c.next_token(&seq, &mut rng);
+            seq.push(t);
+        }
+        // with lag 2 and always-copy: sequence alternates 3,1,3,1,...
+        for (i, &t) in seq.iter().enumerate() {
+            assert_eq!(t, if i % 2 == 0 { 3 } else { 1 });
+        }
+    }
+
+    #[test]
+    fn next_dist_sums_to_one_and_matches_copy() {
+        let c = toy(0.4);
+        let ctx = vec![0u16, 1u16, 2u16];
+        let d = c.next_dist(&ctx);
+        let sum: f64 = d.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        // copy target is ctx[len-2] = 1; chain target from 2 is 3.
+        assert!((d[1] - 0.4).abs() < 1e-6);
+        assert!((d[3] - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sampled_frequencies_match_dist() {
+        let c = toy(0.25);
+        let mut rng = Rng::new(3);
+        let ctx = vec![2u16, 0u16]; // copy target 2, chain target 1
+        let mut counts = [0usize; 4];
+        let n = 20_000;
+        for _ in 0..n {
+            counts[c.next_token(&ctx, &mut rng) as usize] += 1;
+        }
+        let f2 = counts[2] as f64 / n as f64;
+        let f1 = counts[1] as f64 / n as f64;
+        assert!((f2 - 0.25).abs() < 0.02, "copy freq {f2}");
+        assert!((f1 - 0.75).abs() < 0.02, "chain freq {f1}");
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(MarkovChain::new(4, vec![0.0; 15], 0.1, 2).is_err());
+    }
+}

@@ -1,0 +1,264 @@
+//! Commonsense-sim: seven synthetic multiple-choice tasks standing in for
+//! BoolQ / PIQA / WinoGrande / HellaSwag / ARC-e / ARC-c / OpenBookQA
+//! (DESIGN.md §6 documents the substitution).
+//!
+//! Construction: a question is a context sampled from the training chain,
+//! a *correct* ending sampled from the true generative process continuing
+//! that context, and distractor endings drawn from a task-specific source
+//! (uniform noise, continuations of a different context, or the shifted
+//! PTB chain). Tasks differ in context length, ending length, choice count
+//! and distractor hardness, giving the spread of difficulty the paper's
+//! suite has. Scoring = argmax of summed ending log-likelihood, computed
+//! with one `score_b4_t64` call per question (choices = batch rows).
+
+use anyhow::Result;
+
+use crate::corpus::{Corpus, MarkovChain};
+use crate::mask::PruneMask;
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+/// Where distractor endings come from (hardness order: Uniform <
+/// ShiftedChain < WrongContext).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistractorKind {
+    /// i.i.d. uniform tokens — easiest to reject.
+    Uniform,
+    /// continuation under the PTB (noise-interpolated) chain.
+    ShiftedChain,
+    /// true-process continuation of a *different* context — hardest.
+    WrongContext,
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub ctx_len: usize,
+    pub end_len: usize,
+    pub n_choices: usize,
+    pub distractors: DistractorKind,
+    /// Per-task seed offset so tasks draw disjoint question streams.
+    pub seed_offset: u64,
+}
+
+/// The canonical 7-task suite (paper Table 1 column order).
+pub fn all_tasks() -> Vec<TaskSpec> {
+    vec![
+        TaskSpec { name: "boolq-sim", ctx_len: 24, end_len: 4,
+                   n_choices: 2, distractors: DistractorKind::ShiftedChain,
+                   seed_offset: 11 },
+        TaskSpec { name: "piqa-sim", ctx_len: 16, end_len: 6,
+                   n_choices: 2, distractors: DistractorKind::WrongContext,
+                   seed_offset: 22 },
+        TaskSpec { name: "winogrande-sim", ctx_len: 20, end_len: 2,
+                   n_choices: 2, distractors: DistractorKind::Uniform,
+                   seed_offset: 33 },
+        TaskSpec { name: "hellaswag-sim", ctx_len: 32, end_len: 8,
+                   n_choices: 4, distractors: DistractorKind::WrongContext,
+                   seed_offset: 44 },
+        TaskSpec { name: "arc-e-sim", ctx_len: 12, end_len: 4,
+                   n_choices: 4, distractors: DistractorKind::Uniform,
+                   seed_offset: 55 },
+        TaskSpec { name: "arc-c-sim", ctx_len: 12, end_len: 4,
+                   n_choices: 4, distractors: DistractorKind::WrongContext,
+                   seed_offset: 66 },
+        TaskSpec { name: "obqa-sim", ctx_len: 8, end_len: 6,
+                   n_choices: 4, distractors: DistractorKind::ShiftedChain,
+                   seed_offset: 77 },
+    ]
+}
+
+/// One generated question.
+#[derive(Clone, Debug)]
+pub struct Question {
+    pub context: Vec<u16>,
+    /// endings[0] is correct; presentation order is shuffled at scoring.
+    pub endings: Vec<Vec<u16>>,
+}
+
+/// Continue `ctx` for `n` tokens under the true process.
+fn continue_seq(chain: &MarkovChain, ctx: &[u16], n: usize, rng: &mut Rng)
+                -> Vec<u16> {
+    let mut hist = ctx.to_vec();
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t = chain.next_token(&hist, rng);
+        hist.push(t);
+        out.push(t);
+    }
+    out
+}
+
+pub fn generate_question(corpus: &Corpus, task: &TaskSpec, rng: &mut Rng)
+                         -> Question {
+    let chain = &corpus.chain;
+    let context = chain.sample(task.ctx_len, rng);
+    let correct = continue_seq(chain, &context, task.end_len, rng);
+    let mut endings = vec![correct];
+    while endings.len() < task.n_choices {
+        let d = match task.distractors {
+            DistractorKind::Uniform => (0..task.end_len)
+                .map(|_| rng.below(chain.vocab) as u16)
+                .collect(),
+            DistractorKind::ShiftedChain => {
+                continue_seq(&corpus.chain_ptb, &context, task.end_len, rng)
+            }
+            DistractorKind::WrongContext => {
+                let other = chain.sample(task.ctx_len, rng);
+                continue_seq(chain, &other, task.end_len, rng)
+            }
+        };
+        // A distractor identical to the correct ending would make the
+        // question unanswerable; resample (cheap, rare).
+        if d != endings[0] {
+            endings.push(d);
+        }
+    }
+    Question { context, endings }
+}
+
+/// Sequence/bucket constants: all tasks fit the (4, 64) score bucket.
+pub const MCQ_BATCH: usize = 4;
+pub const MCQ_SEQLEN: usize = 64;
+
+/// Score one question: returns the index of the highest-likelihood ending.
+pub fn score_question(rt: &mut Runtime, q: &Question, mask: &PruneMask)
+                      -> Result<usize> {
+    let n = q.endings.len();
+    assert!(n <= MCQ_BATCH);
+    let ctx_len = q.context.len();
+    let end_len = q.endings[0].len();
+    assert!(ctx_len + end_len <= MCQ_SEQLEN);
+    let mut tokens = vec![0i32; MCQ_BATCH * MCQ_SEQLEN];
+    let mut lmask = vec![0.0f32; MCQ_BATCH * MCQ_SEQLEN];
+    for (row, ending) in q.endings.iter().enumerate() {
+        let base = row * MCQ_SEQLEN;
+        for (i, &t) in q.context.iter().enumerate() {
+            tokens[base + i] = t as i32;
+        }
+        for (i, &t) in ending.iter().enumerate() {
+            tokens[base + ctx_len + i] = t as i32;
+            lmask[base + ctx_len + i] = 1.0;
+        }
+    }
+    let (nll, _cnt) = rt.score(MCQ_BATCH, MCQ_SEQLEN, &tokens, &lmask,
+                               mask)?;
+    let mut best = 0usize;
+    for i in 1..n {
+        if nll[i] < nll[best] {
+            best = i;
+        }
+    }
+    Ok(best)
+}
+
+/// Accuracy over `n_questions` fresh questions (deterministic in `seed`).
+pub fn accuracy(rt: &mut Runtime, corpus: &Corpus, task: &TaskSpec,
+                mask: &PruneMask, n_questions: usize, seed: u64)
+                -> Result<f64> {
+    let mut rng = Rng::new(seed.wrapping_add(task.seed_offset));
+    let mut correct = 0usize;
+    for _ in 0..n_questions {
+        let q = generate_question(corpus, task, &mut rng);
+        // endings[0] is correct by construction; score_question returns
+        // the argmax row.
+        if score_question(rt, &q, mask)? == 0 {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / n_questions as f64)
+}
+
+/// Chance-level accuracy (the floor a destroyed model decays to).
+pub fn chance(task: &TaskSpec) -> f64 {
+    1.0 / task.n_choices as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::MarkovChain;
+
+    fn toy_corpus() -> Corpus {
+        // deterministic 8-token cycle chain; ptb = uniform-ish
+        let v = 8;
+        let mut trans = vec![0.0f32; v * v];
+        for t in 0..v {
+            trans[t * v + (t + 1) % v] = 1.0;
+        }
+        let chain = MarkovChain::new(v, trans, 0.0, 4).unwrap();
+        let uni = MarkovChain::new(v, vec![1.0 / v as f32; v * v], 0.0, 4)
+            .unwrap();
+        Corpus {
+            chain,
+            chain_ptb: uni,
+            train: vec![0; 1024],
+            wiki: vec![0; 1024],
+            ptb: vec![0; 1024],
+            alpaca: vec![0; 1024],
+        }
+    }
+
+    #[test]
+    fn question_shapes() {
+        let c = toy_corpus();
+        let mut rng = Rng::new(1);
+        for task in all_tasks() {
+            let q = generate_question(&c, &task, &mut rng);
+            assert_eq!(q.context.len(), task.ctx_len);
+            assert_eq!(q.endings.len(), task.n_choices);
+            for e in &q.endings {
+                assert_eq!(e.len(), task.end_len);
+            }
+            assert!(task.ctx_len + task.end_len <= MCQ_SEQLEN);
+            assert!(task.n_choices <= MCQ_BATCH);
+        }
+    }
+
+    #[test]
+    fn correct_ending_follows_chain() {
+        let c = toy_corpus();
+        let mut rng = Rng::new(2);
+        let task = &all_tasks()[0];
+        let q = generate_question(&c, task, &mut rng);
+        // deterministic cycle: correct ending continues ctx
+        let mut expect = *q.context.last().unwrap();
+        for &t in &q.endings[0] {
+            expect = (expect + 1) % 8;
+            assert_eq!(t, expect);
+        }
+    }
+
+    #[test]
+    fn distractors_differ_from_correct() {
+        let c = toy_corpus();
+        let mut rng = Rng::new(3);
+        for task in all_tasks() {
+            for _ in 0..20 {
+                let q = generate_question(&c, &task, &mut rng);
+                for d in &q.endings[1..] {
+                    assert_ne!(*d, q.endings[0]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let c = toy_corpus();
+        let task = &all_tasks()[3];
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let q1 = generate_question(&c, task, &mut r1);
+        let q2 = generate_question(&c, task, &mut r2);
+        assert_eq!(q1.context, q2.context);
+        assert_eq!(q1.endings, q2.endings);
+    }
+
+    #[test]
+    fn chance_levels() {
+        let tasks = all_tasks();
+        assert_eq!(chance(&tasks[0]), 0.5);
+        assert_eq!(chance(&tasks[3]), 0.25);
+    }
+}

@@ -1,0 +1,97 @@
+//! Evaluation harness: perplexity (WikiText2-sim / PTB-sim) and the
+//! commonsense-sim MCQ suite — the measurement side of Table 1/2/3.
+//!
+//! Protocol mirrors the paper's LM-Eval-Harness usage: zero-shot MCQ
+//! scored by summed log-likelihood of each candidate ending given the
+//! context (all endings in a task share a length, so sum and mean rank
+//! identically), perplexity as exp(mean NLL) over held-out streams.
+
+pub mod mcq;
+
+use anyhow::Result;
+
+use crate::corpus::{Corpus, Split};
+use crate::mask::PruneMask;
+use crate::runtime::Runtime;
+
+/// Perplexity of a split under a mask. Uses `n_batches` windows of the
+/// (batch, seqlen) score bucket.
+pub fn perplexity(rt: &mut Runtime, corpus: &Corpus, split: Split,
+                  mask: &PruneMask, batch: usize, seqlen: usize,
+                  n_batches: usize) -> Result<f64> {
+    let mut total_nll = 0.0f64;
+    let mut total_cnt = 0.0f64;
+    let ones = vec![1.0f32; batch * seqlen];
+    for tokens in corpus.batches(split, batch, seqlen, n_batches, 0)? {
+        let (nll, cnt) = rt.score(batch, seqlen, &tokens, &ones, mask)?;
+        total_nll += nll.iter().map(|&x| x as f64).sum::<f64>();
+        total_cnt += cnt.iter().map(|&x| x as f64).sum::<f64>();
+    }
+    Ok((total_nll / total_cnt.max(1.0)).exp())
+}
+
+/// A full Table-1-style evaluation row for one (scheme, mask).
+#[derive(Clone, Debug)]
+pub struct EvalRow {
+    pub scheme: String,
+    pub wikitext2_ppl: f64,
+    pub ptb_ppl: f64,
+    /// (task name, accuracy %) in canonical task order.
+    pub task_acc: Vec<(String, f64)>,
+}
+
+impl EvalRow {
+    pub fn avg_acc(&self) -> f64 {
+        if self.task_acc.is_empty() {
+            return f64::NAN;
+        }
+        self.task_acc.iter().map(|(_, a)| a).sum::<f64>()
+            / self.task_acc.len() as f64
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<22} {:>10} {:>10} | {:>6} {:>6} {:>6} {:>6} {:>6} {:>6} \
+             {:>6} {:>6}",
+            "Scheme", "WikiT2", "PTB", "BoolQ", "PIQA", "WinoG", "HellaS",
+            "ARC-e", "ARC-c", "OBQA", "Avg")
+    }
+
+    pub fn row(&self) -> String {
+        let mut s = format!("{:<22} {:>10} {:>10} |", self.scheme,
+                            fmt_ppl(self.wikitext2_ppl),
+                            fmt_ppl(self.ptb_ppl));
+        for (_, a) in &self.task_acc {
+            s.push_str(&format!(" {:>6.2}", a));
+        }
+        s.push_str(&format!(" {:>6.2}", self.avg_acc()));
+        s
+    }
+}
+
+pub fn fmt_ppl(p: f64) -> String {
+    if p < 1000.0 {
+        format!("{p:.2}")
+    } else {
+        format!("{p:.0}")
+    }
+}
+
+/// Evaluate perplexity on both held-out splits plus the 7-task MCQ suite.
+pub fn full_eval(rt: &mut Runtime, corpus: &Corpus, mask: &PruneMask,
+                 scheme: &str, n_ppl_batches: usize,
+                 questions_per_task: usize, seed: u64) -> Result<EvalRow> {
+    let t = rt.meta().max_seq.min(128);
+    let wiki = perplexity(rt, corpus, Split::Wiki, mask, 4, t,
+                          n_ppl_batches)?;
+    let ptb = perplexity(rt, corpus, Split::Ptb, mask, 4, t,
+                         n_ppl_batches)?;
+    let mut task_acc = Vec::new();
+    for task in mcq::all_tasks() {
+        let acc = mcq::accuracy(rt, corpus, &task, mask,
+                                questions_per_task, seed)?;
+        task_acc.push((task.name.to_string(), acc * 100.0));
+    }
+    Ok(EvalRow { scheme: scheme.to_string(), wikitext2_ppl: wiki,
+                 ptb_ppl: ptb, task_acc })
+}

@@ -1,0 +1,65 @@
+//! Shared setup for the experiment drivers.
+
+use anyhow::Result;
+
+use crate::corpus::{Corpus, Split};
+use crate::mask::PruneMask;
+use crate::memory::{MemoryModel, Workload};
+use crate::runtime::{ProbeStats, Runtime};
+
+/// The unified-budget workload Table 1/2/3 accounts against. Chosen so
+/// the dense peak is KV-dominated (like the paper's batch=16 / 4k-token
+/// Llama setting scaled to our substitute): batch 16 × max_seq.
+pub fn budget_workload(rt: &Runtime) -> Workload {
+    Workload::new(16, rt.meta().max_seq)
+}
+
+/// Perplexity-eval batch count (4×128 windows each).
+pub const PPL_BATCHES: usize = 6;
+/// MCQ questions per task for table runs.
+pub const MCQ_QUESTIONS: usize = 24;
+
+pub struct Setup {
+    pub rt: Runtime,
+    pub corpus: Corpus,
+    pub mem: MemoryModel,
+}
+
+pub fn setup(model: &str) -> Result<Setup> {
+    let root = crate::artifacts_dir();
+    let rt = Runtime::load(&root, model)?;
+    let corpus = Corpus::load(&root.join("corpus"))?;
+    let mem = MemoryModel::new(rt.meta());
+    Ok(Setup { rt, corpus, mem })
+}
+
+impl Setup {
+    /// Probe stats on a dense model over an alpaca-sim batch (the
+    /// baselines' importance source).
+    pub fn dense_probe(&mut self) -> Result<ProbeStats> {
+        let (_, pb, pt) = self.rt.probe_entry()?;
+        let tokens = self
+            .corpus
+            .batches(Split::Alpaca, pb, pt, 1, 0)?
+            .remove(0);
+        let mask = PruneMask::full(self.rt.meta());
+        self.rt.probe(&tokens, &mask)
+    }
+
+    /// Calibration tokens for GSI (b=1, t=128 — the cheap bucket).
+    pub fn calib_tokens(&self) -> Result<Vec<i32>> {
+        Ok(self.corpus.batches(Split::Alpaca, 1, 128, 1, 0)?.remove(0))
+    }
+}
+
+/// Where a trained agent lives for `model`.
+pub fn agent_path(model: &str) -> std::path::PathBuf {
+    crate::artifacts_dir().join(model).join("agent.bin")
+}
+
+/// Section header for experiment output.
+pub fn banner(title: &str) {
+    println!("\n================================================================");
+    println!("{title}");
+    println!("================================================================");
+}

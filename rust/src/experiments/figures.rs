@@ -1,0 +1,221 @@
+//! Figure drivers 2–6 and 12: workload statistics, memory regimes, block
+//! sensitivity, dynamic-memory OOM traces, one-shot vs GSI.
+
+use anyhow::Result;
+
+use super::common::{banner, setup};
+use crate::corpus::Split;
+use crate::mask::PruneMask;
+use crate::memory::{gib, mib, MemoryModel, Workload};
+use crate::model_meta::{BlockId, ModelMeta};
+use crate::util::stats::Histogram;
+use crate::workload::{TraceConfig, TraceGenerator};
+
+/// Fig 2: distribution + daily variation of the conversational workload.
+pub fn fig2(seed: u64) -> Result<()> {
+    banner("Figure 2 — workload distribution and daily variation \
+            (Azure-like trace)");
+    let mut gen = TraceGenerator::new(TraceConfig::default(), seed);
+    let reqs = gen.generate_day();
+    println!("requests in one simulated day: {}", reqs.len());
+
+    println!("\n(a) prompt-length distribution");
+    let mut h = Histogram::new(0.0, 130.0, 13);
+    for r in &reqs {
+        h.add(r.prompt_len as f64);
+    }
+    print!("{}", h.ascii(40));
+
+    println!("\n(b) hourly arrival rate (requests per 1/24 day)");
+    let day = gen.cfg.day_secs;
+    let mut hourly = vec![0usize; 24];
+    for r in &reqs {
+        let hr = ((r.arrival / day) * 24.0) as usize;
+        hourly[hr.min(23)] += 1;
+    }
+    let max = *hourly.iter().max().unwrap_or(&1) as f64;
+    for (hr, &c) in hourly.iter().enumerate() {
+        let bar = "#".repeat((c as f64 / max * 40.0) as usize);
+        println!("  h{hr:02} |{bar:<40}| {c}");
+    }
+    println!("\n(c) generation-length stats");
+    let lens: Vec<f64> = reqs.iter().map(|r| r.gen_len as f64).collect();
+    println!("  mean {:.1}  p50 {:.1}  p95 {:.1}",
+             crate::util::stats::mean(&lens),
+             crate::util::stats::percentile(&lens, 50.0),
+             crate::util::stats::percentile(&lens, 95.0));
+    Ok(())
+}
+
+fn breakdown_row(mem: &MemoryModel, mask: &PruneMask, w: Workload,
+                 unit_gib: bool) {
+    let b = mem.breakdown(mask, w);
+    let total = b.total() as f64;
+    let fmt = |x: usize| if unit_gib { gib(x) } else { mib(x) };
+    println!(
+        "  bs={:<3} len={:<5} | FFN {:>8.2} ({:>4.1}%)  MHA {:>8.2} \
+         ({:>4.1}%)  KV {:>8.2} ({:>4.1}%)  total {:>8.2} {}",
+        w.batch, w.seqlen, fmt(b.ffn_param_bytes),
+        b.ffn_param_bytes as f64 / total * 100.0, fmt(b.mha_param_bytes),
+        b.mha_param_bytes as f64 / total * 100.0, fmt(b.kv_bytes),
+        b.kv_bytes as f64 / total * 100.0, fmt(b.total()),
+        if unit_gib { "GiB" } else { "MiB" });
+}
+
+/// Fig 3: memory footprint shares across batch/seqlen — the
+/// parameter-dominated → KV-dominated transition.
+pub fn fig3() -> Result<()> {
+    banner("Figure 3 — dynamic memory footprint across batch sizes and \
+            sequence lengths");
+    println!("\n(a) paper-scale shape: Llama2-7B (analytic, f32)");
+    let llama = ModelMeta::llama2_7b();
+    let mem = MemoryModel::new(&llama);
+    let mask = PruneMask::full(&llama);
+    for &(bs, len) in &[(1usize, 128usize), (1, 512), (4, 1024), (8, 2048),
+                        (16, 4096)] {
+        breakdown_row(&mem, &mask, Workload::new(bs, len), true);
+    }
+    println!("\n(b) this repo's substitute: rap-small (measured manifest)");
+    let s = setup("rap-small")?;
+    let mask = PruneMask::full(s.rt.meta());
+    for &(bs, len) in &[(1usize, 32usize), (2, 64), (4, 128), (8, 256),
+                        (16, 256)] {
+        breakdown_row(&s.mem, &mask, Workload::new(bs, len), false);
+    }
+    println!("\nshape check: small workloads parameter-dominated, large \
+              KV-dominated (paper Fig 3).");
+    Ok(())
+}
+
+/// Fig 4 / Fig 12: per-block sensitivity (remove one MHA/FFN) across
+/// sequence lengths.
+pub fn fig4(model: &str) -> Result<()> {
+    banner(&format!(
+        "Figure 4/12 — block sensitivity vs sequence length ({model})"));
+    let mut s = setup(model)?;
+    let meta = s.rt.meta().clone();
+    let full = PruneMask::full(&meta);
+    for &t in &[64usize, 128, 256] {
+        if t > meta.max_seq || !s.rt.meta().has_entry(&format!("score_b4_t{t}")) {
+            continue;
+        }
+        let tokens = s.corpus.batches(Split::Wiki, 4, t, 1, 0)?.remove(0);
+        let dense = s.rt.mean_nll(4, t, &tokens, &full)?;
+        println!("\nseq len {t}: dense PPL {:.2}", dense.exp());
+        println!("  {:<6} {:>10} {:>10}", "layer", "ΔPPL(MHA)",
+                 "ΔPPL(FFN)");
+        for l in 0..meta.n_layers {
+            let m1 = full.with_block_dropped(BlockId::Mha(l));
+            let m2 = full.with_block_dropped(BlockId::Ffn(l));
+            let p1 = s.rt.mean_nll(4, t, &tokens, &m1)?.exp();
+            let p2 = s.rt.mean_nll(4, t, &tokens, &m2)?.exp();
+            println!("  {:<6} {:>10.2} {:>10.2}", l, p1 - dense.exp(),
+                     p2 - dense.exp());
+        }
+    }
+    println!("\nshape check: per-layer impact is heterogeneous and varies \
+              with sequence length (paper Takeaway 2).");
+    Ok(())
+}
+
+/// Fig 5: dynamic memory allocation trace with OOM events under a static
+/// dense deployment vs RAP.
+pub fn fig5(seed: u64, secs: f64) -> Result<()> {
+    use crate::server::controller::{Controller, Policy};
+    use crate::server::engine::{Engine, EngineConfig};
+    use crate::server::memmon::{MemMonConfig, MemoryMonitor};
+
+    banner("Figure 5 — dynamic memory trace with co-running interference");
+    for (label, adaptive) in [("static-dense", false), ("RAP", true)] {
+        let s = setup("rap-small")?;
+        let calib = s.calib_tokens()?;
+        // Capacity: 1.35× the dense parameter bytes — enough for the dense
+        // model plus a moderate KV working set, but co-running apps
+        // (~30% chunks) push it under water, as in the paper's Fig 5.
+        let param_bytes =
+            s.mem.param_bytes(&PruneMask::full(s.rt.meta()));
+        let capacity = (param_bytes as f64 * 1.35) as usize;
+        let monitor = MemoryMonitor::new(MemMonConfig {
+            app_rate: 0.1,
+            mean_hold_secs: 25.0,
+            size_mu: (capacity as f64 * 0.30).ln(),
+            ..MemMonConfig::for_capacity(capacity)
+        }, seed);
+        let policy = if adaptive {
+            Policy::GsiGreedy
+        } else {
+            Policy::Static(PruneMask::full(s.rt.meta()))
+        };
+        let controller = Controller::new(policy, s.mem.clone(), calib, 128);
+        let mut engine = Engine::new(s.rt, monitor, controller,
+                                     EngineConfig {
+                                         max_sim_secs: secs,
+                                         ..EngineConfig::default()
+                                     });
+        let mut gen = TraceGenerator::new(TraceConfig {
+            base_rate: 1.2,
+            ..TraceConfig::default()
+        }, seed + 1);
+        let reqs = gen.generate(0.0, secs);
+        let n_req = reqs.len();
+        let report = engine.run_trace(reqs)?;
+        println!("\n[{label}] {} requests over {:.0}s sim", n_req, secs);
+        println!("  t(s)    used(MiB)  avail(MiB)");
+        for sample in engine.metrics.mem_trace.iter().step_by(4) {
+            let bar_used = (mib(sample.used) / 4.0) as usize;
+            println!("  {:>6.1} {:>9.1} {:>10.1} |{}", sample.t,
+                     mib(sample.used), mib(sample.available),
+                     "#".repeat(bar_used.min(60)));
+        }
+        println!("  OOM events: {}   evictions/rejections: {}   \
+                  completed: {}   mask switches: {}",
+                 report.oom_events, report.rejected, report.completed,
+                 report.mask_switches);
+    }
+    println!("\nshape check: static deployment accumulates OOM events when \
+              interference spikes; RAP shrinks the model instead.");
+    Ok(())
+}
+
+/// Fig 6: per-block PPL under one-shot vs GSI orderings.
+pub fn fig6(model: &str, n_remove: usize) -> Result<()> {
+    use crate::gsi::{CalibratedEvaluator, GsiEngine};
+
+    banner(&format!(
+        "Figure 6 — one-shot vs greedy-sequential importance ({model})"));
+    let s = setup(model)?;
+    let meta = s.rt.meta().clone();
+    let corpus = s.corpus;
+    let mut ev = CalibratedEvaluator::new(s.rt, &corpus, 4, 128)?;
+    let mut gsi = GsiEngine::new(&mut ev);
+    let full = PruneMask::full(&meta);
+
+    let one_shot = gsi.one_shot_order(&full)?;
+    println!("\none-shot ranking (first {n_remove} removals, static \
+              scores):");
+    let mut os_mask = full.clone();
+    for (b, d) in one_shot.iter().take(n_remove) {
+        os_mask.drop_block(*b);
+        println!("  remove {:<6} static ΔNLL {:+.4}", b.to_string(), d);
+    }
+    let os_nll = gsi.nll(&os_mask)?;
+
+    let mut count = 0usize;
+    let res = gsi.greedy(&full, |_| {
+        count += 1;
+        count > n_remove
+    })?;
+    println!("\nGSI ranking (recalibrated after every removal):");
+    for (b, nll) in res.order.iter().zip(&res.nll_after) {
+        println!("  remove {:<6} PPL after {:.2}", b.to_string(),
+                 nll.exp());
+    }
+    let gsi_nll = *res.nll_after.last().unwrap();
+    println!("\nafter {n_remove} removals: one-shot PPL {:.2} vs GSI PPL \
+              {:.2}  (dense {:.2})",
+             os_nll.exp(), gsi_nll.exp(), res.base_nll.exp());
+    println!("model evaluations spent (memoized): {}", gsi.memo_len());
+    println!("\nshape check: GSI ≤ one-shot (paper Fig 6 / Table 2 shows \
+              one-shot inflating PPL).");
+    Ok(())
+}

@@ -1,0 +1,230 @@
+//! Table drivers: Table 1 (main results), Table 2 (ablations), Table 3
+//! (Qwen-sim generalization), Table 4 (weight-prune ratios) — all under
+//! the paper's unified-memory-budget protocol.
+
+use anyhow::Result;
+
+use super::common::{agent_path, banner, budget_workload, setup,
+                    MCQ_QUESTIONS, PPL_BATCHES};
+use crate::agent::dqn::{DqnAgent, DqnConfig};
+use crate::agent::env::{EnvConfig, PruneEnv};
+use crate::evalharness::{full_eval, EvalRow};
+use crate::gsi::{CalibratedEvaluator, GsiEngine};
+use crate::mask::PruneMask;
+use crate::pruning::{build_mask, build_mask_eval, PruneContext, Scheme};
+
+pub struct TableRow {
+    pub scheme: String,
+    pub eval: EvalRow,
+    pub param_ratio_pruned: f64,
+}
+
+/// Evaluate one (model, budget) block of Table 1: every scheme under the
+/// same absolute byte budget. Returns rows for Table 4 reuse.
+pub fn run_budget_block(model: &str, budget_frac: f64, seed: u64,
+                        questions: usize, ppl_batches: usize)
+                        -> Result<Vec<TableRow>> {
+    let mut s = setup(model)?;
+    let meta = s.rt.meta().clone();
+    let w = budget_workload(&s.rt);
+    let budget_bytes = s.mem.budget_bytes(w, budget_frac);
+    let probe = s.dense_probe()?;
+
+    // 1. decide all masks first (so eval order can't bias anything)
+    let mut masks: Vec<(String, PruneMask)> = Vec::new();
+    {
+        let ctx = PruneContext { mem: &s.mem, probe: &probe, workload: w,
+                                 budget_bytes, seed };
+        masks.push(("Dense".into(), PruneMask::full(&meta)));
+        for scheme in Scheme::baselines() {
+            masks.push((scheme.name().into(), build_mask(scheme, &ctx)?));
+        }
+        masks.push((Scheme::RandomDrop.name().into(),
+                    build_mask(Scheme::RandomDrop, &ctx)?));
+    }
+    // evaluator-driven schemes share one memoized GSI engine
+    {
+        let corpus_ref = &s.corpus;
+        let mut ev = CalibratedEvaluator::new(s.rt, corpus_ref, 4, 128)?;
+        let mut gsi = GsiEngine::new(&mut ev);
+        let ctx = PruneContext { mem: &s.mem, probe: &probe, workload: w,
+                                 budget_bytes, seed };
+        masks.push((Scheme::OneShot.name().into(),
+                    build_mask_eval(Scheme::OneShot, &ctx, &mut gsi)?));
+        // RAP: trained agent if available, else GSI-greedy (same
+        // machinery the agent is trained around).
+        let rap_mask = if agent_path(model).exists() {
+            let agent = DqnAgent::load(&agent_path(model),
+                                       DqnConfig::default())?;
+            let mut env = PruneEnv::with_memo(&mut ev,
+                                              EnvConfig::default(),
+                                              Default::default());
+            crate::agent::online_prune(&agent, &mut env, w, budget_frac)?
+        } else {
+            build_mask_eval(Scheme::RapGreedy, &ctx, &mut gsi)?
+        };
+        masks.push(("RAP".into(), rap_mask));
+        s.rt = ev.rt; // hand the runtime back
+    }
+
+    // 2. evaluate
+    let mut rows = Vec::new();
+    for (name, mask) in masks {
+        let peak = s.mem.peak_bytes(&mask, w);
+        let fits = peak <= budget_bytes || name == "Dense";
+        let eval = full_eval(&mut s.rt, &s.corpus, &mask, &name,
+                             ppl_batches, questions, seed)?;
+        rows.push(TableRow {
+            scheme: if fits { name } else { format!("{name} (!fit)") },
+            eval,
+            param_ratio_pruned: 1.0 - mask.param_fraction(&meta),
+        });
+    }
+    Ok(rows)
+}
+
+/// Table 1 (and Table 3 when called with qwen-sim): zero-shot performance
+/// of pruned vs dense under 80% / 60% unified budgets.
+pub fn table1(model: &str, seed: u64, quick: bool) -> Result<Vec<(f64,
+    Vec<TableRow>)>> {
+    banner(&format!(
+        "Table 1/3 — zero-shot performance under memory budgets ({model})"));
+    let (q, p) = if quick { (8, 2) } else { (MCQ_QUESTIONS, PPL_BATCHES) };
+    let mut out = Vec::new();
+    for &budget in &[0.8f64, 0.6] {
+        println!("\n--- budget {:.0}% of dense peak (params + KV) ---",
+                 budget * 100.0);
+        println!("{}", EvalRow::header());
+        let rows = run_budget_block(model, budget, seed, q, p)?;
+        for r in &rows {
+            let mut e = r.eval.clone();
+            e.scheme = r.scheme.clone();
+            println!("{}", e.row());
+        }
+        out.push((budget, rows));
+    }
+    println!("\nshape check: RAP keeps the lowest PPL drift and highest \
+              avg accuracy at both budgets; FFN-Skip collapses under the \
+              KV-dominated budget (paper Table 1).");
+    Ok(out)
+}
+
+/// Table 2 / Fig 8: ablation study — RAP⁻GSI (one-shot scores) and
+/// RAP⁻RL (random drop) vs full RAP.
+pub fn table2(model: &str, seed: u64, quick: bool) -> Result<()> {
+    banner(&format!("Table 2 / Figure 8 — ablations ({model})"));
+    let (q, p) = if quick { (8, 2) } else { (MCQ_QUESTIONS, PPL_BATCHES) };
+    for &budget in &[0.8f64, 0.6] {
+        println!("\n--- budget {:.0}% ---", budget * 100.0);
+        println!("{}", EvalRow::header());
+        let rows = run_budget_block(model, budget, seed, q, p)?;
+        for r in rows {
+            let keep = r.scheme.contains("RAP") || r.scheme == "Dense";
+            if keep {
+                let mut e = r.eval.clone();
+                e.scheme = match r.scheme.as_str() {
+                    "Random-Drop (RAP-RL)" => "RAP -RL (random)".into(),
+                    "One-Shot (RAP-GSI)" => "RAP -GSI (one-shot)".into(),
+                    other => other.into(),
+                };
+                println!("{}", e.row());
+            }
+        }
+    }
+    println!("\nshape check: full RAP < RAP-GSI < RAP-RL in PPL (paper \
+              Table 2: 11.8 < 42.0 < 313.5 at 80%).");
+    Ok(())
+}
+
+/// Table 4: weight-prune ratio each scheme needed to meet the budget.
+pub fn table4(seed: u64) -> Result<()> {
+    banner("Table 4 — weight-pruning ratio required to meet each \
+            memory budget");
+    println!("{:<22} {:>14} {:>14} {:>14} {:>14}", "Scheme",
+             "rap-small 80%", "rap-small 60%", "qwen-sim 80%",
+             "qwen-sim 60%");
+    let mut cols: Vec<Vec<(String, f64)>> = Vec::new();
+    for model in ["rap-small", "qwen-sim"] {
+        for &budget in &[0.8f64, 0.6] {
+            let rows = run_budget_block(model, budget, seed, 0, 1)?;
+            cols.push(rows
+                .into_iter()
+                .map(|r| (r.scheme, r.param_ratio_pruned))
+                .collect());
+        }
+    }
+    for i in 0..cols[0].len() {
+        print!("{:<22}", cols[0][i].0);
+        for col in &cols {
+            print!(" {:>13.1}%", col[i].1 * 100.0);
+        }
+        println!();
+    }
+    println!("\nshape check: RAP meets the budget with the *least* weight \
+              pruning (paper Table 4: ~24% vs 35–75% for baselines) \
+              because it also prunes KV-heavy MHA blocks.");
+    Ok(())
+}
+
+/// Run every budget block once and print Tables 1, 2, 3 and 4 from the
+/// shared results (avoids recomputing the expensive eval blocks).
+pub fn all_tables(seed: u64, quick: bool) -> Result<()> {
+    let (q, p) = if quick { (8, 2) } else { (MCQ_QUESTIONS, PPL_BATCHES) };
+    let mut blocks: Vec<(String, f64, Vec<TableRow>)> = Vec::new();
+    for model in ["rap-small", "qwen-sim"] {
+        for &budget in &[0.8f64, 0.6] {
+            eprintln!("[tables] computing {model} @ {budget}...");
+            let rows = run_budget_block(model, budget, seed, q, p)?;
+            blocks.push((model.to_string(), budget, rows));
+        }
+    }
+    for model in ["rap-small", "qwen-sim"] {
+        banner(&format!(
+            "Table {} — zero-shot performance under memory budgets ({model})",
+            if model == "rap-small" { "1" } else { "3" }));
+        for (m, budget, rows) in &blocks {
+            if m != model {
+                continue;
+            }
+            println!("\n--- budget {:.0}% of dense peak (params + KV) ---",
+                     budget * 100.0);
+            println!("{}", EvalRow::header());
+            for r in rows {
+                let mut e = r.eval.clone();
+                e.scheme = r.scheme.clone();
+                println!("{}", e.row());
+            }
+        }
+    }
+    banner("Table 2 / Figure 8 — ablations (rap-small)");
+    for (m, budget, rows) in &blocks {
+        if m != "rap-small" {
+            continue;
+        }
+        println!("\n--- budget {:.0}% ---", budget * 100.0);
+        println!("{}", EvalRow::header());
+        for r in rows {
+            if r.scheme.contains("RAP") || r.scheme == "Dense" {
+                let mut e = r.eval.clone();
+                e.scheme = match r.scheme.as_str() {
+                    "Random-Drop (RAP-RL)" => "RAP -RL (random)".into(),
+                    "One-Shot (RAP-GSI)" => "RAP -GSI (one-shot)".into(),
+                    other => other.into(),
+                };
+                println!("{}", e.row());
+            }
+        }
+    }
+    banner("Table 4 — weight-pruning ratio required per budget");
+    println!("{:<22} {:>14} {:>14} {:>14} {:>14}", "Scheme",
+             "rap-small 80%", "rap-small 60%", "qwen-sim 80%",
+             "qwen-sim 60%");
+    for i in 0..blocks[0].2.len() {
+        print!("{:<22}", blocks[0].2[i].scheme);
+        for (_, _, rows) in &blocks {
+            print!(" {:>13.1}%", rows[i].param_ratio_pruned * 100.0);
+        }
+        println!();
+    }
+    Ok(())
+}

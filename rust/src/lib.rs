@@ -1,0 +1,38 @@
+//! # RAP — Runtime-Adaptive Pruning for LLM Inference
+//!
+//! Rust coordinator (L3) of the three-layer reproduction of *"Runtime
+//! Adaptive Pruning for LLM Inference"*: a reinforcement-learning
+//! controller that, per request mix and memory budget, decides which
+//! transformer MHA/FFN blocks to prune so that parameters + KV cache fit
+//! the instantaneous budget with minimal perplexity damage.
+//!
+//! Layer map (see DESIGN.md):
+//!   * L1 (Pallas kernels) + L2 (JAX model) live in `python/compile/` and
+//!     are AOT-lowered to HLO text under `artifacts/` at build time;
+//!   * L3 (this crate) loads those artifacts via PJRT (`runtime`), owns
+//!     the paper's contribution (`gsi`, `agent`, `pruning`) and the
+//!     serving stack (`server`, `workload`), and regenerates every table
+//!     and figure (`experiments`).
+
+pub mod agent;
+pub mod corpus;
+pub mod evalharness;
+pub mod experiments;
+pub mod gsi;
+pub mod mask;
+pub mod memory;
+pub mod model_meta;
+pub mod pruning;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;
+
+use std::path::PathBuf;
+
+/// Default artifacts location: `$RAP_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("RAP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,104 @@
+//! `rap` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   experiment <id>   regenerate a paper table/figure
+//!                     (fig2|fig3|fig4|fig5|fig6|fig9|fig10|fig11|
+//!                      table1|table2|table3|table4|all)
+//!   train-agent       train + save the DQN controller for a model
+//!   serve             replay a synthetic trace through the serving engine
+//!   gsi               run Greedy Sequential Importance on a model
+//!
+//! Common flags: --model <name> --seed <n> --quick
+
+use anyhow::{bail, Result};
+use rap::experiments::{figures, rl, tables};
+use rap::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let model = args.str_or("model", "rap-small");
+    let seed = args.u64_or("seed", 42)?;
+    let quick = args.bool("quick");
+    match cmd {
+        "experiment" => {
+            let id = args
+                .positional
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            run_experiment(id, &model, seed, quick, &args)
+        }
+        "train-agent" => {
+            let episodes = args.usize_or(
+                "episodes", if quick { 40 } else { 120 })?;
+            rl::train_agent(&model, episodes, seed)?;
+            Ok(())
+        }
+        "gsi" => {
+            let n = args.usize_or("remove", 8)?;
+            figures::fig6(&model, n)
+        }
+        "serve" => {
+            let secs = args.f64_or("secs", 120.0)?;
+            figures::fig5(seed, secs)
+        }
+        "help" | _ => {
+            print_help();
+            if cmd != "help" {
+                bail!("unknown command '{cmd}'");
+            }
+            Ok(())
+        }
+    }
+}
+
+fn run_experiment(id: &str, model: &str, seed: u64, quick: bool,
+                  args: &Args) -> Result<()> {
+    let episodes = args.usize_or("episodes",
+                                 if quick { 30 } else { 80 })?;
+    match id {
+        "fig2" => figures::fig2(seed),
+        "fig3" => figures::fig3(),
+        "fig4" | "fig12" => figures::fig4(model),
+        "fig5" => figures::fig5(seed, args.f64_or("secs",
+                                                  if quick { 60.0 }
+                                                  else { 180.0 })?),
+        "fig6" => figures::fig6(model, args.usize_or("remove", 6)?),
+        "fig9" => rl::fig9(model, episodes),
+        "fig10" => rl::fig10(model, episodes.min(40)),
+        "fig11" => rl::fig11(model),
+        "table1" => tables::table1(model, seed, quick).map(|_| ()),
+        "table2" | "fig8" => tables::table2(model, seed, quick),
+        "table3" => tables::table1("qwen-sim", seed, quick).map(|_| ()),
+        "table4" => tables::table4(seed),
+        "tables" => tables::all_tables(seed, quick),
+        "all" => {
+            figures::fig2(seed)?;
+            figures::fig3()?;
+            figures::fig4(model)?;
+            figures::fig5(seed, if quick { 60.0 } else { 180.0 })?;
+            figures::fig6(model, 6)?;
+            tables::all_tables(seed, quick)?;
+            rl::fig9(model, episodes)?;
+            rl::fig10(model, episodes.min(40))?;
+            rl::fig11(model)
+        }
+        _ => bail!("unknown experiment '{id}'"),
+    }
+}
+
+fn print_help() {
+    println!("rap — Runtime-Adaptive Pruning for LLM inference");
+    println!();
+    println!("USAGE: rap <command> [flags]");
+    println!();
+    println!("COMMANDS:");
+    println!("  experiment <id>  fig2..fig12, table1..table4, all");
+    println!("  train-agent      --model <m> --episodes <n> --seed <s>");
+    println!("  serve            --secs <n> --seed <s>");
+    println!("  gsi              --model <m> --remove <n>");
+    println!();
+    println!("FLAGS: --model rap-small|qwen-sim|rap-tiny  --seed N  \
+              --quick");
+}

@@ -1,0 +1,270 @@
+//! Pruning masks: the runtime representation of a compression decision.
+//!
+//! A `PruneMask` holds the two gate tensors fed to every compiled entry
+//! point (`head_gate [L, H]`, `ffn_gate [L, F]`). Block-level pruning (the
+//! paper's action space) zeroes whole rows; channel-level baselines
+//! (LLMPruner-sim, SliceGPT-sim) zero subsets. All memory accounting in
+//! `memory.rs` is derived from the mask, so a mask IS the single source of
+//! truth for "what is pruned".
+
+use crate::model_meta::{BlockId, ModelMeta};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct PruneMask {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    /// Row-major [L, H] multiplier (1.0 = keep).
+    pub head_gate: Vec<f32>,
+    /// Row-major [L, F] multiplier.
+    pub ffn_gate: Vec<f32>,
+}
+
+impl PruneMask {
+    /// Dense model: everything kept.
+    pub fn full(meta: &ModelMeta) -> PruneMask {
+        PruneMask {
+            n_layers: meta.n_layers,
+            n_heads: meta.n_heads,
+            n_kv_heads: meta.n_kv_heads,
+            d_ff: meta.d_ff,
+            head_gate: vec![1.0; meta.n_layers * meta.n_heads],
+            ffn_gate: vec![1.0; meta.n_layers * meta.d_ff],
+        }
+    }
+
+    // -- block-level ops (the paper's 2N action space) ----------------------
+
+    pub fn drop_block(&mut self, b: BlockId) {
+        match b {
+            BlockId::Mha(l) => self.set_mha_row(l, 0.0),
+            BlockId::Ffn(l) => self.set_ffn_row(l, 0.0),
+        }
+    }
+
+    pub fn restore_block(&mut self, b: BlockId) {
+        match b {
+            BlockId::Mha(l) => self.set_mha_row(l, 1.0),
+            BlockId::Ffn(l) => self.set_ffn_row(l, 1.0),
+        }
+    }
+
+    pub fn with_block_dropped(&self, b: BlockId) -> PruneMask {
+        let mut m = self.clone();
+        m.drop_block(b);
+        m
+    }
+
+    fn set_mha_row(&mut self, l: usize, v: f32) {
+        let h = self.n_heads;
+        self.head_gate[l * h..(l + 1) * h].fill(v);
+    }
+
+    fn set_ffn_row(&mut self, l: usize, v: f32) {
+        let f = self.d_ff;
+        self.ffn_gate[l * f..(l + 1) * f].fill(v);
+    }
+
+    /// A block counts as dropped when every gate in its row is zero.
+    pub fn block_dropped(&self, b: BlockId) -> bool {
+        match b {
+            BlockId::Mha(l) => self.active_heads(l) == 0,
+            BlockId::Ffn(l) => self.active_ffn_channels(l) == 0,
+        }
+    }
+
+    pub fn dropped_blocks(&self) -> Vec<BlockId> {
+        let mut out = Vec::new();
+        for l in 0..self.n_layers {
+            if self.block_dropped(BlockId::Mha(l)) {
+                out.push(BlockId::Mha(l));
+            }
+        }
+        for l in 0..self.n_layers {
+            if self.block_dropped(BlockId::Ffn(l)) {
+                out.push(BlockId::Ffn(l));
+            }
+        }
+        out
+    }
+
+    // -- channel-level ops (baselines) --------------------------------------
+
+    pub fn set_head(&mut self, l: usize, h: usize, keep: bool) {
+        self.head_gate[l * self.n_heads + h] = if keep { 1.0 } else { 0.0 };
+    }
+
+    pub fn head(&self, l: usize, h: usize) -> bool {
+        self.head_gate[l * self.n_heads + h] != 0.0
+    }
+
+    pub fn set_ffn_channel(&mut self, l: usize, c: usize, keep: bool) {
+        self.ffn_gate[l * self.d_ff + c] = if keep { 1.0 } else { 0.0 };
+    }
+
+    pub fn ffn_channel(&self, l: usize, c: usize) -> bool {
+        self.ffn_gate[l * self.d_ff + c] != 0.0
+    }
+
+    // -- aggregate queries (feed the memory model) ---------------------------
+
+    pub fn active_heads(&self, l: usize) -> usize {
+        let h = self.n_heads;
+        self.head_gate[l * h..(l + 1) * h]
+            .iter()
+            .filter(|&&g| g != 0.0)
+            .count()
+    }
+
+    pub fn active_ffn_channels(&self, l: usize) -> usize {
+        let f = self.d_ff;
+        self.ffn_gate[l * f..(l + 1) * f]
+            .iter()
+            .filter(|&&g| g != 0.0)
+            .count()
+    }
+
+    /// KV groups with at least one live query head — these are the kv
+    /// heads whose cache rows must actually be stored.
+    pub fn active_kv_groups(&self, l: usize) -> usize {
+        let group = self.n_heads / self.n_kv_heads;
+        (0..self.n_kv_heads)
+            .filter(|&g| {
+                (0..group).any(|j| self.head(l, g * group + j))
+            })
+            .count()
+    }
+
+    /// Fraction of prunable-block parameters retained (Table 4 metric).
+    pub fn param_fraction(&self, meta: &ModelMeta) -> f64 {
+        let mut kept = meta.base_params() as f64;
+        for l in 0..self.n_layers {
+            kept += self.layer_param_bytes_scalar(meta, l);
+        }
+        kept / meta.total_params() as f64
+    }
+
+    /// Parameters retained in layer `l` (scalar count, not bytes).
+    pub fn layer_param_bytes_scalar(&self, meta: &ModelMeta, l: usize)
+                                    -> f64 {
+        let d = meta.d_model as f64;
+        let dh = meta.head_dim() as f64;
+        let qh = self.active_heads(l) as f64;
+        let kvg = self.active_kv_groups(l) as f64;
+        let fc = self.active_ffn_channels(l) as f64;
+        let mut p = 0.0;
+        if qh > 0.0 {
+            p += qh * 2.0 * d * dh;        // wq + wo slices
+            p += kvg * 2.0 * d * dh;       // wk + wv slices
+            p += d;                        // attn norm
+        }
+        if fc > 0.0 {
+            p += fc * 3.0 * d;             // w_gate/w_up cols + w_down rows
+            p += d;                        // ffn norm
+        }
+        p
+    }
+
+    /// Stable 64-bit key for memoization (GSI caches per pruned-set).
+    pub fn key(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut feed = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        for (i, &g) in self.head_gate.iter().enumerate() {
+            if g == 0.0 {
+                feed(i as u64 + 1);
+            }
+        }
+        feed(u64::MAX);
+        for (i, &g) in self.ffn_gate.iter().enumerate() {
+            if g == 0.0 {
+                feed(i as u64 + 1);
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta::synthetic("t", 4, 64, 4, 2, 96, 128, 64)
+    }
+
+    #[test]
+    fn full_mask_keeps_everything() {
+        let m = meta();
+        let mask = PruneMask::full(&m);
+        assert_eq!(mask.dropped_blocks(), vec![]);
+        assert!((mask.param_fraction(&m) - 1.0).abs() < 1e-12);
+        for l in 0..4 {
+            assert_eq!(mask.active_heads(l), 4);
+            assert_eq!(mask.active_kv_groups(l), 2);
+            assert_eq!(mask.active_ffn_channels(l), 96);
+        }
+    }
+
+    #[test]
+    fn drop_and_restore_block() {
+        let m = meta();
+        let mut mask = PruneMask::full(&m);
+        mask.drop_block(BlockId::Mha(1));
+        mask.drop_block(BlockId::Ffn(3));
+        assert!(mask.block_dropped(BlockId::Mha(1)));
+        assert!(mask.block_dropped(BlockId::Ffn(3)));
+        assert_eq!(mask.dropped_blocks().len(), 2);
+        assert_eq!(mask.active_kv_groups(1), 0);
+        mask.restore_block(BlockId::Mha(1));
+        assert!(!mask.block_dropped(BlockId::Mha(1)));
+        assert_eq!(mask.dropped_blocks().len(), 1);
+    }
+
+    #[test]
+    fn kv_groups_follow_query_heads() {
+        let m = meta();
+        let mut mask = PruneMask::full(&m);
+        // group size = 2: heads {0,1} -> group0, {2,3} -> group1
+        mask.set_head(0, 0, false);
+        assert_eq!(mask.active_kv_groups(0), 2); // head 1 keeps group 0
+        mask.set_head(0, 1, false);
+        assert_eq!(mask.active_kv_groups(0), 1);
+        assert!(!mask.block_dropped(BlockId::Mha(0)));
+        mask.set_head(0, 2, false);
+        mask.set_head(0, 3, false);
+        assert_eq!(mask.active_kv_groups(0), 0);
+        assert!(mask.block_dropped(BlockId::Mha(0)));
+    }
+
+    #[test]
+    fn param_fraction_decreases_monotonically() {
+        let m = meta();
+        let mut mask = PruneMask::full(&m);
+        let mut prev = mask.param_fraction(&m);
+        for b in m.all_blocks() {
+            mask.drop_block(b);
+            let f = mask.param_fraction(&m);
+            assert!(f < prev, "{b}: {f} !< {prev}");
+            prev = f;
+        }
+        // everything dropped → only base params remain
+        assert!((prev - m.base_params() as f64 / m.total_params() as f64)
+            .abs() < 1e-12);
+    }
+
+    #[test]
+    fn keys_distinguish_masks() {
+        let m = meta();
+        let full = PruneMask::full(&m);
+        let a = full.with_block_dropped(BlockId::Mha(0));
+        let b = full.with_block_dropped(BlockId::Ffn(0));
+        let c = full.with_block_dropped(BlockId::Mha(0));
+        assert_ne!(full.key(), a.key());
+        assert_ne!(a.key(), b.key());
+        assert_eq!(a.key(), c.key());
+    }
+}

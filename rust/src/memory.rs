@@ -1,0 +1,247 @@
+//! The paper's memory model (Appendix A.2, Eq. 3–4).
+//!
+//!   Mem_param(M)            = b_prec · Σ_B #params(B)
+//!   Mem_KV(M, bs, sql)      = b_prec · 2 · Σ_ℓ n_kv,ℓ · d_head · bs · sql
+//!   Mem_peak                = Mem_param + Mem_KV
+//!
+//! All budget arithmetic in the paper ("80% memory budget" = 0.8 ×
+//! peak(dense, workload)) goes through this module, as does the serving
+//! runtime's admission control.
+
+use crate::mask::PruneMask;
+use crate::model_meta::{ModelMeta, BYTES_PER_SCALAR};
+
+/// A (batch size, sequence length) request shape — the workload half of
+/// the paper's state vector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Workload {
+    pub batch: usize,
+    pub seqlen: usize,
+}
+
+impl Workload {
+    pub fn new(batch: usize, seqlen: usize) -> Workload {
+        Workload { batch, seqlen }
+    }
+}
+
+/// Breakdown of a peak-memory estimate (drives Fig 3's pies).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemBreakdown {
+    pub ffn_param_bytes: usize,
+    pub mha_param_bytes: usize,
+    pub base_param_bytes: usize,
+    pub kv_bytes: usize,
+}
+
+impl MemBreakdown {
+    pub fn param_bytes(&self) -> usize {
+        self.ffn_param_bytes + self.mha_param_bytes + self.base_param_bytes
+    }
+
+    pub fn total(&self) -> usize {
+        self.param_bytes() + self.kv_bytes
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MemoryModel {
+    meta: ModelMeta,
+}
+
+impl MemoryModel {
+    pub fn new(meta: &ModelMeta) -> MemoryModel {
+        MemoryModel { meta: meta.clone() }
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Eq. 3 restricted to the blocks the mask keeps.
+    pub fn param_bytes(&self, mask: &PruneMask) -> usize {
+        self.breakdown(mask, Workload::new(0, 0)).param_bytes()
+    }
+
+    /// Eq. 4: KV bytes for a workload under a mask. A layer whose MHA
+    /// block is gone stores nothing; with GQA only kv groups that still
+    /// serve a live query head are stored.
+    pub fn kv_bytes(&self, mask: &PruneMask, w: Workload) -> usize {
+        let mut total = 0usize;
+        for l in 0..self.meta.n_layers {
+            let kvh = mask.active_kv_groups(l);
+            total += self.meta.kv_bytes_per_token_layer(kvh)
+                * w.batch
+                * w.seqlen;
+        }
+        total
+    }
+
+    /// Eq. 3 + Eq. 4 with the FFN/MHA/base/KV split.
+    pub fn breakdown(&self, mask: &PruneMask, w: Workload) -> MemBreakdown {
+        let m = &self.meta;
+        let d = m.d_model;
+        let dh = m.head_dim();
+        let mut ffn = 0usize;
+        let mut mha = 0usize;
+        for l in 0..m.n_layers {
+            let qh = mask.active_heads(l);
+            let kvg = mask.active_kv_groups(l);
+            if qh > 0 {
+                mha += (qh * 2 * d * dh + kvg * 2 * d * dh + d)
+                    * BYTES_PER_SCALAR;
+            }
+            let fc = mask.active_ffn_channels(l);
+            if fc > 0 {
+                ffn += (fc * 3 * d + d) * BYTES_PER_SCALAR;
+            }
+        }
+        MemBreakdown {
+            ffn_param_bytes: ffn,
+            mha_param_bytes: mha,
+            base_param_bytes: m.base_params() * BYTES_PER_SCALAR,
+            kv_bytes: self.kv_bytes(mask, w),
+        }
+    }
+
+    /// Mem_peak(M, bs, sql).
+    pub fn peak_bytes(&self, mask: &PruneMask, w: Workload) -> usize {
+        self.param_bytes(mask) + self.kv_bytes(mask, w)
+    }
+
+    /// Peak of the *dense* model — the reference the paper's "X% budget"
+    /// is defined against.
+    pub fn dense_peak_bytes(&self, w: Workload) -> usize {
+        self.peak_bytes(&PruneMask::full(&self.meta), w)
+    }
+
+    /// Absolute byte budget for a relative budget (e.g. 0.8).
+    pub fn budget_bytes(&self, w: Workload, fraction: f64) -> usize {
+        (self.dense_peak_bytes(w) as f64 * fraction) as usize
+    }
+
+    /// Does the mask fit the budget for this workload?
+    pub fn fits(&self, mask: &PruneMask, w: Workload, budget_bytes: usize)
+                -> bool {
+        self.peak_bytes(mask, w) <= budget_bytes
+    }
+
+    /// Bytes freed by dropping `b` from `mask` (0 if already dropped) —
+    /// the R_mem term of the paper's reward (Eq. 2).
+    pub fn block_bytes(&self, mask: &PruneMask, w: Workload,
+                       b: crate::model_meta::BlockId) -> usize {
+        if mask.block_dropped(b) {
+            return 0;
+        }
+        let after = mask.with_block_dropped(b);
+        self.peak_bytes(mask, w) - self.peak_bytes(&after, w)
+    }
+}
+
+pub fn gib(bytes: usize) -> f64 {
+    bytes as f64 / (1u64 << 30) as f64
+}
+
+pub fn mib(bytes: usize) -> f64 {
+    bytes as f64 / (1u64 << 20) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_meta::BlockId;
+
+    fn mm() -> MemoryModel {
+        MemoryModel::new(&ModelMeta::synthetic("t", 4, 64, 4, 2, 96, 128,
+                                               64))
+    }
+
+    #[test]
+    fn dense_param_bytes_match_total() {
+        let mm = mm();
+        let mask = PruneMask::full(mm.meta());
+        assert_eq!(mm.param_bytes(&mask),
+                   mm.meta().total_params() * BYTES_PER_SCALAR);
+    }
+
+    #[test]
+    fn kv_scales_linearly_with_batch_and_seq() {
+        let mm = mm();
+        let mask = PruneMask::full(mm.meta());
+        let a = mm.kv_bytes(&mask, Workload::new(1, 16));
+        let b = mm.kv_bytes(&mask, Workload::new(2, 16));
+        let c = mm.kv_bytes(&mask, Workload::new(1, 32));
+        assert_eq!(b, 2 * a);
+        assert_eq!(c, 2 * a);
+        assert!(a > 0);
+    }
+
+    #[test]
+    fn dropping_mha_frees_params_and_kv() {
+        let mm = mm();
+        let w = Workload::new(4, 64);
+        let full = PruneMask::full(mm.meta());
+        let pruned = full.with_block_dropped(BlockId::Mha(2));
+        assert!(mm.param_bytes(&pruned) < mm.param_bytes(&full));
+        assert!(mm.kv_bytes(&pruned, w) < mm.kv_bytes(&full, w));
+        // exactly one layer's kv disappears
+        let per_layer = mm.meta().kv_bytes_per_token_layer(2) * 4 * 64;
+        assert_eq!(mm.kv_bytes(&full, w) - mm.kv_bytes(&pruned, w),
+                   per_layer);
+    }
+
+    #[test]
+    fn dropping_ffn_frees_params_only() {
+        let mm = mm();
+        let w = Workload::new(4, 64);
+        let full = PruneMask::full(mm.meta());
+        let pruned = full.with_block_dropped(BlockId::Ffn(1));
+        assert!(mm.param_bytes(&pruned) < mm.param_bytes(&full));
+        assert_eq!(mm.kv_bytes(&pruned, w), mm.kv_bytes(&full, w));
+    }
+
+    #[test]
+    fn budget_and_fits() {
+        let mm = mm();
+        let w = Workload::new(8, 64);
+        let full = PruneMask::full(mm.meta());
+        let budget = mm.budget_bytes(w, 0.8);
+        assert!(!mm.fits(&full, w, budget));
+        // drop everything → must fit
+        let mut empty = full.clone();
+        for b in mm.meta().all_blocks() {
+            empty.drop_block(b);
+        }
+        assert!(mm.fits(&empty, w, budget));
+    }
+
+    #[test]
+    fn block_bytes_is_peak_delta() {
+        let mm = mm();
+        let w = Workload::new(2, 32);
+        let full = PruneMask::full(mm.meta());
+        for b in mm.meta().all_blocks() {
+            let freed = mm.block_bytes(&full, w, b);
+            let after = full.with_block_dropped(b);
+            assert_eq!(freed,
+                       mm.peak_bytes(&full, w) - mm.peak_bytes(&after, w));
+            assert!(freed > 0);
+        }
+    }
+
+    #[test]
+    fn paper_regime_shift_param_to_kv() {
+        // Fig 3's qualitative claim on the Llama2-7B shape: small
+        // workloads are parameter-dominated, large ones KV-dominated.
+        let mm = MemoryModel::new(&ModelMeta::llama2_7b());
+        let mask = PruneMask::full(mm.meta());
+        let small = mm.breakdown(&mask, Workload::new(1, 128));
+        assert!(small.param_bytes() > small.kv_bytes);
+        let large = mm.breakdown(&mask, Workload::new(16, 4096));
+        assert!(large.kv_bytes > large.param_bytes());
+        // paper's headline number: 32 GB of KV at batch=16, 4k tokens, bf16.
+        let kv_bf16 = large.kv_bytes / 2; // we store f32, paper uses bf16
+        let gib_v = kv_bf16 as f64 / (1u64 << 30) as f64;
+        assert!(gib_v > 28.0 && gib_v < 36.0, "kv={gib_v} GiB");
+    }
+}

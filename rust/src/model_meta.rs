@@ -1,0 +1,351 @@
+//! Model architecture metadata, loaded from `artifacts/<model>/manifest.json`.
+//!
+//! Mirrors `python/compile/model.py::ModelConfig` plus the parameter table
+//! (name/shape/offset into `weights.bin`) and the entry-point descriptors
+//! (input/output shapes per compiled HLO). Everything downstream — the
+//! memory model, the mask arithmetic, the runtime literal construction —
+//! is derived from this single source of truth.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an entry input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype '{s}'"),
+        }
+    }
+}
+
+/// One tensor in `weights.bin`.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// One input or output of a compiled entry point.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled HLO entry point (e.g. `score_b4_t128`).
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The architecture constants (paper notation: N layers, each with one MHA
+/// and one FFN block → 2N prunable blocks).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub params: Vec<ParamSpec>,
+    pub entries: Vec<EntrySpec>,
+    pub dir: PathBuf,
+}
+
+/// Identifier of a prunable transformer block. The paper's action space is
+/// exactly these 2N blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BlockId {
+    Mha(usize),
+    Ffn(usize),
+}
+
+impl BlockId {
+    /// Flat index in [0, 2N): MHA blocks first, then FFN blocks.
+    pub fn index(&self, n_layers: usize) -> usize {
+        match *self {
+            BlockId::Mha(l) => l,
+            BlockId::Ffn(l) => n_layers + l,
+        }
+    }
+
+    pub fn from_index(i: usize, n_layers: usize) -> BlockId {
+        if i < n_layers {
+            BlockId::Mha(i)
+        } else {
+            BlockId::Ffn(i - n_layers)
+        }
+    }
+
+    pub fn layer(&self) -> usize {
+        match *self {
+            BlockId::Mha(l) | BlockId::Ffn(l) => l,
+        }
+    }
+
+    pub fn is_mha(&self) -> bool {
+        matches!(self, BlockId::Mha(_))
+    }
+}
+
+impl std::fmt::Display for BlockId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BlockId::Mha(l) => write!(f, "MHA{l}"),
+            BlockId::Ffn(l) => write!(f, "FFN{l}"),
+        }
+    }
+}
+
+impl ModelMeta {
+    /// Load from `artifacts/<model>/manifest.json`.
+    pub fn load(model_dir: &Path) -> Result<ModelMeta> {
+        let manifest = Json::parse_file(&model_dir.join("manifest.json"))
+            .context("loading manifest")?;
+        let m = manifest.get("model")?;
+        let params = manifest
+            .get("params")?
+            .arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.str()?.to_string(),
+                    shape: p.get("shape")?.usize_vec()?,
+                    offset: p.get("offset")?.usize()?,
+                    nbytes: p.get("nbytes")?.usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut entries = Vec::new();
+        for (name, e) in manifest.get("entries")?.obj()? {
+            let tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+                e.get(key)?
+                    .arr()?
+                    .iter()
+                    .map(|t| {
+                        Ok(TensorSpec {
+                            name: t.get("name")?.str()?.to_string(),
+                            shape: t.get("shape")?.usize_vec()?,
+                            dtype: DType::parse(t.get("dtype")?.str()?)?,
+                        })
+                    })
+                    .collect()
+            };
+            entries.push(EntrySpec {
+                name: name.clone(),
+                file: e.get("file")?.str()?.to_string(),
+                inputs: tensors("inputs")?,
+                outputs: tensors("outputs")?,
+            });
+        }
+        Ok(ModelMeta {
+            name: m.get("name")?.str()?.to_string(),
+            vocab: m.get("vocab")?.usize()?,
+            d_model: m.get("d_model")?.usize()?,
+            n_layers: m.get("n_layers")?.usize()?,
+            n_heads: m.get("n_heads")?.usize()?,
+            n_kv_heads: m.get("n_kv_heads")?.usize()?,
+            d_ff: m.get("d_ff")?.usize()?,
+            max_seq: m.get("max_seq")?.usize()?,
+            params,
+            entries,
+            dir: model_dir.to_path_buf(),
+        })
+    }
+
+    /// Synthetic metadata for unit tests and analytic sweeps (no
+    /// artifacts needed).
+    pub fn synthetic(name: &str, n_layers: usize, d_model: usize,
+                     n_heads: usize, n_kv_heads: usize, d_ff: usize,
+                     vocab: usize, max_seq: usize) -> ModelMeta {
+        ModelMeta {
+            name: name.to_string(),
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            n_kv_heads,
+            d_ff,
+            max_seq,
+            params: Vec::new(),
+            entries: Vec::new(),
+            dir: PathBuf::new(),
+        }
+    }
+
+    /// Llama2-7B-shaped metadata — used by the analytic memory-model
+    /// figures (Fig 3) to reproduce the paper's own numbers.
+    pub fn llama2_7b() -> ModelMeta {
+        ModelMeta::synthetic("llama2-7b", 32, 4096, 32, 32, 11008, 32000,
+                             4096)
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    /// Total prunable blocks (paper: 2N).
+    pub fn n_blocks(&self) -> usize {
+        2 * self.n_layers
+    }
+
+    pub fn all_blocks(&self) -> Vec<BlockId> {
+        (0..self.n_blocks())
+            .map(|i| BlockId::from_index(i, self.n_layers))
+            .collect()
+    }
+
+    /// Parameters in one full MHA block (wq + wk + wv + wo + norm).
+    pub fn mha_block_params(&self) -> usize {
+        let d = self.d_model;
+        let qo = d * self.n_heads * self.head_dim() * 2;
+        let kv = d * self.n_kv_heads * self.head_dim() * 2;
+        qo + kv + d
+    }
+
+    /// Parameters in one full FFN block (w_gate + w_up + w_down + norm).
+    pub fn ffn_block_params(&self) -> usize {
+        3 * self.d_model * self.d_ff + self.d_model
+    }
+
+    /// Parameters outside any prunable block (embedding + final norm).
+    pub fn base_params(&self) -> usize {
+        self.vocab * self.d_model + self.d_model
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.base_params()
+            + self.n_layers
+                * (self.mha_block_params() + self.ffn_block_params())
+    }
+
+    /// Per-query-head parameters (wq + wo slices).
+    pub fn per_head_params(&self) -> usize {
+        2 * self.d_model * self.head_dim()
+    }
+
+    /// Per-kv-group parameters (wk + wv slices, shared by `group_size`
+    /// query heads).
+    pub fn per_kv_group_params(&self) -> usize {
+        2 * self.d_model * self.head_dim()
+    }
+
+    /// Per-FFN-channel parameters (one column of w_gate/w_up, one row of
+    /// w_down).
+    pub fn per_ffn_channel_params(&self) -> usize {
+        3 * self.d_model
+    }
+
+    /// KV-cache bytes for ONE token in ONE layer with `kv_heads` active
+    /// kv heads (×2 for keys and values; f32 storage).
+    pub fn kv_bytes_per_token_layer(&self, kv_heads: usize) -> usize {
+        2 * kv_heads * self.head_dim() * BYTES_PER_SCALAR
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("entry '{name}' not in manifest \
+                 (available: {:?})",
+                self.entries.iter().map(|e| &e.name).collect::<Vec<_>>()))
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.entries.iter().any(|e| e.name == name)
+    }
+}
+
+/// f32 everywhere in this build (the paper uses bf16=2; the *ratios* that
+/// drive every result are byte-size independent).
+pub const BYTES_PER_SCALAR: usize = 4;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        // rap-small shape
+        ModelMeta::synthetic("t", 12, 256, 8, 8, 1024, 512, 256)
+    }
+
+    #[test]
+    fn block_indexing_roundtrip() {
+        let m = meta();
+        for i in 0..m.n_blocks() {
+            let b = BlockId::from_index(i, m.n_layers);
+            assert_eq!(b.index(m.n_layers), i);
+        }
+        assert_eq!(BlockId::Mha(3).layer(), 3);
+        assert!(BlockId::Mha(0).is_mha());
+        assert!(!BlockId::Ffn(0).is_mha());
+    }
+
+    #[test]
+    fn param_counts_match_hand_calc() {
+        let m = meta();
+        // wq/wo: 256*256 each; wk/wv: 256*256 each (MHA); + norm 256
+        assert_eq!(m.mha_block_params(), 4 * 256 * 256 + 256);
+        assert_eq!(m.ffn_block_params(), 3 * 256 * 1024 + 256);
+        assert_eq!(m.base_params(), 512 * 256 + 256);
+        let total = m.total_params();
+        assert!(total > 12_000_000 && total < 14_000_000, "{total}");
+    }
+
+    #[test]
+    fn gqa_param_counts() {
+        let m = ModelMeta::synthetic("q", 8, 256, 8, 2, 768, 512, 256);
+        // wq/wo: 256*256 each; wk/wv: 256*64 each
+        assert_eq!(m.mha_block_params(),
+                   2 * 256 * 256 + 2 * 256 * 64 + 256);
+        assert_eq!(m.group_size(), 4);
+    }
+
+    #[test]
+    fn llama2_7b_is_7b() {
+        let m = ModelMeta::llama2_7b();
+        let total = m.total_params();
+        assert!(total > 6_400_000_000 && total < 6_900_000_000, "{total}");
+        // paper §2.1: FFN ≈ 2× attention parameters
+        let r = m.ffn_block_params() as f64 / m.mha_block_params() as f64;
+        assert!(r > 1.8 && r < 2.2, "ffn/mha ratio {r}");
+    }
+
+    #[test]
+    fn kv_bytes_match_paper_formula() {
+        let m = ModelMeta::llama2_7b();
+        // paper: 2 * n_heads * d_head per token per layer (scalars)
+        let per = m.kv_bytes_per_token_layer(m.n_kv_heads);
+        assert_eq!(per, 2 * 32 * 128 * BYTES_PER_SCALAR);
+    }
+}

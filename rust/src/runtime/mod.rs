@@ -1,0 +1,436 @@
+//! PJRT runtime: loads the AOT artifacts and executes them from Rust.
+//!
+//! This is the only module that touches the `xla` crate. It follows the
+//! /opt/xla-example/load_hlo pattern: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! Performance notes (§Perf):
+//!   * weights are uploaded to the device ONCE as `PjRtBuffer`s and reused
+//!     by every call via `execute_b` — without this every score/decode call
+//!     would re-copy ~50 MB of parameters;
+//!   * executables are compiled lazily per entry and cached;
+//!   * PJRT (through this wrapper) returns one tuple buffer per execution,
+//!     so multi-output results round-trip the host; KV caches therefore
+//!     live host-side between decode steps (measured in EXPERIMENTS.md
+//!     §Perf).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::mask::PruneMask;
+use crate::model_meta::{DType, EntrySpec, ModelMeta};
+
+/// A host-side input tensor handed to `Runtime::execute`.
+pub enum HostArr<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl HostArr<'_> {
+    fn len(&self) -> usize {
+        match self {
+            HostArr::F32(v) => v.len(),
+            HostArr::I32(v) => v.len(),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            HostArr::F32(_) => DType::F32,
+            HostArr::I32(_) => DType::I32,
+        }
+    }
+}
+
+/// Per-entry execution statistics (drives the §Perf analysis + Fig 11).
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// Block-redundancy statistics from the `probe` entry (consumed by the
+/// baseline pruners).
+#[derive(Clone, Debug)]
+pub struct ProbeStats {
+    /// cos(x, x + attn(x)) per layer — high = MHA block redundant.
+    pub attn_cos: Vec<f32>,
+    /// cos(x, x + ffn(x)) per layer — high = FFN block redundant.
+    pub ffn_cos: Vec<f32>,
+    /// mean per-head output norm [L, H] — low = head prunable.
+    pub head_norm: Vec<f32>,
+    /// mean per-channel activation magnitude [L, F] — low = channel prunable.
+    pub chan_norm: Vec<f32>,
+}
+
+pub struct Runtime {
+    client: PjRtClient,
+    meta: ModelMeta,
+    /// Device-resident weight buffers, `param_specs` order.
+    weights: Vec<PjRtBuffer>,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+    stats: HashMap<String, ExecStats>,
+}
+
+impl Runtime {
+    /// Load weights + manifest for `model` under `artifacts_root` and
+    /// create a CPU PJRT client. Entries compile lazily on first use.
+    pub fn load(artifacts_root: &Path, model: &str) -> Result<Runtime> {
+        let meta = ModelMeta::load(&artifacts_root.join(model))?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let bytes = std::fs::read(meta.dir.join("weights.bin"))
+            .context("reading weights.bin")?;
+        let mut weights = Vec::with_capacity(meta.params.len());
+        for p in &meta.params {
+            let end = p.offset + p.nbytes;
+            if end > bytes.len() {
+                bail!("weights.bin too short for {}", p.name);
+            }
+            let data = f32_slice(&bytes[p.offset..end])?;
+            weights.push(
+                client
+                    .buffer_from_host_buffer(&data, &p.shape, None)
+                    .map_err(|e| anyhow::anyhow!(
+                        "uploading {}: {e:?}", p.name))?,
+            );
+        }
+        Ok(Runtime { client, meta, weights, exes: HashMap::new(),
+                     stats: HashMap::new() })
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    pub fn stats(&self) -> &HashMap<String, ExecStats> {
+        &self.stats
+    }
+
+    /// Total wall-clock spent inside PJRT executions.
+    pub fn total_exec_secs(&self) -> f64 {
+        self.stats.values().map(|s| s.total_secs).sum()
+    }
+
+    fn ensure_compiled(&mut self, entry: &str) -> Result<()> {
+        if self.exes.contains_key(entry) {
+            return Ok(());
+        }
+        let spec = self.meta.entry(entry)?.clone();
+        let path = self.meta.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}",
+                                         path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {entry}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.entry(entry.to_string()).or_default().compile_secs += dt;
+        self.exes.insert(entry.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of entries (the serving engine does this at
+    /// startup so the hot path never hits the compiler).
+    pub fn warmup(&mut self, entries: &[&str]) -> Result<()> {
+        for e in entries {
+            self.ensure_compiled(e)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `entry` with the given runtime inputs (weights are
+    /// prepended automatically). Returns the output tuple elements.
+    pub fn execute(&mut self, entry: &str, inputs: &[HostArr])
+                   -> Result<Vec<Literal>> {
+        self.ensure_compiled(entry)?;
+        let spec = self.meta.entry(entry)?.clone();
+        validate_inputs(&spec, inputs)?;
+
+        // Upload runtime inputs as device buffers.
+        let mut owned: Vec<PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for (i, inp) in inputs.iter().enumerate() {
+            let shape = &spec.inputs[i].shape;
+            let buf = match inp {
+                HostArr::F32(v) => {
+                    self.client.buffer_from_host_buffer(v, shape, None)
+                }
+                HostArr::I32(v) => {
+                    self.client.buffer_from_host_buffer(v, shape, None)
+                }
+            }
+            .map_err(|e| anyhow::anyhow!(
+                "uploading input {} of {entry}: {e:?}",
+                spec.inputs[i].name))?;
+            owned.push(buf);
+        }
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.extend(owned.iter());
+
+        let exe = self.exes.get(entry).unwrap();
+        let t0 = Instant::now();
+        let out = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("executing {entry}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {entry} result: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {entry}: {e:?}"))?;
+        let st = self.stats.entry(entry.to_string()).or_default();
+        st.calls += 1;
+        st.total_secs += t0.elapsed().as_secs_f64();
+        if parts.len() != spec.outputs.len() {
+            bail!("{entry}: expected {} outputs, got {}",
+                  spec.outputs.len(), parts.len());
+        }
+        Ok(parts)
+    }
+
+    // ---- typed entry points -------------------------------------------
+
+    /// Masked-NLL scoring: returns (per_seq_nll, per_seq_cnt).
+    pub fn score(&mut self, batch: usize, seqlen: usize, tokens: &[i32],
+                 loss_mask: &[f32], mask: &PruneMask)
+                 -> Result<(Vec<f32>, Vec<f32>)> {
+        let entry = format!("score_b{batch}_t{seqlen}");
+        let parts = self.execute(&entry, &[
+            HostArr::I32(tokens),
+            HostArr::F32(loss_mask),
+            HostArr::F32(&mask.head_gate),
+            HostArr::F32(&mask.ffn_gate),
+        ])?;
+        Ok((lit_f32(&parts[0])?, lit_f32(&parts[1])?))
+    }
+
+    /// Mean NLL over a token batch with an all-ones loss mask — the
+    /// perplexity primitive (exp of this is PPL).
+    pub fn mean_nll(&mut self, batch: usize, seqlen: usize, tokens: &[i32],
+                    mask: &PruneMask) -> Result<f64> {
+        let ones = vec![1.0f32; batch * seqlen];
+        let (nll, cnt) = self.score(batch, seqlen, tokens, &ones, mask)?;
+        let total: f64 = nll.iter().map(|&x| x as f64).sum();
+        let n: f64 = cnt.iter().map(|&x| x as f64).sum();
+        Ok(total / n.max(1.0))
+    }
+
+    /// The compiled probe entry (models probe at min(128, max_seq)).
+    pub fn probe_entry(&self) -> Result<(String, usize, usize)> {
+        let e = self
+            .meta
+            .entries
+            .iter()
+            .find(|e| e.name.starts_with("probe_"))
+            .ok_or_else(|| anyhow::anyhow!("no probe entry compiled"))?;
+        let shape = &e.inputs[0].shape; // tokens [B, T]
+        Ok((e.name.clone(), shape[0], shape[1]))
+    }
+
+    /// Block-redundancy probe (batch/seqlen from the compiled bucket —
+    /// see `probe_entry`).
+    pub fn probe(&mut self, tokens: &[i32], mask: &PruneMask)
+                 -> Result<ProbeStats> {
+        let (entry, _, _) = self.probe_entry()?;
+        let parts = self.execute(&entry, &[
+            HostArr::I32(tokens),
+            HostArr::F32(&mask.head_gate),
+            HostArr::F32(&mask.ffn_gate),
+        ])?;
+        Ok(ProbeStats {
+            attn_cos: lit_f32(&parts[0])?,
+            ffn_cos: lit_f32(&parts[1])?,
+            head_norm: lit_f32(&parts[2])?,
+            chan_norm: lit_f32(&parts[3])?,
+        })
+    }
+
+    /// Prompt pass for one sequence; returns (last-token logits, k, v)
+    /// where k/v are `[L, 1, Hkv, S, Dh]` flattened host tensors.
+    pub fn prefill(&mut self, seqlen: usize, tokens: &[i32],
+                   mask: &PruneMask)
+                   -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let entry = format!("prefill_t{seqlen}");
+        let parts = self.execute(&entry, &[
+            HostArr::I32(tokens),
+            HostArr::F32(&mask.head_gate),
+            HostArr::F32(&mask.ffn_gate),
+        ])?;
+        Ok((lit_f32(&parts[0])?, lit_f32(&parts[1])?, lit_f32(&parts[2])?))
+    }
+
+    /// One decode step for a batch; caches are `[L, B, Hkv, S, Dh]`
+    /// flattened and are replaced with the updated versions in place.
+    pub fn decode(&mut self, batch: usize, tokens: &[i32], pos: &[i32],
+                  k_cache: &mut Vec<f32>, v_cache: &mut Vec<f32>,
+                  mask: &PruneMask) -> Result<Vec<f32>> {
+        let entry = format!("decode_b{batch}");
+        let parts = self.execute(&entry, &[
+            HostArr::I32(tokens),
+            HostArr::I32(pos),
+            HostArr::F32(k_cache),
+            HostArr::F32(v_cache),
+            HostArr::F32(&mask.head_gate),
+            HostArr::F32(&mask.ffn_gate),
+        ])?;
+        let logits = lit_f32(&parts[0])?;
+        *k_cache = lit_f32(&parts[1])?;
+        *v_cache = lit_f32(&parts[2])?;
+        Ok(logits)
+    }
+
+    /// Flattened element count of a decode cache for batch `b`.
+    pub fn cache_elems(&self, batch: usize) -> usize {
+        let m = &self.meta;
+        m.n_layers * batch * m.n_kv_heads * m.max_seq * m.head_dim()
+    }
+}
+
+fn validate_inputs(spec: &EntrySpec, inputs: &[HostArr]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!("{}: expected {} inputs, got {}", spec.name,
+              spec.inputs.len(), inputs.len());
+    }
+    for (i, inp) in inputs.iter().enumerate() {
+        let want = &spec.inputs[i];
+        if inp.len() != want.elems() {
+            bail!("{}: input '{}' has {} elements, wanted {} {:?}",
+                  spec.name, want.name, inp.len(), want.elems(), want.shape);
+        }
+        if inp.dtype() != want.dtype {
+            bail!("{}: input '{}' dtype mismatch", spec.name, want.name);
+        }
+    }
+    Ok(())
+}
+
+/// Literal → Vec<f32>.
+pub fn lit_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal to f32 vec: {e:?}"))
+}
+
+/// Decode little-endian bytes as f32 values.
+fn f32_slice(raw: &[u8]) -> Result<Vec<f32>> {
+    if raw.len() % 4 != 0 {
+        bail!("byte length {} not divisible by 4", raw.len());
+    }
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Abstracts "evaluate the model's NLL under a mask" so that GSI, the RL
+/// environment and the eval harness can run against either the real PJRT
+/// runtime or a synthetic evaluator in unit tests.
+pub trait NllEvaluator {
+    fn meta(&self) -> &ModelMeta;
+    /// Mean NLL of the calibration batch under `mask`.
+    fn eval_nll(&mut self, mask: &PruneMask) -> Result<f64>;
+}
+
+/// Synthetic evaluator with controllable per-block damage — lets unit
+/// tests exercise GSI/DQN logic without PJRT artifacts.
+pub struct SyntheticEvaluator {
+    pub meta: ModelMeta,
+    pub base_nll: f64,
+    /// Damage added per dropped block (index = BlockId::index).
+    pub damage: Vec<f64>,
+    /// Pairwise interaction added when both blocks of a layer are gone.
+    pub layer_synergy: f64,
+    pub evals: u64,
+}
+
+impl SyntheticEvaluator {
+    pub fn new(meta: ModelMeta, base_nll: f64, damage: Vec<f64>,
+               layer_synergy: f64) -> Self {
+        assert_eq!(damage.len(), meta.n_blocks());
+        SyntheticEvaluator { meta, base_nll, damage, layer_synergy,
+                             evals: 0 }
+    }
+}
+
+impl NllEvaluator for SyntheticEvaluator {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn eval_nll(&mut self, mask: &PruneMask) -> Result<f64> {
+        self.evals += 1;
+        let mut nll = self.base_nll;
+        for b in mask.dropped_blocks() {
+            nll += self.damage[b.index(self.meta.n_layers)];
+        }
+        for l in 0..self.meta.n_layers {
+            if mask.block_dropped(crate::model_meta::BlockId::Mha(l))
+                && mask.block_dropped(crate::model_meta::BlockId::Ffn(l))
+            {
+                nll += self.layer_synergy;
+            }
+        }
+        Ok(nll)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_meta::{BlockId, TensorSpec};
+
+    fn synth() -> SyntheticEvaluator {
+        let meta = ModelMeta::synthetic("t", 3, 64, 4, 2, 96, 128, 64);
+        let damage = vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6];
+        SyntheticEvaluator::new(meta, 2.0, damage, 1.0)
+    }
+
+    #[test]
+    fn synthetic_evaluator_is_additive() {
+        let mut ev = synth();
+        let full = PruneMask::full(&ev.meta.clone());
+        assert_eq!(ev.eval_nll(&full).unwrap(), 2.0);
+        let m = full.with_block_dropped(BlockId::Mha(1));
+        assert!((ev.eval_nll(&m).unwrap() - 2.2).abs() < 1e-12);
+        let m2 = m.with_block_dropped(BlockId::Ffn(1));
+        // 2.0 + 0.2 + 0.5 + synergy 1.0
+        assert!((ev.eval_nll(&m2).unwrap() - 3.7).abs() < 1e-12);
+        assert_eq!(ev.evals, 3);
+    }
+
+    #[test]
+    fn host_arr_validation() {
+        let spec = EntrySpec {
+            name: "e".into(),
+            file: "e.hlo.txt".into(),
+            inputs: vec![TensorSpec {
+                name: "x".into(),
+                shape: vec![2, 3],
+                dtype: DType::F32,
+            }],
+            outputs: vec![],
+        };
+        let ok = [HostArr::F32(&[0.0; 6])];
+        assert!(validate_inputs(&spec, &ok).is_ok());
+        let short = [HostArr::F32(&[0.0; 5])];
+        assert!(validate_inputs(&spec, &short).is_err());
+        let wrong_ty = [HostArr::I32(&[0; 6])];
+        assert!(validate_inputs(&spec, &wrong_ty).is_err());
+        assert!(validate_inputs(&spec, &[]).is_err());
+    }
+
+    #[test]
+    fn f32_slice_roundtrip() {
+        let xs = [1.5f32, -2.25, 0.0, f32::MAX];
+        let bytes: Vec<u8> =
+            xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        assert_eq!(f32_slice(&bytes).unwrap(), xs);
+        assert!(f32_slice(&bytes[..5]).is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! Continuous batcher: admission queue + decode-batch composition.
+//!
+//! Policy (vLLM-style, adapted to fixed PJRT shape buckets):
+//!   * prefill runs one sequence at a time at the smallest bucket that
+//!     holds the prompt (prefill-prioritized when the decode batch has
+//!     room — this is the "prefill/decode scheduler" role of L3);
+//!   * decode batches the active sequences into the largest compiled
+//!     bucket ≤ active count; membership changes only at step boundaries;
+//!   * admission control rejects/queues work that would exceed the
+//!     *memory-model* budget (Eq. 3+4) for the current mask.
+
+use std::collections::VecDeque;
+
+use crate::workload::Request;
+
+/// Compiled shape buckets (must match aot.py's PREFILL_T / DECODE_B).
+pub const PREFILL_BUCKETS: [usize; 4] = [16, 32, 64, 128];
+pub const DECODE_BUCKETS: [usize; 4] = [1, 2, 4, 8];
+
+/// Smallest prefill bucket that holds `prompt_len` tokens.
+pub fn prefill_bucket(prompt_len: usize) -> usize {
+    for b in PREFILL_BUCKETS {
+        if prompt_len <= b {
+            return b;
+        }
+    }
+    *PREFILL_BUCKETS.last().unwrap()
+}
+
+/// Largest decode bucket ≤ n (0 if n == 0).
+pub fn decode_bucket(n: usize) -> usize {
+    let mut best = 0;
+    for b in DECODE_BUCKETS {
+        if b <= n {
+            best = b;
+        }
+    }
+    best
+}
+
+/// A sequence being served.
+#[derive(Clone, Debug)]
+pub struct ActiveSeq {
+    pub req: Request,
+    /// Tokens generated so far.
+    pub generated: usize,
+    /// Last sampled token (next decode input).
+    pub next_token: i32,
+    /// When prefill finished (sim seconds).
+    pub prefill_done_at: f64,
+}
+
+/// Waiting + active bookkeeping. The engine drives it; this struct owns
+/// only the scheduling decisions so they are unit-testable.
+#[derive(Default)]
+pub struct Batcher {
+    pub waiting: VecDeque<Request>,
+    pub active: Vec<ActiveSeq>,
+    /// Max concurrent decode sequences (largest decode bucket).
+    pub max_active: usize,
+}
+
+impl Batcher {
+    pub fn new() -> Batcher {
+        Batcher { waiting: VecDeque::new(), active: Vec::new(),
+                  max_active: *DECODE_BUCKETS.last().unwrap() }
+    }
+
+    pub fn enqueue(&mut self, req: Request) {
+        self.waiting.push_back(req);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Should we run a prefill now? Yes when there is queue room in the
+    /// active set.
+    pub fn wants_prefill(&self) -> bool {
+        !self.waiting.is_empty() && self.active.len() < self.max_active
+    }
+
+    pub fn pop_for_prefill(&mut self) -> Option<Request> {
+        if self.active.len() >= self.max_active {
+            return None;
+        }
+        self.waiting.pop_front()
+    }
+
+    pub fn push_active(&mut self, seq: ActiveSeq) {
+        self.active.push(seq);
+    }
+
+    /// Compose the next decode batch: ids of up to `decode_bucket`
+    /// sequences, oldest first (FCFS completion).
+    pub fn decode_ids(&self) -> Vec<u64> {
+        let n = decode_bucket(self.active.len());
+        self.active.iter().take(n).map(|s| s.req.id).collect()
+    }
+
+    /// Remove and return finished sequences.
+    pub fn retire_finished(&mut self) -> Vec<ActiveSeq> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].generated >= self.active[i].req.gen_len {
+                done.push(self.active.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    pub fn seq_mut(&mut self, id: u64) -> Option<&mut ActiveSeq> {
+        self.active.iter_mut().find(|s| s.req.id == id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: usize, gen: usize) -> Request {
+        Request { id, arrival: 0.0, prompt_len: prompt, gen_len: gen }
+    }
+
+    fn active(id: u64, gen_left: usize) -> ActiveSeq {
+        ActiveSeq { req: req(id, 16, gen_left), generated: 0,
+                    next_token: 0, prefill_done_at: 0.0 }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(prefill_bucket(5), 16);
+        assert_eq!(prefill_bucket(16), 16);
+        assert_eq!(prefill_bucket(17), 32);
+        assert_eq!(prefill_bucket(100), 128);
+        assert_eq!(prefill_bucket(1000), 128); // clamped
+        assert_eq!(decode_bucket(0), 0);
+        assert_eq!(decode_bucket(1), 1);
+        assert_eq!(decode_bucket(3), 2);
+        assert_eq!(decode_bucket(7), 4);
+        assert_eq!(decode_bucket(20), 8);
+    }
+
+    #[test]
+    fn fcfs_prefill_order() {
+        let mut b = Batcher::new();
+        b.enqueue(req(1, 8, 4));
+        b.enqueue(req(2, 8, 4));
+        assert!(b.wants_prefill());
+        assert_eq!(b.pop_for_prefill().unwrap().id, 1);
+        assert_eq!(b.pop_for_prefill().unwrap().id, 2);
+        assert!(!b.wants_prefill());
+    }
+
+    #[test]
+    fn active_cap_blocks_prefill() {
+        let mut b = Batcher::new();
+        for i in 0..8 {
+            b.push_active(active(i, 4));
+        }
+        b.enqueue(req(100, 8, 4));
+        assert!(!b.wants_prefill());
+        assert!(b.pop_for_prefill().is_none());
+    }
+
+    #[test]
+    fn decode_batch_is_a_compiled_bucket() {
+        let mut b = Batcher::new();
+        for i in 0..5 {
+            b.push_active(active(i, 4));
+        }
+        let ids = b.decode_ids();
+        assert_eq!(ids.len(), 4);
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn retire_removes_done() {
+        let mut b = Batcher::new();
+        b.push_active(active(1, 0)); // gen_len 0 → done immediately
+        b.push_active(active(2, 3));
+        let done = b.retire_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].req.id, 1);
+        assert_eq!(b.active.len(), 1);
+    }
+}

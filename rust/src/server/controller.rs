@@ -1,0 +1,144 @@
+//! The RAP controller: maps (observed workload, instantaneous memory) to a
+//! pruning mask at serving time (paper Algorithm 3 embedded in a server).
+//!
+//! Policies:
+//!   * `Policy::Static`  — a fixed mask chosen at startup (how every
+//!     baseline scheme deploys);
+//!   * `Policy::GsiGreedy` — recalibrated greedy pruning to the current
+//!     budget (RAP without the RL agent's learned trade-offs);
+//!   * `Policy::Dqn`     — the trained agent steps the pruning MDP
+//!     (Algorithm 3) against the live (workload, budget) state.
+//!
+//! Decisions are cached on a (budget%, batch, seqlen) grid: the paper's
+//! "negligible controller overhead" claim holds because a policy step is
+//! an MLP rollout plus GSI lookups that are memoized across decisions.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::agent::dqn::DqnAgent;
+use crate::agent::env::{EnvConfig, PruneEnv};
+use crate::gsi::GsiEngine;
+use crate::mask::PruneMask;
+use crate::memory::{MemoryModel, Workload};
+use crate::model_meta::ModelMeta;
+use crate::runtime::{NllEvaluator, Runtime};
+
+/// NllEvaluator over a borrowed runtime + fixed calibration batch.
+pub struct BorrowedEvaluator<'a> {
+    pub rt: &'a mut Runtime,
+    pub tokens: &'a [i32],
+    pub batch: usize,
+    pub seqlen: usize,
+}
+
+impl NllEvaluator for BorrowedEvaluator<'_> {
+    fn meta(&self) -> &ModelMeta {
+        self.rt.meta()
+    }
+
+    fn eval_nll(&mut self, mask: &PruneMask) -> Result<f64> {
+        self.rt.mean_nll(self.batch, self.seqlen, self.tokens, mask)
+    }
+}
+
+pub enum Policy {
+    /// Fixed mask (baselines / dense).
+    Static(PruneMask),
+    /// GSI-greedy to the live budget.
+    GsiGreedy,
+    /// Trained DQN (Algorithm 3).
+    Dqn(Box<DqnAgent>),
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Static(_) => "static",
+            Policy::GsiGreedy => "rap-gsi-greedy",
+            Policy::Dqn(_) => "rap-dqn",
+        }
+    }
+}
+
+pub struct Controller {
+    pub policy: Policy,
+    mem: MemoryModel,
+    /// Calibration batch for GSI at decision time (b=1 bucket: cheap).
+    calib_tokens: Vec<i32>,
+    calib_batch: usize,
+    calib_seqlen: usize,
+    /// Persistent GSI memo shared across decisions.
+    memo: HashMap<u64, f64>,
+    /// Decision cache keyed by (budget%, batch, seqlen-bucket).
+    cache: HashMap<(u32, usize, usize), PruneMask>,
+    pub decisions: u64,
+    pub cache_hits: u64,
+}
+
+impl Controller {
+    pub fn new(policy: Policy, mem: MemoryModel, calib_tokens: Vec<i32>,
+               calib_seqlen: usize) -> Controller {
+        Controller { policy, mem, calib_tokens, calib_batch: 1,
+                     calib_seqlen, memo: HashMap::new(),
+                     cache: HashMap::new(), decisions: 0, cache_hits: 0 }
+    }
+
+    /// Use a different compiled score bucket for calibration (models
+    /// without the (1, 128) bucket, e.g. rap-tiny's (4, 64)).
+    pub fn with_calib_bucket(mut self, batch: usize, seqlen: usize)
+                             -> Controller {
+        self.calib_batch = batch;
+        self.calib_seqlen = seqlen;
+        self
+    }
+
+    /// Decide a mask for the observed workload and available memory.
+    pub fn decide(&mut self, rt: &mut Runtime, workload: Workload,
+                  avail_bytes: usize) -> Result<PruneMask> {
+        self.decisions += 1;
+        if let Policy::Static(m) = &self.policy {
+            return Ok(m.clone());
+        }
+        let dense_peak = self.mem.dense_peak_bytes(workload).max(1);
+        let frac = (avail_bytes as f64 / dense_peak as f64).min(1.5);
+        // bucket to 5% so the cache is effective
+        let key = ((frac * 20.0).floor() as u32,
+                   workload.batch, workload.seqlen);
+        if let Some(m) = self.cache.get(&key) {
+            self.cache_hits += 1;
+            return Ok(m.clone());
+        }
+        let mut ev = BorrowedEvaluator { rt, tokens: &self.calib_tokens,
+                                         batch: self.calib_batch,
+                                         seqlen: self.calib_seqlen };
+        let memo = std::mem::take(&mut self.memo);
+        let mask = match &self.policy {
+            Policy::Static(_) => unreachable!(),
+            Policy::GsiGreedy => {
+                let mut gsi = GsiEngine::with_memo(&mut ev, memo);
+                let mem = self.mem.clone();
+                let res = gsi.greedy(&PruneMask::full(mem.meta()), |m| {
+                    mem.peak_bytes(m, workload) <= avail_bytes
+                })?;
+                let mut mask = PruneMask::full(mem.meta());
+                for b in res.order {
+                    mask.drop_block(b);
+                }
+                self.memo = gsi.take_memo();
+                mask
+            }
+            Policy::Dqn(agent) => {
+                let mut env = PruneEnv::with_memo(
+                    &mut ev, EnvConfig::default(), memo);
+                let mask = crate::agent::online_prune(
+                    agent, &mut env, workload, frac.min(1.0))?;
+                self.memo = env.take_memo();
+                mask
+            }
+        };
+        self.cache.insert(key, mask.clone());
+        Ok(mask)
+    }
+}

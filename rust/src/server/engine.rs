@@ -1,0 +1,383 @@
+//! The serving engine: a continuous-batching event loop over the real
+//! PJRT executables, with RAP's controller in the loop.
+//!
+//! Time model: the engine advances a *simulated* clock fed by the trace's
+//! arrival times; compute steps advance the clock by their measured
+//! wall-clock duration (× `time_scale`). This lets a 10-minute "day" of
+//! traffic replay in however long the actual math takes while keeping
+//! latency accounting coherent.
+//!
+//! Per tick:
+//!   1. admit arrivals whose time has come;
+//!   2. controller: observe (active workload, Sys_avail(t)) and re-decide
+//!      the mask when the situation changed (cached decisions make this
+//!      the paper's "<1% overhead" path);
+//!   3. OOM handling: if interference spiked over our current footprint,
+//!      count an OOM event and — under a static policy — evict the
+//!      youngest sequence (requeue); RAP instead shrinks the mask;
+//!   4. run one prefill (if queue room + memory headroom) or one decode
+//!      step over the gathered batch; sample tokens; retire finished.
+
+use anyhow::Result;
+
+use super::batcher::{decode_bucket, prefill_bucket, ActiveSeq, Batcher};
+use super::controller::Controller;
+use super::kv::KvManager;
+use super::memmon::MemoryMonitor;
+use super::metrics::{MemSample, Metrics, RequestRecord, ServeReport};
+use crate::mask::PruneMask;
+use crate::memory::{MemoryModel, Workload};
+use crate::runtime::Runtime;
+use crate::workload::Request;
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Simulated seconds per real compute second.
+    pub time_scale: f64,
+    /// Memory-trace sampling period (sim seconds).
+    pub sample_every: f64,
+    /// Re-run the controller at most this often (sim seconds).
+    pub controller_period: f64,
+    /// Safety factor on admission (fraction of available memory usable).
+    pub admission_headroom: f64,
+    /// Hard stop (sim seconds) even if work remains.
+    pub max_sim_secs: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { time_scale: 1.0, sample_every: 2.0,
+                       controller_period: 5.0, admission_headroom: 0.95,
+                       max_sim_secs: 1e9 }
+    }
+}
+
+/// Persistent decode-batch state: while batch membership is unchanged,
+/// the gathered caches stay resident here and per-step gather/scatter
+/// (a ~85 ms memcpy at batch 8 — see EXPERIMENTS.md §Perf) is skipped.
+struct BatchState {
+    ids: Vec<u64>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+pub struct Engine {
+    pub rt: Runtime,
+    pub mem: MemoryModel,
+    pub kv: KvManager,
+    pub batcher: Batcher,
+    pub monitor: MemoryMonitor,
+    pub controller: Controller,
+    pub cfg: EngineConfig,
+    pub mask: PruneMask,
+    pub metrics: Metrics,
+    sim_time: f64,
+    last_controller_at: f64,
+    last_sample_at: f64,
+    batch: Option<BatchState>,
+}
+
+impl Engine {
+    pub fn new(rt: Runtime, monitor: MemoryMonitor,
+               controller: Controller, cfg: EngineConfig) -> Engine {
+        let meta = rt.meta().clone();
+        let mem = MemoryModel::new(&meta);
+        let mask = PruneMask::full(&meta);
+        Engine {
+            kv: KvManager::new(&meta),
+            batcher: Batcher::new(),
+            rt,
+            mem,
+            monitor,
+            controller,
+            cfg,
+            mask,
+            metrics: Metrics::default(),
+            sim_time: 0.0,
+            last_controller_at: f64::NEG_INFINITY,
+            last_sample_at: f64::NEG_INFINITY,
+            batch: None,
+        }
+    }
+
+    pub fn sim_time(&self) -> f64 {
+        self.sim_time
+    }
+
+    /// Current model + KV footprint under the active mask.
+    pub fn bytes_used(&self) -> usize {
+        self.mem.param_bytes(&self.mask) + self.kv.bytes_used(&self.mask)
+    }
+
+    /// The workload descriptor the controller conditions on: current
+    /// decode batch size and the longest projected sequence among active
+    /// + queued work.
+    fn observed_workload(&self) -> Workload {
+        let batch = decode_bucket(self.batcher.active.len()).max(1);
+        let longest = self
+            .batcher
+            .active
+            .iter()
+            .map(|s| s.req.prompt_len + s.req.gen_len)
+            .chain(self.batcher.waiting.iter()
+                   .map(|r| r.prompt_len + r.gen_len))
+            .max()
+            .unwrap_or(32);
+        Workload::new(batch, longest.min(self.rt.meta().max_seq))
+    }
+
+    fn run_controller(&mut self, force: bool) -> Result<()> {
+        if !force
+            && self.sim_time - self.last_controller_at
+                < self.cfg.controller_period
+        {
+            return Ok(());
+        }
+        self.last_controller_at = self.sim_time;
+        let avail = self.monitor.available_at(self.sim_time);
+        let w = self.observed_workload();
+        let t0 = std::time::Instant::now();
+        let new_mask = self.controller.decide(&mut self.rt, w, avail)?;
+        self.metrics.controller_secs += t0.elapsed().as_secs_f64();
+        if new_mask != self.mask {
+            self.metrics.mask_switches += 1;
+            self.mask = new_mask;
+        }
+        Ok(())
+    }
+
+    fn sample_memory(&mut self) {
+        if self.sim_time - self.last_sample_at < self.cfg.sample_every {
+            return;
+        }
+        self.last_sample_at = self.sim_time;
+        self.metrics.mem_trace.push(MemSample {
+            t: self.sim_time,
+            used: self.bytes_used(),
+            available: self.monitor.available_at(self.sim_time),
+            param_bytes: self.mem.param_bytes(&self.mask),
+            kv_bytes: self.kv.bytes_used(&self.mask),
+        });
+    }
+
+    /// Handle an interference spike: OOM if our footprint exceeds what's
+    /// available. Static policies evict; adaptive policies re-decide.
+    fn handle_memory_pressure(&mut self) -> Result<()> {
+        let avail = self.monitor.available_at(self.sim_time);
+        if self.bytes_used() <= avail {
+            return Ok(());
+        }
+        self.metrics.oom_events += 1;
+        // Give the controller a chance to shrink the model first.
+        self.run_controller(true)?;
+        self.flush_batch()?;
+        while self.bytes_used()
+            > self.monitor.available_at(self.sim_time)
+            && !self.batcher.active.is_empty()
+        {
+            // Evict the youngest sequence and requeue it.
+            let seq = self.batcher.active.pop().unwrap();
+            self.kv.remove(seq.req.id);
+            self.metrics.rejected += 1;
+            self.batcher.waiting.push_front(seq.req);
+        }
+        Ok(())
+    }
+
+    /// Projected bytes if we admit `req` (its KV at full length).
+    fn admission_cost(&self, req: &Request) -> usize {
+        let meta = self.rt.meta();
+        let dh = meta.head_dim();
+        let full_len = (req.prompt_len + req.gen_len).min(meta.max_seq);
+        let mut kv = 0usize;
+        for l in 0..meta.n_layers {
+            kv += 2 * self.mask.active_kv_groups(l) * dh * full_len
+                * crate::model_meta::BYTES_PER_SCALAR;
+        }
+        kv
+    }
+
+    fn try_prefill(&mut self) -> Result<bool> {
+        if !self.batcher.wants_prefill() {
+            return Ok(false);
+        }
+        let avail = (self.monitor.available_at(self.sim_time) as f64
+            * self.cfg.admission_headroom) as usize;
+        let Some(req) = self.batcher.waiting.front().cloned() else {
+            return Ok(false);
+        };
+        if self.bytes_used() + self.admission_cost(&req) > avail {
+            // Head-of-line blocked on memory. If the system is idle and
+            // even an empty server can't host it, reject outright.
+            if self.batcher.active.is_empty()
+                && self.mem.param_bytes(&self.mask)
+                    + self.admission_cost(&req) > avail
+            {
+                self.batcher.waiting.pop_front();
+                self.metrics.rejected += 1;
+            }
+            return Ok(false);
+        }
+        let req = self.batcher.pop_for_prefill().unwrap();
+        let bucket = prefill_bucket(req.prompt_len);
+        // Trace prompts are clamped to the largest bucket.
+        let plen = req.prompt_len.min(bucket);
+        // Deterministic prompt tokens derived from the request id.
+        let mut rng = crate::util::rng::Rng::new(0xC0FFEE ^ req.id);
+        let mut tokens = vec![0i32; bucket];
+        let vocab = self.rt.meta().vocab;
+        for t in tokens.iter_mut().take(plen) {
+            *t = rng.below(vocab) as i32;
+        }
+        let t0 = std::time::Instant::now();
+        let (logits, k, v) = self.rt.prefill(bucket, &tokens, &self.mask)?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.exec_secs += dt;
+        self.sim_time += dt * self.cfg.time_scale;
+        self.metrics.prefills += 1;
+
+        let next_token = argmax(&logits) as i32;
+        self.kv.insert(req.id, k, v, bucket, &self.mask)?;
+        self.batcher.push_active(ActiveSeq {
+            req,
+            generated: 1,
+            next_token,
+            prefill_done_at: self.sim_time,
+        });
+        self.metrics.tokens_generated += 1;
+        Ok(true)
+    }
+
+    /// Write the persistent batch's caches back to per-seq storage (ids
+    /// already retired are skipped — their cache no longer matters).
+    fn flush_batch(&mut self) -> Result<()> {
+        if let Some(bs) = self.batch.take() {
+            self.kv.scatter_cache(&bs.ids, &bs.k, &bs.v, true)?;
+        }
+        Ok(())
+    }
+
+    fn decode_step(&mut self) -> Result<bool> {
+        let ids = self.batcher.decode_ids();
+        if ids.is_empty() {
+            self.flush_batch()?;
+            return Ok(false);
+        }
+        let b = ids.len();
+        // Recompose the persistent batch only when membership changes.
+        if self.batch.as_ref().map(|s| s.ids.as_slice())
+            != Some(ids.as_slice())
+        {
+            self.flush_batch()?;
+            let (k, v) = self.kv.gather(&ids)?;
+            self.batch = Some(BatchState { ids: ids.clone(), k, v });
+        }
+        let pos = self.kv.positions(&ids)?;
+        let tokens: Vec<i32> = ids
+            .iter()
+            .map(|id| self.batcher.seq_mut(*id).unwrap().next_token)
+            .collect();
+        let bs = self.batch.as_mut().unwrap();
+        let t0 = std::time::Instant::now();
+        let logits = self.rt.decode(b, &tokens, &pos, &mut bs.k,
+                                    &mut bs.v, &self.mask)?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.exec_secs += dt;
+        self.sim_time += dt * self.cfg.time_scale;
+        self.metrics.decode_steps += 1;
+        self.kv.bump_lens(&ids, &self.mask)?;
+
+        let vocab = self.rt.meta().vocab;
+        for (bi, id) in ids.iter().enumerate() {
+            let tok = argmax(&logits[bi * vocab..(bi + 1) * vocab]) as i32;
+            let seq = self.batcher.seq_mut(*id).unwrap();
+            seq.next_token = tok;
+            seq.generated += 1;
+            self.metrics.tokens_generated += 1;
+        }
+        let finished = self.batcher.retire_finished();
+        if !finished.is_empty() {
+            // membership will change; keep survivors' caches coherent
+            self.flush_batch()?;
+        }
+        for seq in finished {
+            self.kv.remove(seq.req.id);
+            self.metrics.completed.push(RequestRecord {
+                id: seq.req.id,
+                arrival: seq.req.arrival,
+                first_token_at: seq.prefill_done_at,
+                finished_at: self.sim_time,
+                prompt_len: seq.req.prompt_len,
+                gen_len: seq.req.gen_len,
+            });
+        }
+        Ok(true)
+    }
+
+    /// Serve a whole trace to completion (or `max_sim_secs`).
+    pub fn run_trace(&mut self, mut requests: Vec<Request>)
+                     -> Result<ServeReport> {
+        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let mut next = 0usize;
+        let t_start = self.sim_time;
+        loop {
+            // 1. admit arrivals
+            while next < requests.len()
+                && requests[next].arrival <= self.sim_time
+            {
+                self.batcher.enqueue(requests[next].clone());
+                next += 1;
+            }
+            let idle = self.batcher.active.is_empty()
+                && self.batcher.waiting.is_empty();
+            if idle {
+                if next >= requests.len() {
+                    break;
+                }
+                // jump to next arrival
+                self.sim_time = requests[next].arrival;
+                continue;
+            }
+            if self.sim_time - t_start > self.cfg.max_sim_secs {
+                break;
+            }
+            // 2-3. controller + memory pressure
+            self.run_controller(false)?;
+            self.handle_memory_pressure()?;
+            self.sample_memory();
+            // 4. work
+            let did_prefill = self.try_prefill()?;
+            if !did_prefill {
+                let did_decode = self.decode_step()?;
+                if !did_decode {
+                    // waiting on memory headroom; advance time slightly
+                    self.sim_time += 0.05;
+                }
+            }
+        }
+        let wall = (self.sim_time - t_start).max(1e-9);
+        Ok(self.metrics.report(wall))
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[1.0, 1.0]), 0); // first wins ties
+    }
+}

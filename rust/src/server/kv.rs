@@ -1,0 +1,267 @@
+//! KV-cache manager: owns per-sequence caches, splices them into decode
+//! batches, and does the mask-aware memory accounting (only layers whose
+//! MHA block survives — and within GQA only live kv groups — count,
+//! exactly like the paper's Eq. 4).
+//!
+//! Layouts (flattened f32, row-major):
+//!   per-sequence cache: [L, Hkv, S, Dh]   (from `prefill`, B axis removed)
+//!   decode batch cache: [L, B, Hkv, S, Dh] (what `decode_b{B}` consumes)
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::mask::PruneMask;
+use crate::model_meta::{ModelMeta, BYTES_PER_SCALAR};
+
+/// One sequence's cached state.
+#[derive(Clone, Debug)]
+pub struct SeqCache {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Tokens currently materialized in the cache (== next write pos).
+    pub len: usize,
+}
+
+pub struct KvManager {
+    meta: ModelMeta,
+    seqs: HashMap<u64, SeqCache>,
+    /// High-water mark of bytes held (for reports).
+    pub peak_bytes_seen: usize,
+}
+
+impl KvManager {
+    pub fn new(meta: &ModelMeta) -> KvManager {
+        KvManager { meta: meta.clone(), seqs: HashMap::new(),
+                    peak_bytes_seen: 0 }
+    }
+
+    pub fn seq_elems(&self) -> usize {
+        let m = &self.meta;
+        m.n_layers * m.n_kv_heads * m.max_seq * m.head_dim()
+    }
+
+    pub fn len(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.seqs.contains_key(&id)
+    }
+
+    pub fn seq_len(&self, id: u64) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.len)
+    }
+
+    /// Admit a sequence with its prefill-produced cache
+    /// (`[L, 1, Hkv, S, Dh]` == `[L, Hkv, S, Dh]` flattened).
+    pub fn insert(&mut self, id: u64, k: Vec<f32>, v: Vec<f32>,
+                  prompt_len: usize, mask: &PruneMask) -> Result<()> {
+        if k.len() != self.seq_elems() || v.len() != self.seq_elems() {
+            bail!("cache size mismatch: got {}, want {}", k.len(),
+                  self.seq_elems());
+        }
+        self.seqs.insert(id, SeqCache { k, v, len: prompt_len });
+        self.note_usage(mask);
+        Ok(())
+    }
+
+    pub fn remove(&mut self, id: u64) -> Option<SeqCache> {
+        self.seqs.remove(&id)
+    }
+
+    /// Logical KV bytes for the *active* sequences under `mask`:
+    /// Σ_seq Σ_layer 2 · kv_groups(l) · Dh · len(seq) · 4B.
+    pub fn bytes_used(&self, mask: &PruneMask) -> usize {
+        let dh = self.meta.head_dim();
+        let mut total = 0usize;
+        for s in self.seqs.values() {
+            for l in 0..self.meta.n_layers {
+                total += 2 * mask.active_kv_groups(l) * dh * s.len
+                    * BYTES_PER_SCALAR;
+            }
+        }
+        total
+    }
+
+    fn note_usage(&mut self, mask: &PruneMask) {
+        let b = self.bytes_used(mask);
+        if b > self.peak_bytes_seen {
+            self.peak_bytes_seen = b;
+        }
+    }
+
+    /// Gather the per-seq caches of `ids` into a decode batch layout
+    /// `[L, B, Hkv, S, Dh]` (B = ids.len()).
+    pub fn gather(&self, ids: &[u64]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let m = &self.meta;
+        let b = ids.len();
+        let per_layer = m.n_kv_heads * m.max_seq * m.head_dim();
+        let mut k = vec![0.0f32; m.n_layers * b * per_layer];
+        let mut v = vec![0.0f32; m.n_layers * b * per_layer];
+        for (bi, id) in ids.iter().enumerate() {
+            let Some(s) = self.seqs.get(id) else {
+                bail!("gather: unknown seq {id}");
+            };
+            for l in 0..m.n_layers {
+                let src = l * per_layer..(l + 1) * per_layer;
+                let dst = (l * b + bi) * per_layer;
+                k[dst..dst + per_layer].copy_from_slice(&s.k[src.clone()]);
+                v[dst..dst + per_layer].copy_from_slice(&s.v[src]);
+            }
+        }
+        Ok((k, v))
+    }
+
+    /// Scatter an updated decode-batch cache back into the per-seq
+    /// caches, and bump each sequence's length by one (the decode step
+    /// wrote position `len`).
+    pub fn scatter(&mut self, ids: &[u64], k: &[f32], v: &[f32],
+                   mask: &PruneMask) -> Result<()> {
+        self.scatter_cache(ids, k, v, false)?;
+        self.bump_lens(ids, mask)
+    }
+
+    /// Copy a decode-batch cache back into per-seq storage WITHOUT
+    /// touching lengths (used when a persistent batch is recomposed —
+    /// see `engine::Engine`). With `skip_missing`, ids that were already
+    /// retired are ignored.
+    pub fn scatter_cache(&mut self, ids: &[u64], k: &[f32], v: &[f32],
+                         skip_missing: bool) -> Result<()> {
+        let m = &self.meta;
+        let b = ids.len();
+        let per_layer = m.n_kv_heads * m.max_seq * m.head_dim();
+        if k.len() != m.n_layers * b * per_layer {
+            bail!("scatter: bad batch cache size");
+        }
+        for (bi, id) in ids.iter().enumerate() {
+            let Some(s) = self.seqs.get_mut(id) else {
+                if skip_missing {
+                    continue;
+                }
+                bail!("scatter: unknown seq {id}");
+            };
+            for l in 0..m.n_layers {
+                let dst = l * per_layer..(l + 1) * per_layer;
+                let src = (l * b + bi) * per_layer;
+                s.k[dst.clone()].copy_from_slice(&k[src..src + per_layer]);
+                s.v[dst].copy_from_slice(&v[src..src + per_layer]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Advance each sequence's materialized length by one decode step.
+    pub fn bump_lens(&mut self, ids: &[u64], mask: &PruneMask)
+                     -> Result<()> {
+        for id in ids {
+            let Some(s) = self.seqs.get_mut(id) else {
+                bail!("bump_lens: unknown seq {id}");
+            };
+            s.len += 1;
+            if s.len > self.meta.max_seq {
+                bail!("sequence {id} overflowed max_seq");
+            }
+        }
+        self.note_usage(mask);
+        Ok(())
+    }
+
+    /// Current write positions for a decode batch (pos input of decode).
+    pub fn positions(&self, ids: &[u64]) -> Result<Vec<i32>> {
+        ids.iter()
+            .map(|id| {
+                self.seqs
+                    .get(id)
+                    .map(|s| s.len as i32)
+                    .ok_or_else(|| anyhow::anyhow!("unknown seq {id}"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta::synthetic("t", 2, 16, 4, 2, 24, 32, 8)
+    }
+
+    fn filled_cache(meta: &ModelMeta, fill: f32) -> (Vec<f32>, Vec<f32>) {
+        let n = meta.n_layers * meta.n_kv_heads * meta.max_seq
+            * meta.head_dim();
+        (vec![fill; n], vec![fill + 0.5; n])
+    }
+
+    #[test]
+    fn insert_gather_roundtrip() {
+        let m = meta();
+        let mask = PruneMask::full(&m);
+        let mut kv = KvManager::new(&m);
+        let (k1, v1) = filled_cache(&m, 1.0);
+        let (k2, v2) = filled_cache(&m, 2.0);
+        kv.insert(10, k1, v1, 3, &mask).unwrap();
+        kv.insert(20, k2, v2, 5, &mask).unwrap();
+        let (k, v) = kv.gather(&[10, 20]).unwrap();
+        let per_layer = m.n_kv_heads * m.max_seq * m.head_dim();
+        // layer 0, batch 0 = seq 10 (fill 1.0); batch 1 = seq 20 (2.0)
+        assert_eq!(k[0], 1.0);
+        assert_eq!(k[per_layer], 2.0);
+        assert_eq!(v[0], 1.5);
+        assert_eq!(v[per_layer], 2.5);
+        assert_eq!(kv.positions(&[10, 20]).unwrap(), vec![3, 5]);
+    }
+
+    #[test]
+    fn scatter_updates_and_advances() {
+        let m = meta();
+        let mask = PruneMask::full(&m);
+        let mut kv = KvManager::new(&m);
+        let (k1, v1) = filled_cache(&m, 1.0);
+        kv.insert(7, k1, v1, 2, &mask).unwrap();
+        let (mut k, v) = kv.gather(&[7]).unwrap();
+        k[5] = 42.0;
+        kv.scatter(&[7], &k, &v, &mask).unwrap();
+        assert_eq!(kv.seq_len(7), Some(3));
+        let (k2, _) = kv.gather(&[7]).unwrap();
+        assert_eq!(k2[5], 42.0);
+    }
+
+    #[test]
+    fn bytes_follow_mask_and_length() {
+        let m = meta();
+        let full = PruneMask::full(&m);
+        let mut kv = KvManager::new(&m);
+        let (k1, v1) = filled_cache(&m, 0.0);
+        kv.insert(1, k1, v1, 4, &full).unwrap();
+        let dense = kv.bytes_used(&full);
+        // 2 layers * 2 kv groups * dh=4 * len=4 * 2(k+v) * 4B
+        assert_eq!(dense, 2 * (2 * 2 * 4 * 4) * 4);
+        let mut pruned = full.clone();
+        pruned.drop_block(crate::model_meta::BlockId::Mha(0));
+        assert_eq!(kv.bytes_used(&pruned), dense / 2);
+    }
+
+    #[test]
+    fn gather_unknown_seq_fails() {
+        let m = meta();
+        let kv = KvManager::new(&m);
+        assert!(kv.gather(&[99]).is_err());
+    }
+
+    #[test]
+    fn overflow_detected() {
+        let m = meta();
+        let mask = PruneMask::full(&m);
+        let mut kv = KvManager::new(&m);
+        let (k1, v1) = filled_cache(&m, 0.0);
+        kv.insert(1, k1, v1, m.max_seq, &mask).unwrap();
+        let (k, v) = kv.gather(&[1]).unwrap();
+        assert!(kv.scatter(&[1], &k, &v, &mask).is_err());
+    }
+}

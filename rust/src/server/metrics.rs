@@ -1,0 +1,140 @@
+//! Serving metrics: per-request latency, throughput, memory trace, OOM
+//! events — the measurement layer behind Fig 5 and the end-to-end example.
+
+use crate::util::stats::{mean, percentile};
+
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrival: f64,
+    pub first_token_at: f64,
+    pub finished_at: f64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+}
+
+impl RequestRecord {
+    pub fn latency(&self) -> f64 {
+        self.finished_at - self.arrival
+    }
+
+    pub fn ttft(&self) -> f64 {
+        self.first_token_at - self.arrival
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct MemSample {
+    pub t: f64,
+    pub used: usize,
+    pub available: usize,
+    pub param_bytes: usize,
+    pub kv_bytes: usize,
+}
+
+#[derive(Default)]
+pub struct Metrics {
+    pub completed: Vec<RequestRecord>,
+    pub mem_trace: Vec<MemSample>,
+    pub oom_events: u64,
+    pub rejected: u64,
+    pub decode_steps: u64,
+    pub prefills: u64,
+    pub tokens_generated: u64,
+    pub mask_switches: u64,
+    pub controller_secs: f64,
+    pub exec_secs: f64,
+}
+
+impl Metrics {
+    pub fn report(&self, wall_secs: f64) -> ServeReport {
+        let lats: Vec<f64> =
+            self.completed.iter().map(|r| r.latency()).collect();
+        let ttfts: Vec<f64> =
+            self.completed.iter().map(|r| r.ttft()).collect();
+        ServeReport {
+            completed: self.completed.len(),
+            oom_events: self.oom_events,
+            rejected: self.rejected,
+            decode_steps: self.decode_steps,
+            prefills: self.prefills,
+            tokens_generated: self.tokens_generated,
+            mask_switches: self.mask_switches,
+            mean_latency: mean(&lats),
+            p50_latency: percentile(&lats, 50.0),
+            p95_latency: percentile(&lats, 95.0),
+            mean_ttft: mean(&ttfts),
+            throughput_rps: self.completed.len() as f64 / wall_secs,
+            throughput_tps: self.tokens_generated as f64 / wall_secs,
+            controller_secs: self.controller_secs,
+            exec_secs: self.exec_secs,
+        }
+    }
+}
+
+/// Aggregated serving results.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub completed: usize,
+    pub oom_events: u64,
+    pub rejected: u64,
+    pub decode_steps: u64,
+    pub prefills: u64,
+    pub tokens_generated: u64,
+    pub mask_switches: u64,
+    pub mean_latency: f64,
+    pub p50_latency: f64,
+    pub p95_latency: f64,
+    pub mean_ttft: f64,
+    pub throughput_rps: f64,
+    pub throughput_tps: f64,
+    pub controller_secs: f64,
+    pub exec_secs: f64,
+}
+
+impl ServeReport {
+    pub fn print(&self, label: &str) {
+        println!("── serve report: {label}");
+        println!("   completed        {:>10}", self.completed);
+        println!("   rejected         {:>10}", self.rejected);
+        println!("   OOM events       {:>10}", self.oom_events);
+        println!("   prefills         {:>10}", self.prefills);
+        println!("   decode steps     {:>10}", self.decode_steps);
+        println!("   tokens generated {:>10}", self.tokens_generated);
+        println!("   mask switches    {:>10}", self.mask_switches);
+        println!("   latency mean/p50/p95  {:.3}s / {:.3}s / {:.3}s",
+                 self.mean_latency, self.p50_latency, self.p95_latency);
+        println!("   ttft mean        {:>9.3}s", self.mean_ttft);
+        println!("   throughput       {:>7.2} req/s  {:>8.1} tok/s",
+                 self.throughput_rps, self.throughput_tps);
+        println!("   controller time  {:>9.3}s   exec time {:>9.3}s",
+                 self.controller_secs, self.exec_secs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_accounting() {
+        let mut m = Metrics::default();
+        for i in 0..10 {
+            m.completed.push(RequestRecord {
+                id: i,
+                arrival: i as f64,
+                first_token_at: i as f64 + 0.5,
+                finished_at: i as f64 + 1.0 + i as f64 * 0.1,
+                prompt_len: 8,
+                gen_len: 4,
+            });
+            m.tokens_generated += 4;
+        }
+        let r = m.report(10.0);
+        assert_eq!(r.completed, 10);
+        assert!((r.throughput_rps - 1.0).abs() < 1e-9);
+        assert!((r.throughput_tps - 4.0).abs() < 1e-9);
+        assert!(r.p95_latency >= r.p50_latency);
+        assert!((r.mean_ttft - 0.5).abs() < 1e-9);
+    }
+}

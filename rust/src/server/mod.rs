@@ -1,0 +1,10 @@
+//! The serving runtime (L3's coordination contribution): continuous
+//! batcher, KV-cache manager, memory monitor with interference, the RAP
+//! controller loop, and metrics — composed by `engine::Engine`.
+
+pub mod batcher;
+pub mod controller;
+pub mod engine;
+pub mod kv;
+pub mod memmon;
+pub mod metrics;

@@ -1,0 +1,103 @@
+//! Mini benchmark harness (criterion is not available offline).
+//!
+//! Gives `cargo bench` (with `harness = false`) warmup, repeated timed
+//! iterations, and mean/p50/p95 reporting. Deliberately tiny, but enough
+//! to compare hot-path changes during the §Perf iteration loop.
+
+use std::time::Instant;
+
+use super::stats::percentile;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.name, self.iters, fmt_ns(self.mean_ns), fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns), fmt_ns(self.min_ns))
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: a few warmup calls, then timed iterations until
+/// `target_secs` of measurement or `max_iters`, whichever first.
+pub fn bench<F: FnMut()>(name: &str, target_secs: f64, max_iters: usize,
+                         mut f: F) -> BenchResult {
+    // Warmup: at least 2 calls, at most ~10% of budget.
+    let warm_start = Instant::now();
+    let mut warm = 0;
+    while warm < 2
+        || (warm_start.elapsed().as_secs_f64() < target_secs * 0.1
+            && warm < 10)
+    {
+        f();
+        warm += 1;
+    }
+
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < target_secs
+        && samples.len() < max_iters
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    if samples.is_empty() {
+        samples.push(f64::NAN);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean,
+        p50_ns: percentile(&samples, 50.0),
+        p95_ns: percentile(&samples, 95.0),
+        min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// is stable but this keeps call sites uniform).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop-loop", 0.05, 10_000, || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(r.iters >= 1);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+    }
+}

@@ -1,0 +1,112 @@
+//! Tiny CLI argument parser (no clap in the offline image).
+//!
+//! Grammar: `rap <subcommand> [positional...] [--flag] [--key value]`.
+//! `--key=value` is also accepted.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["serve", "--budget", "0.8", "--verbose",
+                        "--model=rap-small", "extra"]);
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.get("budget"), Some("0.8"));
+        assert_eq!(a.get("model"), Some("rap-small"));
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["--n", "42", "--x", "1.5"]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 42);
+        assert_eq!(a.f64_or("x", 0.0).unwrap(), 1.5);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!(a.usize_or("x", 0).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "v"]);
+        assert_eq!(a.get("a"), Some("true"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree substrates: PRNG, JSON, CLI parsing, statistics, bench harness.
+//!
+//! The offline image vendors only the `xla` crate's dependency closure, so
+//! everything that would normally come from `rand` / `serde_json` / `clap`
+//! / `criterion` lives here (see DESIGN.md §4).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

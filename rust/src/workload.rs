@@ -1,0 +1,204 @@
+//! Workload generation: the Azure-LLM-inference-trace substitute
+//! (paper Fig. 2 / Takeaway 1 — DynamoLLM-style diurnal + bursty traffic).
+//!
+//! The generator reproduces the trace *statistics* the paper leans on:
+//!   * arrival rate follows a diurnal (sinusoidal) profile with
+//!     superimposed Poisson burst episodes (5–10× rate spikes);
+//!   * prompt lengths are log-normal (heavy right tail: a mix of short
+//!     conversational turns and long-form inputs);
+//!   * generation lengths are geometric-ish (log-normal, shorter).
+//! Everything is seeded and deterministic.
+
+use crate::util::rng::Rng;
+
+/// One inference request as the router sees it.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time in seconds from trace start.
+    pub arrival: f64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Mean arrival rate (requests/sec) at the diurnal baseline.
+    pub base_rate: f64,
+    /// Diurnal amplitude as a fraction of base (0..1).
+    pub diurnal_amp: f64,
+    /// Simulated day length in seconds (compressed day).
+    pub day_secs: f64,
+    /// Burst episodes per day (Poisson).
+    pub bursts_per_day: f64,
+    /// Burst rate multiplier and duration.
+    pub burst_mult: f64,
+    pub burst_secs: f64,
+    /// Log-normal prompt-length parameters (of ln tokens).
+    pub prompt_mu: f64,
+    pub prompt_sigma: f64,
+    pub prompt_max: usize,
+    /// Log-normal generation-length parameters.
+    pub gen_mu: f64,
+    pub gen_sigma: f64,
+    pub gen_max: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            base_rate: 2.0,
+            diurnal_amp: 0.6,
+            day_secs: 600.0,
+            bursts_per_day: 6.0,
+            burst_mult: 6.0,
+            burst_secs: 15.0,
+            prompt_mu: 3.1,   // median ~22 tokens
+            prompt_sigma: 0.8,
+            prompt_max: 120,
+            gen_mu: 2.3,      // median ~10 tokens
+            gen_sigma: 0.6,
+            gen_max: 64,
+        }
+    }
+}
+
+pub struct TraceGenerator {
+    pub cfg: TraceConfig,
+    rng: Rng,
+    bursts: Vec<(f64, f64)>, // (start, end)
+    next_id: u64,
+}
+
+impl TraceGenerator {
+    pub fn new(cfg: TraceConfig, seed: u64) -> TraceGenerator {
+        let mut rng = Rng::new(seed);
+        // Pre-draw burst episodes across one day.
+        let n = rng.poisson(cfg.bursts_per_day);
+        let mut bursts = Vec::with_capacity(n);
+        for _ in 0..n {
+            let s = rng.f64() * cfg.day_secs;
+            bursts.push((s, s + cfg.burst_secs));
+        }
+        bursts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        TraceGenerator { cfg, rng, bursts, next_id: 0 }
+    }
+
+    /// Instantaneous arrival rate at time t (requests/sec).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let c = &self.cfg;
+        let phase = 2.0 * std::f64::consts::PI * (t % c.day_secs)
+            / c.day_secs;
+        // trough at t=0, peak mid-day
+        let diurnal = c.base_rate * (1.0 - c.diurnal_amp * phase.cos());
+        let burst = self
+            .bursts
+            .iter()
+            .any(|&(s, e)| t >= s && t < e);
+        if burst { diurnal * c.burst_mult } else { diurnal }
+    }
+
+    fn sample_len(&mut self, mu: f64, sigma: f64, max: usize) -> usize {
+        let v = self.rng.lognormal(mu, sigma).round() as usize;
+        v.clamp(2, max)
+    }
+
+    /// Generate all requests arriving in [t0, t1) (thinned Poisson).
+    pub fn generate(&mut self, t0: f64, t1: f64) -> Vec<Request> {
+        let mut out = Vec::new();
+        // upper bound on rate for thinning
+        let max_rate = self.cfg.base_rate * (1.0 + self.cfg.diurnal_amp)
+            * self.cfg.burst_mult;
+        let mut t = t0;
+        loop {
+            t += self.rng.exponential(max_rate);
+            if t >= t1 {
+                break;
+            }
+            if self.rng.f64() < self.rate_at(t) / max_rate {
+                let prompt_len = self.sample_len(self.cfg.prompt_mu,
+                                                 self.cfg.prompt_sigma,
+                                                 self.cfg.prompt_max);
+                let gen_len = self.sample_len(self.cfg.gen_mu,
+                                              self.cfg.gen_sigma,
+                                              self.cfg.gen_max);
+                out.push(Request { id: self.next_id, arrival: t,
+                                   prompt_len, gen_len });
+                self.next_id += 1;
+            }
+        }
+        out
+    }
+
+    /// Whole-day trace (for Fig 2 / Fig 5 style analyses).
+    pub fn generate_day(&mut self) -> Vec<Request> {
+        let day = self.cfg.day_secs;
+        self.generate(0.0, day)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mut a = TraceGenerator::new(TraceConfig::default(), 5);
+        let mut b = TraceGenerator::new(TraceConfig::default(), 5);
+        let ra = a.generate(0.0, 50.0);
+        let rb = b.generate(0.0, 50.0);
+        assert_eq!(ra.len(), rb.len());
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.prompt_len, y.prompt_len);
+            assert!((x.arrival - y.arrival).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn arrivals_are_ordered_and_bounded() {
+        let mut g = TraceGenerator::new(TraceConfig::default(), 1);
+        let reqs = g.generate_day();
+        assert!(!reqs.is_empty());
+        let mut prev = 0.0;
+        for r in &reqs {
+            assert!(r.arrival >= prev);
+            prev = r.arrival;
+            assert!(r.prompt_len >= 2
+                    && r.prompt_len <= g.cfg.prompt_max);
+            assert!(r.gen_len >= 2 && r.gen_len <= g.cfg.gen_max);
+        }
+    }
+
+    #[test]
+    fn diurnal_rate_varies() {
+        let g = TraceGenerator::new(TraceConfig {
+            bursts_per_day: 0.0,
+            ..TraceConfig::default()
+        }, 2);
+        let trough = g.rate_at(0.0);
+        let peak = g.rate_at(g.cfg.day_secs / 2.0);
+        assert!(peak > trough * 2.0, "peak {peak} trough {trough}");
+    }
+
+    #[test]
+    fn bursts_raise_rate() {
+        let g = TraceGenerator::new(TraceConfig::default(), 3);
+        if let Some(&(s, _)) = g.bursts.first() {
+            let in_burst = g.rate_at(s + 0.1);
+            let outside = g.rate_at((s + g.cfg.burst_secs + 60.0)
+                                    % g.cfg.day_secs);
+            assert!(in_burst > outside * 2.0);
+        }
+    }
+
+    #[test]
+    fn prompt_lengths_heavy_tailed() {
+        let mut g = TraceGenerator::new(TraceConfig::default(), 4);
+        let reqs = g.generate(0.0, 400.0);
+        let lens: Vec<f64> =
+            reqs.iter().map(|r| r.prompt_len as f64).collect();
+        let mean = crate::util::stats::mean(&lens);
+        let p95 = crate::util::stats::percentile(&lens, 95.0);
+        assert!(p95 > mean * 2.0, "p95 {p95} mean {mean}");
+    }
+}

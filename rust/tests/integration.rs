@@ -1,0 +1,165 @@
+//! Cross-module integration: the full serving engine (batcher + KV
+//! manager + memory monitor + controller + PJRT runtime) on the rap-tiny
+//! artifacts, plus controller/GSI integration on the real model.
+
+use rap::corpus::Corpus;
+use rap::mask::PruneMask;
+use rap::memory::MemoryModel;
+use rap::runtime::Runtime;
+use rap::server::controller::{Controller, Policy};
+use rap::server::engine::{Engine, EngineConfig};
+use rap::server::memmon::MemoryMonitor;
+use rap::util::rng::Rng;
+use rap::workload::Request;
+
+fn artifacts() -> std::path::PathBuf {
+    rap::artifacts_dir()
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("rap-tiny/manifest.json").exists()
+}
+
+/// Deterministic toy trace sized for rap-tiny (max_seq 64: prompts fit
+/// the t16/t32 prefill buckets, prompt+gen < 64).
+fn tiny_trace(n: usize) -> Vec<Request> {
+    let mut rng = Rng::new(99);
+    (0..n as u64)
+        .map(|id| Request {
+            id,
+            arrival: id as f64 * 0.2,
+            prompt_len: rng.range(4, 30),
+            gen_len: rng.range(2, 10),
+        })
+        .collect()
+}
+
+fn tiny_calib(rt: &Runtime) -> Vec<i32> {
+    let mut rng = Rng::new(7);
+    (0..4 * 64).map(|_| rng.below(rt.meta().vocab) as i32).collect()
+}
+
+#[test]
+fn engine_serves_a_trace_to_completion() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let rt = Runtime::load(&artifacts(), "rap-tiny").unwrap();
+    let meta = rt.meta().clone();
+    let mem = MemoryModel::new(&meta);
+    let calib = tiny_calib(&rt);
+    // generous fixed capacity: no pressure, everything must complete
+    let monitor = MemoryMonitor::constant(
+        mem.dense_peak_bytes(rap::memory::Workload::new(8, meta.max_seq))
+            * 4);
+    let controller = Controller::new(
+        Policy::Static(PruneMask::full(&meta)), mem, calib, 64)
+        .with_calib_bucket(4, 64);
+    let mut engine =
+        Engine::new(rt, monitor, controller, EngineConfig::default());
+    let trace = tiny_trace(10);
+    let report = engine.run_trace(trace).unwrap();
+    assert_eq!(report.completed, 10, "all requests must finish");
+    assert_eq!(report.oom_events, 0);
+    assert_eq!(report.rejected, 0);
+    assert_eq!(report.prefills, 10);
+    assert!(report.tokens_generated >= 10 * 3);
+    // every completion has coherent timestamps
+    for r in &engine.metrics.completed {
+        assert!(r.first_token_at >= r.arrival);
+        assert!(r.finished_at >= r.first_token_at);
+    }
+    // engine must batch: fewer decode steps than tokens generated
+    assert!(report.decode_steps < report.tokens_generated);
+}
+
+#[test]
+fn engine_under_pressure_gsi_policy_switches_masks() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::load(&artifacts(), "rap-tiny").unwrap();
+    let meta = rt.meta().clone();
+    let mem = MemoryModel::new(&meta);
+    let calib = tiny_calib(&rt);
+    let param_bytes = mem.param_bytes(&PruneMask::full(&meta));
+    // capacity BELOW the dense parameters: the controller must prune
+    // blocks before it can serve anything at all
+    let monitor = MemoryMonitor::constant(param_bytes * 95 / 100);
+    let controller =
+        Controller::new(Policy::GsiGreedy, mem.clone(), calib, 64)
+            .with_calib_bucket(4, 64);
+    let mut engine = Engine::new(rt, monitor, controller,
+                                 EngineConfig { controller_period: 0.1,
+                                                ..Default::default() });
+    let report = engine.run_trace(tiny_trace(6)).unwrap();
+    assert!(report.mask_switches >= 1,
+            "controller never adapted: {report:?}");
+    assert!(report.completed >= 4,
+            "adaptive policy should still serve: {report:?}");
+    // final mask actually dropped something
+    assert!(!engine.mask.dropped_blocks().is_empty());
+}
+
+#[test]
+fn controller_caches_decisions() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rt = Runtime::load(&artifacts(), "rap-tiny").unwrap();
+    let meta = rt.meta().clone();
+    let mem = MemoryModel::new(&meta);
+    let calib = tiny_calib(&rt);
+    let mut c = Controller::new(Policy::GsiGreedy, mem.clone(), calib, 64)
+        .with_calib_bucket(4, 64);
+    let w = rap::memory::Workload::new(4, 32);
+    let avail = mem.dense_peak_bytes(w) * 7 / 10;
+    let m1 = c.decide(&mut rt, w, avail).unwrap();
+    let m2 = c.decide(&mut rt, w, avail).unwrap();
+    assert_eq!(m1, m2);
+    assert_eq!(c.decisions, 2);
+    assert_eq!(c.cache_hits, 1);
+    // masks actually meet the budget
+    assert!(mem.peak_bytes(&m1, w) <= avail);
+}
+
+#[test]
+fn full_eval_harness_runs_on_tiny() {
+    if !have_artifacts() {
+        return;
+    }
+    // tiny's vocab differs from the shared corpus, so build a synthetic
+    // corpus matching its vocab for the harness
+    use rap::corpus::MarkovChain;
+    let mut rt = Runtime::load(&artifacts(), "rap-tiny").unwrap();
+    let meta = rt.meta().clone();
+    let v = meta.vocab;
+    let mut rng = Rng::new(5);
+    let mut trans = vec![0.0f32; v * v];
+    for t in 0..v {
+        // random sparse rows
+        for _ in 0..6 {
+            trans[t * v + rng.below(v)] += 1.0;
+        }
+        let s: f32 = trans[t * v..(t + 1) * v].iter().sum();
+        for x in &mut trans[t * v..(t + 1) * v] {
+            *x /= s;
+        }
+    }
+    let chain = MarkovChain::new(v, trans.clone(), 0.2, 4).unwrap();
+    let uni = MarkovChain::new(v, vec![1.0 / v as f32; v * v], 0.2, 4)
+        .unwrap();
+    let stream = chain.sample(40_000, &mut rng);
+    let corpus = Corpus { chain, chain_ptb: uni, train: stream.clone(),
+                          wiki: stream.clone(), ptb: stream.clone(),
+                          alpaca: stream };
+    let mask = PruneMask::full(&meta);
+    let row = rap::evalharness::full_eval(&mut rt, &corpus, &mask,
+                                          "dense", 1, 4, 3).unwrap();
+    assert!(row.wikitext2_ppl.is_finite() && row.wikitext2_ppl > 1.0);
+    assert_eq!(row.task_acc.len(), 7);
+    for (name, acc) in &row.task_acc {
+        assert!((0.0..=100.0).contains(acc), "{name}: {acc}");
+    }
+}

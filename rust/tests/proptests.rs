@@ -1,0 +1,284 @@
+//! Property-style tests over the coordinator invariants (routing,
+//! batching, masks, memory). The offline image has no `proptest`, so
+//! cases are driven by the in-tree PRNG: hundreds of random instances per
+//! property, seeded and reproducible — shrinkage is replaced by printing
+//! the failing case's seed.
+
+use rap::mask::PruneMask;
+use rap::memory::{MemoryModel, Workload};
+use rap::model_meta::{BlockId, ModelMeta};
+use rap::server::batcher::{decode_bucket, prefill_bucket, ActiveSeq,
+                           Batcher, DECODE_BUCKETS, PREFILL_BUCKETS};
+use rap::server::kv::KvManager;
+use rap::util::json::Json;
+use rap::util::rng::Rng;
+use rap::workload::Request;
+
+fn rand_meta(rng: &mut Rng) -> ModelMeta {
+    let n_heads = [2usize, 4, 8][rng.below(3)];
+    let kv_div = [1usize, 2][rng.below(2)];
+    let n_kv = (n_heads / kv_div).max(1);
+    ModelMeta::synthetic("p", rng.range(1, 8), 32 * rng.range(1, 4),
+                         n_heads, n_kv, 16 * rng.range(1, 8),
+                         64, 32 * rng.range(1, 4))
+}
+
+fn rand_mask(meta: &ModelMeta, rng: &mut Rng) -> PruneMask {
+    let mut m = PruneMask::full(meta);
+    for l in 0..meta.n_layers {
+        for h in 0..meta.n_heads {
+            if rng.chance(0.3) {
+                m.set_head(l, h, false);
+            }
+        }
+        for c in 0..meta.d_ff {
+            if rng.chance(0.3) {
+                m.set_ffn_channel(l, c, false);
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn prop_peak_memory_monotone_under_pruning() {
+    // Removing any block never increases peak memory, for any workload.
+    for seed in 0..150u64 {
+        let mut rng = Rng::new(seed);
+        let meta = rand_meta(&mut rng);
+        let mem = MemoryModel::new(&meta);
+        let w = Workload::new(rng.range(1, 17), rng.range(1, meta.max_seq));
+        let mask = rand_mask(&meta, &mut rng);
+        let before = mem.peak_bytes(&mask, w);
+        for b in meta.all_blocks() {
+            let after = mem.peak_bytes(&mask.with_block_dropped(b), w);
+            assert!(after <= before, "seed {seed}: {b} grew {before} -> \
+                     {after}");
+        }
+    }
+}
+
+#[test]
+fn prop_param_fraction_in_unit_interval_and_consistent() {
+    for seed in 0..150u64 {
+        let mut rng = Rng::new(seed);
+        let meta = rand_meta(&mut rng);
+        let mask = rand_mask(&meta, &mut rng);
+        let f = mask.param_fraction(&meta);
+        assert!((0.0..=1.0 + 1e-9).contains(&f), "seed {seed}: {f}");
+        // param_bytes must equal fraction × total (both derive from the
+        // same mask but via different code paths)
+        let mem = MemoryModel::new(&meta);
+        let bytes = mem.param_bytes(&mask) as f64;
+        let expect = f * (meta.total_params() * 4) as f64;
+        assert!((bytes - expect).abs() < 1e-6 * expect.max(1.0),
+                "seed {seed}: {bytes} vs {expect}");
+    }
+}
+
+#[test]
+fn prop_block_drop_restore_roundtrip() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed);
+        let meta = rand_meta(&mut rng);
+        let full = PruneMask::full(&meta);
+        let mut m = full.clone();
+        let mut order = meta.all_blocks();
+        rng.shuffle(&mut order);
+        let k = rng.below(order.len() + 1);
+        for b in &order[..k] {
+            m.drop_block(*b);
+        }
+        assert_eq!(m.dropped_blocks().len(), k);
+        for b in &order[..k] {
+            m.restore_block(*b);
+        }
+        assert_eq!(m, full, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_mask_key_collision_free_on_block_masks() {
+    // All single- and double-block masks of one model have distinct keys.
+    let meta = ModelMeta::synthetic("k", 6, 64, 4, 2, 96, 128, 64);
+    let full = PruneMask::full(&meta);
+    let mut keys = std::collections::HashSet::new();
+    keys.insert(full.key());
+    let blocks = meta.all_blocks();
+    for (i, &a) in blocks.iter().enumerate() {
+        assert!(keys.insert(full.with_block_dropped(a).key()));
+        for &b in &blocks[i + 1..] {
+            let m = full.with_block_dropped(a).with_block_dropped(b);
+            assert!(keys.insert(m.key()), "collision at {a}+{b}");
+        }
+    }
+}
+
+#[test]
+fn prop_buckets_cover_and_bound() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed);
+        let p = rng.range(1, 1000);
+        let pb = prefill_bucket(p);
+        assert!(PREFILL_BUCKETS.contains(&pb));
+        if p <= *PREFILL_BUCKETS.last().unwrap() {
+            assert!(pb >= p, "prefill bucket {pb} < prompt {p}");
+            // minimality: no smaller bucket fits
+            for &b in PREFILL_BUCKETS.iter() {
+                if b < pb {
+                    assert!(b < p);
+                }
+            }
+        }
+        let n = rng.below(40);
+        let db = decode_bucket(n);
+        assert!(db <= n.max(0));
+        if n > 0 {
+            assert!(DECODE_BUCKETS.contains(&db));
+            // maximality
+            for &b in DECODE_BUCKETS.iter() {
+                if b > db {
+                    assert!(b > n);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_fcfs_and_caps() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed);
+        let mut b = Batcher::new();
+        let n = rng.range(1, 30);
+        for id in 0..n as u64 {
+            b.enqueue(Request { id, arrival: id as f64,
+                                prompt_len: rng.range(2, 120),
+                                gen_len: rng.range(2, 60) });
+        }
+        let mut last = None;
+        let mut admitted = 0;
+        while let Some(r) = b.pop_for_prefill() {
+            if let Some(prev) = last {
+                assert!(r.id > prev, "seed {seed}: FCFS violated");
+            }
+            last = Some(r.id);
+            b.push_active(ActiveSeq { req: r, generated: 0,
+                                      next_token: 0,
+                                      prefill_done_at: 0.0 });
+            admitted += 1;
+        }
+        assert!(admitted <= b.max_active);
+        let ids = b.decode_ids();
+        assert_eq!(ids.len(), decode_bucket(b.active.len()));
+        // decode ids are the oldest actives
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(*id, i as u64);
+        }
+    }
+}
+
+#[test]
+fn prop_kv_gather_scatter_roundtrip() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed);
+        let meta = rand_meta(&mut rng);
+        let mask = PruneMask::full(&meta);
+        let mut kv = KvManager::new(&meta);
+        let n_seqs = rng.range(1, 6);
+        let elems = kv.seq_elems();
+        for id in 0..n_seqs as u64 {
+            let fill = id as f32 + 1.0;
+            kv.insert(id, vec![fill; elems], vec![-fill; elems],
+                      rng.range(1, meta.max_seq / 2), &mask)
+                .unwrap();
+        }
+        let ids: Vec<u64> = (0..n_seqs as u64).collect();
+        let lens_before: Vec<usize> =
+            ids.iter().map(|i| kv.seq_len(*i).unwrap()).collect();
+        let (k, v) = kv.gather(&ids).unwrap();
+        // scatter_cache alone must not change lengths
+        kv.scatter_cache(&ids, &k, &v, false).unwrap();
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(kv.seq_len(*id).unwrap(), lens_before[i]);
+        }
+        // round-trip preserves contents
+        let (k2, v2) = kv.gather(&ids).unwrap();
+        assert_eq!(k, k2, "seed {seed}");
+        assert_eq!(v, v2);
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.f64() * 2000.0 - 1000.0).round()),
+            3 => {
+                let n = rng.below(12);
+                Json::Str((0..n).map(|_| {
+                    let c = [b'a', b'Z', b'"', b'\\', b'\n', 0xC3u8]
+                        [rng.below(5)]; // skip raw 0xC3 half-char
+                    c as char
+                }).collect())
+            }
+            4 => Json::Arr((0..rng.below(5))
+                .map(|_| gen(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(5) {
+                    m.insert(format!("k{i}"), gen(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(seed);
+        let v = gen(&mut rng, 3);
+        let parsed = Json::parse(&v.dumps()).unwrap();
+        assert_eq!(parsed, v, "seed {seed}: {}", v.dumps());
+        let pretty = Json::parse(&v.pretty()).unwrap();
+        assert_eq!(pretty, v, "seed {seed} (pretty)");
+    }
+}
+
+#[test]
+fn prop_gsi_greedy_never_worse_than_one_shot_additive() {
+    use rap::gsi::GsiEngine;
+    use rap::runtime::{NllEvaluator, SyntheticEvaluator};
+    // Under an additive-damage model both orderings coincide; with layer
+    // synergy greedy must be ≤ one-shot in final NLL.
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed);
+        let n_layers = rng.range(2, 6);
+        let meta = ModelMeta::synthetic("g", n_layers, 64, 4, 2, 96, 128,
+                                        64);
+        let damage: Vec<f64> =
+            (0..2 * n_layers).map(|_| rng.f64()).collect();
+        let synergy = rng.f64() * 3.0;
+        let mut ev = SyntheticEvaluator::new(meta.clone(), 2.0,
+                                             damage.clone(), synergy);
+        let n_remove = rng.range(1, 2 * n_layers);
+        let mut gsi = GsiEngine::new(&mut ev);
+        let full = PruneMask::full(&meta);
+        let os = gsi.one_shot_order(&full).unwrap();
+        let mut os_mask = full.clone();
+        for (b, _) in os.iter().take(n_remove) {
+            os_mask.drop_block(*b);
+        }
+        let os_nll = gsi.nll(&os_mask).unwrap();
+        let mut cnt = 0;
+        let g = gsi.greedy(&full, |_| {
+            cnt += 1;
+            cnt > n_remove
+        }).unwrap();
+        let g_nll = *g.nll_after.last().unwrap();
+        assert!(g_nll <= os_nll + 1e-9,
+                "seed {seed}: greedy {g_nll} > one-shot {os_nll}");
+        drop(gsi);
+        let _ = ev.eval_nll(&full);
+    }
+}

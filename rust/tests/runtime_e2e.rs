@@ -1,0 +1,194 @@
+//! End-to-end integration over the real PJRT artifacts (requires
+//! `make artifacts`). Uses rap-tiny for speed plus targeted rap-small
+//! checks, and validates the full decode path against the score path.
+
+use rap::corpus::{Corpus, Split};
+use rap::mask::PruneMask;
+use rap::model_meta::BlockId;
+use rap::runtime::Runtime;
+use rap::util::rng::Rng;
+
+fn artifacts() -> std::path::PathBuf {
+    // tests run from the workspace root
+    rap::artifacts_dir()
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("rap-tiny/manifest.json").exists()
+}
+
+#[test]
+fn tiny_score_runs_and_gates_match_shapes() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut rt = Runtime::load(&artifacts(), "rap-tiny").unwrap();
+    let meta = rt.meta().clone();
+    let mut rng = Rng::new(1);
+    let (b, t) = (4, 64);
+    let tokens: Vec<i32> =
+        (0..b * t).map(|_| rng.below(meta.vocab) as i32).collect();
+    let full = PruneMask::full(&meta);
+    let nll_dense = rt.mean_nll(b, t, &tokens, &full).unwrap();
+    assert!(nll_dense.is_finite() && nll_dense > 0.0);
+    // trained tiny model must beat uniform on its own chain? random
+    // tokens here, so just sanity-bound it
+    assert!(nll_dense < 2.0 * (meta.vocab as f64).ln());
+}
+
+#[test]
+fn tiny_pruning_degrades_nll_monotonically_in_expectation() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rt = Runtime::load(&artifacts(), "rap-tiny").unwrap();
+    let meta = rt.meta().clone();
+    let mut rng = Rng::new(2);
+    let (b, t) = (4, 64);
+    let tokens: Vec<i32> =
+        (0..b * t).map(|_| rng.below(meta.vocab) as i32).collect();
+    let full = PruneMask::full(&meta);
+    let dense = rt.mean_nll(b, t, &tokens, &full).unwrap();
+    // drop everything → far worse than dense
+    let mut empty = full.clone();
+    for blk in meta.all_blocks() {
+        empty.drop_block(blk);
+    }
+    let destroyed = rt.mean_nll(b, t, &tokens, &empty).unwrap();
+    assert!(destroyed > dense + 0.1,
+            "destroyed {destroyed} vs dense {dense}");
+}
+
+#[test]
+fn tiny_probe_outputs_sane() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rt = Runtime::load(&artifacts(), "rap-tiny").unwrap();
+    let meta = rt.meta().clone();
+    let Ok((_, pb, pt)) = rt.probe_entry() else {
+        eprintln!("skipping: no probe entry in this artifact build");
+        return;
+    };
+    let mut rng = Rng::new(3);
+    let tokens: Vec<i32> =
+        (0..pb * pt).map(|_| rng.below(meta.vocab) as i32).collect();
+    let full = PruneMask::full(&meta);
+    let probe = rt.probe(&tokens, &full).unwrap();
+    assert_eq!(probe.attn_cos.len(), meta.n_layers);
+    assert_eq!(probe.ffn_cos.len(), meta.n_layers);
+    assert_eq!(probe.head_norm.len(), meta.n_layers * meta.n_heads);
+    assert_eq!(probe.chan_norm.len(), meta.n_layers * meta.d_ff);
+    for &c in probe.attn_cos.iter().chain(&probe.ffn_cos) {
+        assert!(c > -1.01 && c < 1.01, "cos out of range: {c}");
+    }
+    for &n in probe.head_norm.iter().chain(&probe.chan_norm) {
+        assert!(n >= 0.0 && n.is_finite());
+    }
+}
+
+#[test]
+fn tiny_prefill_decode_matches_score_path() {
+    // The strongest cross-entry invariant: greedy decode continuations
+    // produced by prefill+decode must assign the same NLL to a sequence
+    // as the score path does (same weights, same math, different HLO).
+    if !have_artifacts() {
+        return;
+    }
+    let mut rt = Runtime::load(&artifacts(), "rap-tiny").unwrap();
+    let meta = rt.meta().clone();
+    let full = PruneMask::full(&meta);
+    let mut rng = Rng::new(4);
+    let prompt_len = 16usize;
+    let tokens: Vec<i32> = (0..prompt_len)
+        .map(|_| rng.below(meta.vocab) as i32)
+        .collect();
+    // prefill then greedy-decode 4 tokens
+    let (logits, mut k, mut v) = rt
+        .prefill(prompt_len, &tokens, &full)
+        .unwrap();
+    let mut seq = tokens.clone();
+    let mut next = argmax(&logits) as i32;
+    for step in 0..4 {
+        seq.push(next);
+        let pos = [(prompt_len + step) as i32];
+        let lg = rt
+            .decode(1, &[next], &pos, &mut k, &mut v, &full)
+            .unwrap();
+        next = argmax(&lg) as i32;
+    }
+    // score the full 20-token sequence; NLL of the decoded tokens under
+    // the score path must be small at the argmax positions (each decoded
+    // token was the argmax → its logprob is the max → NLL below ln(V)).
+    let t = seq.len();
+    let entry_t = 64usize;
+    let mut padded = vec![0i32; entry_t * 4];
+    padded[..t].copy_from_slice(&seq);
+    let mut mask_v = vec![0.0f32; entry_t * 4];
+    for (i, m) in mask_v.iter_mut().enumerate().take(t).skip(prompt_len) {
+        let _ = i;
+        *m = 1.0;
+    }
+    let (nll, cnt) = rt.score(4, entry_t, &padded, &mask_v, &full).unwrap();
+    let mean = nll[0] as f64 / cnt[0] as f64;
+    assert!(mean < (meta.vocab as f64).ln(),
+            "greedy tokens should be likely: mean NLL {mean}");
+}
+
+#[test]
+fn small_model_beats_uniform_on_its_corpus() {
+    if !have_artifacts()
+        || !artifacts().join("rap-small/manifest.json").exists()
+    {
+        return;
+    }
+    let mut rt = Runtime::load(&artifacts(), "rap-small").unwrap();
+    let corpus = Corpus::load(&artifacts().join("corpus")).unwrap();
+    let meta = rt.meta().clone();
+    let full = PruneMask::full(&meta);
+    let tokens = corpus.batches(Split::Wiki, 4, 128, 1, 0).unwrap()
+        .remove(0);
+    let nll = rt.mean_nll(4, 128, &tokens, &full).unwrap();
+    let uniform = (meta.vocab as f64).ln();
+    assert!(nll < uniform - 0.5,
+            "model did not learn: nll {nll} vs uniform {uniform}");
+}
+
+#[test]
+fn small_mha_and_ffn_pruning_both_hurt() {
+    if !have_artifacts()
+        || !artifacts().join("rap-small/manifest.json").exists()
+    {
+        return;
+    }
+    let mut rt = Runtime::load(&artifacts(), "rap-small").unwrap();
+    let corpus = Corpus::load(&artifacts().join("corpus")).unwrap();
+    let meta = rt.meta().clone();
+    let full = PruneMask::full(&meta);
+    let tokens = corpus.batches(Split::Wiki, 4, 128, 1, 0).unwrap()
+        .remove(0);
+    let dense = rt.mean_nll(4, 128, &tokens, &full).unwrap();
+    let mut no_mha = full.clone();
+    let mut no_ffn = full.clone();
+    for l in 0..meta.n_layers {
+        no_mha.drop_block(BlockId::Mha(l));
+        no_ffn.drop_block(BlockId::Ffn(l));
+    }
+    let nll_no_mha = rt.mean_nll(4, 128, &tokens, &no_mha).unwrap();
+    let nll_no_ffn = rt.mean_nll(4, 128, &tokens, &no_ffn).unwrap();
+    // both pathways are load-bearing (corpus has bigram + induction
+    // structure, see python/compile/corpus.py)
+    assert!(nll_no_mha > dense + 0.05, "{nll_no_mha} vs {dense}");
+    assert!(nll_no_ffn > dense + 0.3, "{nll_no_ffn} vs {dense}");
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut b = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[b] {
+            b = i;
+        }
+    }
+    b
+}

@@ -1,0 +1,43 @@
+//! FLEET DRIVER: replay one seeded, bursty trace across N heterogeneous
+//! serving replicas — different capacities, co-tenant interference
+//! profiles, and device speeds — under each routing policy in turn, and
+//! compare what the router's memory-awareness buys: round-robin and
+//! least-outstanding dispatch blindly, kv-headroom reads Sys_avail(t),
+//! and rap-aware additionally prices each request's KV cost under every
+//! replica's currently-deployed pruning mask.
+//!
+//! Runs entirely on the deterministic sim runtime backend — no AOT
+//! artifacts needed.
+//!
+//! Run with:  cargo run --release --example serve_fleet -- \
+//!                [replicas] [secs] [seed]
+
+use anyhow::Result;
+use rap::coordinator::fleet::{default_fleet_trace, default_sim_fleet};
+use rap::coordinator::router::RouterPolicy;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let replicas: usize =
+        args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let secs: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(120.0);
+    let seed: u64 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(7);
+
+    let trace = default_fleet_trace(seed, secs);
+    println!("fleet of {replicas} replicas · {} requests over {secs:.0}s \
+              · seed {seed}", trace.len());
+
+    for policy in RouterPolicy::ALL {
+        let mut fleet = default_sim_fleet(replicas, seed, policy);
+        fleet.cfg.max_sim_secs = secs + 3600.0; // arrivals + drain window
+        let report = fleet.run_trace(trace.clone())?;
+        println!();
+        report.print();
+    }
+
+    println!("\nExpected shape: the memory-aware routers end with fewer \
+              OOM events and fewer rejected requests than round-robin; \
+              rap-aware should also hold the best p99 latency because it \
+              avoids replicas serving with heavily pruned masks.");
+    Ok(())
+}

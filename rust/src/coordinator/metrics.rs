@@ -1,0 +1,178 @@
+//! Fleet-level measurement: per-replica summaries plus aggregate tail
+//! latencies, OOM/respawn counts, and the routing histogram — printable
+//! and serializable to JSON via the in-tree `util::json` writer.
+
+use crate::memory::mib;
+use crate::server::metrics::ServeReport;
+use crate::util::json::Json;
+
+/// One replica's slice of a fleet run.
+#[derive(Clone, Debug)]
+pub struct ReplicaReport {
+    pub id: usize,
+    /// Lifecycle state at the end of the run.
+    pub state: String,
+    pub capacity_bytes: usize,
+    /// Requests the router dispatched here.
+    pub routed: u64,
+    pub respawns: u64,
+    pub serve: ServeReport,
+}
+
+/// Aggregate results of one fleet trace replay.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub policy: String,
+    pub sim_secs: f64,
+    /// Arrivals handed to the router (routed + dropped).
+    pub total_requests: u64,
+    pub completed: usize,
+    /// Engine-level rejections + evict-requeues, summed over replicas.
+    pub rejected: u64,
+    /// Arrivals the router could not place (no accepting replica).
+    pub dropped: u64,
+    pub oom_events: u64,
+    pub respawns: u64,
+    pub mean_latency: f64,
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    pub p50_ttft: f64,
+    pub p99_ttft: f64,
+    pub throughput_rps: f64,
+    /// Routing histogram: decisions per replica index.
+    pub routing: Vec<u64>,
+    pub replicas: Vec<ReplicaReport>,
+}
+
+/// JSON number that is always valid JSON (NaN/inf → null).
+fn num(x: f64) -> Json {
+    if x.is_finite() { Json::Num(x) } else { Json::Null }
+}
+
+impl FleetReport {
+    pub fn print(&self) {
+        println!("── fleet report: router={} ({} replicas, {:.0}s sim)",
+                 self.policy, self.replicas.len(), self.sim_secs);
+        println!("   requests {} | completed {} | rejected {} | dropped \
+                  {}", self.total_requests, self.completed, self.rejected,
+                 self.dropped);
+        println!("   OOM events {} | respawns {} | throughput {:.2} req/s",
+                 self.oom_events, self.respawns, self.throughput_rps);
+        println!("   latency p50/p99  {:.3}s / {:.3}s   ttft p50/p99  \
+                  {:.3}s / {:.3}s",
+                 self.p50_latency, self.p99_latency, self.p50_ttft,
+                 self.p99_ttft);
+        println!("   routing histogram: {:?}", self.routing);
+        println!("   {:<4} {:>10} {:>7} {:>9} {:>6} {:>5} {:>9} {:>9}  \
+                  state",
+                 "id", "cap(MiB)", "routed", "completed", "OOMs", "resp",
+                 "p50 lat", "p99 lat");
+        for r in &self.replicas {
+            println!("   {:<4} {:>10.1} {:>7} {:>9} {:>6} {:>5} {:>8.3}s \
+                      {:>8.3}s  {}",
+                     r.id, mib(r.capacity_bytes), r.routed,
+                     r.serve.completed, r.serve.oom_events, r.respawns,
+                     zero_nan(r.serve.p50_latency),
+                     zero_nan(r.serve.p99_latency), r.state);
+        }
+    }
+
+    /// The acceptance-surface JSON: per-replica and aggregate p50/p99
+    /// latency + TTFT, OOM counts, and the routing histogram.
+    pub fn to_json(&self) -> Json {
+        let replicas: Vec<Json> = self
+            .replicas
+            .iter()
+            .map(|r| {
+                Json::object(vec![
+                    ("id", Json::Num(r.id as f64)),
+                    ("state", Json::Str(r.state.clone())),
+                    ("capacity_bytes", Json::Num(r.capacity_bytes as f64)),
+                    ("routed", Json::Num(r.routed as f64)),
+                    ("respawns", Json::Num(r.respawns as f64)),
+                    ("completed", Json::Num(r.serve.completed as f64)),
+                    ("rejected", Json::Num(r.serve.rejected as f64)),
+                    ("oom_events", Json::Num(r.serve.oom_events as f64)),
+                    ("mask_switches",
+                     Json::Num(r.serve.mask_switches as f64)),
+                    ("p50_latency", num(r.serve.p50_latency)),
+                    ("p99_latency", num(r.serve.p99_latency)),
+                    ("p50_ttft", num(r.serve.p50_ttft)),
+                    ("p99_ttft", num(r.serve.p99_ttft)),
+                    ("throughput_rps", num(r.serve.throughput_rps)),
+                ])
+            })
+            .collect();
+        Json::object(vec![
+            ("router", Json::Str(self.policy.clone())),
+            ("sim_secs", num(self.sim_secs)),
+            ("total_requests", Json::Num(self.total_requests as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("oom_events", Json::Num(self.oom_events as f64)),
+            ("respawns", Json::Num(self.respawns as f64)),
+            ("mean_latency", num(self.mean_latency)),
+            ("p50_latency", num(self.p50_latency)),
+            ("p99_latency", num(self.p99_latency)),
+            ("p50_ttft", num(self.p50_ttft)),
+            ("p99_ttft", num(self.p99_ttft)),
+            ("throughput_rps", num(self.throughput_rps)),
+            ("routing_histogram",
+             Json::Arr(self.routing.iter()
+                       .map(|&c| Json::Num(c as f64)).collect())),
+            ("replicas", Json::Arr(replicas)),
+        ])
+    }
+}
+
+/// Display policy for percentiles over an empty sample: print 0.0
+/// (shared with the fleet experiment's table).
+pub(crate) fn zero_nan(x: f64) -> f64 {
+    if x.is_finite() { x } else { 0.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::metrics::Metrics;
+
+    #[test]
+    fn json_is_parseable_even_with_empty_replicas() {
+        let empty = Metrics::default().report(1.0); // NaN percentiles
+        let report = FleetReport {
+            policy: "rap-aware".into(),
+            sim_secs: 1.0,
+            total_requests: 0,
+            completed: 0,
+            rejected: 0,
+            dropped: 0,
+            oom_events: 0,
+            respawns: 0,
+            mean_latency: f64::NAN,
+            p50_latency: f64::NAN,
+            p99_latency: f64::NAN,
+            p50_ttft: f64::NAN,
+            p99_ttft: f64::NAN,
+            throughput_rps: 0.0,
+            routing: vec![0, 0],
+            replicas: vec![ReplicaReport {
+                id: 0,
+                state: "serving".into(),
+                capacity_bytes: 1 << 20,
+                routed: 0,
+                respawns: 0,
+                serve: empty,
+            }],
+        };
+        let s = report.to_json().pretty();
+        let parsed = Json::parse(&s).expect("fleet JSON must parse");
+        assert_eq!(parsed.get("router").unwrap().str().unwrap(),
+                   "rap-aware");
+        assert_eq!(parsed.get("p50_latency").unwrap(), &Json::Null);
+        assert_eq!(parsed.get("routing_histogram").unwrap()
+                   .usize_vec().unwrap(), vec![0, 0]);
+        assert_eq!(parsed.get("replicas").unwrap().arr().unwrap().len(),
+                   1);
+    }
+}

@@ -1,1 +1,44 @@
-// paper's L3 coordination contribution
+//! Fleet coordinator — the paper's L3 coordination contribution scaled
+//! out: many serving replicas, one shared simulated clock, and a
+//! memory-aware request router between them.
+//!
+//! The single-engine story (paper Fig 5) is that pruning must react to
+//! *runtime* memory variation on one device. At fleet scale the same
+//! signal becomes a *placement* problem: replicas differ in capacity,
+//! co-tenant interference, device speed, and — because each runs its own
+//! RAP controller — in the quality of the mask currently deployed. A
+//! request is cheap on a replica with KV headroom and an unpruned mask,
+//! and expensive (or fatal) on one that interference has pushed under
+//! water.
+//!
+//! Module map:
+//!   * [`replica`] — one serving [`crate::server::engine::Engine`] plus
+//!     its lifecycle (`Serving` → `Draining` → `Respawning`) and
+//!     OOM-pressure bookkeeping. Engines are *externally stepped* via
+//!     `Engine::step_to`, which is what lets N of them share a clock.
+//!   * [`router`] — pluggable dispatch policies: round-robin,
+//!     least-outstanding, KV-headroom-aware, and RAP-aware (scores each
+//!     replica by `Sys_avail(t)` headroom against the request's
+//!     estimated KV cost under that replica's *current mask*, weighted
+//!     by mask utility and queue depth).
+//!   * [`fleet`] — the event loop: admit trace arrivals, route, step all
+//!     replicas to the shared clock, drain replicas under sustained OOM
+//!     pressure and respawn them after a cool-down.
+//!   * [`metrics`] — `FleetReport`: per-replica and aggregate p50/p99
+//!     TTFT + latency, OOM/respawn counts, and the routing histogram,
+//!     printable and serializable to JSON.
+//!
+//! Everything is seeded and deterministic: replicas run the sim runtime
+//! backend (`rap::runtime::sim`) by default, so fleet experiments replay
+//! bit-identically — `rap serve-fleet --replicas 4 --router rap` is the
+//! CLI entry point, `experiments::fleet` the policy comparison.
+
+pub mod fleet;
+pub mod metrics;
+pub mod replica;
+pub mod router;
+
+pub use fleet::{Fleet, FleetConfig};
+pub use metrics::{FleetReport, ReplicaReport};
+pub use replica::{Replica, ReplicaSpec, ReplicaState};
+pub use router::{Router, RouterPolicy};

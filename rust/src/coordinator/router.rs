@@ -1,0 +1,230 @@
+//! Request routing across fleet replicas.
+//!
+//! Four policies, from memory-blind to fully RAP-aware:
+//!
+//!   * `RoundRobin`       — cyclic dispatch over accepting replicas (the
+//!                          memory-blind baseline every LB starts with);
+//!   * `LeastOutstanding` — classic least-loaded by queued + in-flight
+//!                          requests;
+//!   * `KvHeadroom`       — most free memory: `Sys_avail(t)` minus the
+//!                          replica's current footprint;
+//!   * `RapAware`         — scores feasibility *for this request*: the
+//!                          request's estimated KV bytes under each
+//!                          replica's current mask against that replica's
+//!                          headroom, weighted by mask utility (quality
+//!                          of the deployed model) and queue depth. This
+//!                          is the fleet-level analogue of the paper's
+//!                          (workload, Sys_avail) state vector.
+//!
+//! The router also owns the routing histogram (decisions per replica)
+//! reported by `FleetReport`.
+
+use anyhow::{bail, Result};
+
+use super::replica::Replica;
+use crate::workload::Request;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterPolicy {
+    RoundRobin,
+    LeastOutstanding,
+    KvHeadroom,
+    RapAware,
+}
+
+impl RouterPolicy {
+    pub const ALL: [RouterPolicy; 4] = [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastOutstanding,
+        RouterPolicy::KvHeadroom,
+        RouterPolicy::RapAware,
+    ];
+
+    pub fn parse(s: &str) -> Result<RouterPolicy> {
+        Ok(match s {
+            "rr" | "round-robin" => RouterPolicy::RoundRobin,
+            "least" | "least-outstanding" => RouterPolicy::LeastOutstanding,
+            "kv" | "kv-headroom" => RouterPolicy::KvHeadroom,
+            "rap" | "rap-aware" => RouterPolicy::RapAware,
+            _ => bail!("unknown router '{s}' (expected round-robin | \
+                        least-outstanding | kv-headroom | rap-aware)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastOutstanding => "least-outstanding",
+            RouterPolicy::KvHeadroom => "kv-headroom",
+            RouterPolicy::RapAware => "rap-aware",
+        }
+    }
+}
+
+pub struct Router {
+    pub policy: RouterPolicy,
+    /// Routing histogram: requests dispatched to each replica index.
+    pub decisions: Vec<u64>,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy, n_replicas: usize) -> Router {
+        Router { policy, decisions: vec![0; n_replicas], rr_next: 0 }
+    }
+
+    /// Pick a replica index for `req` at sim time `t`, or `None` when no
+    /// replica is accepting. Ties break toward the lowest index so every
+    /// policy is deterministic.
+    pub fn route(&mut self, req: &Request, replicas: &[Replica], t: f64)
+                 -> Option<usize> {
+        let accepting: Vec<usize> = replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.accepting())
+            .map(|(i, _)| i)
+            .collect();
+        if accepting.is_empty() {
+            return None;
+        }
+        let pick = match self.policy {
+            RouterPolicy::RoundRobin => {
+                let n = replicas.len();
+                let mut chosen = accepting[0];
+                for off in 0..n {
+                    let i = (self.rr_next + off) % n;
+                    if replicas[i].accepting() {
+                        chosen = i;
+                        break;
+                    }
+                }
+                self.rr_next = (chosen + 1) % n;
+                chosen
+            }
+            RouterPolicy::LeastOutstanding => *accepting
+                .iter()
+                .min_by_key(|&&i| (replicas[i].outstanding(), i))
+                .unwrap(),
+            RouterPolicy::KvHeadroom => *accepting
+                .iter()
+                .max_by_key(|&&i| {
+                    (replicas[i].kv_headroom(t), std::cmp::Reverse(i))
+                })
+                .unwrap(),
+            RouterPolicy::RapAware => {
+                let mut best: Option<(usize, f64)> = None;
+                for &i in &accepting {
+                    let r = &replicas[i];
+                    let headroom = r.kv_headroom(t) as f64;
+                    let cost = r.engine.admission_cost(req) as f64;
+                    let score = if headroom > cost {
+                        // feasible: quality-weighted memory surplus,
+                        // discounted by queue depth
+                        r.mask_utility() * (headroom - cost)
+                            / (1.0 + r.outstanding() as f64)
+                    } else {
+                        // infeasible right now: rank far below every
+                        // feasible replica, least-underwater first
+                        (headroom - cost) - 1e18
+                    };
+                    if best.map_or(true, |(_, s)| score > s) {
+                        best = Some((i, score));
+                    }
+                }
+                best.unwrap().0
+            }
+        };
+        self.decisions[pick] += 1;
+        Some(pick)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::replica::{build_sim_replica, ReplicaSpec,
+                                      ReplicaState};
+    use crate::model_meta::ModelMeta;
+    use crate::server::memmon::{MemMonConfig, MemoryMonitor};
+
+    fn meta() -> ModelMeta {
+        ModelMeta::synthetic("r", 4, 128, 8, 4, 512, 512, 256)
+    }
+
+    fn req(id: u64) -> Request {
+        Request { id, arrival: 0.0, prompt_len: 12, gen_len: 6 }
+    }
+
+    fn quiet_spec() -> ReplicaSpec {
+        ReplicaSpec { app_rate: 0.0, ..ReplicaSpec::heterogeneous(0) }
+    }
+
+    fn fleet_of(n: usize) -> Vec<Replica> {
+        (0..n).map(|i| build_sim_replica(i, &meta(), &quiet_spec(), 3))
+            .collect()
+    }
+
+    #[test]
+    fn parse_accepts_aliases_and_rejects_junk() {
+        assert_eq!(RouterPolicy::parse("rr").unwrap(),
+                   RouterPolicy::RoundRobin);
+        assert_eq!(RouterPolicy::parse("rap-aware").unwrap(),
+                   RouterPolicy::RapAware);
+        assert_eq!(RouterPolicy::parse("kv").unwrap(),
+                   RouterPolicy::KvHeadroom);
+        assert!(RouterPolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_draining() {
+        let mut reps = fleet_of(3);
+        let mut router = Router::new(RouterPolicy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..6)
+            .map(|i| router.route(&req(i), &reps, 0.0).unwrap())
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        reps[1].state = ReplicaState::Draining;
+        let picks: Vec<usize> = (0..4)
+            .map(|i| router.route(&req(10 + i), &reps, 0.0).unwrap())
+            .collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+        assert_eq!(router.decisions, vec![4, 2, 4]);
+    }
+
+    #[test]
+    fn least_outstanding_prefers_empty() {
+        let mut reps = fleet_of(2);
+        reps[0].enqueue(req(100));
+        reps[0].enqueue(req(101));
+        let mut router = Router::new(RouterPolicy::LeastOutstanding, 2);
+        assert_eq!(router.route(&req(0), &reps, 0.0), Some(1));
+    }
+
+    #[test]
+    fn memory_aware_policies_avoid_underwater_replica() {
+        let mut reps = fleet_of(2);
+        // drown replica 0: permanent interference leaves less than the
+        // dense parameter footprint available
+        let params = reps[0].engine.bytes_used();
+        let cap = (params as f64 * 1.2) as usize;
+        reps[0].engine.monitor = MemoryMonitor::with_spans(
+            MemMonConfig::for_capacity(cap),
+            &[(0.0, 1e12, cap - params / 2)]);
+        assert_eq!(reps[0].kv_headroom(0.0), 0);
+        for policy in [RouterPolicy::KvHeadroom, RouterPolicy::RapAware] {
+            let mut router = Router::new(policy, 2);
+            for i in 0..8 {
+                assert_eq!(router.route(&req(i), &reps, 0.0), Some(1),
+                           "{:?}", policy);
+            }
+        }
+    }
+
+    #[test]
+    fn none_when_no_replica_accepting() {
+        let mut reps = fleet_of(1);
+        reps[0].state = ReplicaState::Draining;
+        let mut router = Router::new(RouterPolicy::RapAware, 1);
+        assert_eq!(router.route(&req(0), &reps, 0.0), None);
+    }
+}

@@ -1,0 +1,38 @@
+//! Fleet experiment: the four routing policies head-to-head on one
+//! seeded trace across heterogeneous replicas. Runs entirely on the sim
+//! runtime backend — no artifacts required.
+
+use anyhow::Result;
+
+use super::common::banner;
+use crate::coordinator::fleet::{default_fleet_trace, default_sim_fleet};
+use crate::coordinator::metrics::zero_nan;
+use crate::coordinator::router::RouterPolicy;
+
+/// `rap experiment fleet`: replay the same trace under every routing
+/// policy and tabulate completions, memory casualties, and tail latency.
+pub fn fleet_compare(seed: u64, secs: f64, replicas: usize) -> Result<()> {
+    banner(&format!(
+        "Fleet — routing policies across {replicas} heterogeneous \
+         replicas ({secs:.0}s trace, seed {seed})"));
+    let reqs = default_fleet_trace(seed, secs);
+    println!("trace: {} requests\n", reqs.len());
+    println!("{:<18} {:>9} {:>8} {:>8} {:>6} {:>7} {:>9} {:>9} {:>9}",
+             "router", "completed", "rejected", "dropped", "OOMs",
+             "respawn", "p50 lat", "p99 lat", "p99 ttft");
+    for policy in RouterPolicy::ALL {
+        let mut fleet = default_sim_fleet(replicas, seed, policy);
+        fleet.cfg.max_sim_secs = secs + 3600.0; // arrivals + drain window
+        let r = fleet.run_trace(reqs.clone())?;
+        println!("{:<18} {:>9} {:>8} {:>8} {:>6} {:>7} {:>8.3}s \
+                  {:>8.3}s {:>8.3}s",
+                 policy.name(), r.completed, r.rejected, r.dropped,
+                 r.oom_events, r.respawns, zero_nan(r.p50_latency),
+                 zero_nan(r.p99_latency), zero_nan(r.p99_ttft));
+    }
+    println!("\nshape check: memory-aware routing (kv-headroom, \
+              rap-aware) cuts OOM events vs round-robin on the same \
+              trace; rap-aware additionally weighs each replica's mask \
+              quality and the request's KV cost under that mask.");
+    Ok(())
+}

@@ -3,5 +3,6 @@
 
 pub mod common;
 pub mod figures;
+pub mod fleet;
 pub mod rl;
 pub mod tables;

@@ -10,11 +10,13 @@
 //!   * L1 (Pallas kernels) + L2 (JAX model) live in `python/compile/` and
 //!     are AOT-lowered to HLO text under `artifacts/` at build time;
 //!   * L3 (this crate) loads those artifacts via PJRT (`runtime`), owns
-//!     the paper's contribution (`gsi`, `agent`, `pruning`) and the
-//!     serving stack (`server`, `workload`), and regenerates every table
-//!     and figure (`experiments`).
+//!     the paper's contribution (`gsi`, `agent`, `pruning`), the
+//!     serving stack (`server`, `workload`), the multi-replica fleet
+//!     coordinator with memory-aware routing (`coordinator`), and
+//!     regenerates every table and figure (`experiments`).
 
 pub mod agent;
+pub mod coordinator;
 pub mod corpus;
 pub mod evalharness;
 pub mod experiments;

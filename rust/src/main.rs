@@ -3,15 +3,19 @@
 //! Subcommands:
 //!   experiment <id>   regenerate a paper table/figure
 //!                     (fig2|fig3|fig4|fig5|fig6|fig9|fig10|fig11|
-//!                      table1|table2|table3|table4|all)
+//!                      table1|table2|table3|table4|fleet|all)
 //!   train-agent       train + save the DQN controller for a model
 //!   serve             replay a synthetic trace through the serving engine
+//!   serve-fleet       replay a trace across N heterogeneous replicas
+//!                     behind a pluggable router; emits a JSON FleetReport
 //!   gsi               run Greedy Sequential Importance on a model
 //!
 //! Common flags: --model <name> --seed <n> --quick
 
 use anyhow::{bail, Result};
-use rap::experiments::{figures, rl, tables};
+use rap::coordinator::fleet::{default_fleet_trace, default_sim_fleet};
+use rap::coordinator::router::RouterPolicy;
+use rap::experiments::{figures, fleet, rl, tables};
 use rap::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -43,14 +47,51 @@ fn main() -> Result<()> {
             let secs = args.f64_or("secs", 120.0)?;
             figures::fig5(seed, secs)
         }
-        "help" | _ => {
+        "serve-fleet" => serve_fleet(seed, &args),
+        // ("--help" never reaches here: Args::parse turns --x into a
+        // flag, leaving cmd at its "help" default)
+        "help" | "-h" => {
             print_help();
-            if cmd != "help" {
-                bail!("unknown command '{cmd}'");
-            }
             Ok(())
         }
+        other => {
+            // Unknown commands must fail loudly with a nonzero exit —
+            // and never be silently absorbed by the help path.
+            print_help();
+            bail!("unknown command '{other}'")
+        }
     }
+}
+
+/// `rap serve-fleet --replicas 4 --router rap --secs 120 [--json path]`:
+/// one seeded trace across N heterogeneous sim replicas, with the fleet
+/// report printed and emitted as JSON (stdout, or `--json <path>`).
+fn serve_fleet(seed: u64, args: &Args) -> Result<()> {
+    let replicas = args.usize_or("replicas", 4)?;
+    if replicas == 0 {
+        bail!("--replicas must be at least 1");
+    }
+    let secs = args.f64_or("secs", 120.0)?;
+    let policy = RouterPolicy::parse(&args.str_or("router", "rap"))?;
+    let mut fleet = default_sim_fleet(replicas, seed, policy);
+    // never truncate the requested trace: arrivals span `secs`, plus a
+    // generous drain window
+    fleet.cfg.max_sim_secs = secs + 3600.0;
+    let reqs = default_fleet_trace(seed, secs);
+    println!("serve-fleet: {} requests over {secs:.0}s across {replicas} \
+              replicas (router={}, seed={seed})",
+             reqs.len(), policy.name());
+    let report = fleet.run_trace(reqs)?;
+    report.print();
+    let json = report.to_json().pretty();
+    match args.get("json") {
+        Some(path) => {
+            std::fs::write(path, &json)?;
+            println!("fleet report JSON written to {path}");
+        }
+        None => println!("{json}"),
+    }
+    Ok(())
 }
 
 fn run_experiment(id: &str, model: &str, seed: u64, quick: bool,
@@ -73,6 +114,10 @@ fn run_experiment(id: &str, model: &str, seed: u64, quick: bool,
         "table3" => tables::table1("qwen-sim", seed, quick).map(|_| ()),
         "table4" => tables::table4(seed),
         "tables" => tables::all_tables(seed, quick),
+        "fleet" => fleet::fleet_compare(
+            seed,
+            args.f64_or("secs", if quick { 45.0 } else { 120.0 })?,
+            args.usize_or("replicas", 4)?),
         "all" => {
             figures::fig2(seed)?;
             figures::fig3()?;
@@ -94,9 +139,11 @@ fn print_help() {
     println!("USAGE: rap <command> [flags]");
     println!();
     println!("COMMANDS:");
-    println!("  experiment <id>  fig2..fig12, table1..table4, all");
+    println!("  experiment <id>  fig2..fig12, table1..table4, fleet, all");
     println!("  train-agent      --model <m> --episodes <n> --seed <s>");
     println!("  serve            --secs <n> --seed <s>");
+    println!("  serve-fleet      --replicas <n> --router \
+              rr|least|kv|rap  --secs <n> [--json <path>]");
     println!("  gsi              --model <m> --remove <n>");
     println!();
     println!("FLAGS: --model rap-small|qwen-sim|rap-tiny  --seed N  \

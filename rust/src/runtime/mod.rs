@@ -1,25 +1,27 @@
-//! PJRT runtime: loads the AOT artifacts and executes them from Rust.
+//! Model runtime: a single `Runtime` facade over two interchangeable
+//! backends —
 //!
-//! This is the only module that touches the `xla` crate. It follows the
-//! /opt/xla-example/load_hlo pattern: `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!   * [`pjrt`]: loads the AOT artifacts and executes the compiled HLO
+//!     through the `xla` bindings (the measured path; requires artifacts
+//!     and a real PJRT build);
+//!   * [`sim`]: a deterministic, artifact-free stand-in with an analytic
+//!     cost model (the path CI, unit tests, and the fleet coordinator
+//!     run on — see `sim.rs` for exactly what it does and does not
+//!     model).
 //!
-//! Performance notes (§Perf):
-//!   * weights are uploaded to the device ONCE as `PjRtBuffer`s and reused
-//!     by every call via `execute_b` — without this every score/decode call
-//!     would re-copy ~50 MB of parameters;
-//!   * executables are compiled lazily per entry and cached;
-//!   * PJRT (through this wrapper) returns one tuple buffer per execution,
-//!     so multi-output results round-trip the host; KV caches therefore
-//!     live host-side between decode steps (measured in EXPERIMENTS.md
-//!     §Perf).
+//! Everything downstream (engine, controller, GSI, experiments) talks to
+//! `Runtime`'s typed entry points and cannot tell the backends apart,
+//! except through [`Runtime::last_cost`]: the sim backend reports the
+//! modeled duration of each call there, and the serving engine advances
+//! its simulated clock by that instead of wall time.
 
 use std::collections::HashMap;
-use std::path::Path;
-use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
-use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+use anyhow::{bail, Result};
+use xla::Literal;
+
+pub mod pjrt;
+pub mod sim;
 
 use crate::mask::PruneMask;
 use crate::model_meta::{DType, EntrySpec, ModelMeta};
@@ -47,6 +49,7 @@ impl HostArr<'_> {
 }
 
 /// Per-entry execution statistics (drives the §Perf analysis + Fig 11).
+/// For the sim backend, `total_secs` accumulates *modeled* seconds.
 #[derive(Clone, Debug, Default)]
 pub struct ExecStats {
     pub calls: u64,
@@ -68,131 +71,116 @@ pub struct ProbeStats {
     pub chan_norm: Vec<f32>,
 }
 
+enum Backend {
+    Pjrt(pjrt::PjrtRuntime),
+    Sim(sim::SimRuntime),
+}
+
 pub struct Runtime {
-    client: PjRtClient,
-    meta: ModelMeta,
-    /// Device-resident weight buffers, `param_specs` order.
-    weights: Vec<PjRtBuffer>,
-    exes: HashMap<String, PjRtLoadedExecutable>,
+    backend: Backend,
     stats: HashMap<String, ExecStats>,
+    /// Modeled duration of the most recent typed call (sim backend only).
+    last_cost: Option<f64>,
 }
 
 impl Runtime {
-    /// Load weights + manifest for `model` under `artifacts_root` and
-    /// create a CPU PJRT client. Entries compile lazily on first use.
-    pub fn load(artifacts_root: &Path, model: &str) -> Result<Runtime> {
-        let meta = ModelMeta::load(&artifacts_root.join(model))?;
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let bytes = std::fs::read(meta.dir.join("weights.bin"))
-            .context("reading weights.bin")?;
-        let mut weights = Vec::with_capacity(meta.params.len());
-        for p in &meta.params {
-            let end = p.offset + p.nbytes;
-            if end > bytes.len() {
-                bail!("weights.bin too short for {}", p.name);
-            }
-            let data = f32_slice(&bytes[p.offset..end])?;
-            weights.push(
-                client
-                    .buffer_from_host_buffer(&data, &p.shape, None)
-                    .map_err(|e| anyhow::anyhow!(
-                        "uploading {}: {e:?}", p.name))?,
-            );
+    /// Load weights + manifest for `model` under `artifacts_root` on the
+    /// PJRT backend. Entries compile lazily on first use.
+    pub fn load(artifacts_root: &std::path::Path, model: &str)
+                -> Result<Runtime> {
+        Ok(Runtime {
+            backend: Backend::Pjrt(pjrt::PjrtRuntime::load(artifacts_root,
+                                                           model)?),
+            stats: HashMap::new(),
+            last_cost: None,
+        })
+    }
+
+    /// An artifact-free runtime on the sim backend (deterministic per
+    /// seed). Used by unit tests and the fleet coordinator.
+    pub fn synthetic(meta: ModelMeta, seed: u64) -> Runtime {
+        Runtime::synthetic_with(meta, seed, sim::SimConfig::default())
+    }
+
+    /// Sim backend with explicit device characteristics (heterogeneous
+    /// fleet replicas get different throughputs).
+    pub fn synthetic_with(meta: ModelMeta, seed: u64, cfg: sim::SimConfig)
+                          -> Runtime {
+        Runtime {
+            backend: Backend::Sim(sim::SimRuntime::new(meta, seed, cfg)),
+            stats: HashMap::new(),
+            last_cost: None,
         }
-        Ok(Runtime { client, meta, weights, exes: HashMap::new(),
-                     stats: HashMap::new() })
+    }
+
+    pub fn is_sim(&self) -> bool {
+        matches!(self.backend, Backend::Sim(_))
     }
 
     pub fn meta(&self) -> &ModelMeta {
-        &self.meta
+        match &self.backend {
+            Backend::Pjrt(p) => &p.meta,
+            Backend::Sim(s) => &s.meta,
+        }
     }
 
     pub fn stats(&self) -> &HashMap<String, ExecStats> {
         &self.stats
     }
 
-    /// Total wall-clock spent inside PJRT executions.
+    /// Total wall-clock (PJRT) or modeled (sim) seconds spent executing.
     pub fn total_exec_secs(&self) -> f64 {
         self.stats.values().map(|s| s.total_secs).sum()
     }
 
-    fn ensure_compiled(&mut self, entry: &str) -> Result<()> {
-        if self.exes.contains_key(entry) {
-            return Ok(());
-        }
-        let spec = self.meta.entry(entry)?.clone();
-        let path = self.meta.dir.join(&spec.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}",
-                                         path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {entry}: {e:?}"))?;
-        let dt = t0.elapsed().as_secs_f64();
-        self.stats.entry(entry.to_string()).or_default().compile_secs += dt;
-        self.exes.insert(entry.to_string(), exe);
-        Ok(())
+    /// Modeled duration of the most recent typed call. `Some` on the sim
+    /// backend; `None` on PJRT (callers should fall back to measured wall
+    /// time — see `engine::Engine`).
+    pub fn last_cost(&self) -> Option<f64> {
+        self.last_cost
+    }
+
+    fn note_sim(&mut self, entry: String, cost: f64) {
+        let st = self.stats.entry(entry).or_default();
+        st.calls += 1;
+        st.total_secs += cost;
+        self.last_cost = Some(cost);
     }
 
     /// Pre-compile a set of entries (the serving engine does this at
-    /// startup so the hot path never hits the compiler).
+    /// startup so the hot path never hits the compiler). No-op on sim.
     pub fn warmup(&mut self, entries: &[&str]) -> Result<()> {
-        for e in entries {
-            self.ensure_compiled(e)?;
+        if let Backend::Pjrt(p) = &mut self.backend {
+            for e in entries {
+                let cs = p.ensure_compiled(e)?;
+                self.stats.entry((*e).to_string()).or_default()
+                    .compile_secs += cs;
+            }
         }
         Ok(())
     }
 
-    /// Execute `entry` with the given runtime inputs (weights are
-    /// prepended automatically). Returns the output tuple elements.
+    /// Execute a raw PJRT entry with the given runtime inputs (weights
+    /// are prepended automatically). Returns the output tuple elements.
+    /// PJRT backend only — the sim backend has no compiled entries.
     pub fn execute(&mut self, entry: &str, inputs: &[HostArr])
                    -> Result<Vec<Literal>> {
-        self.ensure_compiled(entry)?;
-        let spec = self.meta.entry(entry)?.clone();
-        validate_inputs(&spec, inputs)?;
-
-        // Upload runtime inputs as device buffers.
-        let mut owned: Vec<PjRtBuffer> = Vec::with_capacity(inputs.len());
-        for (i, inp) in inputs.iter().enumerate() {
-            let shape = &spec.inputs[i].shape;
-            let buf = match inp {
-                HostArr::F32(v) => {
-                    self.client.buffer_from_host_buffer(v, shape, None)
-                }
-                HostArr::I32(v) => {
-                    self.client.buffer_from_host_buffer(v, shape, None)
-                }
+        match &mut self.backend {
+            Backend::Pjrt(p) => {
+                let (parts, exec_secs, compile_secs) =
+                    p.execute(entry, inputs)?;
+                let st = self.stats.entry(entry.to_string()).or_default();
+                st.calls += 1;
+                st.total_secs += exec_secs;
+                st.compile_secs += compile_secs;
+                self.last_cost = None;
+                Ok(parts)
             }
-            .map_err(|e| anyhow::anyhow!(
-                "uploading input {} of {entry}: {e:?}",
-                spec.inputs[i].name))?;
-            owned.push(buf);
+            Backend::Sim(_) => {
+                bail!("raw entry execution ('{entry}') requires the PJRT \
+                       backend")
+            }
         }
-        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
-        args.extend(owned.iter());
-
-        let exe = self.exes.get(entry).unwrap();
-        let t0 = Instant::now();
-        let out = exe
-            .execute_b(&args)
-            .map_err(|e| anyhow::anyhow!("executing {entry}: {e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching {entry} result: {e:?}"))?;
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling {entry}: {e:?}"))?;
-        let st = self.stats.entry(entry.to_string()).or_default();
-        st.calls += 1;
-        st.total_secs += t0.elapsed().as_secs_f64();
-        if parts.len() != spec.outputs.len() {
-            bail!("{entry}: expected {} outputs, got {}",
-                  spec.outputs.len(), parts.len());
-        }
-        Ok(parts)
     }
 
     // ---- typed entry points -------------------------------------------
@@ -201,6 +189,20 @@ impl Runtime {
     pub fn score(&mut self, batch: usize, seqlen: usize, tokens: &[i32],
                  loss_mask: &[f32], mask: &PruneMask)
                  -> Result<(Vec<f32>, Vec<f32>)> {
+        if tokens.len() != batch * seqlen
+            || loss_mask.len() != batch * seqlen
+        {
+            bail!("score: tokens/loss_mask must be batch*seqlen = {}",
+                  batch * seqlen);
+        }
+        let sim_out = match &mut self.backend {
+            Backend::Sim(s) => Some(s.score(batch, seqlen, loss_mask, mask)),
+            Backend::Pjrt(_) => None,
+        };
+        if let Some((nll, cnt, cost)) = sim_out {
+            self.note_sim(format!("sim_score_b{batch}"), cost);
+            return Ok((nll, cnt));
+        }
         let entry = format!("score_b{batch}_t{seqlen}");
         let parts = self.execute(&entry, &[
             HostArr::I32(tokens),
@@ -222,22 +224,43 @@ impl Runtime {
         Ok(total / n.max(1.0))
     }
 
-    /// The compiled probe entry (models probe at min(128, max_seq)).
+    /// The compiled probe entry (models probe at min(128, max_seq)). On
+    /// the sim backend a synthetic descriptor is returned.
     pub fn probe_entry(&self) -> Result<(String, usize, usize)> {
-        let e = self
-            .meta
-            .entries
-            .iter()
-            .find(|e| e.name.starts_with("probe_"))
-            .ok_or_else(|| anyhow::anyhow!("no probe entry compiled"))?;
-        let shape = &e.inputs[0].shape; // tokens [B, T]
-        Ok((e.name.clone(), shape[0], shape[1]))
+        match &self.backend {
+            Backend::Sim(s) => {
+                Ok(("sim_probe".to_string(), 4, s.meta.max_seq.min(128)))
+            }
+            Backend::Pjrt(p) => {
+                let e = p
+                    .meta
+                    .entries
+                    .iter()
+                    .find(|e| e.name.starts_with("probe_"))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("no probe entry compiled")
+                    })?;
+                let shape = &e.inputs[0].shape; // tokens [B, T]
+                Ok((e.name.clone(), shape[0], shape[1]))
+            }
+        }
     }
 
     /// Block-redundancy probe (batch/seqlen from the compiled bucket —
     /// see `probe_entry`).
     pub fn probe(&mut self, tokens: &[i32], mask: &PruneMask)
                  -> Result<ProbeStats> {
+        let sim_out = match &mut self.backend {
+            Backend::Sim(s) => Some(s.probe(mask)),
+            Backend::Pjrt(_) => None,
+        };
+        if let Some((attn_cos, ffn_cos, head_norm, chan_norm, cost)) =
+            sim_out
+        {
+            self.note_sim("sim_probe".to_string(), cost);
+            return Ok(ProbeStats { attn_cos, ffn_cos, head_norm,
+                                   chan_norm });
+        }
         let (entry, _, _) = self.probe_entry()?;
         let parts = self.execute(&entry, &[
             HostArr::I32(tokens),
@@ -257,6 +280,14 @@ impl Runtime {
     pub fn prefill(&mut self, seqlen: usize, tokens: &[i32],
                    mask: &PruneMask)
                    -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let sim_out = match &mut self.backend {
+            Backend::Sim(s) => Some(s.prefill(seqlen, tokens, mask)),
+            Backend::Pjrt(_) => None,
+        };
+        if let Some((logits, k, v, cost)) = sim_out {
+            self.note_sim(format!("sim_prefill_t{seqlen}"), cost);
+            return Ok((logits, k, v));
+        }
         let entry = format!("prefill_t{seqlen}");
         let parts = self.execute(&entry, &[
             HostArr::I32(tokens),
@@ -271,6 +302,21 @@ impl Runtime {
     pub fn decode(&mut self, batch: usize, tokens: &[i32], pos: &[i32],
                   k_cache: &mut Vec<f32>, v_cache: &mut Vec<f32>,
                   mask: &PruneMask) -> Result<Vec<f32>> {
+        let sim_out = match &mut self.backend {
+            Backend::Sim(s) => {
+                if tokens.len() != batch || pos.len() != batch {
+                    bail!("decode: tokens/pos must have batch = {batch} \
+                           entries");
+                }
+                Some(s.decode(batch, tokens, pos, mask))
+            }
+            Backend::Pjrt(_) => None,
+        };
+        if let Some((logits, cost)) = sim_out {
+            // Sim caches are contentless: leave k_cache/v_cache as-is.
+            self.note_sim(format!("sim_decode_b{batch}"), cost);
+            return Ok(logits);
+        }
         let entry = format!("decode_b{batch}");
         let parts = self.execute(&entry, &[
             HostArr::I32(tokens),
@@ -288,12 +334,13 @@ impl Runtime {
 
     /// Flattened element count of a decode cache for batch `b`.
     pub fn cache_elems(&self, batch: usize) -> usize {
-        let m = &self.meta;
+        let m = self.meta();
         m.n_layers * batch * m.n_kv_heads * m.max_seq * m.head_dim()
     }
 }
 
-fn validate_inputs(spec: &EntrySpec, inputs: &[HostArr]) -> Result<()> {
+pub(crate) fn validate_inputs(spec: &EntrySpec, inputs: &[HostArr])
+                              -> Result<()> {
     if inputs.len() != spec.inputs.len() {
         bail!("{}: expected {} inputs, got {}", spec.name,
               spec.inputs.len(), inputs.len());
@@ -315,17 +362,6 @@ fn validate_inputs(spec: &EntrySpec, inputs: &[HostArr]) -> Result<()> {
 pub fn lit_f32(lit: &Literal) -> Result<Vec<f32>> {
     lit.to_vec::<f32>()
         .map_err(|e| anyhow::anyhow!("literal to f32 vec: {e:?}"))
-}
-
-/// Decode little-endian bytes as f32 values.
-fn f32_slice(raw: &[u8]) -> Result<Vec<f32>> {
-    if raw.len() % 4 != 0 {
-        bail!("byte length {} not divisible by 4", raw.len());
-    }
-    Ok(raw
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
 }
 
 /// Abstracts "evaluate the model's NLL under a mask" so that GSI, the RL
@@ -425,12 +461,52 @@ mod tests {
         assert!(validate_inputs(&spec, &[]).is_err());
     }
 
+    // ---- sim-backend facade behavior ----------------------------------
+
+    fn sim_rt() -> Runtime {
+        Runtime::synthetic(
+            ModelMeta::synthetic("s", 4, 128, 8, 4, 512, 512, 256), 42)
+    }
+
     #[test]
-    fn f32_slice_roundtrip() {
-        let xs = [1.5f32, -2.25, 0.0, f32::MAX];
-        let bytes: Vec<u8> =
-            xs.iter().flat_map(|x| x.to_le_bytes()).collect();
-        assert_eq!(f32_slice(&bytes).unwrap(), xs);
-        assert!(f32_slice(&bytes[..5]).is_err());
+    fn sim_runtime_scores_and_reports_cost() {
+        let mut rt = sim_rt();
+        assert!(rt.is_sim());
+        let full = PruneMask::full(&rt.meta().clone());
+        let tokens = vec![0i32; 128];
+        let dense = rt.mean_nll(1, 128, &tokens, &full).unwrap();
+        assert!(rt.last_cost().unwrap() > 0.0);
+        let pruned = full.with_block_dropped(BlockId::Ffn(2));
+        let worse = rt.mean_nll(1, 128, &tokens, &pruned).unwrap();
+        assert!(worse > dense);
+        assert!(rt.total_exec_secs() > 0.0);
+    }
+
+    #[test]
+    fn sim_runtime_prefill_decode_shapes() {
+        let mut rt = sim_rt();
+        let meta = rt.meta().clone();
+        let full = PruneMask::full(&meta);
+        let tokens = vec![1i32; 32];
+        let (logits, k, v) = rt.prefill(32, &tokens, &full).unwrap();
+        assert_eq!(logits.len(), meta.vocab);
+        assert_eq!(k.len(), rt.cache_elems(1));
+        assert_eq!(v.len(), rt.cache_elems(1));
+        let mut k = vec![0.0; rt.cache_elems(2)];
+        let mut v = vec![0.0; rt.cache_elems(2)];
+        let lg = rt.decode(2, &[3, 4], &[9, 9], &mut k, &mut v, &full)
+            .unwrap();
+        assert_eq!(lg.len(), 2 * meta.vocab);
+        // identical inputs → identical logits (determinism)
+        let lg2 = rt.decode(2, &[3, 4], &[9, 9], &mut k, &mut v, &full)
+            .unwrap();
+        assert_eq!(lg, lg2);
+    }
+
+    #[test]
+    fn sim_runtime_rejects_raw_execute() {
+        let mut rt = sim_rt();
+        assert!(rt.execute("score_b1_t128", &[]).is_err());
+        assert!(rt.warmup(&["anything"]).is_ok()); // warmup is a no-op
     }
 }

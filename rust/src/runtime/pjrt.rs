@@ -1,0 +1,152 @@
+//! PJRT backend: loads the AOT artifacts and executes them through the
+//! `xla` bindings. This is the only file in the crate that touches `xla`.
+//! It follows the load_hlo pattern: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! Performance notes (§Perf):
+//!   * weights are uploaded to the device ONCE as `PjRtBuffer`s and reused
+//!     by every call via `execute_b` — without this every score/decode call
+//!     would re-copy ~50 MB of parameters;
+//!   * executables are compiled lazily per entry and cached;
+//!   * PJRT (through this wrapper) returns one tuple buffer per execution,
+//!     so multi-output results round-trip the host; KV caches therefore
+//!     live host-side between decode steps (measured in EXPERIMENTS.md
+//!     §Perf).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::HostArr;
+use crate::model_meta::ModelMeta;
+
+pub struct PjrtRuntime {
+    pub meta: ModelMeta,
+    client: PjRtClient,
+    /// Device-resident weight buffers, `param_specs` order.
+    weights: Vec<PjRtBuffer>,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Load weights + manifest for `model` under `artifacts_root` and
+    /// create a CPU PJRT client. Entries compile lazily on first use.
+    pub fn load(artifacts_root: &Path, model: &str) -> Result<PjrtRuntime> {
+        let meta = ModelMeta::load(&artifacts_root.join(model))?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let bytes = std::fs::read(meta.dir.join("weights.bin"))
+            .context("reading weights.bin")?;
+        let mut weights = Vec::with_capacity(meta.params.len());
+        for p in &meta.params {
+            let end = p.offset + p.nbytes;
+            if end > bytes.len() {
+                bail!("weights.bin too short for {}", p.name);
+            }
+            let data = f32_slice(&bytes[p.offset..end])?;
+            weights.push(
+                client
+                    .buffer_from_host_buffer(&data, &p.shape, None)
+                    .map_err(|e| anyhow::anyhow!(
+                        "uploading {}: {e:?}", p.name))?,
+            );
+        }
+        Ok(PjrtRuntime { client, meta, weights, exes: HashMap::new() })
+    }
+
+    /// Compile `entry` if needed; returns the compile seconds spent
+    /// (0.0 when already cached).
+    pub fn ensure_compiled(&mut self, entry: &str) -> Result<f64> {
+        if self.exes.contains_key(entry) {
+            return Ok(0.0);
+        }
+        let spec = self.meta.entry(entry)?.clone();
+        let path = self.meta.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}",
+                                         path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {entry}: {e:?}"))?;
+        self.exes.insert(entry.to_string(), exe);
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Execute `entry` with the given runtime inputs (weights are
+    /// prepended automatically). Returns the output tuple elements plus
+    /// (exec_secs, compile_secs).
+    pub fn execute(&mut self, entry: &str, inputs: &[HostArr])
+                   -> Result<(Vec<Literal>, f64, f64)> {
+        let compile_secs = self.ensure_compiled(entry)?;
+        let spec = self.meta.entry(entry)?.clone();
+        super::validate_inputs(&spec, inputs)?;
+
+        // Upload runtime inputs as device buffers.
+        let mut owned: Vec<PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for (i, inp) in inputs.iter().enumerate() {
+            let shape = &spec.inputs[i].shape;
+            let buf = match inp {
+                HostArr::F32(v) => {
+                    self.client.buffer_from_host_buffer(v, shape, None)
+                }
+                HostArr::I32(v) => {
+                    self.client.buffer_from_host_buffer(v, shape, None)
+                }
+            }
+            .map_err(|e| anyhow::anyhow!(
+                "uploading input {} of {entry}: {e:?}",
+                spec.inputs[i].name))?;
+            owned.push(buf);
+        }
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.extend(owned.iter());
+
+        let exe = self.exes.get(entry).unwrap();
+        let t0 = Instant::now();
+        let out = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("executing {entry}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {entry} result: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {entry}: {e:?}"))?;
+        let exec_secs = t0.elapsed().as_secs_f64();
+        if parts.len() != spec.outputs.len() {
+            bail!("{entry}: expected {} outputs, got {}",
+                  spec.outputs.len(), parts.len());
+        }
+        Ok((parts, exec_secs, compile_secs))
+    }
+}
+
+/// Decode little-endian bytes as f32 values.
+fn f32_slice(raw: &[u8]) -> Result<Vec<f32>> {
+    if raw.len() % 4 != 0 {
+        bail!("byte length {} not divisible by 4", raw.len());
+    }
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_slice_roundtrip() {
+        let xs = [1.5f32, -2.25, 0.0, f32::MAX];
+        let bytes: Vec<u8> =
+            xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        assert_eq!(f32_slice(&bytes).unwrap(), xs);
+        assert!(f32_slice(&bytes[..5]).is_err());
+    }
+}

@@ -1,0 +1,257 @@
+//! Simulation backend: a deterministic, artifact-free stand-in for the
+//! PJRT executables with an *analytic cost model*, so serving-layer and
+//! fleet experiments run anywhere (CI, the offline image, unit tests)
+//! with realistic relative timings.
+//!
+//! What it models, and what it does not:
+//!   * **NLL under a mask** — additive per-block damage plus a per-layer
+//!     synergy when both blocks of a layer are gone (same family as
+//!     `SyntheticEvaluator`, but seeded per instance so replicas can
+//!     disagree about block importance). GSI and the DQN controller run
+//!     unmodified against it.
+//!   * **Step cost** — every call reports a virtual duration derived from
+//!     active parameters × tokens ÷ device throughput, so a pruned mask
+//!     really is proportionally faster and a slow replica really is
+//!     slower. The serving engine advances its simulated clock by this
+//!     cost instead of the (meaningless) wall time of the stub math.
+//!   * **Logits** — a deterministic one-hot spike derived from hashing
+//!     the inputs: enough for the engine's argmax sampling to be
+//!     reproducible, with no pretense of being a language model.
+
+use crate::mask::PruneMask;
+use crate::model_meta::{BlockId, ModelMeta};
+use crate::util::rng::Rng;
+
+/// Modeled device characteristics for one sim instance. Heterogeneous
+/// fleet replicas get different `flops_per_sec`.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Modeled sustained throughput (FLOP/s) of the device.
+    pub flops_per_sec: f64,
+    /// Fixed per-call launch overhead (seconds).
+    pub base_overhead_secs: f64,
+    /// NLL of the dense model on the synthetic calibration stream.
+    pub base_nll: f64,
+    /// Extra NLL when both blocks of one layer are dropped.
+    pub layer_synergy: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            flops_per_sec: 2.0e9,
+            base_overhead_secs: 2.0e-4,
+            base_nll: 2.0,
+            layer_synergy: 0.75,
+        }
+    }
+}
+
+pub struct SimRuntime {
+    pub meta: ModelMeta,
+    pub cfg: SimConfig,
+    /// NLL damage per dropped block (index = `BlockId::index`).
+    damage: Vec<f64>,
+}
+
+impl SimRuntime {
+    pub fn new(meta: ModelMeta, seed: u64, cfg: SimConfig) -> SimRuntime {
+        let mut rng = Rng::new(seed ^ 0x51D_BAD_CAFE);
+        let damage = (0..meta.n_blocks())
+            .map(|_| {
+                let r = rng.f64();
+                0.02 + 0.4 * r * r
+            })
+            .collect();
+        SimRuntime { meta, cfg, damage }
+    }
+
+    /// Active (unpruned) parameter count under `mask`.
+    fn active_params(&self, mask: &PruneMask) -> f64 {
+        mask.param_fraction(&self.meta) * self.meta.total_params() as f64
+    }
+
+    /// Virtual duration of a forward over `batch` sequences × `tokens`
+    /// tokens each: 2 FLOPs per active parameter per token.
+    pub fn cost(&self, mask: &PruneMask, batch: usize, tokens: usize) -> f64 {
+        self.cfg.base_overhead_secs
+            + 2.0 * self.active_params(mask) * (batch * tokens) as f64
+                / self.cfg.flops_per_sec
+    }
+
+    /// Modeled mean NLL under `mask` (additive damage + layer synergy).
+    pub fn nll(&self, mask: &PruneMask) -> f64 {
+        let mut nll = self.cfg.base_nll;
+        for b in mask.dropped_blocks() {
+            nll += self.damage[b.index(self.meta.n_layers)];
+        }
+        for l in 0..self.meta.n_layers {
+            if mask.block_dropped(BlockId::Mha(l))
+                && mask.block_dropped(BlockId::Ffn(l))
+            {
+                nll += self.cfg.layer_synergy;
+            }
+        }
+        nll
+    }
+
+    /// Per-sequence (nll_sum, token_count) pair per the score entry's
+    /// contract: `mean_nll` recovers exactly `self.nll(mask)`.
+    pub fn score(&self, batch: usize, seqlen: usize, loss_mask: &[f32],
+                 mask: &PruneMask) -> (Vec<f32>, Vec<f32>, f64) {
+        let n = batch * seqlen;
+        let nll = self.nll(mask) as f32;
+        let mut cnt = vec![0.0f32; batch];
+        for (i, &m) in loss_mask.iter().take(n).enumerate() {
+            cnt[i / seqlen] += m;
+        }
+        let per_seq: Vec<f32> = cnt.iter().map(|c| nll * c).collect();
+        (per_seq, cnt, self.cost(mask, batch, seqlen))
+    }
+
+    /// Prompt pass: one-hot logits + zeroed per-sequence caches of the
+    /// exact shapes the KV manager expects.
+    pub fn prefill(&self, seqlen: usize, tokens: &[i32], mask: &PruneMask)
+                   -> (Vec<f32>, Vec<f32>, Vec<f32>, f64) {
+        let m = &self.meta;
+        let elems = m.n_layers * m.n_kv_heads * m.max_seq * m.head_dim();
+        let mut h = fnv(0x9E3779B9);
+        for &t in tokens.iter().take(8) {
+            h = fnv(h ^ t as u64);
+        }
+        let logits = spike(m.vocab, 1, h ^ mask.key());
+        (logits, vec![0.0; elems], vec![0.0; elems],
+         self.cost(mask, 1, seqlen))
+    }
+
+    /// One decode step: one-hot logits per batch row; caches untouched
+    /// (the zeroed contents carry no information worth updating).
+    pub fn decode(&self, batch: usize, tokens: &[i32], pos: &[i32],
+                  mask: &PruneMask) -> (Vec<f32>, f64) {
+        let mut h = fnv(0xB10C ^ mask.key());
+        for (&t, &p) in tokens.iter().zip(pos) {
+            h = fnv(h ^ t as u64 ^ ((p as u64) << 32));
+        }
+        (spike(self.meta.vocab, batch, h), self.cost(mask, batch, 1))
+    }
+
+    /// Block-redundancy probe derived from the damage vector: low-damage
+    /// blocks look redundant (high cosine), matching what the baseline
+    /// pruners expect to consume.
+    pub fn probe(&self, mask: &PruneMask) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, f64) {
+        let m = &self.meta;
+        let red = |d: f64| (1.0 - d / 0.45).clamp(0.05, 0.98) as f32;
+        let attn_cos: Vec<f32> = (0..m.n_layers)
+            .map(|l| red(self.damage[BlockId::Mha(l).index(m.n_layers)]))
+            .collect();
+        let ffn_cos: Vec<f32> = (0..m.n_layers)
+            .map(|l| red(self.damage[BlockId::Ffn(l).index(m.n_layers)]))
+            .collect();
+        let head_norm: Vec<f32> = (0..m.n_layers * m.n_heads)
+            .map(|i| 0.5 + 0.5 * ((fnv(i as u64) >> 11) as f64
+                / (1u64 << 53) as f64) as f32)
+            .collect();
+        let chan_norm: Vec<f32> = (0..m.n_layers * m.d_ff)
+            .map(|i| 0.5 + 0.5 * ((fnv(0xFF ^ i as u64) >> 11) as f64
+                / (1u64 << 53) as f64) as f32)
+            .collect();
+        let cost = self.cost(mask, 4, self.meta.max_seq.min(128));
+        (attn_cos, ffn_cos, head_norm, chan_norm, cost)
+    }
+}
+
+/// One-hot logits per row, spike position hashed from `salt` + row.
+fn spike(vocab: usize, rows: usize, salt: u64) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * vocab];
+    for r in 0..rows {
+        let idx = (fnv(salt ^ r as u64) % vocab as u64) as usize;
+        out[r * vocab + idx] = 1.0;
+    }
+    out
+}
+
+fn fnv(x: u64) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for i in 0..8 {
+        h ^= (x >> (8 * i)) & 0xFF;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> SimRuntime {
+        let meta = ModelMeta::synthetic("s", 4, 128, 8, 4, 512, 512, 256);
+        SimRuntime::new(meta, 42, SimConfig::default())
+    }
+
+    #[test]
+    fn nll_grows_when_blocks_drop() {
+        let s = sim();
+        let full = PruneMask::full(&s.meta);
+        let dense = s.nll(&full);
+        for b in s.meta.all_blocks() {
+            assert!(s.nll(&full.with_block_dropped(b)) > dense, "{b}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let meta = ModelMeta::synthetic("s", 4, 128, 8, 4, 512, 512, 256);
+        let a = SimRuntime::new(meta.clone(), 7, SimConfig::default());
+        let b = SimRuntime::new(meta.clone(), 7, SimConfig::default());
+        let c = SimRuntime::new(meta, 8, SimConfig::default());
+        let full = PruneMask::full(&a.meta);
+        let m = full.with_block_dropped(BlockId::Ffn(1));
+        assert_eq!(a.nll(&m), b.nll(&m));
+        assert_ne!(a.nll(&m), c.nll(&m));
+    }
+
+    #[test]
+    fn pruned_masks_are_cheaper_and_slow_devices_slower() {
+        let s = sim();
+        let full = PruneMask::full(&s.meta);
+        let pruned = full.with_block_dropped(BlockId::Ffn(0));
+        assert!(s.cost(&pruned, 8, 64) < s.cost(&full, 8, 64));
+        let meta = s.meta.clone();
+        let slow = SimRuntime::new(meta, 42, SimConfig {
+            flops_per_sec: 1.0e9, ..SimConfig::default()
+        });
+        assert!(slow.cost(&full, 8, 64) > s.cost(&full, 8, 64));
+    }
+
+    #[test]
+    fn score_recovers_model_nll() {
+        let s = sim();
+        let full = PruneMask::full(&s.meta);
+        let (b, t) = (2, 16);
+        let ones = vec![1.0f32; b * t];
+        let (nll, cnt, cost) = s.score(b, t, &ones, &full);
+        let mean = nll.iter().map(|&x| x as f64).sum::<f64>()
+            / cnt.iter().map(|&x| x as f64).sum::<f64>();
+        assert!((mean - s.nll(&full)).abs() < 1e-5);
+        assert!(cost > 0.0);
+    }
+
+    #[test]
+    fn shapes_match_contract() {
+        let s = sim();
+        let full = PruneMask::full(&s.meta);
+        let (logits, k, v, _) = s.prefill(32, &[1, 2, 3], &full);
+        assert_eq!(logits.len(), s.meta.vocab);
+        let elems = s.meta.n_layers * s.meta.n_kv_heads * s.meta.max_seq
+            * s.meta.head_dim();
+        assert_eq!(k.len(), elems);
+        assert_eq!(v.len(), elems);
+        let (lg, _) = s.decode(4, &[1, 2, 3, 4], &[5, 5, 5, 5], &full);
+        assert_eq!(lg.len(), 4 * s.meta.vocab);
+        // exactly one spike per row
+        for r in 0..4 {
+            let row = &lg[r * s.meta.vocab..(r + 1) * s.meta.vocab];
+            assert_eq!(row.iter().filter(|&&x| x != 0.0).count(), 1);
+        }
+    }
+}

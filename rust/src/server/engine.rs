@@ -1,21 +1,27 @@
-//! The serving engine: a continuous-batching event loop over the real
-//! PJRT executables, with RAP's controller in the loop.
+//! The serving engine: a continuous-batching event loop over the model
+//! runtime, with RAP's controller in the loop.
 //!
 //! Time model: the engine advances a *simulated* clock fed by the trace's
-//! arrival times; compute steps advance the clock by their measured
-//! wall-clock duration (× `time_scale`). This lets a 10-minute "day" of
-//! traffic replay in however long the actual math takes while keeping
-//! latency accounting coherent.
+//! arrival times; compute steps advance the clock by their duration —
+//! measured wall-clock on the PJRT backend, the modeled cost on the sim
+//! backend (`Runtime::last_cost`) — times `time_scale`. This lets a
+//! 10-minute "day" of traffic replay in however long the actual math
+//! takes while keeping latency accounting coherent.
 //!
-//! Per tick:
-//!   1. admit arrivals whose time has come;
-//!   2. controller: observe (active workload, Sys_avail(t)) and re-decide
+//! Stepping model: the engine no longer owns its run loop. The primitive
+//! is [`Engine::step_to`], which advances the clock to a target time
+//! doing work along the way; [`Engine::run_trace`] is a thin driver over
+//! `enqueue` + `step_to`, and the fleet coordinator drives many engines
+//! against one shared clock the same way.
+//!
+//! Per unit of work:
+//!   1. controller: observe (active workload, Sys_avail(t)) and re-decide
 //!      the mask when the situation changed (cached decisions make this
 //!      the paper's "<1% overhead" path);
-//!   3. OOM handling: if interference spiked over our current footprint,
+//!   2. OOM handling: if interference spiked over our current footprint,
 //!      count an OOM event and — under a static policy — evict the
 //!      youngest sequence (requeue); RAP instead shrinks the mask;
-//!   4. run one prefill (if queue room + memory headroom) or one decode
+//!   3. run one prefill (if queue room + memory headroom) or one decode
 //!      step over the gathered batch; sample tokens; retire finished.
 
 use anyhow::Result;
@@ -51,6 +57,10 @@ impl Default for EngineConfig {
                        max_sim_secs: 1e9 }
     }
 }
+
+/// Idle-but-blocked time increment: how far the clock creeps while the
+/// engine waits for memory headroom with nothing runnable.
+const BLOCKED_TICK: f64 = 0.05;
 
 /// Persistent decode-batch state: while batch membership is unchanged,
 /// the gathered caches stay resident here and per-step gather/scatter
@@ -102,6 +112,22 @@ impl Engine {
 
     pub fn sim_time(&self) -> f64 {
         self.sim_time
+    }
+
+    /// Nothing queued and nothing active.
+    pub fn idle(&self) -> bool {
+        self.batcher.active.is_empty() && self.batcher.waiting.is_empty()
+    }
+
+    /// Requests accepted but not yet finished (queued + in flight).
+    pub fn outstanding(&self) -> usize {
+        self.batcher.active.len() + self.batcher.waiting.len()
+    }
+
+    /// Hand the engine a request; it is served on subsequent `step_to`
+    /// calls (external admission — the fleet router's entry point).
+    pub fn enqueue(&mut self, req: Request) {
+        self.batcher.enqueue(req);
     }
 
     /// Current model + KV footprint under the active mask.
@@ -184,8 +210,10 @@ impl Engine {
         Ok(())
     }
 
-    /// Projected bytes if we admit `req` (its KV at full length).
-    fn admission_cost(&self, req: &Request) -> usize {
+    /// Projected bytes if we admit `req` (its KV at full length) under
+    /// the current mask. Public so memory-aware routers can estimate a
+    /// request's footprint on each candidate replica.
+    pub fn admission_cost(&self, req: &Request) -> usize {
         let meta = self.rt.meta();
         let dh = meta.head_dim();
         let full_len = (req.prompt_len + req.gen_len).min(meta.max_seq);
@@ -195,6 +223,14 @@ impl Engine {
                 * crate::model_meta::BYTES_PER_SCALAR;
         }
         kv
+    }
+
+    /// Advance the clock by one unit of compute: modeled cost when the
+    /// runtime provides one (sim backend), measured wall time otherwise.
+    fn advance(&mut self, wall_secs: f64) {
+        let dt = self.rt.last_cost().unwrap_or(wall_secs);
+        self.metrics.exec_secs += dt;
+        self.sim_time += dt * self.cfg.time_scale;
     }
 
     fn try_prefill(&mut self) -> Result<bool> {
@@ -231,9 +267,7 @@ impl Engine {
         }
         let t0 = std::time::Instant::now();
         let (logits, k, v) = self.rt.prefill(bucket, &tokens, &self.mask)?;
-        let dt = t0.elapsed().as_secs_f64();
-        self.metrics.exec_secs += dt;
-        self.sim_time += dt * self.cfg.time_scale;
+        self.advance(t0.elapsed().as_secs_f64());
         self.metrics.prefills += 1;
 
         let next_token = argmax(&logits) as i32;
@@ -281,9 +315,7 @@ impl Engine {
         let t0 = std::time::Instant::now();
         let logits = self.rt.decode(b, &tokens, &pos, &mut bs.k,
                                     &mut bs.v, &self.mask)?;
-        let dt = t0.elapsed().as_secs_f64();
-        self.metrics.exec_secs += dt;
-        self.sim_time += dt * self.cfg.time_scale;
+        self.advance(t0.elapsed().as_secs_f64());
         self.metrics.decode_steps += 1;
         self.kv.bump_lens(&ids, &self.mask)?;
 
@@ -314,23 +346,55 @@ impl Engine {
         Ok(true)
     }
 
-    /// Serve a whole trace to completion (or `max_sim_secs`).
+    /// Advance the simulated clock to `t`, doing work along the way.
+    ///
+    /// Invariants: on return `sim_time() >= t` (compute steps may
+    /// overshoot the target by at most one step's duration); with no
+    /// outstanding work the clock jumps straight to `t`. This is the
+    /// primitive an external coordinator drives — many engines stepped
+    /// to the same `t` share one coherent fleet clock.
+    pub fn step_to(&mut self, t: f64) -> Result<()> {
+        self.step_while_busy(t)?;
+        if self.sim_time < t {
+            self.sim_time = t;
+        }
+        Ok(())
+    }
+
+    /// Like `step_to`, but returns as soon as the engine runs out of
+    /// work instead of jumping the clock to `t` — so a driver that only
+    /// wants "work until done or `t`" (e.g. `run_trace` with a huge
+    /// `max_sim_secs` backstop) keeps a truthful completion time.
+    pub fn step_while_busy(&mut self, t: f64) -> Result<()> {
+        while self.sim_time < t && !self.idle() {
+            self.run_controller(false)?;
+            self.handle_memory_pressure()?;
+            self.sample_memory();
+            if !self.try_prefill()? && !self.decode_step()? {
+                // waiting on memory headroom; let time creep forward
+                self.sim_time = (self.sim_time + BLOCKED_TICK).min(t);
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve a whole trace to completion (or `max_sim_secs`): a thin
+    /// arrival-admission driver over `enqueue` + `step_to`.
     pub fn run_trace(&mut self, mut requests: Vec<Request>)
                      -> Result<ServeReport> {
         requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
-        let mut next = 0usize;
         let t_start = self.sim_time;
+        let deadline = t_start + self.cfg.max_sim_secs;
+        let mut next = 0usize;
         loop {
-            // 1. admit arrivals
+            // 1. admit arrivals whose time has come
             while next < requests.len()
                 && requests[next].arrival <= self.sim_time
             {
-                self.batcher.enqueue(requests[next].clone());
+                self.enqueue(requests[next].clone());
                 next += 1;
             }
-            let idle = self.batcher.active.is_empty()
-                && self.batcher.waiting.is_empty();
-            if idle {
+            if self.idle() {
                 if next >= requests.len() {
                     break;
                 }
@@ -338,22 +402,19 @@ impl Engine {
                 self.sim_time = requests[next].arrival;
                 continue;
             }
-            if self.sim_time - t_start > self.cfg.max_sim_secs {
+            if self.sim_time >= deadline {
                 break;
             }
-            // 2-3. controller + memory pressure
-            self.run_controller(false)?;
-            self.handle_memory_pressure()?;
-            self.sample_memory();
-            // 4. work
-            let did_prefill = self.try_prefill()?;
-            if !did_prefill {
-                let did_decode = self.decode_step()?;
-                if !did_decode {
-                    // waiting on memory headroom; advance time slightly
-                    self.sim_time += 0.05;
-                }
-            }
+            // 2. work until the next arrival (or the deadline). The
+            // non-jumping variant keeps `sim_time` at the true
+            // completion moment when the queue drains early — stepping
+            // *to* a 1e9 backstop would wreck wall/throughput numbers.
+            let target = if next < requests.len() {
+                requests[next].arrival.min(deadline)
+            } else {
+                deadline
+            };
+            self.step_while_busy(target)?;
         }
         let wall = (self.sim_time - t_start).max(1e-9);
         Ok(self.metrics.report(wall))
@@ -373,11 +434,100 @@ fn argmax(xs: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model_meta::ModelMeta;
+    use crate::server::controller::Policy;
 
     #[test]
     fn argmax_basic() {
         assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
         assert_eq!(argmax(&[5.0]), 0);
         assert_eq!(argmax(&[1.0, 1.0]), 0); // first wins ties
+    }
+
+    fn sim_engine(capacity_mult: f64) -> Engine {
+        let meta = ModelMeta::synthetic("e", 4, 128, 8, 4, 512, 512, 256);
+        let rt = Runtime::synthetic(meta.clone(), 1);
+        let mem = MemoryModel::new(&meta);
+        let capacity = (mem.param_bytes(&PruneMask::full(&meta)) as f64
+            * capacity_mult) as usize;
+        let monitor = MemoryMonitor::constant(capacity);
+        let controller = Controller::new(
+            Policy::Static(PruneMask::full(&meta)), mem, vec![0; 128], 128)
+            .with_calib_bucket(1, 128);
+        Engine::new(rt, monitor, controller, EngineConfig::default())
+    }
+
+    fn req(id: u64, arrival: f64) -> Request {
+        Request { id, arrival, prompt_len: 12, gen_len: 6 }
+    }
+
+    #[test]
+    fn step_to_jumps_when_idle() {
+        let mut e = sim_engine(4.0);
+        e.step_to(17.5).unwrap();
+        assert_eq!(e.sim_time(), 17.5);
+    }
+
+    #[test]
+    fn externally_stepped_engine_serves_requests() {
+        let mut e = sim_engine(4.0);
+        for i in 0..5 {
+            e.enqueue(req(i, 0.0));
+        }
+        assert_eq!(e.outstanding(), 5);
+        // step in small external increments, like a fleet would
+        let mut t = 0.0;
+        while !e.idle() && t < 300.0 {
+            t += 0.5;
+            e.step_to(t).unwrap();
+            assert!(e.sim_time() >= t - 1e-9 || e.idle());
+        }
+        assert!(e.idle(), "work left after 300s");
+        assert_eq!(e.metrics.completed.len(), 5);
+        assert_eq!(e.metrics.oom_events, 0);
+        // clock advanced by modeled compute, not wall time
+        assert!(e.metrics.exec_secs > 0.0);
+    }
+
+    #[test]
+    fn run_trace_matches_external_stepping() {
+        let trace: Vec<Request> = (0..8).map(|i| req(i, i as f64 * 0.4))
+            .collect();
+        let mut a = sim_engine(4.0);
+        let ra = a.run_trace(trace.clone()).unwrap();
+        let mut b = sim_engine(4.0);
+        let mut next = 0usize;
+        let mut t = 0.0;
+        while next < trace.len() || !b.idle() {
+            while next < trace.len() && trace[next].arrival <= t {
+                b.enqueue(trace[next].clone());
+                next += 1;
+            }
+            t += 0.2;
+            b.step_to(t).unwrap();
+            assert!(t < 1000.0, "diverged");
+        }
+        assert_eq!(ra.completed, 8);
+        assert_eq!(b.metrics.completed.len(), 8);
+        // same requests, same backend seed → same token counts
+        assert_eq!(ra.tokens_generated, b.metrics.tokens_generated);
+        // regression: the huge max_sim_secs backstop must not leak into
+        // the clock or the report when the queue drains early
+        assert!(a.sim_time() < 1e4, "clock jumped to the deadline");
+        assert!(ra.throughput_rps > 1e-3,
+                "wall time corrupted: {} req/s", ra.throughput_rps);
+    }
+
+    #[test]
+    fn sim_backend_drives_virtual_time() {
+        let mut e = sim_engine(4.0);
+        e.enqueue(req(0, 0.0));
+        let wall = std::time::Instant::now();
+        e.step_to(1000.0).unwrap();
+        // a single request's modeled compute is far below 1000 virtual
+        // seconds, yet wall time must be tiny: virtual ≫ wall
+        assert!(e.sim_time() >= 1000.0);
+        assert!(wall.elapsed().as_secs_f64() < 30.0);
+        assert_eq!(e.metrics.completed.len(), 1);
     }
 }

@@ -79,8 +79,34 @@ impl MemoryMonitor {
                         spans: Vec::new() }
     }
 
+    /// A monitor with an explicit interference schedule: `(start, end,
+    /// bytes)` triples. Lets tests and fleet scenarios construct exact
+    /// pressure patterns without depending on the seeded process.
+    pub fn with_spans(cfg: MemMonConfig, spans: &[(f64, f64, usize)])
+                      -> MemoryMonitor {
+        let spans = spans
+            .iter()
+            .map(|&(start, end, bytes)| AppSpan { start, end, bytes })
+            .collect();
+        MemoryMonitor { cfg, spans }
+    }
+
+    /// Queries past the precomputed horizon wrap around into `[0,
+    /// horizon)`: the interference process extends periodically instead
+    /// of silently reporting an idle device forever (which would let a
+    /// long-running engine believe it has full capacity).
+    fn effective_t(&self, t: f64) -> f64 {
+        let h = self.cfg.horizon_secs;
+        if t < h || h <= 0.0 {
+            t
+        } else {
+            t % h
+        }
+    }
+
     /// Bytes held by co-running apps at time t.
     pub fn interference_at(&self, t: f64) -> usize {
+        let t = self.effective_t(t);
         self.spans
             .iter()
             .filter(|s| t >= s.start && t < s.end)
@@ -147,5 +173,38 @@ mod tests {
         let m = MemoryMonitor::constant(1 << 28);
         assert_eq!(m.available_at(0.0), 1 << 28);
         assert_eq!(m.available_at(500.0), 1 << 28);
+    }
+
+    /// Regression: queries past `horizon_secs` must not silently report
+    /// full capacity — the schedule extends periodically.
+    #[test]
+    fn interference_persists_past_horizon() {
+        let m = mon(42);
+        let h = m.cfg.horizon_secs;
+        // find a moment with real interference inside the horizon
+        let (t_star, _) = m
+            .curve(0.0, h, 1.0)
+            .into_iter()
+            .min_by_key(|&(_, a)| a)
+            .unwrap();
+        assert!(m.interference_at(t_star) > 0, "seed produced no spans");
+        // one and two full periods later, the schedule repeats exactly
+        assert_eq!(m.interference_at(t_star + h),
+                   m.interference_at(t_star));
+        assert_eq!(m.interference_at(t_star + 2.0 * h),
+                   m.interference_at(t_star));
+        assert!(m.available_at(t_star + h) < m.cfg.capacity);
+    }
+
+    #[test]
+    fn explicit_spans_are_exact() {
+        let cfg = MemMonConfig::for_capacity(1000);
+        let m = MemoryMonitor::with_spans(cfg, &[(10.0, 20.0, 300),
+                                                 (15.0, 30.0, 200)]);
+        assert_eq!(m.available_at(5.0), 1000);
+        assert_eq!(m.available_at(12.0), 700);
+        assert_eq!(m.available_at(17.0), 500);
+        assert_eq!(m.available_at(25.0), 800);
+        assert_eq!(m.available_at(30.0), 1000);
     }
 }

@@ -63,7 +63,10 @@ impl Metrics {
             mean_latency: mean(&lats),
             p50_latency: percentile(&lats, 50.0),
             p95_latency: percentile(&lats, 95.0),
+            p99_latency: percentile(&lats, 99.0),
             mean_ttft: mean(&ttfts),
+            p50_ttft: percentile(&ttfts, 50.0),
+            p99_ttft: percentile(&ttfts, 99.0),
             throughput_rps: self.completed.len() as f64 / wall_secs,
             throughput_tps: self.tokens_generated as f64 / wall_secs,
             controller_secs: self.controller_secs,
@@ -85,7 +88,10 @@ pub struct ServeReport {
     pub mean_latency: f64,
     pub p50_latency: f64,
     pub p95_latency: f64,
+    pub p99_latency: f64,
     pub mean_ttft: f64,
+    pub p50_ttft: f64,
+    pub p99_ttft: f64,
     pub throughput_rps: f64,
     pub throughput_tps: f64,
     pub controller_secs: f64,
@@ -102,9 +108,12 @@ impl ServeReport {
         println!("   decode steps     {:>10}", self.decode_steps);
         println!("   tokens generated {:>10}", self.tokens_generated);
         println!("   mask switches    {:>10}", self.mask_switches);
-        println!("   latency mean/p50/p95  {:.3}s / {:.3}s / {:.3}s",
-                 self.mean_latency, self.p50_latency, self.p95_latency);
-        println!("   ttft mean        {:>9.3}s", self.mean_ttft);
+        println!("   latency mean/p50/p95/p99  {:.3}s / {:.3}s / {:.3}s \
+                  / {:.3}s",
+                 self.mean_latency, self.p50_latency, self.p95_latency,
+                 self.p99_latency);
+        println!("   ttft mean/p50/p99  {:.3}s / {:.3}s / {:.3}s",
+                 self.mean_ttft, self.p50_ttft, self.p99_ttft);
         println!("   throughput       {:>7.2} req/s  {:>8.1} tok/s",
                  self.throughput_rps, self.throughput_tps);
         println!("   controller time  {:>9.3}s   exec time {:>9.3}s",
@@ -135,6 +144,9 @@ mod tests {
         assert!((r.throughput_rps - 1.0).abs() < 1e-9);
         assert!((r.throughput_tps - 4.0).abs() < 1e-9);
         assert!(r.p95_latency >= r.p50_latency);
+        assert!(r.p99_latency >= r.p95_latency);
         assert!((r.mean_ttft - 0.5).abs() < 1e-9);
+        assert!((r.p50_ttft - 0.5).abs() < 1e-9);
+        assert!(r.p99_ttft >= r.p50_ttft);
     }
 }

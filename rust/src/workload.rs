@@ -191,6 +191,97 @@ mod tests {
         }
     }
 
+    /// Full-field determinism: same seed → identical ids, arrivals,
+    /// prompt AND generation lengths; different seed → a different trace.
+    #[test]
+    fn trace_fully_deterministic_in_seed() {
+        let mut a = TraceGenerator::new(TraceConfig::default(), 21);
+        let mut b = TraceGenerator::new(TraceConfig::default(), 21);
+        let ra = a.generate(0.0, 120.0);
+        let rb = b.generate(0.0, 120.0);
+        assert!(!ra.is_empty());
+        assert_eq!(ra.len(), rb.len());
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.prompt_len, y.prompt_len);
+            assert_eq!(x.gen_len, y.gen_len);
+            assert!((x.arrival - y.arrival).abs() < 1e-12);
+        }
+        let mut c = TraceGenerator::new(TraceConfig::default(), 22);
+        let rc = c.generate(0.0, 120.0);
+        let same = ra.len() == rc.len()
+            && ra.iter().zip(&rc).all(|(x, y)| {
+                (x.arrival - y.arrival).abs() < 1e-12
+            });
+        assert!(!same, "different seeds produced an identical trace");
+    }
+
+    /// The burst-episode multiplier must be visible in the *generated
+    /// arrivals*, not just in `rate_at`: the empirical rate inside a
+    /// burst window is several times the rate in a burst-free window.
+    #[test]
+    fn burst_multiplier_observed_in_arrivals() {
+        let cfg = TraceConfig {
+            base_rate: 4.0,
+            diurnal_amp: 0.0, // flat baseline isolates the burst effect
+            bursts_per_day: 10.0,
+            burst_mult: 8.0,
+            burst_secs: 30.0,
+            ..TraceConfig::default()
+        };
+        let mut g = TraceGenerator::new(cfg, 11);
+        assert!(!g.bursts.is_empty(), "seed drew no burst episodes");
+        let (bs, be) = g.bursts[0];
+        let bursts = g.bursts.clone();
+        let day = g.cfg.day_secs;
+        let reqs = g.generate(0.0, day);
+        // a same-length window overlapping no burst episode
+        let mut quiet = None;
+        let mut t0 = 0.0;
+        while t0 + 30.0 < day {
+            if bursts.iter().all(|&(s, e)| t0 + 30.0 <= s || e <= t0) {
+                quiet = Some(t0);
+                break;
+            }
+            t0 += 1.0;
+        }
+        let q0 = quiet.expect("no burst-free window in the day");
+        let in_burst = reqs.iter()
+            .filter(|r| r.arrival >= bs && r.arrival < be)
+            .count();
+        let in_quiet = reqs.iter()
+            .filter(|r| r.arrival >= q0 && r.arrival < q0 + 30.0)
+            .count();
+        assert!(in_quiet > 0, "empty quiet window");
+        assert!(in_burst as f64 > 3.0 * in_quiet as f64,
+                "burst {in_burst} vs quiet {in_quiet}: multiplier not \
+                 observed");
+    }
+
+    /// The log-normal length caps must bind even when the distribution's
+    /// median is far above them.
+    #[test]
+    fn length_caps_respected_under_extreme_params() {
+        let cfg = TraceConfig {
+            prompt_mu: 7.0, // median e^7 ≈ 1096 ≫ cap
+            prompt_max: 50,
+            gen_mu: 6.0,
+            gen_max: 24,
+            ..TraceConfig::default()
+        };
+        let mut g = TraceGenerator::new(cfg, 12);
+        let reqs = g.generate(0.0, 300.0);
+        assert!(!reqs.is_empty());
+        for r in &reqs {
+            assert!(r.prompt_len >= 2 && r.prompt_len <= 50,
+                    "prompt {}", r.prompt_len);
+            assert!(r.gen_len >= 2 && r.gen_len <= 24, "gen {}", r.gen_len);
+        }
+        // with the median far above the cap, the cap must actually bind
+        assert_eq!(reqs.iter().map(|r| r.prompt_len).max().unwrap(), 50);
+        assert_eq!(reqs.iter().map(|r| r.gen_len).max().unwrap(), 24);
+    }
+
     #[test]
     fn prompt_lengths_heavy_tailed() {
         let mut g = TraceGenerator::new(TraceConfig::default(), 4);

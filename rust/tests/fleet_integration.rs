@@ -1,0 +1,166 @@
+//! Fleet-level integration: multi-replica serving over the sim runtime
+//! backend. The headline check is the ISSUE-2 acceptance criterion: on
+//! the same trace, under interference, the RAP-aware router produces
+//! fewer total OOM events than round-robin — because it reads each
+//! replica's Sys_avail(t) and current mask instead of dispatching
+//! blindly.
+
+use rap::coordinator::fleet::{default_fleet_trace, default_sim_fleet,
+                              Fleet, FleetConfig};
+use rap::coordinator::replica::Replica;
+use rap::coordinator::router::{Router, RouterPolicy};
+use rap::mask::PruneMask;
+use rap::memory::MemoryModel;
+use rap::model_meta::ModelMeta;
+use rap::runtime::Runtime;
+use rap::server::controller::{Controller, Policy};
+use rap::server::engine::{Engine, EngineConfig};
+use rap::server::memmon::{MemMonConfig, MemoryMonitor};
+use rap::util::json::Json;
+use rap::workload::Request;
+
+fn sim_meta() -> ModelMeta {
+    ModelMeta::synthetic("itest", 4, 128, 8, 4, 512, 512, 256)
+}
+
+/// A two-replica fleet where replica 0 is chronically underwater
+/// (explicit interference schedule leaves half the dense parameter
+/// footprint available, forever) and replica 1 is roomy and quiet. Both
+/// run static dense deployments so the *only* difference between runs is
+/// the routing policy.
+fn pressured_fleet(policy: RouterPolicy) -> Fleet {
+    let meta = sim_meta();
+    let mut replicas = Vec::new();
+    for id in 0..2usize {
+        let rt = Runtime::synthetic(meta.clone(), 77 + id as u64);
+        let mem = MemoryModel::new(&meta);
+        let params = mem.param_bytes(&PruneMask::full(&meta));
+        let monitor = if id == 0 {
+            let cap = (params as f64 * 1.2) as usize;
+            MemoryMonitor::with_spans(MemMonConfig::for_capacity(cap),
+                                      &[(0.0, 1e12, cap - params / 2)])
+        } else {
+            MemoryMonitor::constant(params * 6)
+        };
+        let controller = Controller::new(
+            Policy::Static(PruneMask::full(&meta)), mem, vec![0; 128],
+            128)
+            .with_calib_bucket(1, 128);
+        let engine = Engine::new(rt, monitor, controller,
+                                 EngineConfig::default());
+        replicas.push(Replica::new(id, engine));
+    }
+    Fleet::new(replicas, Router::new(policy, 2), FleetConfig {
+        oom_threshold: usize::MAX, // isolate routing: no drain/respawn
+        ..FleetConfig::default()
+    })
+}
+
+fn fixed_trace() -> Vec<Request> {
+    (0..40)
+        .map(|i| Request {
+            id: i,
+            arrival: i as f64 * 0.5,
+            prompt_len: 16,
+            gen_len: 8,
+        })
+        .collect()
+}
+
+#[test]
+fn rap_router_beats_round_robin_on_oom_under_interference() {
+    let mut rr = pressured_fleet(RouterPolicy::RoundRobin);
+    let rr_report = rr.run_trace(fixed_trace()).unwrap();
+    let mut rap = pressured_fleet(RouterPolicy::RapAware);
+    let rap_report = rap.run_trace(fixed_trace()).unwrap();
+
+    // round-robin blindly sends half the trace to the underwater
+    // replica: every such request trips a memory-pressure event
+    assert_eq!(rr_report.routing, vec![20, 20]);
+    assert!(rr_report.oom_events >= 10,
+            "expected heavy OOM pressure under round-robin, got {}",
+            rr_report.oom_events);
+
+    // the RAP-aware router reads Sys_avail(t) + footprint and never
+    // places work on the underwater replica
+    assert_eq!(rap_report.routing[0], 0,
+               "rap-aware routed to the underwater replica");
+    assert_eq!(rap_report.oom_events, 0);
+    assert!(rap_report.oom_events < rr_report.oom_events,
+            "rap {} vs rr {}", rap_report.oom_events,
+            rr_report.oom_events);
+
+    // and it completes the whole trace on the healthy replica
+    assert_eq!(rap_report.completed, 40);
+    assert!(rr_report.completed < 40,
+            "round-robin should lose the requests it sent under water");
+}
+
+#[test]
+fn default_fleet_emits_complete_json_report() {
+    let mut fleet = default_sim_fleet(4, 7, RouterPolicy::RapAware);
+    let reqs = default_fleet_trace(7, 60.0);
+    let n = reqs.len() as u64;
+    let report = fleet.run_trace(reqs).unwrap();
+    assert_eq!(report.replicas.len(), 4);
+    assert_eq!(report.total_requests, n);
+    assert!(report.completed > 0);
+
+    // heterogeneity: at least two distinct capacities in the fleet
+    let mut caps: Vec<usize> =
+        report.replicas.iter().map(|r| r.capacity_bytes).collect();
+    caps.sort_unstable();
+    caps.dedup();
+    assert!(caps.len() >= 2, "fleet is not heterogeneous");
+
+    // the JSON surface carries per-replica + aggregate tails, OOM
+    // counts, and the routing histogram — and round-trips the parser
+    let json = report.to_json().pretty();
+    let parsed = Json::parse(&json).expect("FleetReport JSON must parse");
+    assert_eq!(parsed.get("replicas").unwrap().arr().unwrap().len(), 4);
+    assert_eq!(
+        parsed.get("routing_histogram").unwrap().usize_vec().unwrap()
+            .iter().sum::<usize>() as u64
+            + parsed.get("dropped").unwrap().usize().unwrap() as u64,
+        n);
+    for key in ["p50_latency", "p99_latency", "p50_ttft", "p99_ttft",
+                "oom_events", "completed", "router"] {
+        assert!(parsed.get(key).is_ok(), "missing aggregate key {key}");
+    }
+    for rep in parsed.get("replicas").unwrap().arr().unwrap() {
+        for key in ["p50_latency", "p99_latency", "oom_events",
+                    "routed", "state"] {
+            assert!(rep.get(key).is_ok(), "missing replica key {key}");
+        }
+    }
+}
+
+#[test]
+fn all_router_policies_complete_a_calm_trace() {
+    // with generous capacity and no interference, every policy must
+    // serve the full trace — policies differ in placement, not safety
+    for policy in RouterPolicy::ALL {
+        let meta = sim_meta();
+        let mem = MemoryModel::new(&meta);
+        let params = mem.param_bytes(&PruneMask::full(&meta));
+        let mut replicas = Vec::new();
+        for id in 0..3usize {
+            let rt = Runtime::synthetic(meta.clone(), id as u64);
+            let controller = Controller::new(
+                Policy::Static(PruneMask::full(&meta)),
+                MemoryModel::new(&meta), vec![0; 128], 128)
+                .with_calib_bucket(1, 128);
+            let engine = Engine::new(
+                rt, MemoryMonitor::constant(params * 8), controller,
+                EngineConfig::default());
+            replicas.push(Replica::new(id, engine));
+        }
+        let mut fleet = Fleet::new(replicas, Router::new(policy, 3),
+                                   FleetConfig::default());
+        let report = fleet.run_trace(fixed_trace()).unwrap();
+        assert_eq!(report.completed, 40, "{} lost requests",
+                   policy.name());
+        assert_eq!(report.oom_events, 0, "{}", policy.name());
+        assert_eq!(report.dropped, 0, "{}", policy.name());
+    }
+}

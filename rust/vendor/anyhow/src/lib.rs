@@ -1,0 +1,156 @@
+//! In-tree, API-compatible subset of the `anyhow` crate.
+//!
+//! The offline build image has no crates.io access, so the error type the
+//! whole crate leans on lives here as a path dependency. Only the surface
+//! the repo actually uses is implemented: `Result`, `Error`, `anyhow!`,
+//! `bail!`, `ensure!`, and the `Context` extension trait for `Result` and
+//! `Option`. Errors carry a flattened message chain (context prefixes are
+//! folded into one string) rather than `anyhow`'s full cause chain — every
+//! call site here only ever formats the error, so nothing is lost.
+
+use std::fmt;
+
+/// A flattened error: the message already includes any context prefixes.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> Result<()>` prints the Debug form; show the
+        // human-readable message like anyhow does.
+        f.write_str(&self.msg)
+    }
+}
+
+// Like anyhow: any std error converts into `Error`. `Error` itself does
+// NOT implement `std::error::Error`, which is what keeps this blanket
+// impl coherent next to the reflexive `From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-prefixing extension for `Result` and `Option` (subset of
+/// `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            Error { msg: format!("{ctx}: {e}") }
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            Error { msg: format!("{}: {e}", f()) }
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_num(s: &str) -> Result<i32> {
+        Ok(s.parse::<i32>()?)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_num("42").unwrap(), 42);
+        assert!(parse_num("x").is_err());
+    }
+
+    #[test]
+    fn context_prefixes_message() {
+        let e = parse_num("x").context("reading config").unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "), "{e}");
+        let o: Option<i32> = None;
+        let e = o.with_context(|| format!("slot {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "slot 3");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let x = 7;
+        let e = anyhow!("value {x} and {}", 8);
+        assert_eq!(e.to_string(), "value 7 and 8");
+        fn f() -> Result<()> {
+            bail!("boom {}", 1)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 1");
+        fn g(ok: bool) -> Result<i32> {
+            ensure!(ok, "not ok");
+            Ok(5)
+        }
+        assert_eq!(g(true).unwrap(), 5);
+        assert!(g(false).is_err());
+    }
+}

@@ -1,0 +1,144 @@
+//! Stub of the PJRT/XLA binding surface used by `rap::runtime::pjrt`.
+//!
+//! The offline build image does not ship the XLA runtime, so this crate
+//! provides the exact types and signatures the PJRT backend compiles
+//! against; every entry point that would touch a device returns a clear
+//! runtime error instead. The serving stack, fleet coordinator, and the
+//! whole test suite run on the `rap::runtime::sim` backend and never hit
+//! these paths.
+//!
+//! To execute real AOT artifacts, point the `xla` dependency in
+//! `rust/Cargo.toml` at an actual PJRT binding with this API instead of
+//! this stub — no source change in `rap` is needed.
+
+use std::fmt;
+use std::path::Path;
+
+#[derive(Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error {
+        msg: format!(
+            "{what}: the XLA/PJRT runtime is not available in this build \
+             (in-tree stub `rust/vendor/xla`); use the sim backend or link \
+             real PJRT bindings"
+        ),
+    }
+}
+
+/// Element types uploadable as device buffers.
+pub trait ArrayElement: Copy {}
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+impl ArrayElement for i32 {}
+impl ArrayElement for i64 {}
+impl ArrayElement for u8 {}
+
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_surfaces_clear_errors() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("stub"), "{e}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

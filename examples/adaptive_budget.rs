@@ -6,19 +6,19 @@
 //! Run with:  cargo run --release --example adaptive_budget
 
 use anyhow::Result;
-use rap::corpus::{Corpus, Split};
+use rap::corpus::Split;
 use rap::evalharness::perplexity;
+use rap::experiments::common::setup;
 use rap::gsi::{CalibratedEvaluator, GsiEngine};
 use rap::mask::PruneMask;
-use rap::memory::{mib, MemoryModel, Workload};
-use rap::runtime::Runtime;
+use rap::memory::{mib, Workload};
 
 fn main() -> Result<()> {
-    let root = rap::artifacts_dir();
-    let rt = Runtime::load(&root, "rap-small")?;
-    let corpus = Corpus::load(&root.join("corpus"))?;
+    let s = setup("rap-small")?;
+    let rt = s.rt;
+    let corpus = s.corpus;
+    let mem = s.mem;
     let meta = rt.meta().clone();
-    let mem = MemoryModel::new(&meta);
     let w = Workload::new(16, meta.max_seq);
     let dense_peak = mem.dense_peak_bytes(w);
     println!("workload: batch {} × seq {}  (dense peak {:.1} MiB)",

@@ -1,25 +1,27 @@
-//! Quickstart: load the AOT-compiled model, ask RAP for a mask that fits
-//! an 80% memory budget, and compare dense vs pruned perplexity + a short
-//! greedy generation.
+//! Quickstart: load the model (AOT artifacts when present, the
+//! deterministic sim backend otherwise), ask RAP for a mask that fits
+//! an 80% memory budget, and compare dense vs pruned perplexity + a
+//! short greedy generation.
 //!
 //! Run with:  cargo run --release --example quickstart
 
 use anyhow::Result;
-use rap::corpus::{Corpus, Split};
+use rap::corpus::Split;
 use rap::evalharness::perplexity;
+use rap::experiments::common::setup;
 use rap::gsi::{CalibratedEvaluator, GsiEngine};
 use rap::mask::PruneMask;
-use rap::memory::{mib, MemoryModel, Workload};
+use rap::memory::{mib, Workload};
 use rap::pruning::{build_mask_eval, PruneContext, Scheme};
-use rap::runtime::Runtime;
 
 fn main() -> Result<()> {
-    let root = rap::artifacts_dir();
-    println!("loading rap-small from {}", root.display());
-    let rt = Runtime::load(&root, "rap-small")?;
-    let corpus = Corpus::load(&root.join("corpus"))?;
+    let s = setup("rap-small")?;
+    let rt = s.rt;
+    let corpus = s.corpus;
+    let mem = s.mem;
     let meta = rt.meta().clone();
-    let mem = MemoryModel::new(&meta);
+    println!("serving rap-small on the {} backend",
+             if rt.is_sim() { "sim" } else { "pjrt" });
 
     // The budget: 80% of the dense peak at a KV-heavy workload.
     let w = Workload::new(16, meta.max_seq);

@@ -13,7 +13,9 @@
 //!                [replicas] [secs] [seed]
 
 use anyhow::Result;
-use rap::coordinator::fleet::{default_fleet_trace, default_sim_fleet};
+use rap::coordinator::fleet::{default_fleet_trace, default_sim_fleet,
+                              default_sim_fleet_with, AutoscaleConfig,
+                              FleetConfig};
 use rap::coordinator::router::RouterPolicy;
 
 fn main() -> Result<()> {
@@ -35,9 +37,30 @@ fn main() -> Result<()> {
         report.print();
     }
 
+    // The same trace once more, elastically: the fleet may spawn up to
+    // 2× the replicas under load, retire them when it drains, and
+    // migrate in-flight sequences off pressured replicas instead of
+    // evicting them.
+    let cfg = FleetConfig {
+        migrate: true,
+        autoscale: Some(AutoscaleConfig {
+            max_replicas: (replicas * 2).max(2),
+            ..AutoscaleConfig::default()
+        }),
+        max_sim_secs: secs + 3600.0,
+        ..FleetConfig::default()
+    };
+    let mut fleet = default_sim_fleet_with(replicas, seed,
+                                           RouterPolicy::RapAware, cfg);
+    let report = fleet.run_trace(trace.clone())?;
+    println!("\n— elastic (rap-aware router + autoscale + migration) —");
+    report.print();
+
     println!("\nExpected shape: the memory-aware routers end with fewer \
               OOM events and fewer rejected requests than round-robin; \
               rap-aware should also hold the best p99 latency because it \
-              avoids replicas serving with heavily pruned masks.");
+              avoids replicas serving with heavily pruned masks. The \
+              elastic run turns evictions into migrations and absorbs \
+              bursts by spawning replicas.");
     Ok(())
 }

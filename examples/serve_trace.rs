@@ -2,15 +2,15 @@
 //! request trace through the full serving stack — continuous batcher,
 //! KV manager, memory monitor with co-running interference, and the RAP
 //! controller — with every forward pass executing the AOT-compiled HLO
-//! through PJRT. Reports latency/throughput/OOM for a static-dense
+//! through PJRT (or the deterministic sim backend when no artifacts are
+//! on disk). Reports latency/throughput/OOM for a static-dense
 //! deployment vs RAP.
 //!
 //! Run with:  cargo run --release --example serve_trace -- [secs] [seed]
 
 use anyhow::Result;
+use rap::experiments::common::setup;
 use rap::mask::PruneMask;
-use rap::memory::Workload;
-use rap::runtime::Runtime;
 use rap::server::controller::{Controller, Policy};
 use rap::server::engine::{Engine, EngineConfig};
 use rap::server::memmon::{MemMonConfig, MemoryMonitor};
@@ -20,13 +20,13 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let secs: f64 = args.get(1).map(|s| s.parse().unwrap()).unwrap_or(120.0);
     let seed: u64 = args.get(2).map(|s| s.parse().unwrap()).unwrap_or(7);
-    let root = rap::artifacts_dir();
 
     for policy_name in ["static-dense", "rap"] {
-        let rt = Runtime::load(&root, "rap-small")?;
-        let corpus = rap::corpus::Corpus::load(&root.join("corpus"))?;
+        let s = setup("rap-small")?;
+        let rt = s.rt;
+        let corpus = s.corpus;
         let meta = rt.meta().clone();
-        let mem = rap::memory::MemoryModel::new(&meta);
+        let mem = s.mem;
         // capacity: 1.35× the dense parameter bytes — headroom for the
         // dense model + a moderate KV set, but interference (~30%-of-
         // capacity chunks) forces decisions

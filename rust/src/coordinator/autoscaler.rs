@@ -1,0 +1,271 @@
+//! Fleet autoscaler: spawn/retire replicas from fleet-level load
+//! signals, with hysteresis and a cooldown so noisy signals cannot make
+//! the fleet thrash.
+//!
+//! Signals (trailing `signal_window_secs`, evaluated every
+//! `eval_every_secs` of sim time):
+//!
+//!   * queue pressure — outstanding requests per serving replica;
+//!   * p99 TTFT       — tail time-to-first-token of recently finished
+//!                      requests (queueing and memory stalls surface
+//!                      here first);
+//!   * OOM rate       — interference-driven memory casualties across
+//!                      the fleet.
+//!
+//! Policy: scale UP when any signal has stayed above its high watermark
+//! for `hold_secs`; scale DOWN when every signal has stayed below its
+//! low watermark for `hold_secs`. After any applied action the scaler is
+//! quiet for `cooldown_secs`.
+//!
+//! Anti-oscillation is layered three ways: the asymmetric watermarks
+//! (high ≫ low) form the hysteresis band, the hold requirement filters
+//! one-tick spikes, and the cooldown bounds the action rate — over any
+//! run, spawns + retires ≤ sim_secs / cooldown_secs + 1, which is the
+//! bound the elastic-fleet scenario tests assert.
+
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscaleConfig {
+    /// Never retire below this many serving replicas.
+    pub min_replicas: usize,
+    /// Never spawn above this many serving replicas.
+    pub max_replicas: usize,
+    /// Scale up above this many outstanding requests per serving
+    /// replica (keep above the engine's max decode batch of 8 — a full
+    /// batch in flight with an empty queue is healthy, not pressure)…
+    pub high_queue_per_replica: f64,
+    /// …and down below this many (the hysteresis band between the two
+    /// watermarks is what prevents flapping).
+    pub low_queue_per_replica: f64,
+    /// Scale up when the windowed p99 TTFT exceeds this (sim seconds).
+    pub high_p99_ttft_secs: f64,
+    /// Scale up when the fleet saw at least this many OOM events in the
+    /// signal window.
+    pub high_oom_events: usize,
+    /// How long a signal must persist before acting.
+    pub hold_secs: f64,
+    /// Quiet period after any applied spawn/retire.
+    pub cooldown_secs: f64,
+    /// Signal evaluation cadence.
+    pub eval_every_secs: f64,
+    /// Signal look-back window. Keep ≤ the fleet's `oom_window_secs`:
+    /// the replicas' OOM pressure marks are trimmed to that horizon.
+    pub signal_window_secs: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 8,
+            high_queue_per_replica: 9.0,
+            low_queue_per_replica: 1.0,
+            high_p99_ttft_secs: 8.0,
+            high_oom_events: 6,
+            hold_secs: 4.0,
+            cooldown_secs: 20.0,
+            eval_every_secs: 1.0,
+            signal_window_secs: 15.0,
+        }
+    }
+}
+
+/// One evaluation's worth of fleet-level signals.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetSignals {
+    /// Replicas currently accepting routed work.
+    pub serving: usize,
+    /// Queued + in-flight requests across live replicas.
+    pub outstanding: usize,
+    /// p99 TTFT of requests finished inside the signal window (NaN when
+    /// none finished — NaN compares false, so it never trips a
+    /// watermark).
+    pub p99_ttft: f64,
+    /// OOM events observed inside the signal window.
+    pub recent_ooms: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Up,
+    Down,
+    Hold,
+}
+
+#[derive(Clone, Debug)]
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    /// Sim time the high (resp. low) condition became continuously true.
+    high_since: Option<f64>,
+    low_since: Option<f64>,
+    last_eval_at: f64,
+    last_action_at: f64,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Autoscaler {
+        Autoscaler {
+            cfg,
+            high_since: None,
+            low_since: None,
+            last_eval_at: f64::NEG_INFINITY,
+            last_action_at: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Whether `t` is an evaluation tick — callers can skip computing
+    /// signals entirely between ticks (`decide` would discard them).
+    pub fn due(&self, t: f64) -> bool {
+        t - self.last_eval_at >= self.cfg.eval_every_secs
+    }
+
+    /// Evaluate the signals at sim time `t`. Returns `Hold` between
+    /// evaluation ticks and while cooling down; bounds (`min_replicas`,
+    /// `max_replicas`) are enforced here against `signals.serving`. The
+    /// caller applies the decision and reports success via
+    /// [`Autoscaler::note_action`], which starts the cooldown.
+    pub fn decide(&mut self, t: f64, s: &FleetSignals) -> ScaleDecision {
+        if !self.due(t) {
+            return ScaleDecision::Hold;
+        }
+        self.last_eval_at = t;
+        let per = s.outstanding as f64 / s.serving.max(1) as f64;
+        let high = per > self.cfg.high_queue_per_replica
+            || s.p99_ttft > self.cfg.high_p99_ttft_secs
+            || s.recent_ooms >= self.cfg.high_oom_events;
+        let low = per < self.cfg.low_queue_per_replica
+            && !(s.p99_ttft > self.cfg.high_p99_ttft_secs)
+            && s.recent_ooms == 0;
+        self.high_since = if high { self.high_since.or(Some(t)) }
+                          else { None };
+        self.low_since = if low { self.low_since.or(Some(t)) }
+                         else { None };
+        if t - self.last_action_at < self.cfg.cooldown_secs {
+            return ScaleDecision::Hold;
+        }
+        if high
+            && s.serving < self.cfg.max_replicas
+            && t - self.high_since.unwrap() >= self.cfg.hold_secs
+        {
+            return ScaleDecision::Up;
+        }
+        if low
+            && s.serving > self.cfg.min_replicas
+            && t - self.low_since.unwrap() >= self.cfg.hold_secs
+        {
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+
+    /// The fleet applied a scale action at `t`: start the cooldown and
+    /// reset the hysteresis holds.
+    pub fn note_action(&mut self, t: f64) {
+        self.last_action_at = t;
+        self.high_since = None;
+        self.low_since = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 4,
+            hold_secs: 3.0,
+            cooldown_secs: 10.0,
+            eval_every_secs: 1.0,
+            ..AutoscaleConfig::default()
+        }
+    }
+
+    fn overloaded(serving: usize) -> FleetSignals {
+        FleetSignals { serving, outstanding: serving * 50,
+                       p99_ttft: f64::NAN, recent_ooms: 0 }
+    }
+
+    fn idle_signals(serving: usize) -> FleetSignals {
+        FleetSignals { serving, outstanding: 0, p99_ttft: f64::NAN,
+                       recent_ooms: 0 }
+    }
+
+    #[test]
+    fn sustained_high_scales_up_after_hold_not_before() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.decide(0.0, &overloaded(2)), ScaleDecision::Hold);
+        assert_eq!(a.decide(1.0, &overloaded(2)), ScaleDecision::Hold);
+        assert_eq!(a.decide(2.0, &overloaded(2)), ScaleDecision::Hold);
+        // 3 s of sustained pressure → up
+        assert_eq!(a.decide(3.0, &overloaded(2)), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn one_tick_spike_does_not_scale() {
+        let mut a = Autoscaler::new(cfg());
+        a.decide(0.0, &overloaded(2));
+        a.decide(1.0, &overloaded(2));
+        // the spike clears: hold resets
+        assert_eq!(a.decide(2.0, &idle_signals(2)), ScaleDecision::Hold);
+        assert_eq!(a.decide(3.0, &overloaded(2)), ScaleDecision::Hold);
+        assert_eq!(a.decide(4.0, &overloaded(2)), ScaleDecision::Hold);
+        assert_eq!(a.decide(5.0, &overloaded(2)), ScaleDecision::Hold);
+        assert_eq!(a.decide(6.0, &overloaded(2)), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn cooldown_bounds_the_action_rate() {
+        let mut a = Autoscaler::new(cfg());
+        let mut ups = 0;
+        let mut t = 0.0;
+        while t < 100.0 {
+            if a.decide(t, &overloaded(2)) == ScaleDecision::Up {
+                ups += 1;
+                a.note_action(t);
+            }
+            t += 1.0;
+        }
+        // cooldown 10 s + 3 s hold re-arm → at most one action per 13 s
+        assert!(ups >= 2, "never scaled under constant overload");
+        assert!(ups <= 100 / 10 + 1, "cooldown failed to bound actions: \
+                 {ups}");
+    }
+
+    #[test]
+    fn respects_replica_bounds() {
+        let mut a = Autoscaler::new(cfg());
+        for t in 0..10 {
+            let d = a.decide(t as f64, &overloaded(4)); // at max
+            assert_eq!(d, ScaleDecision::Hold, "scaled past max");
+        }
+        let mut a = Autoscaler::new(cfg());
+        for t in 0..10 {
+            let d = a.decide(t as f64, &idle_signals(1)); // at min
+            assert_eq!(d, ScaleDecision::Hold, "retired past min");
+        }
+    }
+
+    #[test]
+    fn sustained_low_scales_down() {
+        let mut a = Autoscaler::new(cfg());
+        a.decide(0.0, &idle_signals(3));
+        a.decide(1.0, &idle_signals(3));
+        a.decide(2.0, &idle_signals(3));
+        assert_eq!(a.decide(3.0, &idle_signals(3)), ScaleDecision::Down);
+        a.note_action(3.0);
+        // cooling down: no flapping even though the signal is still low
+        assert_eq!(a.decide(4.0, &idle_signals(2)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn oom_pressure_alone_triggers_up() {
+        let mut a = Autoscaler::new(cfg());
+        let s = FleetSignals { serving: 2, outstanding: 0,
+                               p99_ttft: f64::NAN, recent_ooms: 50 };
+        a.decide(0.0, &s);
+        a.decide(1.0, &s);
+        a.decide(2.0, &s);
+        assert_eq!(a.decide(3.0, &s), ScaleDecision::Up);
+    }
+}

@@ -1,6 +1,8 @@
 //! The fleet event loop: one shared simulated clock driving N externally
-//! stepped engines, a router in front, and a drain/respawn maintenance
-//! pass for replicas under sustained OOM pressure.
+//! stepped engines, a router in front, and a maintenance pass that keeps
+//! the fleet healthy — drain/respawn for replicas under sustained OOM
+//! pressure, cross-replica migration of in-flight sequences
+//! (`FleetConfig::migrate`), and autoscaling (`FleetConfig::autoscale`).
 //!
 //! Time model: the fleet advances in events — the next trace arrival or
 //! the next maintenance tick, whichever comes first. Every replica is
@@ -8,16 +10,31 @@
 //! routed. Individual engines may overshoot the barrier by at most one
 //! compute step (documented on `Engine::step_to`); latency accounting
 //! uses true arrival times, so the skew never leaks into metrics.
+//!
+//! Migration model: when interference collapses a replica's
+//! `Sys_avail(t)` headroom, its engine parks victims (chosen by KV bytes
+//! × remaining decode — see `EvictionMode::Park`) instead of evicting
+//! them, and the fleet ships each parked state to the peer with the most
+//! KV headroom, charging the sim backend's modeled transfer cost
+//! (`Runtime::transfer_cost`) before the payload lands. Queued work on a
+//! collapsed replica is rebalanced the same way before the engines step,
+//! so requests are not burned by a pressure wall they never had a chance
+//! against. When no peer can take a victim, the fleet falls back to the
+//! classic local requeue (and charges the eviction).
 
 use anyhow::Result;
 
+use super::autoscaler::{Autoscaler, FleetSignals, ScaleDecision};
 use super::metrics::{FleetReport, ReplicaReport};
 use super::replica::{build_sim_replica, Replica, ReplicaSpec,
                      ReplicaState};
 use super::router::{Router, RouterPolicy};
 use crate::model_meta::ModelMeta;
+use crate::server::engine::{EvictionMode, SeqState};
 use crate::util::stats::{mean, percentile};
 use crate::workload::{Request, TraceConfig, TraceGenerator};
+
+pub use super::autoscaler::AutoscaleConfig;
 
 #[derive(Clone, Copy, Debug)]
 pub struct FleetConfig {
@@ -31,6 +48,23 @@ pub struct FleetConfig {
     pub tick_secs: f64,
     /// Hard stop for one `run_trace` call (sim seconds).
     pub max_sim_secs: f64,
+    /// Migrate in-flight sequences off pressured replicas instead of
+    /// evicting them locally (engines switch to `EvictionMode::Park`).
+    pub migrate: bool,
+    /// Spawn/retire replicas from fleet-level load signals. `None`
+    /// keeps the fixed-size drain/respawn-only fleet.
+    pub autoscale: Option<AutoscaleConfig>,
+}
+
+impl FleetConfig {
+    /// The engine-level eviction mode this fleet config implies.
+    fn eviction_mode(&self) -> EvictionMode {
+        if self.migrate {
+            EvictionMode::Park
+        } else {
+            EvictionMode::Requeue
+        }
+    }
 }
 
 impl Default for FleetConfig {
@@ -41,8 +75,19 @@ impl Default for FleetConfig {
             respawn_secs: 8.0,
             tick_secs: 0.5,
             max_sim_secs: 3600.0,
+            migrate: false,
+            autoscale: None,
         }
     }
+}
+
+/// One sequence state in flight between replicas.
+struct Transfer {
+    state: SeqState,
+    src: usize,
+    dest: usize,
+    /// Sim time the payload lands (dispatch + modeled transfer cost).
+    arrive_at: f64,
 }
 
 pub struct Fleet {
@@ -53,32 +98,259 @@ pub struct Fleet {
     pub clock: f64,
     /// Arrivals no accepting replica could take.
     pub dropped: u64,
+    /// Sequence states currently in flight between replicas.
+    transfers: Vec<Transfer>,
+    /// Completed migrations and the payload bytes they moved.
+    pub migrations: u64,
+    pub migration_bytes: u64,
+    /// Replicas added by the autoscaler.
+    pub spawns: u64,
+    /// Replicas retired by the autoscaler.
+    pub retires: u64,
+    autoscaler: Option<Autoscaler>,
+    /// Replica factory for autoscale spawns (id → fresh replica).
+    spawner: Option<Box<dyn Fn(usize) -> Replica>>,
 }
 
 impl Fleet {
-    pub fn new(replicas: Vec<Replica>, router: Router, cfg: FleetConfig)
-               -> Fleet {
+    pub fn new(mut replicas: Vec<Replica>, router: Router,
+               cfg: FleetConfig) -> Fleet {
         assert_eq!(router.decisions.len(), replicas.len(),
                    "router sized for a different fleet");
-        Fleet { cfg, replicas, router, clock: 0.0, dropped: 0 }
+        for r in &mut replicas {
+            r.engine.cfg.eviction = cfg.eviction_mode();
+        }
+        Fleet {
+            autoscaler: cfg.autoscale.map(Autoscaler::new),
+            cfg,
+            replicas,
+            router,
+            clock: 0.0,
+            dropped: 0,
+            transfers: Vec::new(),
+            migrations: 0,
+            migration_bytes: 0,
+            spawns: 0,
+            retires: 0,
+            spawner: None,
+        }
+    }
+
+    /// Install a replica factory so autoscale-up can add capacity. The
+    /// closure receives the new replica's id (ids never repeat —
+    /// retired replicas stay in the roster).
+    pub fn with_spawner(mut self,
+                        f: impl Fn(usize) -> Replica + 'static) -> Fleet {
+        self.spawner = Some(Box::new(f));
+        self
     }
 
     fn all_idle(&self) -> bool {
-        self.replicas.iter().all(|r| r.engine.idle())
+        self.transfers.is_empty()
+            && self.replicas.iter().all(|r| {
+                r.engine.idle() && r.engine.parked_len() == 0
+            })
     }
 
-    /// Step every replica to `t`, then run the drain/respawn pass.
+    /// Step every replica to `t`, then run the maintenance passes:
+    /// migration (queue rebalance before the step, parked pickup and
+    /// transfer delivery after), drain/respawn, and autoscaling.
     fn step_all(&mut self, t: f64) -> Result<()> {
+        if self.cfg.migrate {
+            self.rebalance_queued(t);
+        }
         for r in &mut self.replicas {
             r.step_to(t)?;
         }
+        if self.cfg.migrate {
+            self.dispatch_parked(t);
+        }
+        self.deliver_transfers(t)?;
         self.maintain(t);
+        self.autoscale(t);
         Ok(())
     }
 
+    // ---- migration ----------------------------------------------------
+
+    /// A replica whose footprint exceeds `Sys_avail(t)` cannot start
+    /// queued work (and is about to shed in-flight work); move its
+    /// admission queue to peers with headroom before the engines step,
+    /// so the queue isn't burned by head-of-line rejections against a
+    /// pressure wall.
+    fn rebalance_queued(&mut self, t: f64) {
+        for src in 0..self.replicas.len() {
+            let collapsed = {
+                let r = &self.replicas[src];
+                r.live()
+                    && !r.engine.batcher.waiting.is_empty()
+                    && r.engine.bytes_used()
+                        > r.engine.monitor.available_at(t)
+            };
+            if !collapsed {
+                continue;
+            }
+            let reqs = self.replicas[src].engine.take_waiting();
+            for req in reqs {
+                self.send_state(src, SeqState::Queued(req), t);
+            }
+        }
+    }
+
+    /// Collect the sequences each engine parked under memory pressure
+    /// during this step and ship them out.
+    fn dispatch_parked(&mut self, t: f64) {
+        for src in 0..self.replicas.len() {
+            if self.replicas[src].engine.parked_len() == 0 {
+                continue;
+            }
+            let parked = self.replicas[src].engine.take_parked();
+            for state in parked {
+                self.send_state(src, state, t);
+            }
+        }
+    }
+
+    /// Per-destination load already committed but not yet landed:
+    /// (pending transfer count, projected full-length KV bytes of each
+    /// pending sequence at its destination). Folding this into the
+    /// target score stops one maintenance pass from herding every
+    /// refugee onto the same peer before any of them arrive.
+    fn pending_per_dest(&self) -> (Vec<usize>, Vec<usize>) {
+        let mut count = vec![0usize; self.replicas.len()];
+        let mut bytes = vec![0usize; self.replicas.len()];
+        for tr in &self.transfers {
+            count[tr.dest] += 1;
+            bytes[tr.dest] += self.replicas[tr.dest]
+                .engine
+                .admission_cost(tr.state.request());
+        }
+        (count, bytes)
+    }
+
+    fn pick_target(&self, src: usize, state: &SeqState, t: f64)
+                   -> Option<usize> {
+        let (count, bytes) = self.pending_per_dest();
+        migration_target(&self.replicas, src, state, t, &count, &bytes)
+    }
+
+    /// Ship one sequence state from `src` to the best destination, or
+    /// hand it back to `src` (a local requeue — the classic eviction)
+    /// when no peer can take it.
+    fn send_state(&mut self, src: usize, state: SeqState, t: f64) {
+        let bytes = state.transfer_bytes();
+        match self.pick_target(src, &state, t) {
+            Some(dest) => {
+                let cost =
+                    self.replicas[src].engine.rt.transfer_cost(bytes);
+                self.transfers.push(Transfer {
+                    state,
+                    src,
+                    dest,
+                    arrive_at: t + cost,
+                });
+            }
+            None => self.requeue_local(src, state),
+        }
+    }
+
+    /// No destination: fall back to the classic local eviction — the
+    /// request restarts from its prompt (any KV is dropped) and the
+    /// eviction is charged to `src`'s metrics. If `src` itself went
+    /// offline while the move was in flight (drained, retiring), the
+    /// request joins the first accepting replica's queue instead:
+    /// offline replicas must never be handed new work.
+    fn requeue_local(&mut self, src: usize, state: SeqState) {
+        let home = if self.replicas[src].accepting() {
+            src
+        } else {
+            self.replicas
+                .iter()
+                .position(|r| r.accepting())
+                .unwrap_or(src)
+        };
+        match state {
+            SeqState::Queued(req) => {
+                self.replicas[home].engine.batcher.waiting.push_back(req);
+            }
+            SeqState::Active { req, .. } => {
+                self.replicas[src].engine.metrics.evictions += 1;
+                self.replicas[home].engine.batcher.waiting.push_front(req);
+            }
+        }
+    }
+
+    /// Land transfers whose payload has arrived. A destination that
+    /// stopped accepting while the payload was in flight is re-resolved
+    /// (the state already left its source, so it waits one tick); when
+    /// no peer can take it at all, the move is abandoned and the
+    /// sequence requeues at its source — it must never be lost or spin
+    /// in flight until the deadline.
+    fn deliver_transfers(&mut self, t: f64) -> Result<()> {
+        let pending = std::mem::take(&mut self.transfers);
+        for tr in pending {
+            if tr.arrive_at > t {
+                self.transfers.push(tr);
+                continue;
+            }
+            if !self.replicas[tr.dest].accepting() {
+                match self.pick_target(tr.src, &tr.state, t) {
+                    Some(dest) => self.transfers.push(Transfer {
+                        dest,
+                        arrive_at: t + self.cfg.tick_secs,
+                        ..tr
+                    }),
+                    None => {
+                        // No peer — but if the source itself recovered
+                        // while the payload was in flight, re-import
+                        // there losslessly (no interconnect charge for
+                        // coming home) instead of dropping the KV.
+                        let src = &self.replicas[tr.src];
+                        let src_ok = src.accepting()
+                            && src.kv_headroom(t)
+                                > src.engine
+                                    .admission_cost(tr.state.request())
+                            && src.engine.can_import(&tr.state);
+                        if src_ok {
+                            self.replicas[tr.src]
+                                .engine
+                                .import_sequence(tr.state)?;
+                        } else {
+                            self.requeue_local(tr.src, tr.state);
+                        }
+                    }
+                }
+                continue;
+            }
+            if self.replicas[tr.dest].engine.can_import(&tr.state) {
+                let bytes = tr.state.transfer_bytes() as u64;
+                self.replicas[tr.dest].engine.import_sequence(tr.state)?;
+                // counted on delivery (not dispatch), so abandoned
+                // moves never desynchronize the in/out/aggregate
+                // counters
+                self.replicas[tr.src].migrations_out += 1;
+                self.replicas[tr.dest].migrations_in += 1;
+                self.migrations += 1;
+                self.migration_bytes += bytes;
+            } else {
+                // Shape mismatch across heterogeneous models: the
+                // payload is useless there — the sequence restarts from
+                // its prompt. A lossy move is an eviction, not a
+                // migration, in the books.
+                let req = tr.state.request().clone();
+                self.replicas[tr.src].engine.metrics.evictions += 1;
+                self.replicas[tr.dest].engine.enqueue(req);
+            }
+        }
+        Ok(())
+    }
+
+    // ---- lifecycle ----------------------------------------------------
+
     /// Lifecycle maintenance: drain replicas under sustained pressure
-    /// (never the last serving one), move drained-empty replicas into
-    /// their respawn cool-down. Respawn completion happens inside
+    /// (never the last serving one), and move drained-empty replicas on
+    /// to their next state — a respawn cool-down, or `Retired` when the
+    /// autoscaler flagged them. Respawn completion happens inside
     /// `Replica::step_to`.
     fn maintain(&mut self, t: f64) {
         let mut serving = self
@@ -100,21 +372,133 @@ impl Fleet {
                     }
                 }
                 ReplicaState::Draining => {
-                    if r.engine.idle() {
-                        r.state = ReplicaState::Respawning {
-                            until: t + self.cfg.respawn_secs,
-                        };
-                        r.respawns += 1;
+                    if r.engine.idle() && r.engine.parked_len() == 0 {
+                        if r.retiring {
+                            r.state = ReplicaState::Retired;
+                        } else {
+                            r.state = ReplicaState::Respawning {
+                                until: t + self.cfg.respawn_secs,
+                            };
+                            r.respawns += 1;
+                        }
                     }
                 }
-                ReplicaState::Respawning { .. } => {}
+                ReplicaState::Respawning { .. }
+                | ReplicaState::Retired => {}
             }
         }
     }
 
+    // ---- autoscaling --------------------------------------------------
+
+    /// Fleet-level load signals over the trailing `window` seconds.
+    fn signals(&mut self, t: f64, window: f64) -> FleetSignals {
+        let serving =
+            self.replicas.iter().filter(|r| r.accepting()).count();
+        let outstanding: usize = self
+            .replicas
+            .iter()
+            .filter(|r| r.live())
+            .map(|r| r.outstanding())
+            .sum();
+        let t0 = t - window;
+        let mut ttfts = Vec::new();
+        let mut recent_ooms = 0usize;
+        for r in &mut self.replicas {
+            recent_ooms += r.ooms_since(t0);
+            r.recent_ttfts(t0, &mut ttfts);
+        }
+        FleetSignals {
+            serving,
+            outstanding,
+            p99_ttft: percentile(&ttfts, 99.0),
+            recent_ooms,
+        }
+    }
+
+    fn autoscale(&mut self, t: f64) {
+        let Some(mut scaler) = self.autoscaler.take() else {
+            return;
+        };
+        // signal collection scans completion records — skip it entirely
+        // between the scaler's evaluation ticks
+        if !scaler.due(t) {
+            self.autoscaler = Some(scaler);
+            return;
+        }
+        let signals = self.signals(t, scaler.cfg.signal_window_secs);
+        let applied = match scaler.decide(t, &signals) {
+            ScaleDecision::Up => self.spawn_replica(),
+            ScaleDecision::Down => self.retire_replica(),
+            ScaleDecision::Hold => false,
+        };
+        if applied {
+            scaler.note_action(t);
+        }
+        self.autoscaler = Some(scaler);
+    }
+
+    /// Add a replica via the installed spawner. Returns false when no
+    /// spawner is installed — the fleet then simply cannot scale up —
+    /// or when the replicas that will eventually serve again (serving,
+    /// pressure-draining, or respawning) already fill `max_replicas`:
+    /// the scaler's own bound only sees the *currently accepting*
+    /// count, which dips while a drained replica cools down.
+    fn spawn_replica(&mut self) -> bool {
+        let Some(spawner) = &self.spawner else {
+            return false;
+        };
+        if let Some(auto) = &self.cfg.autoscale {
+            let returning = self
+                .replicas
+                .iter()
+                .filter(|r| r.live() && !r.retiring)
+                .count();
+            if returning >= auto.max_replicas {
+                return false;
+            }
+        }
+        let id = self.replicas.len();
+        let mut r = spawner(id);
+        r.id = id;
+        r.engine.cfg.eviction = self.cfg.eviction_mode();
+        self.replicas.push(r);
+        self.router.decisions.push(0);
+        self.spawns += 1;
+        true
+    }
+
+    /// Begin retiring the least-loaded serving replica: it stops
+    /// accepting work, drains, and parks as `Retired`. Ties break
+    /// toward the highest id so the original fleet core is the last to
+    /// go. Returns false when only one serving replica remains.
+    fn retire_replica(&mut self) -> bool {
+        let serving =
+            self.replicas.iter().filter(|r| r.accepting()).count();
+        if serving <= 1 {
+            return false;
+        }
+        let pick = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.accepting())
+            .min_by_key(|(i, r)| (r.outstanding(), std::cmp::Reverse(*i)))
+            .map(|(i, _)| i);
+        let Some(i) = pick else {
+            return false;
+        };
+        self.replicas[i].retiring = true;
+        self.replicas[i].state = ReplicaState::Draining;
+        self.retires += 1;
+        true
+    }
+
+    // ---- the event loop -----------------------------------------------
+
     /// Replay a trace across the fleet and report. Arrivals are routed
-    /// at their arrival time; the run ends when all work has drained (or
-    /// at `max_sim_secs`).
+    /// at their arrival time; the run ends when all work has drained —
+    /// in-flight transfers included — or at `max_sim_secs`.
     pub fn run_trace(&mut self, mut requests: Vec<Request>)
                      -> Result<FleetReport> {
         requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
@@ -159,6 +543,7 @@ impl Fleet {
         let mut ttfts = Vec::new();
         let mut completed = 0usize;
         let mut rejected = 0u64;
+        let mut evictions = 0u64;
         let mut oom_events = 0u64;
         let mut respawns = 0u64;
         let mut replicas = Vec::with_capacity(self.replicas.len());
@@ -169,6 +554,7 @@ impl Fleet {
             }
             completed += r.engine.metrics.completed.len();
             rejected += r.engine.metrics.rejected;
+            evictions += r.engine.metrics.evictions;
             oom_events += r.engine.metrics.oom_events;
             respawns += r.respawns;
             replicas.push(ReplicaReport {
@@ -177,6 +563,8 @@ impl Fleet {
                 capacity_bytes: r.engine.monitor.cfg.capacity,
                 routed: r.routed,
                 respawns: r.respawns,
+                migrations_in: r.migrations_in,
+                migrations_out: r.migrations_out,
                 serve: r.engine.metrics.report(wall),
             });
         }
@@ -187,9 +575,14 @@ impl Fleet {
             total_requests: routed + self.dropped,
             completed,
             rejected,
+            evictions,
             dropped: self.dropped,
             oom_events,
             respawns,
+            spawns: self.spawns,
+            retires: self.retires,
+            migrations: self.migrations,
+            migration_bytes: self.migration_bytes,
             mean_latency: mean(&lats),
             p50_latency: percentile(&lats, 50.0),
             p99_latency: percentile(&lats, 99.0),
@@ -200,6 +593,42 @@ impl Fleet {
             replicas,
         }
     }
+}
+
+/// Destination scoring for one migrating sequence — the rap-aware
+/// router's shape, applied to migration: memory surplus after taking
+/// the sequence's projected full-length cache, discounted by queue
+/// depth. Requiring positive surplus keeps migration memory-safe; the
+/// queue discount stops a pressure wall from herding every refugee
+/// onto the single roomiest replica (one deep queue is how tail
+/// latency dies). `pending_count` / `pending_bytes` are per-replica
+/// in-flight transfer loads (see `Fleet::pending_per_dest`), charged
+/// as if already landed so a burst of sends inside one maintenance
+/// pass spreads out. Ties break toward the lowest index, so migration
+/// is deterministic.
+pub fn migration_target(replicas: &[Replica], src: usize,
+                        state: &SeqState, t: f64,
+                        pending_count: &[usize],
+                        pending_bytes: &[usize]) -> Option<usize> {
+    let req = state.request();
+    let mut best: Option<(usize, f64)> = None;
+    for (i, r) in replicas.iter().enumerate() {
+        if i == src || !r.accepting() {
+            continue;
+        }
+        let headroom =
+            r.kv_headroom(t).saturating_sub(pending_bytes[i]);
+        let need = r.engine.admission_cost(req);
+        if headroom <= need {
+            continue;
+        }
+        let score = (headroom - need) as f64
+            / (1.0 + (r.outstanding() + pending_count[i]) as f64);
+        if best.map_or(true, |(_, s)| score > s) {
+            best = Some((i, score));
+        }
+    }
+    best.map(|(i, _)| i)
 }
 
 /// The model every default sim replica serves: small enough that fleet
@@ -214,13 +643,42 @@ pub fn default_sim_meta() -> ModelMeta {
 /// seed.
 pub fn default_sim_fleet(n_replicas: usize, seed: u64,
                          policy: RouterPolicy) -> Fleet {
+    default_sim_fleet_with(n_replicas, seed, policy,
+                           FleetConfig::default())
+}
+
+/// As [`default_sim_fleet`], with an explicit fleet config (set
+/// `migrate` / `autoscale` for elastic serving). The installed spawner
+/// reuses the same heterogeneous palette, so autoscaled fleets stay
+/// deterministic per seed.
+pub fn default_sim_fleet_with(n_replicas: usize, seed: u64,
+                              policy: RouterPolicy, cfg: FleetConfig)
+                              -> Fleet {
     let meta = default_sim_meta();
     let replicas: Vec<Replica> = (0..n_replicas)
         .map(|i| build_sim_replica(i, &meta,
                                    &ReplicaSpec::heterogeneous(i), seed))
         .collect();
     let router = Router::new(policy, n_replicas);
-    Fleet::new(replicas, router, FleetConfig::default())
+    Fleet::new(replicas, router, cfg).with_spawner(move |id| {
+        build_sim_replica(id, &meta, &ReplicaSpec::heterogeneous(id),
+                          seed)
+    })
+}
+
+/// A fleet of `n` identical replicas built from one spec — scenario
+/// tests and the elastic experiment use this to control device speed
+/// and memory exactly. The spawner clones the same spec.
+pub fn uniform_sim_fleet(n: usize, seed: u64, policy: RouterPolicy,
+                         cfg: FleetConfig, spec: ReplicaSpec) -> Fleet {
+    let meta = default_sim_meta();
+    let replicas: Vec<Replica> = (0..n)
+        .map(|i| build_sim_replica(i, &meta, &spec, seed))
+        .collect();
+    let router = Router::new(policy, n);
+    Fleet::new(replicas, router, cfg).with_spawner(move |id| {
+        build_sim_replica(id, &meta, &spec, seed)
+    })
 }
 
 /// A diurnal + bursty trace sized for `default_sim_meta` (generation cap
@@ -237,6 +695,142 @@ pub fn default_fleet_trace(seed: u64, secs: f64) -> Vec<Request> {
         seed,
     );
     gen.generate(0.0, secs)
+}
+
+// ---- scenario traces (elastic-fleet harness) --------------------------
+
+/// Constant-rate stages back to back (bursts and diurnal swing off),
+/// ids reassigned to stay unique across stage boundaries.
+fn staged_trace(seed: u64, stages: &[(f64, f64)]) -> Vec<Request> {
+    let mut out: Vec<Request> = Vec::new();
+    let mut t0 = 0.0;
+    for (k, &(secs, rate)) in stages.iter().enumerate() {
+        let mut gen = TraceGenerator::new(
+            TraceConfig {
+                base_rate: rate,
+                diurnal_amp: 0.0,
+                bursts_per_day: 0.0,
+                day_secs: secs.max(1.0),
+                gen_max: 48,
+                ..TraceConfig::default()
+            },
+            seed.wrapping_add(7919 * (k as u64 + 1)),
+        );
+        let mut reqs = gen.generate(0.0, secs);
+        for r in &mut reqs {
+            r.arrival += t0;
+        }
+        out.extend(reqs);
+        t0 += secs;
+    }
+    for (i, r) in out.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    out
+}
+
+/// Ramp-up: the arrival rate staircases 0.5 → 6 req/s across `secs`.
+pub fn ramp_up_trace(seed: u64, secs: f64) -> Vec<Request> {
+    let s = secs / 4.0;
+    staged_trace(seed, &[(s, 0.5), (s, 1.5), (s, 3.0), (s, 6.0)])
+}
+
+/// Drain-down: the ramp in reverse.
+pub fn drain_down_trace(seed: u64, secs: f64) -> Vec<Request> {
+    let s = secs / 4.0;
+    staged_trace(seed, &[(s, 6.0), (s, 3.0), (s, 1.5), (s, 0.5)])
+}
+
+/// Length of the elastic demo scenario (`elastic_demo_fleet` +
+/// `elastic_demo_trace`).
+pub const ELASTIC_DEMO_SECS: f64 = 120.0;
+
+/// The elastic-serving demo scenario shared by `tests/elastic_fleet.rs`
+/// and `rap experiment fleet --elastic`: two slow static-dense replicas
+/// behind the least-outstanding router, hit by a burst storm while a
+/// periodic interference wall (10 s every 25 s) leaves replica 0 less
+/// than the dense parameter footprint — exactly the squeeze migration
+/// and autoscaling exist for. `elastic = false` is the fixed-size
+/// drain/respawn baseline; `true` turns on migration plus a
+/// burst-reactive autoscaler (short hold/cooldown — a storm is over
+/// before the conservative defaults would act). Everything else
+/// (replicas, trace, router, thresholds) is identical, and
+/// deterministic per seed.
+pub fn elastic_demo_fleet(seed: u64, elastic: bool) -> Fleet {
+    use crate::server::memmon::{MemMonConfig, MemoryMonitor};
+
+    let spec = ReplicaSpec {
+        // ~1 req/s per replica at this model size: the storm's bursts
+        // overload the pair, and sequences live long enough for the
+        // walls to catch them mid-decode
+        flops_per_sec: 1.0e8,
+        app_rate: 0.0, // interference is the explicit wall below
+        adaptive: false, // static dense: isolate fleet mechanics
+        capacity_mult: 2.5,
+        ..ReplicaSpec::heterogeneous(0)
+    };
+    let cfg = FleetConfig {
+        migrate: elastic,
+        autoscale: if elastic {
+            Some(AutoscaleConfig {
+                min_replicas: 2,
+                max_replicas: 8,
+                hold_secs: 2.0,
+                cooldown_secs: 5.0,
+                eval_every_secs: 0.5,
+                signal_window_secs: 10.0,
+                high_p99_ttft_secs: 4.0,
+                ..AutoscaleConfig::default()
+            })
+        } else {
+            None
+        },
+        max_sim_secs: ELASTIC_DEMO_SECS + 3600.0,
+        ..FleetConfig::default()
+    };
+    let mut fleet = uniform_sim_fleet(2, seed,
+                                      RouterPolicy::LeastOutstanding,
+                                      cfg, spec);
+    // Replica 0: 4× params capacity, so between walls it serves its
+    // share of in-flight work. Each wall leaves only half the dense
+    // parameter footprint available: whatever is mid-decode there must
+    // move or die.
+    let params = fleet.replicas[0].engine.bytes_used();
+    let cap = params * 4;
+    let walls: Vec<(f64, f64, usize)> = (0..4)
+        .map(|k| (15.0 + 25.0 * k as f64, 25.0 + 25.0 * k as f64,
+                  cap - params / 2))
+        .collect();
+    fleet.replicas[0].engine.monitor = MemoryMonitor::with_spans(
+        MemMonConfig::for_capacity(cap), &walls);
+    fleet
+}
+
+/// The burst-storm trace `elastic_demo_fleet` is squeezed with.
+pub fn elastic_demo_trace(seed: u64) -> Vec<Request> {
+    burst_storm_trace(seed, ELASTIC_DEMO_SECS)
+}
+
+/// Burst storm: a calm baseline punctured by dense burst episodes.
+pub fn burst_storm_trace(seed: u64, secs: f64) -> Vec<Request> {
+    let mut gen = TraceGenerator::new(
+        TraceConfig {
+            base_rate: 1.0,
+            diurnal_amp: 0.0,
+            day_secs: secs.max(60.0),
+            bursts_per_day: (secs / 25.0).ceil().max(2.0),
+            burst_mult: 8.0,
+            burst_secs: 6.0,
+            gen_max: 48,
+            ..TraceConfig::default()
+        },
+        seed,
+    );
+    let mut reqs = gen.generate(0.0, secs);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    reqs
 }
 
 #[cfg(test)]
@@ -259,6 +853,8 @@ mod tests {
         // or dropped at the router
         assert!(report.completed as u64 + report.rejected + report.dropped
                 >= n);
+        // a fixed fleet never scales or migrates
+        assert_eq!(report.spawns + report.retires + report.migrations, 0);
     }
 
     #[test]
@@ -301,5 +897,131 @@ mod tests {
                 "pressured replica never respawned: {report:?}");
         // the healthy replica kept serving throughout
         assert!(report.replicas[1].serve.completed > 0);
+    }
+
+    #[test]
+    fn scenario_traces_are_deterministic_and_distinct() {
+        let builders: [fn(u64, f64) -> Vec<Request>; 3] =
+            [ramp_up_trace, drain_down_trace, burst_storm_trace];
+        for build in builders {
+            let a = build(5, 80.0);
+            let b = build(5, 80.0);
+            assert!(!a.is_empty());
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert!((x.arrival - y.arrival).abs() < 1e-12);
+                assert_eq!(x.prompt_len, y.prompt_len);
+                assert_eq!(x.gen_len, y.gen_len);
+            }
+            // ids unique and arrivals ordered within [0, secs)
+            let mut prev = 0.0;
+            for (i, r) in a.iter().enumerate() {
+                assert_eq!(r.id, i as u64);
+                assert!(r.arrival >= prev - 1e-12);
+                prev = r.arrival;
+                assert!(r.arrival < 80.0 + 1e-9);
+            }
+            let c = build(6, 80.0);
+            assert_ne!(a.len(), 0);
+            let same = a.len() == c.len()
+                && a.iter().zip(&c).all(|(x, y)| {
+                    (x.arrival - y.arrival).abs() < 1e-12
+                });
+            assert!(!same, "different seeds produced the same trace");
+        }
+        // the ramp's back half is denser than its front half
+        let ramp = ramp_up_trace(5, 80.0);
+        let front =
+            ramp.iter().filter(|r| r.arrival < 40.0).count();
+        let back = ramp.len() - front;
+        assert!(back > 2 * front,
+                "ramp-up not ramping: {front} then {back}");
+    }
+
+    #[test]
+    fn spawned_replicas_join_routing_and_reports() {
+        // Force a spawn mechanically: autoscaler with a hair-trigger
+        // queue watermark and a fleet whose two replicas are buried by
+        // an arrival wave on slow devices.
+        let spec = ReplicaSpec {
+            flops_per_sec: 2.0e7,
+            app_rate: 0.0,
+            ..ReplicaSpec::heterogeneous(0)
+        };
+        let cfg = FleetConfig {
+            autoscale: Some(AutoscaleConfig {
+                min_replicas: 2,
+                max_replicas: 4,
+                high_queue_per_replica: 2.0,
+                hold_secs: 1.0,
+                cooldown_secs: 5.0,
+                ..AutoscaleConfig::default()
+            }),
+            ..FleetConfig::default()
+        };
+        let mut fleet =
+            uniform_sim_fleet(2, 11, RouterPolicy::LeastOutstanding,
+                              cfg, spec);
+        let reqs: Vec<Request> = (0..40)
+            .map(|i| Request { id: i, arrival: 0.1 * i as f64,
+                               prompt_len: 16, gen_len: 24 })
+            .collect();
+        let report = fleet.run_trace(reqs).unwrap();
+        assert!(report.spawns >= 1, "overload never spawned: {report:?}");
+        assert!(report.replicas.len() > 2);
+        assert_eq!(report.routing.len(), report.replicas.len());
+        // a spawned replica actually served traffic
+        let extra_completed: usize = report.replicas[2..]
+            .iter()
+            .map(|r| r.serve.completed)
+            .sum();
+        assert!(extra_completed > 0,
+                "spawned replicas never served: {report:?}");
+        assert_eq!(report.completed, 40);
+    }
+
+    #[test]
+    fn retire_parks_the_least_loaded_replica() {
+        let spec = ReplicaSpec {
+            app_rate: 0.0,
+            ..ReplicaSpec::heterogeneous(0)
+        };
+        let cfg = FleetConfig {
+            autoscale: Some(AutoscaleConfig {
+                min_replicas: 1,
+                max_replicas: 4,
+                hold_secs: 1.0,
+                cooldown_secs: 3.0,
+                ..AutoscaleConfig::default()
+            }),
+            ..FleetConfig::default()
+        };
+        let mut fleet = uniform_sim_fleet(3, 7, RouterPolicy::RoundRobin,
+                                          cfg, spec);
+        // a tiny trace, then a long idle tail: the scaler must shed the
+        // excess capacity down to min_replicas and no further
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request { id: i, arrival: 0.2 * i as f64,
+                               prompt_len: 12, gen_len: 4 })
+            .collect();
+        fleet.run_trace(reqs).unwrap();
+        // idle tail: drive the clock so the scaler can act
+        for k in 1..=120 {
+            fleet.step_all(fleet.clock + 0.5 * k as f64).unwrap();
+        }
+        let retired = fleet
+            .replicas
+            .iter()
+            .filter(|r| r.state == ReplicaState::Retired)
+            .count();
+        let serving = fleet
+            .replicas
+            .iter()
+            .filter(|r| r.accepting())
+            .count();
+        assert!(retired >= 1, "idle fleet never retired");
+        assert!(serving >= 1, "retired below min_replicas");
+        assert_eq!(fleet.retires as usize, retired);
     }
 }

@@ -16,6 +16,10 @@ pub struct ReplicaReport {
     /// Requests the router dispatched here.
     pub routed: u64,
     pub respawns: u64,
+    /// Sequences shipped out of / delivered into this replica by the
+    /// fleet's migration pass.
+    pub migrations_out: u64,
+    pub migrations_in: u64,
     pub serve: ServeReport,
 }
 
@@ -27,12 +31,22 @@ pub struct FleetReport {
     /// Arrivals handed to the router (routed + dropped).
     pub total_requests: u64,
     pub completed: usize,
-    /// Engine-level rejections + evict-requeues, summed over replicas.
+    /// Permanent admission rejections, summed over replicas.
     pub rejected: u64,
+    /// Local evict-and-requeue casualties (OOM evictions), summed over
+    /// replicas — the number migration exists to shrink.
+    pub evictions: u64,
     /// Arrivals the router could not place (no accepting replica).
     pub dropped: u64,
     pub oom_events: u64,
     pub respawns: u64,
+    /// Replicas added / retired by the autoscaler.
+    pub spawns: u64,
+    pub retires: u64,
+    /// Cross-replica sequence migrations completed, and the payload
+    /// bytes they moved over the modeled interconnect.
+    pub migrations: u64,
+    pub migration_bytes: u64,
     pub mean_latency: f64,
     pub p50_latency: f64,
     pub p99_latency: f64,
@@ -53,11 +67,17 @@ impl FleetReport {
     pub fn print(&self) {
         println!("── fleet report: router={} ({} replicas, {:.0}s sim)",
                  self.policy, self.replicas.len(), self.sim_secs);
-        println!("   requests {} | completed {} | rejected {} | dropped \
-                  {}", self.total_requests, self.completed, self.rejected,
-                 self.dropped);
+        println!("   requests {} | completed {} | rejected {} | evicted \
+                  {} | dropped {}", self.total_requests, self.completed,
+                 self.rejected, self.evictions, self.dropped);
         println!("   OOM events {} | respawns {} | throughput {:.2} req/s",
                  self.oom_events, self.respawns, self.throughput_rps);
+        if self.spawns + self.retires + self.migrations > 0 {
+            println!("   elastic: spawned {} | retired {} | migrated {} \
+                      ({:.1} MiB moved)",
+                     self.spawns, self.retires, self.migrations,
+                     mib(self.migration_bytes as usize));
+        }
         println!("   latency p50/p99  {:.3}s / {:.3}s   ttft p50/p99  \
                   {:.3}s / {:.3}s",
                  self.p50_latency, self.p99_latency, self.p50_ttft,
@@ -90,8 +110,12 @@ impl FleetReport {
                     ("capacity_bytes", Json::Num(r.capacity_bytes as f64)),
                     ("routed", Json::Num(r.routed as f64)),
                     ("respawns", Json::Num(r.respawns as f64)),
+                    ("migrations_out",
+                     Json::Num(r.migrations_out as f64)),
+                    ("migrations_in", Json::Num(r.migrations_in as f64)),
                     ("completed", Json::Num(r.serve.completed as f64)),
                     ("rejected", Json::Num(r.serve.rejected as f64)),
+                    ("evictions", Json::Num(r.serve.evictions as f64)),
                     ("oom_events", Json::Num(r.serve.oom_events as f64)),
                     ("mask_switches",
                      Json::Num(r.serve.mask_switches as f64)),
@@ -109,9 +133,15 @@ impl FleetReport {
             ("total_requests", Json::Num(self.total_requests as f64)),
             ("completed", Json::Num(self.completed as f64)),
             ("rejected", Json::Num(self.rejected as f64)),
+            ("evictions", Json::Num(self.evictions as f64)),
             ("dropped", Json::Num(self.dropped as f64)),
             ("oom_events", Json::Num(self.oom_events as f64)),
             ("respawns", Json::Num(self.respawns as f64)),
+            ("spawns", Json::Num(self.spawns as f64)),
+            ("retires", Json::Num(self.retires as f64)),
+            ("migrations", Json::Num(self.migrations as f64)),
+            ("migration_bytes",
+             Json::Num(self.migration_bytes as f64)),
             ("mean_latency", num(self.mean_latency)),
             ("p50_latency", num(self.p50_latency)),
             ("p99_latency", num(self.p99_latency)),
@@ -146,9 +176,14 @@ mod tests {
             total_requests: 0,
             completed: 0,
             rejected: 0,
+            evictions: 0,
             dropped: 0,
             oom_events: 0,
             respawns: 0,
+            spawns: 0,
+            retires: 0,
+            migrations: 0,
+            migration_bytes: 0,
             mean_latency: f64::NAN,
             p50_latency: f64::NAN,
             p99_latency: f64::NAN,
@@ -162,6 +197,8 @@ mod tests {
                 capacity_bytes: 1 << 20,
                 routed: 0,
                 respawns: 0,
+                migrations_out: 0,
+                migrations_in: 0,
                 serve: empty,
             }],
         };

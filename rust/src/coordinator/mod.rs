@@ -13,9 +13,10 @@
 //!
 //! Module map:
 //!   * [`replica`] — one serving [`crate::server::engine::Engine`] plus
-//!     its lifecycle (`Serving` → `Draining` → `Respawning`) and
-//!     OOM-pressure bookkeeping. Engines are *externally stepped* via
-//!     `Engine::step_to`, which is what lets N of them share a clock.
+//!     its lifecycle (`Serving` → `Draining` → `Respawning`/`Retired`)
+//!     and OOM-pressure bookkeeping. Engines are *externally stepped*
+//!     via `Engine::step_to`, which is what lets N of them share a
+//!     clock.
 //!   * [`router`] — pluggable dispatch policies: round-robin,
 //!     least-outstanding, KV-headroom-aware, and RAP-aware (scores each
 //!     replica by `Sys_avail(t)` headroom against the request's
@@ -23,21 +24,32 @@
 //!     by mask utility and queue depth).
 //!   * [`fleet`] — the event loop: admit trace arrivals, route, step all
 //!     replicas to the shared clock, drain replicas under sustained OOM
-//!     pressure and respawn them after a cool-down.
+//!     pressure and respawn them after a cool-down. With
+//!     `FleetConfig::migrate`, in-flight sequences move off pressured
+//!     replicas (KV intact, transfer cost charged) instead of being
+//!     evicted; with `FleetConfig::autoscale`, the fleet spawns and
+//!     retires replicas from aggregate load signals.
+//!   * [`autoscaler`] — the spawn/retire policy: queue depth, windowed
+//!     p99 TTFT, and OOM rate, behind hysteresis watermarks, a
+//!     persistence hold, and a cooldown.
 //!   * [`metrics`] — `FleetReport`: per-replica and aggregate p50/p99
-//!     TTFT + latency, OOM/respawn counts, and the routing histogram,
-//!     printable and serializable to JSON.
+//!     TTFT + latency, OOM/eviction/respawn counts, migration and
+//!     spawn/retire totals, and the routing histogram, printable and
+//!     serializable to JSON.
 //!
 //! Everything is seeded and deterministic: replicas run the sim runtime
 //! backend (`rap::runtime::sim`) by default, so fleet experiments replay
 //! bit-identically — `rap serve-fleet --replicas 4 --router rap` is the
 //! CLI entry point, `experiments::fleet` the policy comparison.
 
+pub mod autoscaler;
 pub mod fleet;
 pub mod metrics;
 pub mod replica;
 pub mod router;
 
+pub use autoscaler::{AutoscaleConfig, Autoscaler, FleetSignals,
+                     ScaleDecision};
 pub use fleet::{Fleet, FleetConfig};
 pub use metrics::{FleetReport, ReplicaReport};
 pub use replica::{Replica, ReplicaSpec, ReplicaState};

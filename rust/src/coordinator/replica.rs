@@ -1,6 +1,7 @@
 //! One fleet replica: a serving engine with its own memory monitor and
 //! RAP controller, plus the lifecycle and pressure bookkeeping the
-//! coordinator manages (`Serving` → `Draining` → `Respawning`).
+//! coordinator manages (`Serving` → `Draining` → `Respawning`, or →
+//! `Retired` when the autoscaler sheds capacity).
 //!
 //! A replica never owns a run loop — the fleet advances every replica to
 //! the shared clock via [`Replica::step_to`], which delegates to the
@@ -25,11 +26,17 @@ use crate::workload::Request;
 pub enum ReplicaState {
     /// Accepting routed requests.
     Serving,
-    /// Excluded from routing; finishing outstanding work.
+    /// Excluded from routing; finishing outstanding work. Ends in
+    /// `Respawning` (pressure drain) or `Retired` (autoscale-down,
+    /// flagged by `Replica::retiring`).
     Draining,
     /// Offline until the given sim time (restart cool-down), then back
     /// to `Serving` with a cleared pressure history.
     Respawning { until: f64 },
+    /// Removed from the fleet by the autoscaler. Stays in the roster
+    /// (ids are never reused, reports keep its history) but is never
+    /// routed to, stepped into work, or respawned.
+    Retired,
 }
 
 impl ReplicaState {
@@ -38,6 +45,7 @@ impl ReplicaState {
             ReplicaState::Serving => "serving",
             ReplicaState::Draining => "draining",
             ReplicaState::Respawning { .. } => "respawning",
+            ReplicaState::Retired => "retired",
         }
     }
 }
@@ -50,10 +58,20 @@ pub struct Replica {
     pub routed: u64,
     /// Completed drain → respawn cycles.
     pub respawns: u64,
+    /// Draining toward `Retired` (autoscale-down) rather than respawn.
+    pub retiring: bool,
+    /// In-flight sequences this replica shipped out (migration source).
+    pub migrations_out: u64,
+    /// Sequences delivered here from a pressured peer.
+    pub migrations_in: u64,
     /// Sim times of recent OOM events (pressure window).
     oom_marks: VecDeque<f64>,
     /// Engine OOM counter at the last harvest.
     oom_seen: u64,
+    /// Scan cursor into `engine.metrics.completed` for the autoscaler's
+    /// TTFT window (records are appended in `finished_at` order, so
+    /// records behind the cursor are permanently out of window).
+    signal_cursor: usize,
 }
 
 impl Replica {
@@ -64,14 +82,23 @@ impl Replica {
             state: ReplicaState::Serving,
             routed: 0,
             respawns: 0,
+            retiring: false,
+            migrations_out: 0,
+            migrations_in: 0,
             oom_marks: VecDeque::new(),
             oom_seen: 0,
+            signal_cursor: 0,
         }
     }
 
     /// Eligible to receive routed requests.
     pub fn accepting(&self) -> bool {
         matches!(self.state, ReplicaState::Serving)
+    }
+
+    /// Part of the fleet's working set (anything but `Retired`).
+    pub fn live(&self) -> bool {
+        !matches!(self.state, ReplicaState::Retired)
     }
 
     pub fn outstanding(&self) -> usize {
@@ -131,6 +158,32 @@ impl Replica {
             }
         }
         self.oom_marks.len()
+    }
+
+    /// OOM events at or after `t0`, without trimming — the autoscaler's
+    /// read of the pressure window (so its signal window can differ from
+    /// the drain policy's without the two fighting over the marks).
+    /// Marks older than the drain policy's window may already be gone,
+    /// so ask only about horizons inside it.
+    pub fn ooms_since(&self, t0: f64) -> usize {
+        self.oom_marks.iter().filter(|&&m| m >= t0).count()
+    }
+
+    /// Append the TTFTs of requests finished at or after `t0` to `out`.
+    /// Amortized O(new completions): the completed log is appended in
+    /// `finished_at` order, so a cursor skips everything that already
+    /// aged out of the (monotonically advancing) signal window instead
+    /// of rescanning the whole history every evaluation.
+    pub fn recent_ttfts(&mut self, t0: f64, out: &mut Vec<f64>) {
+        let completed = &self.engine.metrics.completed;
+        while self.signal_cursor < completed.len()
+            && completed[self.signal_cursor].finished_at < t0
+        {
+            self.signal_cursor += 1;
+        }
+        for rec in &completed[self.signal_cursor..] {
+            out.push(rec.ttft());
+        }
     }
 }
 

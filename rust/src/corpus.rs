@@ -123,6 +123,41 @@ impl Split {
 }
 
 impl Corpus {
+    /// Regenerate the corpus in-process — the artifact-free fallback
+    /// behind `experiments::common::setup`. Same Markov+copy family as
+    /// python/compile/corpus.py: ~20 Zipf-weighted successors per
+    /// token, copy probability 0.35 at lag 4, and a 0.35-uniform-noise
+    /// interpolated chain for the shifted ptb-sim split. Deterministic
+    /// per (vocab, seed); splits are sized for every in-tree consumer
+    /// (≥ 4096 tokens each).
+    pub fn synthetic(vocab: usize, seed: u64) -> Corpus {
+        const COPY_P: f64 = 0.35;
+        const COPY_LAG: usize = 4;
+        const PTB_NOISE: f32 = 0.35;
+        let mut rng = Rng::new(seed ^ 0xC0_52_05);
+        let chain = MarkovChain::new(
+            vocab, synthetic_chain(vocab, &mut rng), COPY_P, COPY_LAG)
+            .expect("synthetic chain is square by construction");
+        let uni = 1.0 / vocab as f32;
+        let shifted: Vec<f32> = chain
+            .trans
+            .iter()
+            .map(|&p| (1.0 - PTB_NOISE) * p + PTB_NOISE * uni)
+            .collect();
+        let chain_ptb =
+            MarkovChain::new(vocab, shifted, COPY_P, COPY_LAG)
+                .expect("shifted chain is square by construction");
+        let sample = |c: &MarkovChain, n: usize, salt: u64| {
+            let mut r = Rng::new(seed ^ salt);
+            c.sample(n, &mut r)
+        };
+        let train = sample(&chain, 8192, 0x7A1);
+        let wiki = sample(&chain, 4096, 0x7A2);
+        let ptb = sample(&chain_ptb, 4096, 0x7A3);
+        let alpaca = sample(&chain, 4096, 0x7A4);
+        Corpus { chain, chain_ptb, train, wiki, ptb, alpaca }
+    }
+
     pub fn load(corpus_dir: &Path) -> Result<Corpus> {
         let meta = Json::parse_file(&corpus_dir.join("meta.json"))?;
         let vocab = meta.get("vocab")?.usize()?;
@@ -176,6 +211,29 @@ impl Corpus {
         }
         Ok(out)
     }
+}
+
+/// Row-stochastic [V, V] transition matrix with ~20 preferred
+/// successors per token, Zipf-weighted (mirrors corpus.py's
+/// `build_chain`, modulo the PRNG).
+fn synthetic_chain(vocab: usize, rng: &mut Rng) -> Vec<f32> {
+    let branch = 20.min(vocab);
+    let mut trans = vec![0.0f32; vocab * vocab];
+    for t in 0..vocab {
+        let succ = rng.choose_k(vocab, branch);
+        let row = &mut trans[t * vocab..(t + 1) * vocab];
+        for x in row.iter_mut() {
+            *x = 1e-4;
+        }
+        for (k, &s) in succ.iter().enumerate() {
+            row[s] += 1.0 / (k + 1) as f32;
+        }
+        let sum: f32 = row.iter().sum();
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    trans
 }
 
 fn read_u16(path: &Path) -> Result<Vec<u16>> {
@@ -281,5 +339,29 @@ mod tests {
     #[test]
     fn shape_validation() {
         assert!(MarkovChain::new(4, vec![0.0; 15], 0.1, 2).is_err());
+    }
+
+    #[test]
+    fn synthetic_corpus_is_usable_and_deterministic() {
+        let c = Corpus::synthetic(64, 7);
+        // rows stochastic
+        for t in 0..64 {
+            let s: f32 = c.chain.row(t).iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {t} sums to {s}");
+            let s: f32 = c.chain_ptb.row(t).iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "ptb row {t} sums to {s}");
+        }
+        // splits big enough for the perplexity harness's largest ask
+        let batches = c.batches(Split::Wiki, 4, 128, 6, 0).unwrap();
+        assert_eq!(batches.len(), 6);
+        assert!(batches[0].iter().all(|&t| (t as usize) < 64));
+        // deterministic per seed, different across seeds
+        let c2 = Corpus::synthetic(64, 7);
+        assert_eq!(c.wiki, c2.wiki);
+        assert_eq!(c.chain.trans, c2.chain.trans);
+        let c3 = Corpus::synthetic(64, 8);
+        assert_ne!(c.wiki, c3.wiki);
+        // the shifted split really is shifted
+        assert_ne!(c.chain.trans, c.chain_ptb.trans);
     }
 }

@@ -1,10 +1,16 @@
 //! Shared setup for the experiment drivers.
+//!
+//! `setup` prefers the AOT artifacts (real PJRT execution); when they
+//! are absent it falls back to the deterministic sim backend with an
+//! in-process regenerated corpus, so every experiment, example, and CI
+//! job runs artifact-free.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::corpus::{Corpus, Split};
 use crate::mask::PruneMask;
 use crate::memory::{MemoryModel, Workload};
+use crate::model_meta::ModelMeta;
 use crate::runtime::{ProbeStats, Runtime};
 
 /// The unified-budget workload Table 1/2/3 accounts against. Chosen so
@@ -27,10 +33,47 @@ pub struct Setup {
 
 pub fn setup(model: &str) -> Result<Setup> {
     let root = crate::artifacts_dir();
-    let rt = Runtime::load(&root, model)?;
-    let corpus = Corpus::load(&root.join("corpus"))?;
+    let loaded = Runtime::load(&root, model).and_then(|rt| {
+        let corpus = Corpus::load(&root.join("corpus"))?;
+        Ok((rt, corpus))
+    });
+    match loaded {
+        Ok((rt, corpus)) => {
+            let mem = MemoryModel::new(rt.meta());
+            Ok(Setup { rt, corpus, mem })
+        }
+        Err(e) => {
+            eprintln!("note: AOT artifacts unavailable ({e}); running \
+                       '{model}' on the deterministic sim backend");
+            sim_setup(model, 42)
+        }
+    }
+}
+
+/// Artifact-free setup: the sim runtime plus a corpus regenerated
+/// in-process from the same Markov+copy family the AOT path trains on.
+/// Deterministic per (model, seed).
+pub fn sim_setup(model: &str, seed: u64) -> Result<Setup> {
+    let meta = sim_meta_for(model)?;
+    let rt = Runtime::synthetic(meta, seed);
+    let corpus = Corpus::synthetic(rt.meta().vocab, seed);
     let mem = MemoryModel::new(rt.meta());
     Ok(Setup { rt, corpus, mem })
+}
+
+/// Shape table mirroring python/compile/model.py's CONFIGS — the sim
+/// fallback serves the same model geometry the AOT path compiles.
+fn sim_meta_for(model: &str) -> Result<ModelMeta> {
+    Ok(match model {
+        "rap-small" => ModelMeta::synthetic("rap-small", 12, 256, 8, 8,
+                                            1024, 512, 256),
+        "qwen-sim" => ModelMeta::synthetic("qwen-sim", 8, 256, 8, 2,
+                                           768, 512, 256),
+        "rap-tiny" => ModelMeta::synthetic("rap-tiny", 3, 64, 4, 2,
+                                           128, 64, 64),
+        other => bail!("no sim shape for model '{other}' (expected \
+                        rap-small | qwen-sim | rap-tiny)"),
+    })
 }
 
 impl Setup {

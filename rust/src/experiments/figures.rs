@@ -96,7 +96,11 @@ pub fn fig4(model: &str) -> Result<()> {
     let meta = s.rt.meta().clone();
     let full = PruneMask::full(&meta);
     for &t in &[64usize, 128, 256] {
-        if t > meta.max_seq || !s.rt.meta().has_entry(&format!("score_b4_t{t}")) {
+        // the sim backend scores any shape; PJRT needs a compiled bucket
+        if t > meta.max_seq
+            || !(s.rt.is_sim()
+                 || s.rt.meta().has_entry(&format!("score_b4_t{t}")))
+        {
             continue;
         }
         let tokens = s.corpus.batches(Split::Wiki, 4, t, 1, 0)?.remove(0);
@@ -167,10 +171,10 @@ pub fn fig5(seed: u64, secs: f64) -> Result<()> {
                      mib(sample.used), mib(sample.available),
                      "#".repeat(bar_used.min(60)));
         }
-        println!("  OOM events: {}   evictions/rejections: {}   \
+        println!("  OOM events: {}   evictions: {}   rejections: {}   \
                   completed: {}   mask switches: {}",
-                 report.oom_events, report.rejected, report.completed,
-                 report.mask_switches);
+                 report.oom_events, report.evictions, report.rejected,
+                 report.completed, report.mask_switches);
     }
     println!("\nshape check: static deployment accumulates OOM events when \
               interference spikes; RAP shrinks the model instead.");

@@ -5,8 +5,9 @@
 use anyhow::Result;
 
 use super::common::banner;
-use crate::coordinator::fleet::{default_fleet_trace, default_sim_fleet};
-use crate::coordinator::metrics::zero_nan;
+use crate::coordinator::fleet::{default_fleet_trace, default_sim_fleet,
+                                elastic_demo_fleet, elastic_demo_trace};
+use crate::coordinator::metrics::{zero_nan, FleetReport};
 use crate::coordinator::router::RouterPolicy;
 
 /// `rap experiment fleet`: replay the same trace under every routing
@@ -34,5 +35,56 @@ pub fn fleet_compare(seed: u64, secs: f64, replicas: usize) -> Result<()> {
               rap-aware) cuts OOM events vs round-robin on the same \
               trace; rap-aware additionally weighs each replica's mask \
               quality and the request's KV cost under that mask.");
+    Ok(())
+}
+
+fn elastic_row(label: &str, r: &FleetReport) {
+    println!("{:<22} {:>9} {:>8} {:>8} {:>6} {:>6} {:>7} {:>8} {:>9}",
+             label, r.completed, r.rejected, r.evictions, r.oom_events,
+             r.spawns, r.retires, r.migrations,
+             format!("{:.3}s", zero_nan(r.p99_ttft)));
+}
+
+/// `rap experiment fleet --elastic`: the ISSUE-3 acceptance surface.
+/// One seeded burst-storm trace against periodic interference walls,
+/// served twice by otherwise-identical fleets: the fixed-size
+/// drain/respawn baseline, and the elastic fleet (autoscaling +
+/// cross-replica migration). The elastic fleet must lose fewer
+/// sequences to OOM evictions and hold a lower p99 TTFT — the same
+/// inequality `tests/elastic_fleet.rs` asserts. The scenario's shape
+/// (2 replicas, 120 s, wall schedule) is fixed so the comparison stays
+/// reproducible; only the seed varies.
+pub fn fleet_elastic(seed: u64) -> Result<()> {
+    banner(&format!(
+        "Fleet — fixed drain/respawn vs autoscale+migration on one \
+         burst-storm trace (seed {seed})"));
+    let reqs = elastic_demo_trace(seed);
+    println!("trace: {} requests over {:.0}s, 4 interference walls on \
+              replica 0 (fixed scenario — only --seed varies it)\n",
+             reqs.len(),
+             crate::coordinator::fleet::ELASTIC_DEMO_SECS);
+    println!("{:<22} {:>9} {:>8} {:>8} {:>6} {:>6} {:>7} {:>8} {:>9}",
+             "fleet", "completed", "rejected", "evicted", "OOMs",
+             "spawns", "retires", "migrated", "p99 ttft");
+    let mut fixed = elastic_demo_fleet(seed, false);
+    let fr = fixed.run_trace(reqs.clone())?;
+    elastic_row("fixed drain/respawn", &fr);
+    let mut elastic = elastic_demo_fleet(seed, true);
+    let er = elastic.run_trace(reqs)?;
+    elastic_row("autoscale+migrate", &er);
+    println!("\nshape check: migration turns every eviction the walls \
+              would force into a live transfer (evicted column → 0, \
+              migrated column > 0), and the autoscaler's burst capacity \
+              pulls the TTFT tail down.");
+    if er.evictions < fr.evictions && er.p99_ttft < fr.p99_ttft {
+        println!("verdict: elastic fleet wins on both axes \
+                  (evictions {} vs {}, p99 ttft {:.3}s vs {:.3}s).",
+                 er.evictions, fr.evictions, er.p99_ttft, fr.p99_ttft);
+    } else {
+        println!("verdict: UNEXPECTED — elastic fleet did not win on \
+                  both axes (evictions {} vs {}, p99 ttft {:.3}s vs \
+                  {:.3}s).",
+                 er.evictions, fr.evictions, er.p99_ttft, fr.p99_ttft);
+    }
     Ok(())
 }

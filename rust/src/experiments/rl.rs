@@ -45,6 +45,10 @@ pub fn train_agent(model: &str, episodes: usize, seed: u64)
     let logs = agent.train(&mut env, training_sampler(max_seq), seed)?;
     let secs = t0.elapsed().as_secs_f64();
     let path = agent_path(model);
+    if let Some(dir) = path.parent() {
+        // the sim fallback runs without an artifacts tree on disk
+        std::fs::create_dir_all(dir)?;
+    }
     agent.save(&path)?;
     println!("trained in {secs:.1}s  ({} Q-network parameters), saved to \
               {}", agent.n_params(), path.display());

@@ -7,13 +7,18 @@
 //!   train-agent       train + save the DQN controller for a model
 //!   serve             replay a synthetic trace through the serving engine
 //!   serve-fleet       replay a trace across N heterogeneous replicas
-//!                     behind a pluggable router; emits a JSON FleetReport
+//!                     behind a pluggable router; emits a JSON FleetReport.
+//!                     --autoscale spawns/retires replicas from load,
+//!                     --migrate moves in-flight sequences off pressured
+//!                     replicas instead of evicting them
 //!   gsi               run Greedy Sequential Importance on a model
 //!
 //! Common flags: --model <name> --seed <n> --quick
 
 use anyhow::{bail, Result};
-use rap::coordinator::fleet::{default_fleet_trace, default_sim_fleet};
+use rap::coordinator::fleet::{default_fleet_trace,
+                              default_sim_fleet_with, AutoscaleConfig,
+                              FleetConfig};
 use rap::coordinator::router::RouterPolicy;
 use rap::experiments::{figures, fleet, rl, tables};
 use rap::util::cli::Args;
@@ -63,7 +68,8 @@ fn main() -> Result<()> {
     }
 }
 
-/// `rap serve-fleet --replicas 4 --router rap --secs 120 [--json path]`:
+/// `rap serve-fleet --replicas 4 --router rap --secs 120 [--json path]
+/// [--autoscale [--min-replicas N] [--max-replicas N]] [--migrate]`:
 /// one seeded trace across N heterogeneous sim replicas, with the fleet
 /// report printed and emitted as JSON (stdout, or `--json <path>`).
 fn serve_fleet(seed: u64, args: &Args) -> Result<()> {
@@ -73,14 +79,31 @@ fn serve_fleet(seed: u64, args: &Args) -> Result<()> {
     }
     let secs = args.f64_or("secs", 120.0)?;
     let policy = RouterPolicy::parse(&args.str_or("router", "rap"))?;
-    let mut fleet = default_sim_fleet(replicas, seed, policy);
-    // never truncate the requested trace: arrivals span `secs`, plus a
-    // generous drain window
-    fleet.cfg.max_sim_secs = secs + 3600.0;
+    let autoscale = if args.bool("autoscale") {
+        Some(AutoscaleConfig {
+            min_replicas: args.usize_or("min-replicas", 1)?.max(1),
+            max_replicas: args
+                .usize_or("max-replicas", (replicas * 2).max(2))?,
+            ..AutoscaleConfig::default()
+        })
+    } else {
+        None
+    };
+    let cfg = FleetConfig {
+        // never truncate the requested trace: arrivals span `secs`,
+        // plus a generous drain window
+        max_sim_secs: secs + 3600.0,
+        migrate: args.bool("migrate"),
+        autoscale,
+        ..FleetConfig::default()
+    };
+    let mut fleet = default_sim_fleet_with(replicas, seed, policy, cfg);
     let reqs = default_fleet_trace(seed, secs);
     println!("serve-fleet: {} requests over {secs:.0}s across {replicas} \
-              replicas (router={}, seed={seed})",
-             reqs.len(), policy.name());
+              replicas (router={}, seed={seed}, autoscale={}, \
+              migrate={})",
+             reqs.len(), policy.name(), cfg.autoscale.is_some(),
+             cfg.migrate);
     let report = fleet.run_trace(reqs)?;
     report.print();
     let json = report.to_json().pretty();
@@ -114,10 +137,19 @@ fn run_experiment(id: &str, model: &str, seed: u64, quick: bool,
         "table3" => tables::table1("qwen-sim", seed, quick).map(|_| ()),
         "table4" => tables::table4(seed),
         "tables" => tables::all_tables(seed, quick),
-        "fleet" => fleet::fleet_compare(
-            seed,
-            args.f64_or("secs", if quick { 45.0 } else { 120.0 })?,
-            args.usize_or("replicas", 4)?),
+        "fleet" => {
+            if args.bool("elastic") {
+                // fixed scenario (2 replicas, 120 s) so the acceptance
+                // inequality stays reproducible; only --seed varies it
+                fleet::fleet_elastic(seed)
+            } else {
+                fleet::fleet_compare(
+                    seed,
+                    args.f64_or("secs",
+                                if quick { 45.0 } else { 120.0 })?,
+                    args.usize_or("replicas", 4)?)
+            }
+        }
         "all" => {
             figures::fig2(seed)?;
             figures::fig3()?;
@@ -140,10 +172,16 @@ fn print_help() {
     println!();
     println!("COMMANDS:");
     println!("  experiment <id>  fig2..fig12, table1..table4, fleet, all");
+    println!("                   fleet takes --elastic: fixed fleet vs \
+              autoscale+migration");
     println!("  train-agent      --model <m> --episodes <n> --seed <s>");
     println!("  serve            --secs <n> --seed <s>");
     println!("  serve-fleet      --replicas <n> --router \
               rr|least|kv|rap  --secs <n> [--json <path>]");
+    println!("                   [--autoscale [--min-replicas <n>] \
+              [--max-replicas <n>]]");
+    println!("                   [--migrate]  (move in-flight sequences \
+              off pressured replicas)");
     println!("  gsi              --model <m> --remove <n>");
     println!();
     println!("FLAGS: --model rap-small|qwen-sim|rap-tiny  --seed N  \

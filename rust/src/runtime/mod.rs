@@ -332,6 +332,21 @@ impl Runtime {
         Ok(logits)
     }
 
+    /// Modeled duration of migrating `bytes` of sequence state to a
+    /// peer replica. The sim backend prices it with its interconnect
+    /// model; PJRT has no modeled interconnect, so a default-configured
+    /// model is used there — fleet logic stays backend-agnostic.
+    pub fn transfer_cost(&self, bytes: usize) -> f64 {
+        match &self.backend {
+            Backend::Sim(s) => s.transfer_cost(bytes),
+            Backend::Pjrt(_) => {
+                let d = sim::SimConfig::default();
+                d.migration_latency_secs
+                    + bytes as f64 / d.link_bytes_per_sec
+            }
+        }
+    }
+
     /// Flattened element count of a decode cache for batch `b`.
     pub fn cache_elems(&self, batch: usize) -> usize {
         let m = self.meta();

@@ -34,6 +34,12 @@ pub struct SimConfig {
     pub base_nll: f64,
     /// Extra NLL when both blocks of one layer are dropped.
     pub layer_synergy: f64,
+    /// Modeled cross-replica interconnect bandwidth (bytes/s) — prices
+    /// in-flight sequence migration between fleet replicas.
+    pub link_bytes_per_sec: f64,
+    /// Fixed per-migration latency (seconds): connection setup plus the
+    /// destination's cache registration.
+    pub migration_latency_secs: f64,
 }
 
 impl Default for SimConfig {
@@ -43,6 +49,8 @@ impl Default for SimConfig {
             base_overhead_secs: 2.0e-4,
             base_nll: 2.0,
             layer_synergy: 0.75,
+            link_bytes_per_sec: 4.0e9,
+            migration_latency_secs: 0.02,
         }
     }
 }
@@ -77,6 +85,13 @@ impl SimRuntime {
         self.cfg.base_overhead_secs
             + 2.0 * self.active_params(mask) * (batch * tokens) as f64
                 / self.cfg.flops_per_sec
+    }
+
+    /// Virtual duration of moving `bytes` of sequence state to a peer
+    /// replica over the modeled interconnect (fleet migration).
+    pub fn transfer_cost(&self, bytes: usize) -> f64 {
+        self.cfg.migration_latency_secs
+            + bytes as f64 / self.cfg.link_bytes_per_sec
     }
 
     /// Modeled mean NLL under `mask` (additive damage + layer synergy).
@@ -221,6 +236,17 @@ mod tests {
             flops_per_sec: 1.0e9, ..SimConfig::default()
         });
         assert!(slow.cost(&full, 8, 64) > s.cost(&full, 8, 64));
+    }
+
+    #[test]
+    fn transfer_cost_scales_with_payload() {
+        let s = sim();
+        let small = s.transfer_cost(1 << 10);
+        let big = s.transfer_cost(1 << 26);
+        assert!(small >= s.cfg.migration_latency_secs);
+        assert!(big > small, "more bytes must cost more: {small} vs {big}");
+        // an empty payload still pays the fixed latency
+        assert_eq!(s.transfer_cost(0), s.cfg.migration_latency_secs);
     }
 
     #[test]

@@ -19,12 +19,14 @@
 //!      the mask when the situation changed (cached decisions make this
 //!      the paper's "<1% overhead" path);
 //!   2. OOM handling: if interference spiked over our current footprint,
-//!      count an OOM event and — under a static policy — evict the
-//!      youngest sequence (requeue); RAP instead shrinks the mask;
+//!      count an OOM event and — under a static policy — shed work per
+//!      [`EvictionMode`]: `Requeue` evicts the youngest sequence locally,
+//!      `Park` exports victim state for a fleet coordinator to migrate;
+//!      RAP instead shrinks the mask first;
 //!   3. run one prefill (if queue room + memory headroom) or one decode
 //!      step over the gathered batch; sample tokens; retire finished.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::batcher::{decode_bucket, prefill_bucket, ActiveSeq, Batcher};
 use super::controller::Controller;
@@ -35,6 +37,23 @@ use crate::mask::PruneMask;
 use crate::memory::{MemoryModel, Workload};
 use crate::runtime::Runtime;
 use crate::workload::Request;
+
+/// How the engine sheds in-flight work when interference pushes its
+/// footprint over `Sys_avail(t)`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvictionMode {
+    /// Evict the youngest sequence and requeue it locally — it restarts
+    /// from its prompt (the single-node policy).
+    #[default]
+    Requeue,
+    /// Export the victim's full state (KV included) into the parked
+    /// stash for an external coordinator to migrate to a peer replica.
+    /// Victims are chosen by KV bytes × remaining decode — the
+    /// sequences whose move frees the most memory for the longest
+    /// remaining run. Only meaningful when something drains the stash
+    /// (`take_parked`): a standalone engine should use `Requeue`.
+    Park,
+}
 
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -48,13 +67,68 @@ pub struct EngineConfig {
     pub admission_headroom: f64,
     /// Hard stop (sim seconds) even if work remains.
     pub max_sim_secs: f64,
+    /// What to do with in-flight sequences under memory pressure.
+    pub eviction: EvictionMode,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig { time_scale: 1.0, sample_every: 2.0,
                        controller_period: 5.0, admission_headroom: 0.95,
-                       max_sim_secs: 1e9 }
+                       max_sim_secs: 1e9,
+                       eviction: EvictionMode::Requeue }
+    }
+}
+
+/// Exported state of one sequence — everything a peer engine needs to
+/// continue serving it. Produced by [`Engine::export_sequence`] and the
+/// `Park` eviction mode; consumed by [`Engine::import_sequence`]. The
+/// fleet coordinator moves these across replicas (charging the modeled
+/// transfer cost for the payload).
+#[derive(Clone, Debug)]
+pub enum SeqState {
+    /// Queued but unstarted: no KV yet, just the admission ticket.
+    Queued(Request),
+    /// Mid-decode: the sequence's KV cache travels with it.
+    Active {
+        req: Request,
+        /// Tokens generated so far (prefill's first token included).
+        generated: usize,
+        /// Last sampled token (next decode input).
+        next_token: i32,
+        /// When prefill finished (shared-clock sim seconds) — preserved
+        /// so TTFT accounting survives the move.
+        prefill_done_at: f64,
+        /// Tokens materialized in the cache (next write position).
+        kv_len: usize,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        /// Logical KV bytes under the exporting replica's mask at
+        /// export time — the payload a migration must move.
+        kv_bytes: usize,
+    },
+}
+
+impl SeqState {
+    pub fn id(&self) -> u64 {
+        self.request().id
+    }
+
+    pub fn request(&self) -> &Request {
+        match self {
+            SeqState::Queued(r) => r,
+            SeqState::Active { req, .. } => req,
+        }
+    }
+
+    /// Bytes a migration of this state must move over the interconnect:
+    /// the KV payload plus the prompt token ids.
+    pub fn transfer_bytes(&self) -> usize {
+        let prompt = self.request().prompt_len * 4;
+        match self {
+            SeqState::Queued(_) => prompt,
+            SeqState::Active { kv_bytes, .. } => kv_bytes + prompt,
+        }
     }
 }
 
@@ -85,6 +159,9 @@ pub struct Engine {
     last_controller_at: f64,
     last_sample_at: f64,
     batch: Option<BatchState>,
+    /// Victim states exported under `EvictionMode::Park`, awaiting
+    /// pickup by the fleet coordinator.
+    parked: Vec<SeqState>,
 }
 
 impl Engine {
@@ -107,6 +184,7 @@ impl Engine {
             last_controller_at: f64::NEG_INFINITY,
             last_sample_at: f64::NEG_INFINITY,
             batch: None,
+            parked: Vec::new(),
         }
     }
 
@@ -187,7 +265,8 @@ impl Engine {
     }
 
     /// Handle an interference spike: OOM if our footprint exceeds what's
-    /// available. Static policies evict; adaptive policies re-decide.
+    /// available. Static policies shed work per the eviction mode;
+    /// adaptive policies re-decide the mask first.
     fn handle_memory_pressure(&mut self) -> Result<()> {
         let avail = self.monitor.available_at(self.sim_time);
         if self.bytes_used() <= avail {
@@ -201,28 +280,168 @@ impl Engine {
             > self.monitor.available_at(self.sim_time)
             && !self.batcher.active.is_empty()
         {
-            // Evict the youngest sequence and requeue it.
-            let seq = self.batcher.active.pop().unwrap();
-            self.kv.remove(seq.req.id);
-            self.metrics.rejected += 1;
-            self.batcher.waiting.push_front(seq.req);
+            match self.cfg.eviction {
+                EvictionMode::Requeue => {
+                    // Evict the youngest sequence and requeue it: the
+                    // cache is dropped, the request restarts from its
+                    // prompt.
+                    let seq = self.batcher.active.pop().unwrap();
+                    self.kv.remove(seq.req.id);
+                    self.metrics.evictions += 1;
+                    self.batcher.waiting.push_front(seq.req);
+                }
+                EvictionMode::Park => {
+                    let i = self.migration_victim().unwrap();
+                    let seq = self.batcher.active.remove(i);
+                    let state = self.export_active(seq)?;
+                    self.parked.push(state);
+                }
+            }
         }
         Ok(())
+    }
+
+    /// Index of the active sequence whose migration pays off most: the
+    /// one with the largest KV bytes × remaining-decode estimate (ties
+    /// break toward the oldest). `None` when nothing is active.
+    fn migration_victim(&self) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None;
+        for (i, s) in self.batcher.active.iter().enumerate() {
+            let len = self.kv.seq_len(s.req.id).unwrap_or(0);
+            let remaining =
+                s.req.gen_len.saturating_sub(s.generated).max(1);
+            let score = self.kv_bytes_for_len(len) * remaining;
+            if best.map_or(true, |(_, b)| score > b) {
+                best = Some((i, score));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Logical KV bytes of one sequence of `len` cached tokens under the
+    /// current mask (the same per-layer accounting as
+    /// `KvManager::bytes_used`).
+    pub fn kv_bytes_for_len(&self, len: usize) -> usize {
+        let meta = self.rt.meta();
+        let dh = meta.head_dim();
+        let mut kv = 0usize;
+        for l in 0..meta.n_layers {
+            kv += 2 * self.mask.active_kv_groups(l) * dh * len
+                * crate::model_meta::BYTES_PER_SCALAR;
+        }
+        kv
     }
 
     /// Projected bytes if we admit `req` (its KV at full length) under
     /// the current mask. Public so memory-aware routers can estimate a
     /// request's footprint on each candidate replica.
     pub fn admission_cost(&self, req: &Request) -> usize {
-        let meta = self.rt.meta();
-        let dh = meta.head_dim();
-        let full_len = (req.prompt_len + req.gen_len).min(meta.max_seq);
-        let mut kv = 0usize;
-        for l in 0..meta.n_layers {
-            kv += 2 * self.mask.active_kv_groups(l) * dh * full_len
-                * crate::model_meta::BYTES_PER_SCALAR;
+        let full_len =
+            (req.prompt_len + req.gen_len).min(self.rt.meta().max_seq);
+        self.kv_bytes_for_len(full_len)
+    }
+
+    // ---- sequence export / import (fleet migration) -------------------
+
+    /// Package one active sequence (already removed from the batcher)
+    /// into a portable state, pulling its cache out of the KV manager.
+    fn export_active(&mut self, seq: ActiveSeq) -> Result<SeqState> {
+        let cache = self.kv.remove(seq.req.id).ok_or_else(|| {
+            anyhow::anyhow!("export: seq {} has no cache", seq.req.id)
+        })?;
+        let kv_bytes = self.kv_bytes_for_len(cache.len);
+        Ok(SeqState::Active {
+            req: seq.req,
+            generated: seq.generated,
+            next_token: seq.next_token,
+            prefill_done_at: seq.prefill_done_at,
+            kv_len: cache.len,
+            k: cache.k,
+            v: cache.v,
+            kv_bytes,
+        })
+    }
+
+    /// Remove one sequence — mid-decode or queued-but-unstarted — and
+    /// return its portable state, flushing the persistent decode batch
+    /// first so the exported cache is coherent. `None` when the engine
+    /// doesn't hold `id`.
+    pub fn export_sequence(&mut self, id: u64) -> Result<Option<SeqState>> {
+        if let Some(i) =
+            self.batcher.active.iter().position(|s| s.req.id == id)
+        {
+            self.flush_batch()?;
+            let seq = self.batcher.active.remove(i);
+            return Ok(Some(self.export_active(seq)?));
         }
-        kv
+        if let Some(i) =
+            self.batcher.waiting.iter().position(|r| r.id == id)
+        {
+            let req = self.batcher.waiting.remove(i).unwrap();
+            return Ok(Some(SeqState::Queued(req)));
+        }
+        Ok(None)
+    }
+
+    /// Whether `state` can be installed here: no live id collision and
+    /// (for active states) a cache shape matching this engine's model.
+    pub fn can_import(&self, state: &SeqState) -> bool {
+        let id = state.id();
+        if self.kv.contains(id)
+            || self.batcher.active.iter().any(|s| s.req.id == id)
+            || self.batcher.waiting.iter().any(|r| r.id == id)
+        {
+            return false;
+        }
+        match state {
+            SeqState::Queued(_) => true,
+            SeqState::Active { k, v, .. } => {
+                k.len() == self.kv.seq_elems()
+                    && v.len() == self.kv.seq_elems()
+            }
+        }
+    }
+
+    /// Install a sequence exported by a peer engine. Queued states join
+    /// the admission queue; active states resume decoding with their KV
+    /// intact (first token already served, so TTFT is unaffected by the
+    /// move). Fails, leaving the engine untouched, on a live id
+    /// collision or a cache whose shape doesn't match this model.
+    pub fn import_sequence(&mut self, state: SeqState) -> Result<()> {
+        if !self.can_import(&state) {
+            bail!("import: sequence {} rejected (duplicate id or \
+                   mismatched cache shape)", state.id());
+        }
+        match state {
+            SeqState::Queued(req) => self.batcher.enqueue(req),
+            SeqState::Active { req, generated, next_token,
+                               prefill_done_at, kv_len, k, v, .. } => {
+                self.kv.insert(req.id, k, v, kv_len, &self.mask)?;
+                self.batcher.push_active(ActiveSeq {
+                    req,
+                    generated,
+                    next_token,
+                    prefill_done_at,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain the states parked by `EvictionMode::Park` (the fleet
+    /// coordinator's pickup point).
+    pub fn take_parked(&mut self) -> Vec<SeqState> {
+        std::mem::take(&mut self.parked)
+    }
+
+    pub fn parked_len(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Drain the admission queue (fleet queue-rebalancing off a
+    /// pressured replica).
+    pub fn take_waiting(&mut self) -> Vec<Request> {
+        self.batcher.waiting.drain(..).collect()
     }
 
     /// Advance the clock by one unit of compute: modeled cost when the
@@ -516,6 +735,122 @@ mod tests {
         assert!(a.sim_time() < 1e4, "clock jumped to the deadline");
         assert!(ra.throughput_rps > 1e-3,
                 "wall time corrupted: {} req/s", ra.throughput_rps);
+    }
+
+    /// Step in tiny increments so at most one compute op runs per call
+    /// (every op costs ≥ the sim backend's base overhead of 2e-4 s).
+    fn step_until_tokens(e: &mut Engine, want: u64) {
+        let mut t = e.sim_time();
+        while e.metrics.tokens_generated < want {
+            t += 1e-4;
+            e.step_to(t).unwrap();
+            assert!(t < 60.0, "never generated {want} tokens");
+        }
+    }
+
+    #[test]
+    fn export_import_roundtrip_queued() {
+        let mut a = sim_engine(4.0);
+        a.enqueue(req(7, 0.0));
+        let st = a.export_sequence(7).unwrap().unwrap();
+        assert!(matches!(st, SeqState::Queued(_)));
+        assert_eq!(st.id(), 7);
+        assert!(a.idle(), "export left state behind");
+        assert!(a.export_sequence(7).unwrap().is_none());
+
+        let mut b = sim_engine(4.0);
+        b.import_sequence(st).unwrap();
+        b.step_to(120.0).unwrap();
+        assert_eq!(b.metrics.completed.len(), 1);
+        assert_eq!(b.metrics.completed[0].id, 7);
+    }
+
+    #[test]
+    fn export_import_roundtrip_mid_decode() {
+        // control: the same request served by one engine end to end
+        let mut control = sim_engine(4.0);
+        control.enqueue(req(3, 0.0));
+        control.step_to(120.0).unwrap();
+        assert_eq!(control.metrics.completed.len(), 1);
+        let total = control.metrics.tokens_generated;
+        assert_eq!(total, 6, "gen_len tokens in total");
+
+        // serve the prefill + two decode steps, then export mid-decode
+        let mut a = sim_engine(4.0);
+        a.enqueue(req(3, 0.0));
+        step_until_tokens(&mut a, 3);
+        let st = a.export_sequence(3).unwrap().unwrap();
+        let SeqState::Active { generated, kv_len, .. } = &st else {
+            panic!("expected a mid-decode export");
+        };
+        assert_eq!(*generated, 3);
+        // prefill bucket (16 for a 12-token prompt) + 2 decode writes
+        assert_eq!(*kv_len, 18);
+        assert!(st.transfer_bytes() > 0);
+        assert!(a.idle(), "export left state behind");
+
+        // identical continuation on two fresh engines
+        let mut b1 = sim_engine(4.0);
+        let mut b2 = sim_engine(4.0);
+        b1.import_sequence(st.clone()).unwrap();
+        b2.import_sequence(st).unwrap();
+        b1.step_to(120.0).unwrap();
+        b2.step_to(120.0).unwrap();
+        for e in [&b1, &b2] {
+            assert_eq!(e.metrics.completed.len(), 1);
+            assert_eq!(e.metrics.completed[0].id, 3);
+        }
+        assert_eq!(b1.metrics.tokens_generated,
+                   b2.metrics.tokens_generated);
+        assert_eq!(b1.metrics.exec_secs, b2.metrics.exec_secs);
+        // no token generated twice or lost across the move
+        assert_eq!(a.metrics.tokens_generated
+                   + b1.metrics.tokens_generated, total);
+    }
+
+    #[test]
+    fn import_rejects_live_duplicates() {
+        let mut e = sim_engine(4.0);
+        e.import_sequence(SeqState::Queued(req(9, 0.0))).unwrap();
+        assert!(e.import_sequence(SeqState::Queued(req(9, 0.0))).is_err());
+        assert_eq!(e.outstanding(), 1);
+    }
+
+    #[test]
+    fn park_mode_parks_instead_of_requeueing() {
+        use crate::server::memmon::MemoryMonitor;
+
+        let mut e = sim_engine(4.0);
+        e.cfg.eviction = EvictionMode::Park;
+        e.enqueue(req(1, 0.0));
+        step_until_tokens(&mut e, 2);
+        // yank the headroom out: capacity == params, so any KV is over
+        let cap = e.mem.param_bytes(&e.mask);
+        e.monitor = MemoryMonitor::constant(cap);
+        let t = e.sim_time() + 0.5;
+        e.step_to(t).unwrap();
+        assert_eq!(e.parked_len(), 1);
+        assert_eq!(e.metrics.evictions, 0, "park must not requeue");
+        assert!(e.metrics.oom_events >= 1);
+        let parked = e.take_parked();
+        assert!(matches!(parked[0], SeqState::Active { .. }));
+        assert_eq!(e.parked_len(), 0);
+        assert!(e.idle());
+    }
+
+    #[test]
+    fn requeue_mode_counts_evictions() {
+        use crate::server::memmon::MemoryMonitor;
+
+        let mut e = sim_engine(4.0);
+        e.enqueue(req(1, 0.0));
+        step_until_tokens(&mut e, 2);
+        let cap = e.mem.param_bytes(&e.mask);
+        e.monitor = MemoryMonitor::constant(cap);
+        let t = e.sim_time() + 0.5;
+        e.step_to(t).unwrap();
+        assert!(e.metrics.evictions >= 1);
+        assert_eq!(e.parked_len(), 0);
     }
 
     #[test]

@@ -37,7 +37,12 @@ pub struct Metrics {
     pub completed: Vec<RequestRecord>,
     pub mem_trace: Vec<MemSample>,
     pub oom_events: u64,
+    /// Head-of-line requests permanently rejected (admission control).
     pub rejected: u64,
+    /// In-flight sequences evicted and requeued locally under memory
+    /// pressure (they restart from their prompt). Parked-for-migration
+    /// victims are NOT counted here — migration is what avoids these.
+    pub evictions: u64,
     pub decode_steps: u64,
     pub prefills: u64,
     pub tokens_generated: u64,
@@ -56,6 +61,7 @@ impl Metrics {
             completed: self.completed.len(),
             oom_events: self.oom_events,
             rejected: self.rejected,
+            evictions: self.evictions,
             decode_steps: self.decode_steps,
             prefills: self.prefills,
             tokens_generated: self.tokens_generated,
@@ -80,7 +86,10 @@ impl Metrics {
 pub struct ServeReport {
     pub completed: usize,
     pub oom_events: u64,
+    /// Permanent admission rejections.
     pub rejected: u64,
+    /// Local evict-and-requeue events (see `Metrics::evictions`).
+    pub evictions: u64,
     pub decode_steps: u64,
     pub prefills: u64,
     pub tokens_generated: u64,
@@ -103,6 +112,7 @@ impl ServeReport {
         println!("── serve report: {label}");
         println!("   completed        {:>10}", self.completed);
         println!("   rejected         {:>10}", self.rejected);
+        println!("   evictions        {:>10}", self.evictions);
         println!("   OOM events       {:>10}", self.oom_events);
         println!("   prefills         {:>10}", self.prefills);
         println!("   decode steps     {:>10}", self.decode_steps);

@@ -4,12 +4,18 @@
 //! property, seeded and reproducible — shrinkage is replaced by printing
 //! the failing case's seed.
 
+use rap::coordinator::fleet::{default_sim_meta, uniform_sim_fleet,
+                              FleetConfig};
+use rap::coordinator::replica::{build_sim_replica, Replica, ReplicaSpec,
+                                ReplicaState};
+use rap::coordinator::router::{Router, RouterPolicy};
 use rap::mask::PruneMask;
 use rap::memory::{MemoryModel, Workload};
 use rap::model_meta::{BlockId, ModelMeta};
 use rap::server::batcher::{decode_bucket, prefill_bucket, ActiveSeq,
                            Batcher, DECODE_BUCKETS, PREFILL_BUCKETS};
 use rap::server::kv::KvManager;
+use rap::server::memmon::{MemMonConfig, MemoryMonitor};
 use rap::util::json::Json;
 use rap::util::rng::Rng;
 use rap::workload::Request;
@@ -242,6 +248,151 @@ fn prop_json_roundtrip_random_values() {
         assert_eq!(parsed, v, "seed {seed}: {}", v.dumps());
         let pretty = Json::parse(&v.pretty()).unwrap();
         assert_eq!(pretty, v, "seed {seed} (pretty)");
+    }
+}
+
+/// Random replicas in random lifecycle states with random memory walls.
+fn random_fleet_replicas(rng: &mut Rng, n: usize, seed: u64)
+                         -> Vec<Replica> {
+    let meta = default_sim_meta();
+    (0..n)
+        .map(|i| {
+            let mut r = build_sim_replica(
+                i, &meta, &ReplicaSpec::heterogeneous(i), seed);
+            // random interference: hold a random slice of capacity
+            let cap = r.engine.monitor.cfg.capacity;
+            let held = rng.below(cap);
+            r.engine.monitor = MemoryMonitor::with_spans(
+                MemMonConfig::for_capacity(cap), &[(0.0, 1e12, held)]);
+            match rng.below(5) {
+                0 => r.state = ReplicaState::Draining,
+                1 => r.state = ReplicaState::Respawning { until: 1e9 },
+                2 => r.state = ReplicaState::Retired,
+                _ => {}
+            }
+            r
+        })
+        .collect()
+}
+
+#[test]
+fn prop_router_only_picks_accepting_replicas() {
+    // Every routed request lands on a live, accepting replica — under
+    // every policy, any lifecycle mix, and any memory weather. None is
+    // returned only when truly no replica accepts.
+    for seed in 0..80u64 {
+        let mut rng = Rng::new(seed);
+        let n = rng.range(1, 6);
+        let reps = random_fleet_replicas(&mut rng, n, seed);
+        let policy = RouterPolicy::ALL[rng.below(4)];
+        let mut router = Router::new(policy, n);
+        let t = rng.f64() * 50.0;
+        for k in 0..16u64 {
+            let req = Request { id: 1000 + k, arrival: t,
+                                prompt_len: rng.range(2, 120),
+                                gen_len: rng.range(2, 48) };
+            match router.route(&req, &reps, t) {
+                Some(i) => assert!(
+                    reps[i].accepting(),
+                    "seed {seed}: {:?} routed to a non-accepting \
+                     replica {i} ({})", policy, reps[i].state.name()),
+                None => assert!(
+                    reps.iter().all(|r| !r.accepting()),
+                    "seed {seed}: {:?} dropped a request while a \
+                     replica was accepting", policy),
+            }
+        }
+        // histogram only counts placed requests
+        let placed: u64 = router.decisions.iter().sum();
+        assert!(placed <= 16);
+    }
+}
+
+#[test]
+fn prop_kv_headroom_router_maximizes_headroom() {
+    // The kv-headroom policy never picks a replica with less headroom
+    // than an available alternative.
+    for seed in 0..80u64 {
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let n = rng.range(2, 6);
+        let reps = random_fleet_replicas(&mut rng, n, seed);
+        let mut router = Router::new(RouterPolicy::KvHeadroom, n);
+        let t = rng.f64() * 50.0;
+        let req = Request { id: 1, arrival: t, prompt_len: 16,
+                            gen_len: 8 };
+        if let Some(pick) = router.route(&req, &reps, t) {
+            let picked = reps[pick].kv_headroom(t);
+            for (i, r) in reps.iter().enumerate() {
+                if r.accepting() {
+                    assert!(picked >= r.kv_headroom(t),
+                            "seed {seed}: picked {pick} with {picked} \
+                             but replica {i} had {}", r.kv_headroom(t));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_migration_conserves_sequences() {
+    // Random traces through a walled elastic fleet: migration must
+    // never duplicate or drop a sequence. After the run drains, every
+    // trace id is accounted for exactly once — completed somewhere,
+    // permanently rejected, or dropped at the router — and no id
+    // completes twice.
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed ^ 0x51AB);
+        let cfg = FleetConfig {
+            migrate: true,
+            oom_threshold: usize::MAX,
+            max_sim_secs: 4000.0,
+            ..FleetConfig::default()
+        };
+        let spec = ReplicaSpec {
+            flops_per_sec: 1.0e8,
+            app_rate: 0.0,
+            adaptive: false,
+            ..ReplicaSpec::heterogeneous(0)
+        };
+        let mut fleet = uniform_sim_fleet(3, seed,
+                                          RouterPolicy::RoundRobin, cfg,
+                                          spec);
+        // replica 0 hits a wall mid-run: less than the dense footprint
+        let params = fleet.replicas[0].engine.bytes_used();
+        let cap = params * 4;
+        fleet.replicas[0].engine.monitor = MemoryMonitor::with_spans(
+            MemMonConfig::for_capacity(cap),
+            &[(4.0, 1e12, cap - params / 2)]);
+        let n = rng.range(10, 40) as u64;
+        let reqs: Vec<Request> = (0..n)
+            .map(|id| Request { id, arrival: rng.f64() * 20.0,
+                                prompt_len: rng.range(2, 120),
+                                gen_len: rng.range(2, 48) })
+            .collect();
+        let report = fleet.run_trace(reqs).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        let mut completed = 0u64;
+        for r in &fleet.replicas {
+            for rec in &r.engine.metrics.completed {
+                assert!(seen.insert(rec.id),
+                        "seed {seed}: sequence {} completed twice",
+                        rec.id);
+                assert!(rec.id < n, "seed {seed}: unknown id {}", rec.id);
+                completed += 1;
+            }
+        }
+        let rejected: u64 = fleet
+            .replicas
+            .iter()
+            .map(|r| r.engine.metrics.rejected)
+            .sum();
+        assert_eq!(completed + rejected + report.dropped, n,
+                   "seed {seed}: sequences unaccounted for: {report:?}");
+        // the run drained: nothing is still queued, active, or parked
+        for r in &fleet.replicas {
+            assert_eq!(r.engine.outstanding(), 0, "seed {seed}");
+            assert_eq!(r.engine.parked_len(), 0, "seed {seed}");
+        }
     }
 }
 

@@ -10,7 +10,13 @@
 //!                      requests (queueing and memory stalls surface
 //!                      here first);
 //!   * OOM rate       — interference-driven memory casualties across
-//!                      the fleet.
+//!                      the fleet. Under mask-elastic accounting (the
+//!                      default — see `server::outlook`) engines charge
+//!                      only *true* OOMs here: a spike a replica's RAP
+//!                      controller absorbs by mask-shrinking lands in
+//!                      `absorbed_spikes` instead, so the fleet no
+//!                      longer spawns capacity for pressure the masks
+//!                      already soaked up.
 //!
 //! Policy: scale UP when any signal has stayed above its high watermark
 //! for `hold_secs`; scale DOWN when every signal has stayed below its
@@ -80,7 +86,8 @@ pub struct FleetSignals {
     /// none finished — NaN compares false, so it never trips a
     /// watermark).
     pub p99_ttft: f64,
-    /// OOM events observed inside the signal window.
+    /// True OOM events observed inside the signal window (mask-absorbed
+    /// spikes are not OOMs and never reach this signal).
     pub recent_ooms: usize,
 }
 

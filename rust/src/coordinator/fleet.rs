@@ -15,12 +15,21 @@
 //! `Sys_avail(t)` headroom, its engine parks victims (chosen by KV bytes
 //! × remaining decode — see `EvictionMode::Park`) instead of evicting
 //! them, and the fleet ships each parked state to the peer with the most
-//! KV headroom, charging the sim backend's modeled transfer cost
+//! *elastic* headroom, charging the sim backend's modeled transfer cost
 //! (`Runtime::transfer_cost`) before the payload lands. Queued work on a
 //! collapsed replica is rebalanced the same way before the engines step,
 //! so requests are not burned by a pressure wall they never had a chance
 //! against. When no peer can take a victim, the fleet falls back to the
 //! classic local requeue (and charges the eviction).
+//!
+//! Pressure is judged *mask-elastically* (`FleetConfig::
+//! elastic_accounting`, on by default): a collapse exists only when not
+//! even the replica's min-viable mask fits `Sys_avail(t)` (see
+//! `server::outlook::MemoryOutlook`). An interference spike the RAP
+//! controller can absorb by shrinking therefore triggers no queue
+//! rebalancing, no migration, and — because the engine charges it to
+//! `absorbed_spikes` instead of `oom_events` — no OOM-driven
+//! autoscaling. The `absorbable_spike_fleet` scenario pins this down.
 
 use anyhow::Result;
 
@@ -54,6 +63,15 @@ pub struct FleetConfig {
     /// Spawn/retire replicas from fleet-level load signals. `None`
     /// keeps the fixed-size drain/respawn-only fleet.
     pub autoscale: Option<AutoscaleConfig>,
+    /// Mask-elastic memory accounting (`server::outlook`): every
+    /// pressure decision — engine OOMs, queue rebalancing, migration
+    /// targeting, router headroom — is judged against the min-viable
+    /// footprint instead of the current-mask footprint, so spikes the
+    /// RAP controllers can absorb by shrinking stop triggering phantom
+    /// migrations and spawns. Copied onto every replica engine. Off
+    /// reproduces the pre-outlook (current-mask) behavior for
+    /// comparison runs.
+    pub elastic_accounting: bool,
 }
 
 impl FleetConfig {
@@ -77,6 +95,7 @@ impl Default for FleetConfig {
             max_sim_secs: 3600.0,
             migrate: false,
             autoscale: None,
+            elastic_accounting: true,
         }
     }
 }
@@ -119,6 +138,7 @@ impl Fleet {
                    "router sized for a different fleet");
         for r in &mut replicas {
             r.engine.cfg.eviction = cfg.eviction_mode();
+            r.engine.cfg.elastic_accounting = cfg.elastic_accounting;
         }
         Fleet {
             autoscaler: cfg.autoscale.map(Autoscaler::new),
@@ -173,19 +193,25 @@ impl Fleet {
 
     // ---- migration ----------------------------------------------------
 
-    /// A replica whose footprint exceeds `Sys_avail(t)` cannot start
-    /// queued work (and is about to shed in-flight work); move its
-    /// admission queue to peers with headroom before the engines step,
-    /// so the queue isn't burned by head-of-line rejections against a
-    /// pressure wall.
+    /// A replica that cannot host queued work even under its
+    /// *min-viable* mask (a true collapse, not a spike its controller
+    /// will absorb by shrinking) is about to shed in-flight work; move
+    /// its admission queue to peers with headroom before the engines
+    /// step, so the queue isn't burned by head-of-line rejections
+    /// against a pressure wall. Gating on the outlook instead of the
+    /// current-mask footprint is what stops an absorbable interference
+    /// spike from rerouting the whole queue for nothing (with
+    /// `elastic_accounting` off the outlook is rigid and this reduces
+    /// to the old `bytes_used > Sys_avail` test).
     fn rebalance_queued(&mut self, t: f64) {
         for src in 0..self.replicas.len() {
             let collapsed = {
                 let r = &self.replicas[src];
                 r.live()
                     && !r.engine.batcher.waiting.is_empty()
-                    && r.engine.bytes_used()
-                        > r.engine.monitor.available_at(t)
+                    && r.engine
+                        .outlook()
+                        .true_oom(r.engine.monitor.available_at(t))
             };
             if !collapsed {
                 continue;
@@ -223,7 +249,7 @@ impl Fleet {
             count[tr.dest] += 1;
             bytes[tr.dest] += self.replicas[tr.dest]
                 .engine
-                .admission_cost(tr.state.request());
+                .elastic_admission_cost(tr.state.request());
         }
         (count, bytes)
     }
@@ -307,9 +333,9 @@ impl Fleet {
                         // coming home) instead of dropping the KV.
                         let src = &self.replicas[tr.src];
                         let src_ok = src.accepting()
-                            && src.kv_headroom(t)
-                                > src.engine
-                                    .admission_cost(tr.state.request())
+                            && src.elastic_headroom(t)
+                                > src.engine.elastic_admission_cost(
+                                    tr.state.request())
                             && src.engine.can_import(&tr.state);
                         if src_ok {
                             self.replicas[tr.src]
@@ -462,6 +488,7 @@ impl Fleet {
         let mut r = spawner(id);
         r.id = id;
         r.engine.cfg.eviction = self.cfg.eviction_mode();
+        r.engine.cfg.elastic_accounting = self.cfg.elastic_accounting;
         self.replicas.push(r);
         self.router.decisions.push(0);
         self.spawns += 1;
@@ -545,6 +572,7 @@ impl Fleet {
         let mut rejected = 0u64;
         let mut evictions = 0u64;
         let mut oom_events = 0u64;
+        let mut absorbed_spikes = 0u64;
         let mut respawns = 0u64;
         let mut replicas = Vec::with_capacity(self.replicas.len());
         for r in &self.replicas {
@@ -556,6 +584,7 @@ impl Fleet {
             rejected += r.engine.metrics.rejected;
             evictions += r.engine.metrics.evictions;
             oom_events += r.engine.metrics.oom_events;
+            absorbed_spikes += r.engine.metrics.absorbed_spikes;
             respawns += r.respawns;
             replicas.push(ReplicaReport {
                 id: r.id,
@@ -578,6 +607,7 @@ impl Fleet {
             evictions,
             dropped: self.dropped,
             oom_events,
+            absorbed_spikes,
             respawns,
             spawns: self.spawns,
             retires: self.retires,
@@ -596,16 +626,17 @@ impl Fleet {
 }
 
 /// Destination scoring for one migrating sequence — the rap-aware
-/// router's shape, applied to migration: memory surplus after taking
-/// the sequence's projected full-length cache, discounted by queue
-/// depth. Requiring positive surplus keeps migration memory-safe; the
-/// queue discount stops a pressure wall from herding every refugee
-/// onto the single roomiest replica (one deep queue is how tail
-/// latency dies). `pending_count` / `pending_bytes` are per-replica
-/// in-flight transfer loads (see `Fleet::pending_per_dest`), charged
-/// as if already landed so a burst of sends inside one maintenance
-/// pass spreads out. Ties break toward the lowest index, so migration
-/// is deterministic.
+/// router's shape, applied to migration: *elastic* memory surplus
+/// (`Sys_avail(t)` minus the peer's min-viable footprint — a peer
+/// mid-mask-shrink is not "full") after taking the sequence's projected
+/// full-length cache, discounted by queue depth. Requiring positive
+/// surplus keeps migration memory-safe; the queue discount stops a
+/// pressure wall from herding every refugee onto the single roomiest
+/// replica (one deep queue is how tail latency dies). `pending_count` /
+/// `pending_bytes` are per-replica in-flight transfer loads (see
+/// `Fleet::pending_per_dest`), charged as if already landed so a burst
+/// of sends inside one maintenance pass spreads out. Ties break toward
+/// the lowest index, so migration is deterministic.
 pub fn migration_target(replicas: &[Replica], src: usize,
                         state: &SeqState, t: f64,
                         pending_count: &[usize],
@@ -617,8 +648,11 @@ pub fn migration_target(replicas: &[Replica], src: usize,
             continue;
         }
         let headroom =
-            r.kv_headroom(t).saturating_sub(pending_bytes[i]);
-        let need = r.engine.admission_cost(req);
+            r.elastic_headroom(t).saturating_sub(pending_bytes[i]);
+        // like for like: elastic headroom vs the cost under the mask
+        // the peer would shrink to (current-mask cost would leave
+        // phantom infeasibility on dense adaptive peers)
+        let need = r.engine.elastic_admission_cost(req);
         if headroom <= need {
             continue;
         }
@@ -757,7 +791,7 @@ pub const ELASTIC_DEMO_SECS: f64 = 120.0;
 /// (replicas, trace, router, thresholds) is identical, and
 /// deterministic per seed.
 pub fn elastic_demo_fleet(seed: u64, elastic: bool) -> Fleet {
-    use crate::server::memmon::{MemMonConfig, MemoryMonitor};
+    use crate::server::memmon::MemoryMonitor;
 
     let spec = ReplicaSpec {
         // ~1 req/s per replica at this model size: the storm's bursts
@@ -801,14 +835,137 @@ pub fn elastic_demo_fleet(seed: u64, elastic: bool) -> Fleet {
         .map(|k| (15.0 + 25.0 * k as f64, 25.0 + 25.0 * k as f64,
                   cap - params / 2))
         .collect();
-    fleet.replicas[0].engine.monitor = MemoryMonitor::with_spans(
-        MemMonConfig::for_capacity(cap), &walls);
+    fleet.replicas[0].engine.monitor = MemoryMonitor::walls(cap, &walls);
     fleet
 }
 
 /// The burst-storm trace `elastic_demo_fleet` is squeezed with.
 pub fn elastic_demo_trace(seed: u64) -> Vec<Request> {
     burst_storm_trace(seed, ELASTIC_DEMO_SECS)
+}
+
+/// Length of the absorbable-spike scenario's arrival window
+/// (`absorbable_spike_fleet` + `absorbable_spike_trace`); the
+/// interference wall begins the moment arrivals end.
+pub const ABSORBABLE_SPIKE_SECS: f64 = 20.0;
+
+/// The ISSUE-4 acceptance scenario: an interference spike that RAP's
+/// controllers can *fully absorb* by mask-shrinking, aimed at a fleet
+/// whose every pressure reflex (queue rebalancing, migration, OOM-driven
+/// autoscaling) is armed.
+///
+/// Two adaptive (GsiGreedy) replicas behind the least-outstanding
+/// router; an arrival burst piles queues up, and the moment arrivals
+/// end a 12 s interference wall lands on replica 0, sized so that
+/// `min_viable < Sys_avail(t) < current(dense)` — the absorbable band.
+/// Migration is on and the autoscaler is configured so only the OOM
+/// signal can trigger a spawn (queue/TTFT watermarks parked out of
+/// reach, `high_oom_events: 1`): every spawn or migration in this
+/// scenario is by construction *phantom* pressure, and because no
+/// arrivals remain, none of it can help — the current-mask fleet dumps
+/// replica 0's whole queue onto its peer (concentrating the burst
+/// behind one replica) and spawns capacity nothing will ever be routed
+/// to, while the mask-elastic fleet shrinks replica 0's mask (which
+/// also makes it proportionally *faster*) and serves everything in
+/// place. The replicas' controller period is stretched to 30 s so that
+/// during the wall only pressure-forced decisions move the mask — the
+/// booked OOM/absorbed outcome is then deterministic, not a race
+/// against the periodic re-decide.
+///
+/// `mask_elastic = true` (the fix) judges pressure against the memory
+/// outlook: the spike is absorbed, and migrations and spawns must both
+/// be zero. `mask_elastic = false` reproduces the current-mask
+/// accounting: the same spike reroutes the queue and spawns a replica.
+/// Everything else is identical and deterministic per seed.
+pub fn absorbable_spike_fleet(seed: u64, mask_elastic: bool) -> Fleet {
+    use crate::server::memmon::MemoryMonitor;
+
+    let spec = ReplicaSpec {
+        // slow enough (~1 req/s per replica) that the burst builds a
+        // real queue for phantom pressure to reroute
+        flops_per_sec: 1.0e8,
+        app_rate: 0.0, // interference is the explicit wall below
+        adaptive: true, // the whole point: masks that can shrink
+        capacity_mult: 2.5,
+        ..ReplicaSpec::heterogeneous(0)
+    };
+    let cfg = FleetConfig {
+        migrate: true,
+        // no drain/respawn: isolate the outlook's effect
+        oom_threshold: usize::MAX,
+        autoscale: Some(AutoscaleConfig {
+            min_replicas: 2,
+            max_replicas: 4,
+            // only the OOM signal can fire: queue/TTFT watermarks are
+            // unreachable, and the low watermark never retires
+            high_queue_per_replica: 1e12,
+            low_queue_per_replica: 0.0,
+            high_p99_ttft_secs: 1e12,
+            high_oom_events: 1,
+            hold_secs: 1.0,
+            cooldown_secs: 10.0,
+            eval_every_secs: 0.5,
+            signal_window_secs: 10.0,
+            ..AutoscaleConfig::default()
+        }),
+        elastic_accounting: mask_elastic,
+        max_sim_secs: ABSORBABLE_SPIKE_SECS + 3600.0,
+        ..FleetConfig::default()
+    };
+    let mut fleet = uniform_sim_fleet(2, seed,
+                                      RouterPolicy::LeastOutstanding,
+                                      cfg, spec);
+    for r in &mut fleet.replicas {
+        r.engine.cfg.controller_period = 30.0;
+    }
+    // The wall is sized into the absorbable band: it leaves 0.72× the
+    // dense parameter footprint available — under the dense footprint
+    // (pressure under the current mask) but well over the min-viable
+    // one (≈0.3× params + the shrunken KV), so the controller alone
+    // can always absorb it.
+    let params = fleet.replicas[0].engine.bytes_used();
+    let cap = fleet.replicas[0].engine.monitor.cfg.capacity;
+    let avail = (params as f64 * 0.72) as usize;
+    fleet.replicas[0].engine.monitor = MemoryMonitor::walls(
+        cap, &[(ABSORBABLE_SPIKE_SECS, ABSORBABLE_SPIKE_SECS + 12.0,
+                cap - avail)]);
+    fleet
+}
+
+/// The trace `absorbable_spike_fleet` serves: a steady base load ending
+/// in a dense 3 s arrival burst straight into the wall, so both
+/// replicas carry deep queues and live decodes when the interference
+/// lands. Generations are long (`gen_mu` 3.0, ~27-token median) so the
+/// wall reliably catches mid-decode work.
+pub fn absorbable_spike_trace(seed: u64) -> Vec<Request> {
+    let mut out: Vec<Request> = Vec::new();
+    let mut t0 = 0.0;
+    for (k, &(secs, rate)) in [(17.0, 1.2), (3.0, 6.0)].iter()
+        .enumerate()
+    {
+        let mut gen = TraceGenerator::new(
+            TraceConfig {
+                base_rate: rate,
+                diurnal_amp: 0.0,
+                bursts_per_day: 0.0,
+                day_secs: secs.max(1.0),
+                gen_mu: 3.0,
+                gen_max: 48,
+                ..TraceConfig::default()
+            },
+            seed.wrapping_add(7919 * (k as u64 + 1)),
+        );
+        let mut reqs = gen.generate(0.0, secs);
+        for r in &mut reqs {
+            r.arrival += t0;
+        }
+        out.extend(reqs);
+        t0 += secs;
+    }
+    for (i, r) in out.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    out
 }
 
 /// Burst storm: a calm baseline punctured by dense burst episodes.
@@ -878,7 +1035,7 @@ mod tests {
 
     #[test]
     fn drain_and_respawn_cycle_under_forced_pressure() {
-        use crate::server::memmon::{MemMonConfig, MemoryMonitor};
+        use crate::server::memmon::MemoryMonitor;
 
         let mut fleet = default_sim_fleet(2, 3, RouterPolicy::RoundRobin);
         fleet.cfg.oom_threshold = 2;
@@ -886,8 +1043,8 @@ mod tests {
         // replica 0 permanently underwater → every routed request OOMs
         let params = fleet.replicas[0].engine.bytes_used();
         let cap = (params as f64 * 1.1) as usize;
-        fleet.replicas[0].engine.monitor = MemoryMonitor::with_spans(
-            MemMonConfig::for_capacity(cap), &[(0.0, 1e12, cap)]);
+        fleet.replicas[0].engine.monitor =
+            MemoryMonitor::walls(cap, &[(0.0, 1e12, cap)]);
         let reqs: Vec<Request> = (0..24)
             .map(|i| Request { id: i, arrival: i as f64 * 0.25,
                                prompt_len: 12, gen_len: 4 })

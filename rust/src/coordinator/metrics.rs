@@ -38,7 +38,12 @@ pub struct FleetReport {
     pub evictions: u64,
     /// Arrivals the router could not place (no accepting replica).
     pub dropped: u64,
+    /// True OOM events (pressure even the min-viable mask couldn't
+    /// absorb), summed over replicas.
     pub oom_events: u64,
+    /// Memory spikes absorbed purely by mask-shrinking (no work shed,
+    /// no OOM charged), summed over replicas.
+    pub absorbed_spikes: u64,
     pub respawns: u64,
     /// Replicas added / retired by the autoscaler.
     pub spawns: u64,
@@ -70,8 +75,10 @@ impl FleetReport {
         println!("   requests {} | completed {} | rejected {} | evicted \
                   {} | dropped {}", self.total_requests, self.completed,
                  self.rejected, self.evictions, self.dropped);
-        println!("   OOM events {} | respawns {} | throughput {:.2} req/s",
-                 self.oom_events, self.respawns, self.throughput_rps);
+        println!("   OOM events {} | absorbed spikes {} | respawns {} | \
+                  throughput {:.2} req/s",
+                 self.oom_events, self.absorbed_spikes, self.respawns,
+                 self.throughput_rps);
         if self.spawns + self.retires + self.migrations > 0 {
             println!("   elastic: spawned {} | retired {} | migrated {} \
                       ({:.1} MiB moved)",
@@ -117,6 +124,8 @@ impl FleetReport {
                     ("rejected", Json::Num(r.serve.rejected as f64)),
                     ("evictions", Json::Num(r.serve.evictions as f64)),
                     ("oom_events", Json::Num(r.serve.oom_events as f64)),
+                    ("absorbed_spikes",
+                     Json::Num(r.serve.absorbed_spikes as f64)),
                     ("mask_switches",
                      Json::Num(r.serve.mask_switches as f64)),
                     ("p50_latency", num(r.serve.p50_latency)),
@@ -136,6 +145,8 @@ impl FleetReport {
             ("evictions", Json::Num(self.evictions as f64)),
             ("dropped", Json::Num(self.dropped as f64)),
             ("oom_events", Json::Num(self.oom_events as f64)),
+            ("absorbed_spikes",
+             Json::Num(self.absorbed_spikes as f64)),
             ("respawns", Json::Num(self.respawns as f64)),
             ("spawns", Json::Num(self.spawns as f64)),
             ("retires", Json::Num(self.retires as f64)),
@@ -179,6 +190,7 @@ mod tests {
             evictions: 0,
             dropped: 0,
             oom_events: 0,
+            absorbed_spikes: 0,
             respawns: 0,
             spawns: 0,
             retires: 0,

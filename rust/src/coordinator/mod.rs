@@ -11,6 +11,34 @@
 //! and expensive (or fatal) on one that interference has pushed under
 //! water.
 //!
+//! ## Mask-elastic memory accounting (`server::outlook::MemoryOutlook`)
+//!
+//! Because each replica's footprint is *elastic*, a single
+//! `bytes_used()` number misrepresents it. Every pressure decision in
+//! this module therefore reads the replica's memory outlook — the
+//! footprint at three points of the reachable mask lattice:
+//!
+//!   * `min_viable` — bytes under the cheapest mask the controller may
+//!     deploy for the observed workload (the GSI-greedy prefix down to
+//!     the controller's retained-parameter floor; for a static
+//!     deployment this equals `current`);
+//!   * `current`    — bytes under the mask deployed right now;
+//!   * `dense`      — bytes under the full mask (the re-growth ceiling).
+//!
+//! `Sys_avail(t)` between `min_viable` and `current` is the *absorbable
+//! band*: the controller shrinks, nothing is shed, no OOM is charged
+//! (engines count `absorbed_spikes` instead). Only `Sys_avail(t) <
+//! min_viable` is a true OOM. Consequently: `Fleet::rebalance_queued`
+//! reroutes a queue only off truly collapsed replicas, migration
+//! targets and the memory-aware routers score peers by *elastic*
+//! headroom (`Sys_avail − min_viable`), and the autoscaler's OOM-rate
+//! signal — fed from engine `oom_events` — no longer spawns replicas
+//! for pressure the masks absorb. `FleetConfig::elastic_accounting`
+//! (default on) gates all of it; off reproduces the current-mask
+//! accounting for comparison, and `fleet::absorbable_spike_fleet` is
+//! the seeded scenario holding the distinction to zero phantom
+//! migrations and spawns.
+//!
 //! Module map:
 //!   * [`replica`] — one serving [`crate::server::engine::Engine`] plus
 //!     its lifecycle (`Serving` → `Draining` → `Respawning`/`Retired`)

@@ -106,12 +106,25 @@ impl Replica {
     }
 
     /// `Sys_avail(t)` minus the replica's current footprint: the KV
-    /// bytes this replica could take on right now.
+    /// bytes this replica could take on right now *without moving its
+    /// mask*.
     pub fn kv_headroom(&self, t: f64) -> usize {
         self.engine
             .monitor
             .available_at(t)
             .saturating_sub(self.engine.bytes_used())
+    }
+
+    /// `Sys_avail(t)` minus the replica's *min-viable* footprint: the
+    /// bytes this replica could take on if its controller shrank the
+    /// mask as far as allowed (see `server::outlook::MemoryOutlook`).
+    /// Placement decisions (routing, migration targets) score this, so
+    /// a replica mid-shrink doesn't look full. Equals `kv_headroom` for
+    /// static deployments or with mask-elastic accounting disabled.
+    pub fn elastic_headroom(&self, t: f64) -> usize {
+        self.engine
+            .outlook()
+            .elastic_headroom(self.engine.monitor.available_at(t))
     }
 
     /// Quality of the currently-deployed mask: fraction of parameters

@@ -6,15 +6,26 @@
 //!                          memory-blind baseline every LB starts with);
 //!   * `LeastOutstanding` — classic least-loaded by queued + in-flight
 //!                          requests;
-//!   * `KvHeadroom`       — most free memory: `Sys_avail(t)` minus the
-//!                          replica's current footprint;
+//!   * `KvHeadroom`       — most free memory, judged elastically:
+//!                          `Sys_avail(t)` minus the replica's
+//!                          *min-viable* footprint (the memory outlook),
+//!                          so a replica mid-mask-shrink does not look
+//!                          full;
 //!   * `RapAware`         — scores feasibility *for this request*: the
-//!                          request's estimated KV bytes under each
-//!                          replica's current mask against that replica's
-//!                          headroom, weighted by mask utility (quality
-//!                          of the deployed model) and queue depth. This
-//!                          is the fleet-level analogue of the paper's
-//!                          (workload, Sys_avail) state vector.
+//!                          request's estimated KV bytes under the mask
+//!                          each replica could shrink to (its min-viable
+//!                          mask) against that replica's
+//!                          elastic headroom, weighted by mask utility
+//!                          (quality of the deployed model) and queue
+//!                          depth. Infeasible replicas (headroom ≤ cost)
+//!                          rank strictly below every feasible one, by
+//!                          raw deficit — utility must NOT scale a
+//!                          negative surplus, or the least-damaged
+//!                          replica would get the smallest penalty and
+//!                          the preference would invert (see
+//!                          `prop_rap_router_never_prefers_infeasible`).
+//!                          This is the fleet-level analogue of the
+//!                          paper's (workload, Sys_avail) state vector.
 //!
 //! The router also owns the routing histogram (decisions per replica)
 //! reported by `FleetReport`.
@@ -108,24 +119,33 @@ impl Router {
             RouterPolicy::KvHeadroom => *accepting
                 .iter()
                 .max_by_key(|&&i| {
-                    (replicas[i].kv_headroom(t), std::cmp::Reverse(i))
+                    (replicas[i].elastic_headroom(t),
+                     std::cmp::Reverse(i))
                 })
                 .unwrap(),
             RouterPolicy::RapAware => {
                 let mut best: Option<(usize, f64)> = None;
                 for &i in &accepting {
                     let r = &replicas[i];
-                    let headroom = r.kv_headroom(t) as f64;
-                    let cost = r.engine.admission_cost(req) as f64;
-                    let score = if headroom > cost {
+                    let headroom = r.elastic_headroom(t) as f64;
+                    // like for like: elastic headroom vs the request's
+                    // cost under the mask this replica could shrink to
+                    let cost =
+                        r.engine.elastic_admission_cost(req) as f64;
+                    let surplus = headroom - cost;
+                    let score = if surplus > 0.0 {
                         // feasible: quality-weighted memory surplus,
-                        // discounted by queue depth
-                        r.mask_utility() * (headroom - cost)
+                        // discounted by queue depth — always > 0, so
+                        // every feasible replica outranks every
+                        // infeasible one
+                        r.mask_utility() * surplus
                             / (1.0 + r.outstanding() as f64)
                     } else {
-                        // infeasible right now: rank far below every
-                        // feasible replica, least-underwater first
-                        (headroom - cost) - 1e18
+                        // infeasible right now: rank by RAW deficit far
+                        // below all feasible scores (never scale a
+                        // negative surplus by utility — that inverts
+                        // the preference), least-underwater first
+                        surplus - 1e18
                     };
                     if best.map_or(true, |(_, s)| score > s) {
                         best = Some((i, score));
@@ -145,7 +165,7 @@ mod tests {
     use crate::coordinator::replica::{build_sim_replica, ReplicaSpec,
                                       ReplicaState};
     use crate::model_meta::ModelMeta;
-    use crate::server::memmon::{MemMonConfig, MemoryMonitor};
+    use crate::server::memmon::MemoryMonitor;
 
     fn meta() -> ModelMeta {
         ModelMeta::synthetic("r", 4, 128, 8, 4, 512, 512, 256)
@@ -207,9 +227,8 @@ mod tests {
         // dense parameter footprint available
         let params = reps[0].engine.bytes_used();
         let cap = (params as f64 * 1.2) as usize;
-        reps[0].engine.monitor = MemoryMonitor::with_spans(
-            MemMonConfig::for_capacity(cap),
-            &[(0.0, 1e12, cap - params / 2)]);
+        reps[0].engine.monitor =
+            MemoryMonitor::walls(cap, &[(0.0, 1e12, cap - params / 2)]);
         assert_eq!(reps[0].kv_headroom(0.0), 0);
         for policy in [RouterPolicy::KvHeadroom, RouterPolicy::RapAware] {
             let mut router = Router::new(policy, 2);
@@ -218,6 +237,43 @@ mod tests {
                            "{:?}", policy);
             }
         }
+    }
+
+    /// Regression (ISSUE 4): with every replica infeasible, the naive
+    /// `utility × (headroom − cost)` score prefers the *low-utility*
+    /// replica (its utility shrinks the penalty), inverting the
+    /// preference. The raw-deficit ranking must pick the
+    /// least-underwater replica instead.
+    #[test]
+    fn rap_aware_ranks_infeasible_by_raw_deficit() {
+        use crate::model_meta::BlockId;
+
+        let mut reps = fleet_of(2);
+        let r = req(0);
+        // replica 0: low utility (3 of 4 FFN blocks gone — KV cost is
+        // unaffected) and zero headroom → deficit == full cost
+        for l in 0..3 {
+            reps[0].engine.mask.drop_block(BlockId::Ffn(l));
+        }
+        let p0 = reps[0].engine.bytes_used();
+        reps[0].engine.monitor =
+            MemoryMonitor::walls(p0 * 2, &[(0.0, 1e12, p0)]);
+        let cost = reps[0].engine.admission_cost(&r);
+        assert_eq!(reps[0].kv_headroom(0.0), 0);
+        // replica 1: dense, and underwater by only half the cost
+        let p1 = reps[1].engine.bytes_used();
+        let cap = p1 * 2;
+        reps[1].engine.monitor = MemoryMonitor::walls(
+            cap, &[(0.0, 1e12, cap - p1 - cost / 2)]);
+        assert!(reps[1].kv_headroom(0.0) < cost);
+        // sanity: the naive utility-scaled penalty really would invert
+        let u0 = reps[0].mask_utility();
+        assert!(u0 * cost as f64
+                    < (cost - reps[1].kv_headroom(0.0)) as f64,
+                "scenario no longer exercises the inversion");
+        let mut router = Router::new(RouterPolicy::RapAware, 2);
+        assert_eq!(router.route(&r, &reps, 0.0), Some(1),
+                   "picked the deeper-underwater replica");
     }
 
     #[test]

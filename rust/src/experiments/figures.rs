@@ -171,13 +171,16 @@ pub fn fig5(seed: u64, secs: f64) -> Result<()> {
                      mib(sample.used), mib(sample.available),
                      "#".repeat(bar_used.min(60)));
         }
-        println!("  OOM events: {}   evictions: {}   rejections: {}   \
-                  completed: {}   mask switches: {}",
-                 report.oom_events, report.evictions, report.rejected,
-                 report.completed, report.mask_switches);
+        println!("  OOM events: {}   absorbed spikes: {}   evictions: \
+                  {}   rejections: {}   completed: {}   mask switches: \
+                  {}",
+                 report.oom_events, report.absorbed_spikes,
+                 report.evictions, report.rejected, report.completed,
+                 report.mask_switches);
     }
     println!("\nshape check: static deployment accumulates OOM events when \
-              interference spikes; RAP shrinks the model instead.");
+              interference spikes; RAP absorbs them by shrinking the \
+              model (the absorbed-spikes column) instead.");
     Ok(())
 }
 

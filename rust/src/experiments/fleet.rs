@@ -5,7 +5,9 @@
 use anyhow::Result;
 
 use super::common::banner;
-use crate::coordinator::fleet::{default_fleet_trace, default_sim_fleet,
+use crate::coordinator::fleet::{absorbable_spike_fleet,
+                                absorbable_spike_trace,
+                                default_fleet_trace, default_sim_fleet,
                                 elastic_demo_fleet, elastic_demo_trace};
 use crate::coordinator::metrics::{zero_nan, FleetReport};
 use crate::coordinator::router::RouterPolicy;
@@ -39,10 +41,18 @@ pub fn fleet_compare(seed: u64, secs: f64, replicas: usize) -> Result<()> {
 }
 
 fn elastic_row(label: &str, r: &FleetReport) {
-    println!("{:<22} {:>9} {:>8} {:>8} {:>6} {:>6} {:>7} {:>8} {:>9}",
+    println!("{:<22} {:>9} {:>8} {:>8} {:>6} {:>8} {:>6} {:>7} {:>8} \
+              {:>9}",
              label, r.completed, r.rejected, r.evictions, r.oom_events,
-             r.spawns, r.retires, r.migrations,
+             r.absorbed_spikes, r.spawns, r.retires, r.migrations,
              format!("{:.3}s", zero_nan(r.p99_ttft)));
+}
+
+fn elastic_header() {
+    println!("{:<22} {:>9} {:>8} {:>8} {:>6} {:>8} {:>6} {:>7} {:>8} \
+              {:>9}",
+             "fleet", "completed", "rejected", "evicted", "OOMs",
+             "absorbed", "spawns", "retires", "migrated", "p99 ttft");
 }
 
 /// `rap experiment fleet --elastic`: the ISSUE-3 acceptance surface.
@@ -63,9 +73,7 @@ pub fn fleet_elastic(seed: u64) -> Result<()> {
               replica 0 (fixed scenario — only --seed varies it)\n",
              reqs.len(),
              crate::coordinator::fleet::ELASTIC_DEMO_SECS);
-    println!("{:<22} {:>9} {:>8} {:>8} {:>6} {:>6} {:>7} {:>8} {:>9}",
-             "fleet", "completed", "rejected", "evicted", "OOMs",
-             "spawns", "retires", "migrated", "p99 ttft");
+    elastic_header();
     let mut fixed = elastic_demo_fleet(seed, false);
     let fr = fixed.run_trace(reqs.clone())?;
     elastic_row("fixed drain/respawn", &fr);
@@ -85,6 +93,58 @@ pub fn fleet_elastic(seed: u64) -> Result<()> {
                   both axes (evictions {} vs {}, p99 ttft {:.3}s vs \
                   {:.3}s).",
                  er.evictions, fr.evictions, er.p99_ttft, fr.p99_ttft);
+    }
+    Ok(())
+}
+
+/// `rap experiment fleet --absorbable`: the ISSUE-4 acceptance surface.
+/// One seeded trace whose interference spikes are fully absorbable by
+/// mask-shrinking, served twice by otherwise-identical elastic fleets:
+/// once under the legacy current-mask accounting (every spike looks
+/// like an OOM → phantom queue rebalancing, migrations, and OOM-driven
+/// spawns) and once under mask-elastic accounting (the memory outlook
+/// absorbs every spike). The mask-elastic fleet must perform strictly
+/// fewer migrations AND spawns at an equal-or-better p99 TTFT — with
+/// this scenario's wall, exactly zero of each. The scenario shape
+/// (2 replicas, a 20 s arrival window, one 12 s wall) is fixed; only
+/// the seed varies.
+pub fn fleet_absorbable(seed: u64) -> Result<()> {
+    banner(&format!(
+        "Fleet — current-mask vs mask-elastic accounting on absorbable \
+         interference spikes (seed {seed})"));
+    let reqs = absorbable_spike_trace(seed);
+    println!("trace: {} requests over {:.0}s, then one absorbable wall \
+              on replica 0 (fixed scenario — only --seed varies it)\n",
+             reqs.len(),
+             crate::coordinator::fleet::ABSORBABLE_SPIKE_SECS);
+    elastic_header();
+    let mut phantom = absorbable_spike_fleet(seed, false);
+    let pr = phantom.run_trace(reqs.clone())?;
+    elastic_row("current-mask", &pr);
+    let mut elastic = absorbable_spike_fleet(seed, true);
+    let er = elastic.run_trace(reqs)?;
+    elastic_row("mask-elastic", &er);
+    println!("\nshape check: every wall fits between the min-viable and \
+              the current footprint, so the mask-elastic fleet absorbs \
+              them all (absorbed column > 0) while the current-mask \
+              fleet reroutes queues and spawns replicas for nothing.");
+    println!("absorbable-spike: mask-elastic migrations={} spawns={} \
+              ooms={} absorbed={}",
+             er.migrations, er.spawns, er.oom_events,
+             er.absorbed_spikes);
+    if er.migrations < pr.migrations && er.spawns < pr.spawns
+        && er.p99_ttft <= pr.p99_ttft
+    {
+        println!("verdict: mask-elastic accounting wins (migrations {} \
+                  vs {}, spawns {} vs {}, p99 ttft {:.3}s vs {:.3}s).",
+                 er.migrations, pr.migrations, er.spawns, pr.spawns,
+                 er.p99_ttft, pr.p99_ttft);
+    } else {
+        println!("verdict: UNEXPECTED — mask-elastic accounting did not \
+                  win (migrations {} vs {}, spawns {} vs {}, p99 ttft \
+                  {:.3}s vs {:.3}s).",
+                 er.migrations, pr.migrations, er.spawns, pr.spawns,
+                 er.p99_ttft, pr.p99_ttft);
     }
     Ok(())
 }

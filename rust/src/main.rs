@@ -142,6 +142,10 @@ fn run_experiment(id: &str, model: &str, seed: u64, quick: bool,
                 // fixed scenario (2 replicas, 120 s) so the acceptance
                 // inequality stays reproducible; only --seed varies it
                 fleet::fleet_elastic(seed)
+            } else if args.bool("absorbable") {
+                // fixed scenario (2 replicas, one absorbable wall):
+                // current-mask vs mask-elastic accounting
+                fleet::fleet_absorbable(seed)
             } else {
                 fleet::fleet_compare(
                     seed,
@@ -174,6 +178,8 @@ fn print_help() {
     println!("  experiment <id>  fig2..fig12, table1..table4, fleet, all");
     println!("                   fleet takes --elastic: fixed fleet vs \
               autoscale+migration");
+    println!("                   fleet takes --absorbable: current-mask \
+              vs mask-elastic accounting");
     println!("  train-agent      --model <m> --episodes <n> --seed <s>");
     println!("  serve            --secs <n> --seed <s>");
     println!("  serve-fleet      --replicas <n> --router \

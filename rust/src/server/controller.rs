@@ -62,6 +62,14 @@ impl Policy {
     }
 }
 
+/// Default floor on the retained-parameter fraction for
+/// [`Controller::min_viable_mask`]: the controller will not report a
+/// mask below this quality as reachable, even though the raw action
+/// space could prune further. Keeping the floor above what `decide`
+/// might actually deploy makes mask-elastic accounting conservative:
+/// `min_viable` never *under*-estimates the cheapest real footprint.
+pub const DEFAULT_MIN_MASK_FRACTION: f64 = 0.3;
+
 pub struct Controller {
     pub policy: Policy,
     mem: MemoryModel,
@@ -69,10 +77,19 @@ pub struct Controller {
     calib_tokens: Vec<i32>,
     calib_batch: usize,
     calib_seqlen: usize,
+    /// Floor on the retained-parameter fraction of the min-viable mask.
+    min_mask_fraction: f64,
     /// Persistent GSI memo shared across decisions.
     memo: HashMap<u64, f64>,
     /// Decision cache keyed by (budget%, batch, seqlen-bucket).
     cache: HashMap<(u32, usize, usize), PruneMask>,
+    /// Cached min-viable mask. A single slot: today's floor predicate
+    /// reads neither the workload nor the budget, so the answer is the
+    /// same for every query (a workload-conditioned floor — see the
+    /// ROADMAP follow-up — would turn this into a keyed cache). Cleared
+    /// by [`Controller::invalidate_outlook`] /
+    /// [`Controller::with_min_mask_fraction`].
+    floor_cache: Option<PruneMask>,
     pub decisions: u64,
     pub cache_hits: u64,
 }
@@ -81,8 +98,12 @@ impl Controller {
     pub fn new(policy: Policy, mem: MemoryModel, calib_tokens: Vec<i32>,
                calib_seqlen: usize) -> Controller {
         Controller { policy, mem, calib_tokens, calib_batch: 1,
-                     calib_seqlen, memo: HashMap::new(),
-                     cache: HashMap::new(), decisions: 0, cache_hits: 0 }
+                     calib_seqlen,
+                     min_mask_fraction: DEFAULT_MIN_MASK_FRACTION,
+                     memo: HashMap::new(),
+                     cache: HashMap::new(),
+                     floor_cache: None,
+                     decisions: 0, cache_hits: 0 }
     }
 
     /// Use a different compiled score bucket for calibration (models
@@ -92,6 +113,72 @@ impl Controller {
         self.calib_batch = batch;
         self.calib_seqlen = seqlen;
         self
+    }
+
+    /// Override the retained-parameter floor used by
+    /// [`Controller::min_viable_mask`].
+    pub fn with_min_mask_fraction(mut self, f: f64) -> Controller {
+        self.min_mask_fraction = f.clamp(0.0, 1.0);
+        self.floor_cache = None;
+        self
+    }
+
+    /// Whether this controller can actually move the mask at runtime.
+    pub fn adaptive(&self) -> bool {
+        !matches!(self.policy, Policy::Static(_))
+    }
+
+    /// Drop cached min-viable masks (call if the mask space or the
+    /// importance landscape changes — today neither does at runtime,
+    /// but the invalidation point is part of the outlook contract).
+    pub fn invalidate_outlook(&mut self) {
+        self.floor_cache = None;
+    }
+
+    /// The cheapest mask this controller is allowed to reach for the
+    /// observed workload: the GSI-greedy removal prefix (least-damaging
+    /// blocks first, recalibrated after every removal — the same
+    /// machinery `decide` walks) taken down to — and never past — the
+    /// retained-parameter floor: the removal that would cross below it
+    /// is not applied, so the reported mask's quality is always at
+    /// least the floor. For a static policy the mask cannot move, so
+    /// the deployed mask itself is returned. Cached (the floor
+    /// predicate reads neither workload nor budget; the workload
+    /// parameter is the seam for a learned, workload-conditioned
+    /// floor); NLL evaluations share the decision memo, so a cache
+    /// miss is a handful of memoized lookups, not a fresh calibration.
+    pub fn min_viable_mask(&mut self, rt: &mut Runtime,
+                           _workload: Workload) -> Result<PruneMask> {
+        if let Policy::Static(m) = &self.policy {
+            return Ok(m.clone());
+        }
+        if let Some(m) = &self.floor_cache {
+            return Ok(m.clone());
+        }
+        let mut ev = BorrowedEvaluator { rt, tokens: &self.calib_tokens,
+                                         batch: self.calib_batch,
+                                         seqlen: self.calib_seqlen };
+        let memo = std::mem::take(&mut self.memo);
+        let mut gsi = GsiEngine::with_memo(&mut ev, memo);
+        let meta = self.mem.meta().clone();
+        let floor = self.min_mask_fraction;
+        let res = gsi.greedy(&PruneMask::full(&meta), |m| {
+            m.param_fraction(&meta) <= floor
+        })?;
+        self.memo = gsi.take_memo();
+        // The greedy stop fires at the first mask AT OR BELOW the
+        // floor; with block granularity that final removal overshoots.
+        // Keep the deepest mask that still honors the floor.
+        let mut mask = PruneMask::full(&meta);
+        for b in res.order {
+            let cand = mask.with_block_dropped(b);
+            if cand.param_fraction(&meta) < floor {
+                break;
+            }
+            mask = cand;
+        }
+        self.floor_cache = Some(mask.clone());
+        Ok(mask)
     }
 
     /// Decide a mask for the observed workload and available memory.
@@ -140,5 +227,72 @@ impl Controller {
         };
         self.cache.insert(key, mask.clone());
         Ok(mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parts() -> (Runtime, MemoryModel) {
+        let meta = ModelMeta::synthetic("c", 4, 128, 8, 4, 512, 512, 256);
+        let rt = Runtime::synthetic(meta.clone(), 5);
+        (rt, MemoryModel::new(&meta))
+    }
+
+    #[test]
+    fn static_min_viable_is_the_deployed_mask() {
+        let (mut rt, mem) = parts();
+        let mask = PruneMask::full(mem.meta());
+        let mut c = Controller::new(Policy::Static(mask.clone()), mem,
+                                    vec![0; 128], 128)
+            .with_calib_bucket(1, 128);
+        assert!(!c.adaptive());
+        let mv = c.min_viable_mask(&mut rt, Workload::new(1, 64)).unwrap();
+        assert_eq!(mv, mask);
+    }
+
+    #[test]
+    fn adaptive_min_viable_reaches_the_floor_and_caches() {
+        let (mut rt, mem) = parts();
+        let meta = mem.meta().clone();
+        let mut c = Controller::new(Policy::GsiGreedy, mem,
+                                    vec![0; 128], 128)
+            .with_calib_bucket(1, 128)
+            .with_min_mask_fraction(0.3);
+        assert!(c.adaptive());
+        let w = Workload::new(4, 64);
+        let mv = c.min_viable_mask(&mut rt, w).unwrap();
+        // pruned down toward — but never past — the floor
+        let frac = mv.param_fraction(&meta);
+        assert!(frac >= 0.3, "floor undershot: {frac}");
+        assert!(frac < 0.55, "barely pruned: {frac}");
+        // whole blocks only (the controller's action space)
+        for l in 0..meta.n_layers {
+            let h = mv.active_heads(l);
+            assert!(h == 0 || h == meta.n_heads);
+            let f = mv.active_ffn_channels(l);
+            assert!(f == 0 || f == meta.d_ff);
+        }
+        // cached: same workload bucket returns the same mask
+        let again = c.min_viable_mask(&mut rt, w).unwrap();
+        assert_eq!(mv, again);
+        // invalidation clears the cache without changing the answer
+        c.invalidate_outlook();
+        let third = c.min_viable_mask(&mut rt, w).unwrap();
+        assert_eq!(mv, third);
+    }
+
+    #[test]
+    fn min_viable_is_cheaper_than_dense() {
+        let (mut rt, mem) = parts();
+        let meta = mem.meta().clone();
+        let mut c = Controller::new(Policy::GsiGreedy, mem.clone(),
+                                    vec![0; 128], 128)
+            .with_calib_bucket(1, 128);
+        let mv = c.min_viable_mask(&mut rt, Workload::new(1, 32)).unwrap();
+        let w = Workload::new(1, 32);
+        assert!(mem.peak_bytes(&mv, w)
+                    < mem.peak_bytes(&PruneMask::full(&meta), w));
     }
 }

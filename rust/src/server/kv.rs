@@ -26,6 +26,12 @@ pub struct SeqCache {
 pub struct KvManager {
     meta: ModelMeta,
     seqs: HashMap<u64, SeqCache>,
+    /// Running total of cached tokens across live sequences (kept in
+    /// step by insert/remove/bump_lens), so the mask-aware byte
+    /// accounting is O(layers) instead of O(sequences × layers) — it
+    /// sits on the engine's pressure path and every router's scoring
+    /// path.
+    total_tokens: usize,
     /// High-water mark of bytes held (for reports).
     pub peak_bytes_seen: usize,
 }
@@ -33,7 +39,7 @@ pub struct KvManager {
 impl KvManager {
     pub fn new(meta: &ModelMeta) -> KvManager {
         KvManager { meta: meta.clone(), seqs: HashMap::new(),
-                    peak_bytes_seen: 0 }
+                    total_tokens: 0, peak_bytes_seen: 0 }
     }
 
     pub fn seq_elems(&self) -> usize {
@@ -57,6 +63,15 @@ impl KvManager {
         self.seqs.get(&id).map(|s| s.len)
     }
 
+    /// Total cached tokens across live sequences. Because every layer
+    /// stores the same `len` tokens per sequence, `bytes_used` under
+    /// any block-level mask is this total times the mask's per-token
+    /// bytes — which lets callers price alternative masks without a
+    /// per-sequence sweep.
+    pub fn total_tokens(&self) -> usize {
+        self.total_tokens
+    }
+
     /// Admit a sequence with its prefill-produced cache
     /// (`[L, 1, Hkv, S, Dh]` == `[L, Hkv, S, Dh]` flattened).
     pub fn insert(&mut self, id: u64, k: Vec<f32>, v: Vec<f32>,
@@ -65,27 +80,37 @@ impl KvManager {
             bail!("cache size mismatch: got {}, want {}", k.len(),
                   self.seq_elems());
         }
-        self.seqs.insert(id, SeqCache { k, v, len: prompt_len });
+        if let Some(old) =
+            self.seqs.insert(id, SeqCache { k, v, len: prompt_len })
+        {
+            self.total_tokens -= old.len;
+        }
+        self.total_tokens += prompt_len;
         self.note_usage(mask);
         Ok(())
     }
 
     pub fn remove(&mut self, id: u64) -> Option<SeqCache> {
-        self.seqs.remove(&id)
+        let removed = self.seqs.remove(&id);
+        if let Some(s) = &removed {
+            self.total_tokens -= s.len;
+        }
+        removed
     }
 
     /// Logical KV bytes for the *active* sequences under `mask`:
-    /// Σ_seq Σ_layer 2 · kv_groups(l) · Dh · len(seq) · 4B.
+    /// Σ_seq Σ_layer 2 · kv_groups(l) · Dh · len(seq) · 4B — computed
+    /// as (total tokens) × (per-token bytes under the mask), which is
+    /// exactly equal because every layer stores the same `len` tokens
+    /// per sequence.
     pub fn bytes_used(&self, mask: &PruneMask) -> usize {
         let dh = self.meta.head_dim();
-        let mut total = 0usize;
-        for s in self.seqs.values() {
-            for l in 0..self.meta.n_layers {
-                total += 2 * mask.active_kv_groups(l) * dh * s.len
-                    * BYTES_PER_SCALAR;
-            }
+        let mut per_token = 0usize;
+        for l in 0..self.meta.n_layers {
+            per_token +=
+                2 * mask.active_kv_groups(l) * dh * BYTES_PER_SCALAR;
         }
-        total
+        self.total_tokens * per_token
     }
 
     fn note_usage(&mut self, mask: &PruneMask) {
@@ -163,6 +188,7 @@ impl KvManager {
                 bail!("bump_lens: unknown seq {id}");
             };
             s.len += 1;
+            self.total_tokens += 1;
             if s.len > self.meta.max_seq {
                 bail!("sequence {id} overflowed max_seq");
             }
@@ -245,6 +271,11 @@ mod tests {
         let mut pruned = full.clone();
         pruned.drop_block(crate::model_meta::BlockId::Mha(0));
         assert_eq!(kv.bytes_used(&pruned), dense / 2);
+        // total_tokens × dense per-token bytes recovers bytes_used
+        assert_eq!(kv.total_tokens(), 4);
+        assert_eq!(kv.total_tokens() * m.n_layers
+                       * m.kv_bytes_per_token_layer(m.n_kv_heads),
+                   dense);
     }
 
     #[test]

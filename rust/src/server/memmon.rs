@@ -91,6 +91,15 @@ impl MemoryMonitor {
         MemoryMonitor { cfg, spans }
     }
 
+    /// Shorthand for the ubiquitous test/scenario monitor: a device of
+    /// `capacity` bytes with an explicit schedule of interference walls
+    /// (`with_spans` over `MemMonConfig::for_capacity`).
+    pub fn walls(capacity: usize, spans: &[(f64, f64, usize)])
+                 -> MemoryMonitor {
+        MemoryMonitor::with_spans(MemMonConfig::for_capacity(capacity),
+                                  spans)
+    }
+
     /// Queries past the precomputed horizon wrap around into `[0,
     /// horizon)`: the interference process extends periodically instead
     /// of silently reporting an idle device forever (which would let a
@@ -194,6 +203,18 @@ mod tests {
         assert_eq!(m.interference_at(t_star + 2.0 * h),
                    m.interference_at(t_star));
         assert!(m.available_at(t_star + h) < m.cfg.capacity);
+    }
+
+    #[test]
+    fn walls_shorthand_matches_with_spans() {
+        let spans = [(10.0, 20.0, 300usize)];
+        let a = MemoryMonitor::walls(1000, &spans);
+        let b = MemoryMonitor::with_spans(MemMonConfig::for_capacity(1000),
+                                          &spans);
+        assert_eq!(a.cfg.capacity, 1000);
+        for t in [0.0, 12.0, 25.0] {
+            assert_eq!(a.available_at(t), b.available_at(t));
+        }
     }
 
     #[test]

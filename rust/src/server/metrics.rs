@@ -36,7 +36,14 @@ pub struct MemSample {
 pub struct Metrics {
     pub completed: Vec<RequestRecord>,
     pub mem_trace: Vec<MemSample>,
+    /// True OOMs only: pressure that not even the min-viable mask could
+    /// absorb (under mask-elastic accounting; with it disabled, any
+    /// pressure under the current mask counts, as before).
     pub oom_events: u64,
+    /// Memory spikes absorbed purely by mask-shrinking — pressure under
+    /// the current mask that fit within the min-viable footprint, so no
+    /// work was shed and no OOM was charged.
+    pub absorbed_spikes: u64,
     /// Head-of-line requests permanently rejected (admission control).
     pub rejected: u64,
     /// In-flight sequences evicted and requeued locally under memory
@@ -47,6 +54,9 @@ pub struct Metrics {
     pub prefills: u64,
     pub tokens_generated: u64,
     pub mask_switches: u64,
+    /// Host wall-clock seconds spent in controller decisions
+    /// (accumulated from `std::time::Instant` — nondeterministic; see
+    /// `ServeReport::wall`).
     pub controller_secs: f64,
     pub exec_secs: f64,
 }
@@ -60,6 +70,7 @@ impl Metrics {
         ServeReport {
             completed: self.completed.len(),
             oom_events: self.oom_events,
+            absorbed_spikes: self.absorbed_spikes,
             rejected: self.rejected,
             evictions: self.evictions,
             decode_steps: self.decode_steps,
@@ -75,17 +86,33 @@ impl Metrics {
             p99_ttft: percentile(&ttfts, 99.0),
             throughput_rps: self.completed.len() as f64 / wall_secs,
             throughput_tps: self.tokens_generated as f64 / wall_secs,
-            controller_secs: self.controller_secs,
+            wall: WallClockStats { controller_secs: self.controller_secs },
             exec_secs: self.exec_secs,
         }
     }
+}
+
+/// Host wall-clock measurements. These are real seconds on the machine
+/// running the simulation — nondeterministic across runs by nature — so
+/// they live in their own section that is NEVER serialized into report
+/// JSON (the byte-identical-per-seed determinism contract; guarded by
+/// `fleet_report_json_excludes_wall_clock_fields` in
+/// `tests/elastic_fleet.rs`). Print freely; serialize never.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WallClockStats {
+    /// Seconds spent inside controller decisions (`std::time::Instant`
+    /// around `Controller::decide` — the paper's "<1% overhead" path).
+    pub controller_secs: f64,
 }
 
 /// Aggregated serving results.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     pub completed: usize,
+    /// True OOM events (see `Metrics::oom_events`).
     pub oom_events: u64,
+    /// Pressure spikes absorbed by mask-shrinking alone.
+    pub absorbed_spikes: u64,
     /// Permanent admission rejections.
     pub rejected: u64,
     /// Local evict-and-requeue events (see `Metrics::evictions`).
@@ -103,7 +130,10 @@ pub struct ServeReport {
     pub p99_ttft: f64,
     pub throughput_rps: f64,
     pub throughput_tps: f64,
-    pub controller_secs: f64,
+    /// Wall-clock section — never serialized (see [`WallClockStats`]).
+    pub wall: WallClockStats,
+    /// Modeled (sim backend) or measured (PJRT) compute seconds. On the
+    /// sim backend this is deterministic per seed.
     pub exec_secs: f64,
 }
 
@@ -114,6 +144,7 @@ impl ServeReport {
         println!("   rejected         {:>10}", self.rejected);
         println!("   evictions        {:>10}", self.evictions);
         println!("   OOM events       {:>10}", self.oom_events);
+        println!("   absorbed spikes  {:>10}", self.absorbed_spikes);
         println!("   prefills         {:>10}", self.prefills);
         println!("   decode steps     {:>10}", self.decode_steps);
         println!("   tokens generated {:>10}", self.tokens_generated);
@@ -127,7 +158,7 @@ impl ServeReport {
         println!("   throughput       {:>7.2} req/s  {:>8.1} tok/s",
                  self.throughput_rps, self.throughput_tps);
         println!("   controller time  {:>9.3}s   exec time {:>9.3}s",
-                 self.controller_secs, self.exec_secs);
+                 self.wall.controller_secs, self.exec_secs);
     }
 }
 

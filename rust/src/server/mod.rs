@@ -1,6 +1,8 @@
 //! The serving runtime (L3's coordination contribution): continuous
 //! batcher, KV-cache manager, memory monitor with interference, the RAP
-//! controller loop, and metrics — composed by `engine::Engine`.
+//! controller loop, mask-elastic memory accounting
+//! ([`outlook::MemoryOutlook`]), and metrics — composed by
+//! `engine::Engine`.
 
 pub mod batcher;
 pub mod controller;
@@ -8,3 +10,4 @@ pub mod engine;
 pub mod kv;
 pub mod memmon;
 pub mod metrics;
+pub mod outlook;

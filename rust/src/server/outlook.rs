@@ -1,0 +1,140 @@
+//! Mask-elastic memory accounting: a replica's footprint as a lattice.
+//!
+//! RAP's premise is that a replica's footprint is *elastic* — the
+//! controller can shrink the FFN/attention masks to absorb a memory
+//! spike before any work must be shed. A single `bytes_used()` number
+//! (the footprint under the *current* mask) therefore under-describes
+//! the replica: a spike that fits between the current footprint and the
+//! cheapest reachable footprint is *absorbable*, and treating it as an
+//! OOM produces phantom pressure — queues rerouted, replicas spawned,
+//! KV migrated for nothing (ISSUE 4).
+//!
+//! [`MemoryOutlook`] reports the footprint at three points of the mask
+//! lattice:
+//!
+//!   * `min_viable` — the footprint under the cheapest mask the
+//!     controller is allowed to reach for the observed workload (the
+//!     GSI-greedy prefix down to the controller's retained-parameter
+//!     floor; for a static deployment the mask cannot move, so
+//!     `min_viable == current`);
+//!   * `current`    — the footprint under the mask deployed right now
+//!     (what `Engine::bytes_used` has always reported);
+//!   * `dense`      — the footprint this replica would have under the
+//!     full mask (the ceiling the mask could grow back to).
+//!
+//! Pressure semantics follow directly: a spike with
+//! `current > Sys_avail(t) >= min_viable` is **absorbable** (shrink the
+//! mask, shed nothing, count no OOM); only `Sys_avail(t) < min_viable`
+//! is a **true OOM**. Placement semantics likewise: a peer's capacity
+//! to take on work is its *elastic* headroom `Sys_avail(t) - min_viable`,
+//! not the headroom under whatever mask it happens to be wearing
+//! mid-shrink.
+
+/// A replica's memory footprint across the reachable mask lattice, in
+/// bytes. Invariant (enforced at construction): `min_viable <= current
+/// <= dense`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemoryOutlook {
+    /// Footprint under the cheapest mask the controller may deploy.
+    pub min_viable: usize,
+    /// Footprint under the currently deployed mask.
+    pub current: usize,
+    /// Footprint under the full (dense) mask.
+    pub dense: usize,
+}
+
+impl MemoryOutlook {
+    pub fn new(min_viable: usize, current: usize, dense: usize)
+               -> MemoryOutlook {
+        // Clamp rather than panic: a mask already pruned below the
+        // controller's floor makes the floor-mask footprint exceed the
+        // current one, and staying put is always reachable.
+        MemoryOutlook {
+            min_viable: min_viable.min(current),
+            current,
+            dense: dense.max(current),
+        }
+    }
+
+    /// An outlook with no elasticity: all three points collapse onto
+    /// the current footprint (static deployments, or mask-elastic
+    /// accounting disabled).
+    pub fn rigid(current: usize) -> MemoryOutlook {
+        MemoryOutlook { min_viable: current, current, dense: current }
+    }
+
+    /// Bytes the controller could free right now by shrinking the mask.
+    pub fn slack(&self) -> usize {
+        self.current - self.min_viable
+    }
+
+    /// Headroom under the current mask (the classic
+    /// `Sys_avail - bytes_used`).
+    pub fn headroom(&self, avail: usize) -> usize {
+        avail.saturating_sub(self.current)
+    }
+
+    /// Headroom the mask lattice can reach: `Sys_avail - min_viable`.
+    /// This is what placement decisions (routing, migration targets)
+    /// should score — a replica mid-shrink is not "full".
+    pub fn elastic_headroom(&self, avail: usize) -> usize {
+        avail.saturating_sub(self.min_viable)
+    }
+
+    /// The current mask is over `avail` (some reaction is needed).
+    pub fn pressured(&self, avail: usize) -> bool {
+        self.current > avail
+    }
+
+    /// Even the cheapest reachable mask fits `avail`: any pressure at
+    /// this level is absorbable by mask-shrinking alone.
+    pub fn viable(&self, avail: usize) -> bool {
+        self.min_viable <= avail
+    }
+
+    /// A true OOM: pressured AND not absorbable.
+    pub fn true_oom(&self, avail: usize) -> bool {
+        self.pressured(avail) && !self.viable(avail)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lattice_invariant_is_enforced() {
+        let o = MemoryOutlook::new(100, 80, 60);
+        assert!(o.min_viable <= o.current);
+        assert!(o.current <= o.dense);
+        assert_eq!(o.min_viable, 80);
+        assert_eq!(o.dense, 80);
+    }
+
+    #[test]
+    fn rigid_has_no_slack() {
+        let o = MemoryOutlook::rigid(42);
+        assert_eq!(o.slack(), 0);
+        assert_eq!(o.elastic_headroom(100), o.headroom(100));
+        // rigid pressure is always a true OOM
+        assert!(o.true_oom(41));
+        assert!(!o.true_oom(42));
+    }
+
+    #[test]
+    fn absorbable_band_is_not_an_oom() {
+        let o = MemoryOutlook::new(30, 100, 120);
+        assert_eq!(o.slack(), 70);
+        // above current: no pressure at all
+        assert!(!o.pressured(100));
+        // in (min_viable, current): pressured but absorbable
+        assert!(o.pressured(60));
+        assert!(o.viable(60));
+        assert!(!o.true_oom(60));
+        assert_eq!(o.elastic_headroom(60), 30);
+        assert_eq!(o.headroom(60), 0);
+        // below min_viable: a true OOM
+        assert!(o.true_oom(29));
+        assert_eq!(o.elastic_headroom(29), 0);
+    }
+}

@@ -15,7 +15,7 @@ use rap::model_meta::ModelMeta;
 use rap::runtime::Runtime;
 use rap::server::controller::{Controller, Policy};
 use rap::server::engine::{Engine, EngineConfig};
-use rap::server::memmon::{MemMonConfig, MemoryMonitor};
+use rap::server::memmon::MemoryMonitor;
 use rap::util::json::Json;
 use rap::workload::Request;
 
@@ -37,8 +37,7 @@ fn pressured_fleet(policy: RouterPolicy) -> Fleet {
         let params = mem.param_bytes(&PruneMask::full(&meta));
         let monitor = if id == 0 {
             let cap = (params as f64 * 1.2) as usize;
-            MemoryMonitor::with_spans(MemMonConfig::for_capacity(cap),
-                                      &[(0.0, 1e12, cap - params / 2)])
+            MemoryMonitor::walls(cap, &[(0.0, 1e12, cap - params / 2)])
         } else {
             MemoryMonitor::constant(params * 6)
         };

@@ -15,7 +15,7 @@ use rap::model_meta::{BlockId, ModelMeta};
 use rap::server::batcher::{decode_bucket, prefill_bucket, ActiveSeq,
                            Batcher, DECODE_BUCKETS, PREFILL_BUCKETS};
 use rap::server::kv::KvManager;
-use rap::server::memmon::{MemMonConfig, MemoryMonitor};
+use rap::server::memmon::MemoryMonitor;
 use rap::util::json::Json;
 use rap::util::rng::Rng;
 use rap::workload::Request;
@@ -262,8 +262,8 @@ fn random_fleet_replicas(rng: &mut Rng, n: usize, seed: u64)
             // random interference: hold a random slice of capacity
             let cap = r.engine.monitor.cfg.capacity;
             let held = rng.below(cap);
-            r.engine.monitor = MemoryMonitor::with_spans(
-                MemMonConfig::for_capacity(cap), &[(0.0, 1e12, held)]);
+            r.engine.monitor =
+                MemoryMonitor::walls(cap, &[(0.0, 1e12, held)]);
             match rng.below(5) {
                 0 => r.state = ReplicaState::Draining,
                 1 => r.state = ReplicaState::Respawning { until: 1e9 },
@@ -309,8 +309,9 @@ fn prop_router_only_picks_accepting_replicas() {
 }
 
 #[test]
-fn prop_kv_headroom_router_maximizes_headroom() {
-    // The kv-headroom policy never picks a replica with less headroom
+fn prop_kv_headroom_router_maximizes_elastic_headroom() {
+    // The kv-headroom policy never picks a replica with less *elastic*
+    // headroom (Sys_avail − min-viable footprint, the memory outlook)
     // than an available alternative.
     for seed in 0..80u64 {
         let mut rng = Rng::new(seed ^ 0xABCD);
@@ -321,12 +322,72 @@ fn prop_kv_headroom_router_maximizes_headroom() {
         let req = Request { id: 1, arrival: t, prompt_len: 16,
                             gen_len: 8 };
         if let Some(pick) = router.route(&req, &reps, t) {
-            let picked = reps[pick].kv_headroom(t);
+            let picked = reps[pick].elastic_headroom(t);
             for (i, r) in reps.iter().enumerate() {
                 if r.accepting() {
-                    assert!(picked >= r.kv_headroom(t),
+                    assert!(picked >= r.elastic_headroom(t),
                             "seed {seed}: picked {pick} with {picked} \
-                             but replica {i} had {}", r.kv_headroom(t));
+                             but replica {i} had {}",
+                            r.elastic_headroom(t));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_rap_router_never_prefers_infeasible() {
+    // The rap-aware score must rank every feasible replica (elastic
+    // headroom > request cost) above every infeasible one, regardless
+    // of mask utility or queue depth — the naive `utility × (headroom −
+    // cost)` score inverts that when headroom < cost, because high
+    // utility shrinks the *penalty*. Among infeasible-only fleets the
+    // least-underwater replica must win.
+    for seed in 0..120u64 {
+        let mut rng = Rng::new(seed ^ 0xFEA51B1E);
+        let n = rng.range(2, 6);
+        let mut reps = random_fleet_replicas(&mut rng, n, seed);
+        // random mask damage so utilities differ (whole blocks, like
+        // the controller's action space)
+        let meta = default_sim_meta();
+        for r in &mut reps {
+            for b in meta.all_blocks() {
+                if rng.chance(0.35) {
+                    r.engine.mask.drop_block(b);
+                }
+            }
+        }
+        let t = rng.f64() * 50.0;
+        let req = Request { id: 1, arrival: t,
+                            prompt_len: rng.range(2, 120),
+                            gen_len: rng.range(2, 48) };
+        let mut router = Router::new(RouterPolicy::RapAware, n);
+        let Some(pick) = router.route(&req, &reps, t) else {
+            continue;
+        };
+        let feasible = |r: &Replica| {
+            r.elastic_headroom(t) as f64
+                > r.engine.elastic_admission_cost(&req) as f64
+        };
+        let any_feasible =
+            reps.iter().any(|r| r.accepting() && feasible(r));
+        if any_feasible {
+            assert!(feasible(&reps[pick]),
+                    "seed {seed}: picked infeasible replica {pick} \
+                     while a feasible one existed");
+        } else {
+            // all infeasible: the pick minimizes the deficit
+            let deficit = |r: &Replica| {
+                r.engine.elastic_admission_cost(&req) as f64
+                    - r.elastic_headroom(t) as f64
+            };
+            let picked = deficit(&reps[pick]);
+            for (i, r) in reps.iter().enumerate() {
+                if r.accepting() {
+                    assert!(picked <= deficit(r) + 1e-9,
+                            "seed {seed}: picked {pick} (deficit \
+                             {picked}) over less-underwater {i} \
+                             ({})", deficit(r));
                 }
             }
         }
@@ -360,9 +421,8 @@ fn prop_migration_conserves_sequences() {
         // replica 0 hits a wall mid-run: less than the dense footprint
         let params = fleet.replicas[0].engine.bytes_used();
         let cap = params * 4;
-        fleet.replicas[0].engine.monitor = MemoryMonitor::with_spans(
-            MemMonConfig::for_capacity(cap),
-            &[(4.0, 1e12, cap - params / 2)]);
+        fleet.replicas[0].engine.monitor =
+            MemoryMonitor::walls(cap, &[(4.0, 1e12, cap - params / 2)]);
         let n = rng.range(10, 40) as u64;
         let reqs: Vec<Request> = (0..n)
             .map(|id| Request { id, arrival: rng.f64() * 20.0,

@@ -1,0 +1,410 @@
+//! First-class request API — the serving front door.
+//!
+//! RAP's premise is that compression strategy must adapt to the
+//! "heterogeneous KV-cache demands arising from diverse user requests",
+//! but a pre-baked workload trace carries none of that diversity: no
+//! tenant, no urgency, no deadline. This module is the typed ingress
+//! that replaces trace replay as the way work enters the serving stack:
+//! a [`SubmitRequest`] carries *who* is asking ([`Tenant`]), *how
+//! urgent* it is ([`PriorityClass`]), and *by when* it must finish
+//! (`slo_deadline`), and every decision layer — engine admission,
+//! pressure-victim selection, the fleet router, the autoscaler — reads
+//! those fields. Trace replay still exists, but only as a thin adapter
+//! ([`from_trace`]): a trace is just an iterator of `SubmitRequest`s
+//! with default tenancy, so there is exactly one ingress path.
+//!
+//! ## Request lifecycle
+//!
+//! A submitted request moves through this state machine (surfaced by
+//! `Engine::status` / `Fleet::poll` as [`RequestStatus`]):
+//!
+//! ```text
+//!   submit ──► Queued ──► Running ──► Finished(Done)
+//!                │  ▲         │   └──► Finished(DeadlineMissed)   (late)
+//!                │  └─────────┤                                  (evict/requeue)
+//!                │       Migrating                (parked / in flight
+//!                │            │                    between replicas)
+//!                │            └─────► Queued | Running  (landed on a peer)
+//!                ├──► Finished(Rejected)        (admission control /
+//!                │                               no accepting replica)
+//!                ├──► Finished(DeadlineMissed)  (expired in queue, or
+//!                │                               shed after its deadline)
+//!                └──► Finished(Cancelled)       (cancel() — any
+//!                                                non-terminal state)
+//! ```
+//!
+//! Terminal outcomes ([`Outcome`]):
+//!
+//!   * `Done` — all `max_new_tokens` generated, within the deadline
+//!     when one was set;
+//!   * `Rejected` — admission control permanently rejected it (or no
+//!     replica was accepting / the run ended with it still backlogged);
+//!   * `DeadlineMissed` — it finished after `slo_deadline`, expired in
+//!     the queue, or was shed under pressure after its deadline passed
+//!     (expired work is terminated rather than requeued: re-running a
+//!     request that already missed its SLO only burns capacity);
+//!   * `Cancelled` — [`cancel`](crate::server::engine::Engine::cancel)
+//!     reclaimed it; any KV it held is freed.
+//!
+//! ## Priority and deadlines in the decision layers
+//!
+//!   * the batcher's admission queue is priority-ordered (stable FCFS
+//!     within a class);
+//!   * pressure victims are chosen expired-deadline-first, then lowest
+//!     class, then largest KV × remaining decode — and admission may
+//!     preempt strictly-lower-class in-flight work to fit a higher
+//!     class, never the reverse;
+//!   * the `tenant-fair` router holds each tenant's overflow in a
+//!     per-tenant ingress backlog against a KV-byte quota
+//!     ([`TenantQuotas`]), dispatching deepest-under-quota first and
+//!     placing each released request by RAP-aware scoring;
+//!   * the autoscaler reads a per-tenant outstanding-requests signal so
+//!     one tenant's backlog can trigger scale-up even when the fleet
+//!     average looks calm.
+//!
+//! With every field at its default (tenant `"default"`, `Normal`
+//! priority, no deadline) the whole stack behaves exactly like the
+//! trace-replay path it replaced — seeded scenarios reproduce
+//! byte-identically.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::workload::Request as TraceRequest;
+
+/// Tenant identity: a cheap-to-clone interned name. Ordering (and
+/// therefore every per-tenant report and quota table) is by name, so
+/// multi-tenant output is deterministic.
+pub type Tenant = Arc<str>;
+
+/// The tenant every undecorated request belongs to (trace replay,
+/// defaults).
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Intern a tenant name.
+pub fn tenant(name: &str) -> Tenant {
+    Arc::from(name)
+}
+
+/// Urgency class. Ordered: `Batch < Normal < Interactive` — a higher
+/// class is never evicted to admit a lower one.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord,
+         Hash)]
+pub enum PriorityClass {
+    /// Throughput-oriented background work (first to be shed).
+    Batch,
+    /// The default class — exactly the pre-API behavior.
+    #[default]
+    Normal,
+    /// Latency-sensitive traffic (last to be shed, first in queue).
+    Interactive,
+}
+
+impl PriorityClass {
+    pub fn parse(s: &str) -> Result<PriorityClass> {
+        Ok(match s {
+            "batch" => PriorityClass::Batch,
+            "normal" => PriorityClass::Normal,
+            "interactive" => PriorityClass::Interactive,
+            _ => bail!("unknown priority '{s}' (expected batch | normal \
+                        | interactive)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PriorityClass::Batch => "batch",
+            PriorityClass::Normal => "normal",
+            PriorityClass::Interactive => "interactive",
+        }
+    }
+}
+
+/// One typed request — the only way work enters `Engine` or `Fleet`.
+///
+/// `prompt_len` stands in for the prompt itself: the serving stack is
+/// driven by shape (the sim backend derives deterministic prompt tokens
+/// from `id`), so the API carries the token count rather than token
+/// text.
+#[derive(Clone, Debug)]
+pub struct SubmitRequest {
+    /// Unique per run; the handle key. Assigned by the submitter (the
+    /// trace adapter keeps trace ids).
+    pub id: u64,
+    /// Submission time in sim seconds.
+    pub arrival: f64,
+    pub tenant: Tenant,
+    pub priority: PriorityClass,
+    /// Absolute sim-time completion deadline (`None` = no SLO).
+    pub slo_deadline: Option<f64>,
+    pub prompt_len: usize,
+    /// Generation cap; the sim completes a request exactly here.
+    pub max_new_tokens: usize,
+}
+
+impl SubmitRequest {
+    /// A default-tenancy request: tenant `"default"`, `Normal`
+    /// priority, no deadline, id 0, arrival 0.0.
+    pub fn new(prompt_len: usize, max_new_tokens: usize) -> SubmitRequest {
+        SubmitRequest {
+            id: 0,
+            arrival: 0.0,
+            tenant: tenant(DEFAULT_TENANT),
+            priority: PriorityClass::Normal,
+            slo_deadline: None,
+            prompt_len,
+            max_new_tokens,
+        }
+    }
+
+    pub fn with_id(mut self, id: u64) -> SubmitRequest {
+        self.id = id;
+        self
+    }
+
+    pub fn with_arrival(mut self, arrival: f64) -> SubmitRequest {
+        self.arrival = arrival;
+        self
+    }
+
+    pub fn with_tenant(mut self, name: &str) -> SubmitRequest {
+        self.tenant = tenant(name);
+        self
+    }
+
+    pub fn with_priority(mut self, p: PriorityClass) -> SubmitRequest {
+        self.priority = p;
+        self
+    }
+
+    /// Set an absolute completion deadline (sim seconds).
+    pub fn with_deadline(mut self, at: f64) -> SubmitRequest {
+        self.slo_deadline = Some(at);
+        self
+    }
+
+    /// The one trace→API conversion: default tenancy, the trace's id,
+    /// arrival, and lengths.
+    pub fn from_trace(r: &TraceRequest) -> SubmitRequest {
+        SubmitRequest::new(r.prompt_len, r.gen_len)
+            .with_id(r.id)
+            .with_arrival(r.arrival)
+    }
+
+    /// Whether the deadline has already passed at sim time `now`.
+    pub fn expired(&self, now: f64) -> bool {
+        self.slo_deadline.map_or(false, |d| now > d)
+    }
+
+    /// Whether finishing at `at` honors the SLO (vacuously true without
+    /// one).
+    pub fn deadline_hit(&self, at: f64) -> bool {
+        self.slo_deadline.map_or(true, |d| at <= d)
+    }
+}
+
+/// Opaque ticket returned by `submit`; feed it to `poll` / `cancel`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RequestHandle {
+    pub id: u64,
+}
+
+/// Terminal result of one request (see the module docs for the state
+/// machine).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    Done,
+    Rejected,
+    DeadlineMissed,
+    Cancelled,
+}
+
+impl Outcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Outcome::Done => "done",
+            Outcome::Rejected => "rejected",
+            Outcome::DeadlineMissed => "deadline-missed",
+            Outcome::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Observable lifecycle state (`Engine::status` / `Fleet::poll`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestStatus {
+    /// Admitted but not yet prefilled (replica queue or ingress
+    /// backlog).
+    Queued,
+    /// Mid-decode on some replica.
+    Running,
+    /// Parked for migration or in flight between replicas.
+    Migrating,
+    Finished(Outcome),
+}
+
+/// The trace-replay adapter — the single legacy ingress, now just an
+/// iterator of default-tenancy [`SubmitRequest`]s.
+pub fn from_trace<I>(trace: I) -> impl Iterator<Item = SubmitRequest>
+where
+    I: IntoIterator<Item = TraceRequest>,
+{
+    trace.into_iter().map(|r| SubmitRequest::from_trace(&r))
+}
+
+/// Spread a trace across `tenants` synthetic tenants (`t0`, `t1`, …,
+/// round-robin by request id) and attach a relative completion SLO of
+/// `slo` seconds after arrival. `tenants <= 1` keeps the default
+/// tenant. The CLI's `--tenants` / `--slo` flags are this function.
+pub fn decorate_trace(trace: Vec<TraceRequest>, tenants: usize,
+                      slo: Option<f64>) -> Vec<SubmitRequest> {
+    let names: Vec<Tenant> = if tenants <= 1 {
+        vec![tenant(DEFAULT_TENANT)]
+    } else {
+        (0..tenants).map(|i| tenant(&format!("t{i}"))).collect()
+    };
+    trace
+        .into_iter()
+        .map(|r| {
+            let mut s = SubmitRequest::from_trace(&r);
+            s.tenant = names[(r.id as usize) % names.len()].clone();
+            if let Some(rel) = slo {
+                s.slo_deadline = Some(r.arrival + rel);
+            }
+            s
+        })
+        .collect()
+}
+
+/// Per-tenant KV-byte quotas for the tenant-fair router: the cap on a
+/// tenant's projected in-flight KV bytes across the fleet (queued +
+/// active + migrating). The quota is a hard cap — a tenant's overflow
+/// waits in the ingress backlog regardless of idle capacity (borrowing
+/// idle share is a ROADMAP follow-up) — so it must exceed the largest
+/// single request's projected KV bytes or that tenant can never
+/// dispatch.
+#[derive(Clone, Debug)]
+pub struct TenantQuotas {
+    /// Quota for tenants with no explicit entry.
+    pub default_bytes: u64,
+    overrides: Vec<(Tenant, u64)>,
+}
+
+impl TenantQuotas {
+    /// No caps at all: tenant-fair degrades to pure RAP-aware placement.
+    pub fn unlimited() -> TenantQuotas {
+        TenantQuotas { default_bytes: u64::MAX, overrides: Vec::new() }
+    }
+
+    pub fn with_default(mut self, bytes: u64) -> TenantQuotas {
+        self.default_bytes = bytes;
+        self
+    }
+
+    /// Set (or replace) one tenant's quota.
+    pub fn with_quota(mut self, name: &str, bytes: u64) -> TenantQuotas {
+        if let Some(e) =
+            self.overrides.iter_mut().find(|(t, _)| t.as_ref() == name)
+        {
+            e.1 = bytes;
+        } else {
+            self.overrides.push((tenant(name), bytes));
+        }
+        self
+    }
+
+    pub fn bytes_for(&self, name: &str) -> u64 {
+        self.overrides
+            .iter()
+            .find(|(t, _)| t.as_ref() == name)
+            .map(|(_, b)| *b)
+            .unwrap_or(self.default_bytes)
+    }
+
+    /// Whether any finite quota is configured (reports only print the
+    /// quota columns when one is).
+    pub fn any_finite(&self) -> bool {
+        self.default_bytes != u64::MAX
+            || self.overrides.iter().any(|(_, b)| *b != u64::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_classes_are_ordered() {
+        assert!(PriorityClass::Batch < PriorityClass::Normal);
+        assert!(PriorityClass::Normal < PriorityClass::Interactive);
+        assert_eq!(PriorityClass::default(), PriorityClass::Normal);
+        assert_eq!(PriorityClass::parse("interactive").unwrap(),
+                   PriorityClass::Interactive);
+        assert!(PriorityClass::parse("urgent").is_err());
+    }
+
+    #[test]
+    fn trace_adapter_preserves_identity_and_defaults() {
+        let trace = vec![
+            TraceRequest { id: 3, arrival: 1.5, prompt_len: 12,
+                           gen_len: 6 },
+            TraceRequest { id: 4, arrival: 2.0, prompt_len: 30,
+                           gen_len: 8 },
+        ];
+        let subs: Vec<SubmitRequest> = from_trace(trace).collect();
+        assert_eq!(subs.len(), 2);
+        assert_eq!(subs[0].id, 3);
+        assert_eq!(subs[0].arrival, 1.5);
+        assert_eq!(subs[0].prompt_len, 12);
+        assert_eq!(subs[0].max_new_tokens, 6);
+        assert_eq!(subs[0].tenant.as_ref(), DEFAULT_TENANT);
+        assert_eq!(subs[0].priority, PriorityClass::Normal);
+        assert_eq!(subs[0].slo_deadline, None);
+        assert_eq!(subs[1].id, 4);
+    }
+
+    #[test]
+    fn deadlines_and_expiry() {
+        let r = SubmitRequest::new(8, 4).with_deadline(10.0);
+        assert!(!r.expired(10.0));
+        assert!(r.expired(10.1));
+        assert!(r.deadline_hit(10.0));
+        assert!(!r.deadline_hit(10.1));
+        let n = SubmitRequest::new(8, 4);
+        assert!(!n.expired(1e9));
+        assert!(n.deadline_hit(1e9));
+    }
+
+    #[test]
+    fn decorate_assigns_tenants_and_slo() {
+        let trace: Vec<TraceRequest> = (0..6)
+            .map(|id| TraceRequest { id, arrival: id as f64,
+                                     prompt_len: 8, gen_len: 4 })
+            .collect();
+        let subs = decorate_trace(trace, 3, Some(2.5));
+        assert_eq!(subs[0].tenant.as_ref(), "t0");
+        assert_eq!(subs[1].tenant.as_ref(), "t1");
+        assert_eq!(subs[2].tenant.as_ref(), "t2");
+        assert_eq!(subs[3].tenant.as_ref(), "t0");
+        assert_eq!(subs[4].slo_deadline, Some(4.0 + 2.5));
+        let plain = decorate_trace(
+            vec![TraceRequest { id: 0, arrival: 0.0, prompt_len: 8,
+                                gen_len: 4 }],
+            1, None);
+        assert_eq!(plain[0].tenant.as_ref(), DEFAULT_TENANT);
+        assert_eq!(plain[0].slo_deadline, None);
+    }
+
+    #[test]
+    fn quota_lookup_and_overrides() {
+        let q = TenantQuotas::unlimited()
+            .with_default(1000)
+            .with_quota("noisy", 64)
+            .with_quota("noisy", 128); // replace, not duplicate
+        assert_eq!(q.bytes_for("noisy"), 128);
+        assert_eq!(q.bytes_for("anyone-else"), 1000);
+        assert!(q.any_finite());
+        assert!(!TenantQuotas::unlimited().any_finite());
+    }
+}

@@ -6,6 +6,11 @@
 //! `eval_every_secs` of sim time):
 //!
 //!   * queue pressure — outstanding requests per serving replica;
+//!   * tenant queue pressure — the *single worst tenant's* outstanding
+//!     requests per serving replica (`high_tenant_queue_per_replica`,
+//!     off by default). The fleet average can look calm while one
+//!     tenant's backlog burns its SLOs; this signal lets the scaler see
+//!     that skew;
 //!   * p99 TTFT       — tail time-to-first-token of recently finished
 //!                      requests (queueing and memory stalls surface
 //!                      here first);
@@ -16,7 +21,12 @@
 //!                      controller absorbs by mask-shrinking lands in
 //!                      `absorbed_spikes` instead, so the fleet no
 //!                      longer spawns capacity for pressure the masks
-//!                      already soaked up.
+//!                      already soaked up;
+//!   * absorbed-spike rate (early warning, `scale_on_absorption`, off
+//!     by default) — sustained mask absorption means the controllers
+//!     are soaking up pressure at a quality cost, and the next spike
+//!     may land below `min_viable`: scale *after* sustained absorption,
+//!     *before* true OOMs.
 //!
 //! Policy: scale UP when any signal has stayed above its high watermark
 //! for `hold_secs`; scale DOWN when every signal has stayed below its
@@ -42,11 +52,24 @@ pub struct AutoscaleConfig {
     /// …and down below this many (the hysteresis band between the two
     /// watermarks is what prevents flapping).
     pub low_queue_per_replica: f64,
+    /// Scale up when any single tenant's outstanding requests per
+    /// serving replica exceed this (`INFINITY` — the default — disables
+    /// the signal; single-tenant runs then behave exactly as before).
+    pub high_tenant_queue_per_replica: f64,
     /// Scale up when the windowed p99 TTFT exceeds this (sim seconds).
     pub high_p99_ttft_secs: f64,
     /// Scale up when the fleet saw at least this many OOM events in the
     /// signal window.
     pub high_oom_events: usize,
+    /// Early warning (PR-4 follow-up): treat sustained mask absorption
+    /// as scale-up pressure — the fleet adds capacity *before* spikes
+    /// start landing below the min-viable floor. Off by default: the
+    /// absorbable-spike scenario's "zero spawns" contract holds unless
+    /// a deployment opts in.
+    pub scale_on_absorption: bool,
+    /// With `scale_on_absorption`: absorbed spikes in the signal window
+    /// that count as high pressure.
+    pub high_absorbed_spikes: usize,
     /// How long a signal must persist before acting.
     pub hold_secs: f64,
     /// Quiet period after any applied spawn/retire.
@@ -65,8 +88,11 @@ impl Default for AutoscaleConfig {
             max_replicas: 8,
             high_queue_per_replica: 9.0,
             low_queue_per_replica: 1.0,
+            high_tenant_queue_per_replica: f64::INFINITY,
             high_p99_ttft_secs: 8.0,
             high_oom_events: 6,
+            scale_on_absorption: false,
+            high_absorbed_spikes: 4,
             hold_secs: 4.0,
             cooldown_secs: 20.0,
             eval_every_secs: 1.0,
@@ -80,8 +106,15 @@ impl Default for AutoscaleConfig {
 pub struct FleetSignals {
     /// Replicas currently accepting routed work.
     pub serving: usize,
-    /// Queued + in-flight requests across live replicas.
+    /// Queued + in-flight requests across live replicas. Quota-held
+    /// tenant-fair backlog is deliberately NOT counted: the quota is a
+    /// fleet-wide byte cap, so spawning replicas cannot admit that
+    /// overflow — it is not capacity-addressable demand.
     pub outstanding: usize,
+    /// The single worst tenant's outstanding requests (same
+    /// replica-side accounting). Equals `outstanding` on single-tenant
+    /// runs.
+    pub max_tenant_outstanding: usize,
     /// p99 TTFT of requests finished inside the signal window (NaN when
     /// none finished — NaN compares false, so it never trips a
     /// watermark).
@@ -89,6 +122,9 @@ pub struct FleetSignals {
     /// True OOM events observed inside the signal window (mask-absorbed
     /// spikes are not OOMs and never reach this signal).
     pub recent_ooms: usize,
+    /// Mask-absorbed spikes inside the signal window (the early-warning
+    /// signal; only consulted when `scale_on_absorption` is set).
+    pub recent_absorbed: usize,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -136,12 +172,25 @@ impl Autoscaler {
         }
         self.last_eval_at = t;
         let per = s.outstanding as f64 / s.serving.max(1) as f64;
+        let tenant_per = s.max_tenant_outstanding as f64
+            / s.serving.max(1) as f64;
+        let absorbed_high = self.cfg.scale_on_absorption
+            && s.recent_absorbed >= self.cfg.high_absorbed_spikes;
+        let tenant_high =
+            tenant_per > self.cfg.high_tenant_queue_per_replica;
         let high = per > self.cfg.high_queue_per_replica
+            || tenant_high
             || s.p99_ttft > self.cfg.high_p99_ttft_secs
-            || s.recent_ooms >= self.cfg.high_oom_events;
+            || s.recent_ooms >= self.cfg.high_oom_events
+            || absorbed_high;
+        // every high signal also vetoes low — high and low being true
+        // simultaneously would let the bounds turn sustained pressure
+        // into spawn/retire flapping at max_replicas
         let low = per < self.cfg.low_queue_per_replica
+            && !tenant_high
             && !(s.p99_ttft > self.cfg.high_p99_ttft_secs)
-            && s.recent_ooms == 0;
+            && s.recent_ooms == 0
+            && !absorbed_high;
         self.high_since = if high { self.high_since.or(Some(t)) }
                           else { None };
         self.low_since = if low { self.low_since.or(Some(t)) }
@@ -188,14 +237,19 @@ mod tests {
         }
     }
 
+    fn signals(serving: usize, outstanding: usize) -> FleetSignals {
+        FleetSignals { serving, outstanding,
+                       max_tenant_outstanding: outstanding,
+                       p99_ttft: f64::NAN, recent_ooms: 0,
+                       recent_absorbed: 0 }
+    }
+
     fn overloaded(serving: usize) -> FleetSignals {
-        FleetSignals { serving, outstanding: serving * 50,
-                       p99_ttft: f64::NAN, recent_ooms: 0 }
+        signals(serving, serving * 50)
     }
 
     fn idle_signals(serving: usize) -> FleetSignals {
-        FleetSignals { serving, outstanding: 0, p99_ttft: f64::NAN,
-                       recent_ooms: 0 }
+        signals(serving, 0)
     }
 
     #[test]
@@ -268,11 +322,73 @@ mod tests {
     #[test]
     fn oom_pressure_alone_triggers_up() {
         let mut a = Autoscaler::new(cfg());
-        let s = FleetSignals { serving: 2, outstanding: 0,
-                               p99_ttft: f64::NAN, recent_ooms: 50 };
+        let s = FleetSignals { recent_ooms: 50, ..idle_signals(2) };
         a.decide(0.0, &s);
         a.decide(1.0, &s);
         a.decide(2.0, &s);
         assert_eq!(a.decide(3.0, &s), ScaleDecision::Up);
+    }
+
+    /// One tenant's backlog trips the per-tenant watermark even though
+    /// the fleet-average queue looks calm; with the watermark at its
+    /// infinite default, the identical signals hold.
+    #[test]
+    fn skewed_tenant_queue_triggers_up_when_armed() {
+        let mut armed = Autoscaler::new(AutoscaleConfig {
+            high_tenant_queue_per_replica: 10.0,
+            ..cfg()
+        });
+        // fleet-average 6/replica (below 9), worst tenant 24/replica
+        let s = FleetSignals { serving: 2, outstanding: 12,
+                               max_tenant_outstanding: 48,
+                               p99_ttft: f64::NAN, recent_ooms: 0,
+                               recent_absorbed: 0 };
+        armed.decide(0.0, &s);
+        armed.decide(1.0, &s);
+        armed.decide(2.0, &s);
+        assert_eq!(armed.decide(3.0, &s), ScaleDecision::Up);
+        // default (INFINITY): the same skew never trips
+        let mut unarmed = Autoscaler::new(cfg());
+        for t in 0..10 {
+            assert_eq!(unarmed.decide(t as f64, &s), ScaleDecision::Hold);
+        }
+    }
+
+    /// The PR-4 follow-up: sustained mask absorption scales up — but
+    /// only when a deployment opts in, and it also vetoes scale-down
+    /// while absorbing.
+    #[test]
+    fn absorption_early_warning_is_gated_by_the_flag() {
+        let absorbing = FleetSignals { recent_absorbed: 5,
+                                       ..idle_signals(2) };
+        // flag off (default): absorption is invisible — and since the
+        // queue is idle, the scaler would rather scale DOWN
+        let mut off = Autoscaler::new(cfg());
+        off.decide(0.0, &absorbing);
+        off.decide(1.0, &absorbing);
+        off.decide(2.0, &absorbing);
+        assert_eq!(off.decide(3.0, &absorbing), ScaleDecision::Down);
+        // flag on: the same window is high pressure
+        let mut on = Autoscaler::new(AutoscaleConfig {
+            scale_on_absorption: true,
+            high_absorbed_spikes: 4,
+            ..cfg()
+        });
+        on.decide(0.0, &absorbing);
+        on.decide(1.0, &absorbing);
+        on.decide(2.0, &absorbing);
+        assert_eq!(on.decide(3.0, &absorbing), ScaleDecision::Up);
+        // below the absorbed watermark the flag changes nothing
+        let calm = FleetSignals { recent_absorbed: 3,
+                                  ..idle_signals(2) };
+        let mut on2 = Autoscaler::new(AutoscaleConfig {
+            scale_on_absorption: true,
+            high_absorbed_spikes: 4,
+            ..cfg()
+        });
+        on2.decide(0.0, &calm);
+        on2.decide(1.0, &calm);
+        on2.decide(2.0, &calm);
+        assert_eq!(on2.decide(3.0, &calm), ScaleDecision::Down);
     }
 }

@@ -1,8 +1,20 @@
 //! The fleet event loop: one shared simulated clock driving N externally
-//! stepped engines, a router in front, and a maintenance pass that keeps
-//! the fleet healthy — drain/respawn for replicas under sustained OOM
-//! pressure, cross-replica migration of in-flight sequences
-//! (`FleetConfig::migrate`), and autoscaling (`FleetConfig::autoscale`).
+//! stepped engines, the typed request ingress in front
+//! (`Fleet::submit` / `poll` / `cancel` — see `crate::api`), and a
+//! maintenance pass that keeps the fleet healthy — drain/respawn for
+//! replicas under sustained OOM pressure, cross-replica migration of
+//! in-flight sequences (`FleetConfig::migrate`), and autoscaling
+//! (`FleetConfig::autoscale`, with an optional warm-up cost on spawn).
+//!
+//! Ingress model: every request enters as a typed
+//! [`SubmitRequest`] through [`Fleet::submit`]. Trace replay is a thin
+//! adapter over this ([`Fleet::run_trace`] maps the trace through
+//! `api::from_trace` and drives [`Fleet::run_requests`]), so the router,
+//! the engines, and the autoscaler all see one ingress path. Under the
+//! `tenant-fair` router, arrivals land in a per-tenant ingress backlog
+//! and are released against per-tenant KV-byte quotas
+//! (`Fleet::dispatch_ingress`); every other policy dispatches on
+//! arrival, exactly as before.
 //!
 //! Time model: the fleet advances in events — the next trace arrival or
 //! the next maintenance tick, whichever comes first. Every replica is
@@ -12,15 +24,19 @@
 //! uses true arrival times, so the skew never leaks into metrics.
 //!
 //! Migration model: when interference collapses a replica's
-//! `Sys_avail(t)` headroom, its engine parks victims (chosen by KV bytes
-//! × remaining decode — see `EvictionMode::Park`) instead of evicting
-//! them, and the fleet ships each parked state to the peer with the most
-//! *elastic* headroom, charging the sim backend's modeled transfer cost
-//! (`Runtime::transfer_cost`) before the payload lands. Queued work on a
-//! collapsed replica is rebalanced the same way before the engines step,
-//! so requests are not burned by a pressure wall they never had a chance
-//! against. When no peer can take a victim, the fleet falls back to the
-//! classic local requeue (and charges the eviction).
+//! `Sys_avail(t)` headroom, its engine parks victims (chosen by expired
+//! deadline, then priority class, then KV bytes × remaining decode —
+//! see `EvictionMode::Park`) instead of evicting them, and the fleet
+//! ships each parked state to the peer with the most *elastic*
+//! headroom, charging the sim backend's modeled transfer cost
+//! (`Runtime::transfer_cost`) for the *live* KV slice (prompt +
+//! generated rows under the export mask — prefill-bucket padding is
+//! never shipped; `migration_bytes_padded` keeps the pre-compression
+//! number for comparison) before the payload lands. Queued work on a
+//! collapsed replica is rebalanced the same way before the engines
+//! step, so requests are not burned by a pressure wall they never had a
+//! chance against. When no peer can take a victim, the fleet falls back
+//! to the classic local requeue (and charges the eviction).
 //!
 //! Pressure is judged *mask-elastically* (`FleetConfig::
 //! elastic_accounting`, on by default): a collapse exists only when not
@@ -31,15 +47,20 @@
 //! `absorbed_spikes` instead of `oom_events` — no OOM-driven
 //! autoscaling. The `absorbable_spike_fleet` scenario pins this down.
 
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
 use anyhow::Result;
 
 use super::autoscaler::{Autoscaler, FleetSignals, ScaleDecision};
-use super::metrics::{FleetReport, ReplicaReport};
+use super::metrics::{FleetReport, FleetTenantReport, ReplicaReport};
 use super::replica::{build_sim_replica, Replica, ReplicaSpec,
                      ReplicaState};
 use super::router::{Router, RouterPolicy};
+use crate::api::{self, Outcome, PriorityClass, RequestHandle,
+                 RequestStatus, SubmitRequest, Tenant, TenantQuotas};
 use crate::model_meta::ModelMeta;
 use crate::server::engine::{EvictionMode, SeqState};
+use crate::server::metrics::TenantCounts;
 use crate::util::stats::{mean, percentile};
 use crate::workload::{Request, TraceConfig, TraceGenerator};
 
@@ -63,6 +84,11 @@ pub struct FleetConfig {
     /// Spawn/retire replicas from fleet-level load signals. `None`
     /// keeps the fixed-size drain/respawn-only fleet.
     pub autoscale: Option<AutoscaleConfig>,
+    /// Warm-up cost on autoscale spawn: a spawned replica spends this
+    /// long in `ReplicaState::Warming` (loading weights, building
+    /// caches) before it accepts routes. 0.0 — the legacy behavior —
+    /// means spawned replicas serve instantly.
+    pub warmup_secs: f64,
     /// Mask-elastic memory accounting (`server::outlook`): every
     /// pressure decision — engine OOMs, queue rebalancing, migration
     /// targeting, router headroom — is judged against the min-viable
@@ -95,6 +121,7 @@ impl Default for FleetConfig {
             max_sim_secs: 3600.0,
             migrate: false,
             autoscale: None,
+            warmup_secs: 0.0,
             elastic_accounting: true,
         }
     }
@@ -109,6 +136,21 @@ struct Transfer {
     arrive_at: f64,
 }
 
+/// A terminal outcome decided at the fleet ingress itself (dropped at
+/// the router, stranded in or cancelled from the backlog, cancelled in
+/// flight) — merged into the per-tenant report.
+struct IngressEvent {
+    tenant: Tenant,
+    outcome: Outcome,
+    /// The request carried an SLO (rejections with one count as
+    /// deadline misses in the hit-rate denominator).
+    had_deadline: bool,
+    /// Whether the request had already reached a replica (and was
+    /// therefore already counted as submitted there) — true only for
+    /// cancels of in-flight transfers.
+    reached_replica: bool,
+}
+
 pub struct Fleet {
     pub cfg: FleetConfig,
     pub replicas: Vec<Replica>,
@@ -119,9 +161,14 @@ pub struct Fleet {
     pub dropped: u64,
     /// Sequence states currently in flight between replicas.
     transfers: Vec<Transfer>,
-    /// Completed migrations and the payload bytes they moved.
+    /// Completed migrations and the payload bytes they moved (live KV
+    /// slices — see `SeqState::transfer_bytes`).
     pub migrations: u64,
     pub migration_bytes: u64,
+    /// What the same migrations would have cost under the
+    /// pre-compression accounting (bucket-padded caches). Debug/
+    /// regression surface only — never serialized.
+    pub migration_bytes_padded: u64,
     /// Replicas added by the autoscaler.
     pub spawns: u64,
     /// Replicas retired by the autoscaler.
@@ -129,6 +176,19 @@ pub struct Fleet {
     autoscaler: Option<Autoscaler>,
     /// Replica factory for autoscale spawns (id → fresh replica).
     spawner: Option<Box<dyn Fn(usize) -> Replica>>,
+    /// Per-tenant ingress backlog (tenant-fair router only): arrivals
+    /// held at the front door until their tenant is under quota.
+    backlog: BTreeMap<Tenant, VecDeque<SubmitRequest>>,
+    /// High-water mark of each tenant's committed KV bytes (projected,
+    /// at dispatch time) — the quota-utilization report.
+    tenant_peak: BTreeMap<Tenant, u64>,
+    /// Terminal outcomes decided at the ingress itself (dropped at the
+    /// router, cancelled from the backlog / in flight) — per tenant,
+    /// merged into the per-tenant report.
+    ingress_terminal: Vec<IngressEvent>,
+    /// Outcome per request id for ingress-terminal requests (the
+    /// lifecycle API's lookup for ids no replica ever saw).
+    ingress_outcomes: HashMap<u64, Outcome>,
 }
 
 impl Fleet {
@@ -150,9 +210,14 @@ impl Fleet {
             transfers: Vec::new(),
             migrations: 0,
             migration_bytes: 0,
+            migration_bytes_padded: 0,
             spawns: 0,
             retires: 0,
             spawner: None,
+            backlog: BTreeMap::new(),
+            tenant_peak: BTreeMap::new(),
+            ingress_terminal: Vec::new(),
+            ingress_outcomes: HashMap::new(),
         }
     }
 
@@ -165,8 +230,17 @@ impl Fleet {
         self
     }
 
+    /// Replace the autoscaler configuration (scenario tests toggle the
+    /// early-warning flags on a prebuilt fleet).
+    pub fn with_autoscale(mut self, cfg: AutoscaleConfig) -> Fleet {
+        self.cfg.autoscale = Some(cfg);
+        self.autoscaler = Some(Autoscaler::new(cfg));
+        self
+    }
+
     fn all_idle(&self) -> bool {
         self.transfers.is_empty()
+            && self.backlog.values().all(|q| q.is_empty())
             && self.replicas.iter().all(|r| {
                 r.engine.idle() && r.engine.parked_len() == 0
             })
@@ -174,7 +248,9 @@ impl Fleet {
 
     /// Step every replica to `t`, then run the maintenance passes:
     /// migration (queue rebalance before the step, parked pickup and
-    /// transfer delivery after), drain/respawn, and autoscaling.
+    /// transfer delivery after), drain/respawn, autoscaling, and the
+    /// tenant-fair ingress drain (capacity freed by completions admits
+    /// backlogged tenants).
     fn step_all(&mut self, t: f64) -> Result<()> {
         if self.cfg.migrate {
             self.rebalance_queued(t);
@@ -188,7 +264,228 @@ impl Fleet {
         self.deliver_transfers(t)?;
         self.maintain(t);
         self.autoscale(t);
+        self.dispatch_ingress(t);
         Ok(())
+    }
+
+    // ---- the request lifecycle (the one ingress path) -----------------
+
+    /// Submit one typed request at the fleet's current clock. The
+    /// returned handle keys [`Fleet::poll`] / [`Fleet::cancel`].
+    pub fn submit(&mut self, req: SubmitRequest) -> RequestHandle {
+        let t = self.clock;
+        self.submit_at(req, t)
+    }
+
+    /// Advance the fleet to sim time `t` — replicas, migration,
+    /// drain/respawn, autoscaling, and the tenant-fair ingress drain —
+    /// the manual driving primitive between [`Fleet::submit`] and
+    /// [`Fleet::poll`] for callers that don't replay a prepared batch
+    /// through [`Fleet::run_requests`]. Times before the current clock
+    /// are clamped (the clock never runs backwards).
+    pub fn step(&mut self, t: f64) -> Result<()> {
+        let target = t.max(self.clock);
+        self.step_all(target)?;
+        self.clock = target;
+        Ok(())
+    }
+
+    fn submit_at(&mut self, req: SubmitRequest, t: f64) -> RequestHandle {
+        let handle = RequestHandle { id: req.id };
+        self.offer(req, t);
+        handle
+    }
+
+    /// Route one arrival: straight to a replica for every classic
+    /// policy; into the per-tenant ingress backlog (then an immediate
+    /// quota-gated drain) under `tenant-fair`.
+    fn offer(&mut self, req: SubmitRequest, t: f64) {
+        if self.router.policy == RouterPolicy::TenantFair {
+            self.backlog
+                .entry(req.tenant.clone())
+                .or_default()
+                .push_back(req);
+            self.dispatch_ingress(t);
+            return;
+        }
+        match self.router.route(&req, &self.replicas, t) {
+            Some(i) => self.replicas[i].submit(req, t),
+            None => {
+                self.note_ingress_terminal(&req, Outcome::Rejected,
+                                           false);
+                self.dropped += 1;
+            }
+        }
+    }
+
+    /// Lifecycle state of a submitted request: ingress-terminal,
+    /// backlogged, in flight between replicas, or wherever its replica
+    /// says it is. `None` for ids the fleet has never seen.
+    pub fn poll(&self, h: RequestHandle) -> Option<RequestStatus> {
+        if let Some(&o) = self.ingress_outcomes.get(&h.id) {
+            return Some(RequestStatus::Finished(o));
+        }
+        if self
+            .backlog
+            .values()
+            .any(|q| q.iter().any(|r| r.id == h.id))
+        {
+            return Some(RequestStatus::Queued);
+        }
+        if self.transfers.iter().any(|tr| tr.state.id() == h.id) {
+            return Some(RequestStatus::Migrating);
+        }
+        for r in &self.replicas {
+            if let Some(s) = r.engine.status(h.id) {
+                return Some(s);
+            }
+        }
+        None
+    }
+
+    /// Reclaim a request wherever it currently lives: ingress backlog,
+    /// in flight between replicas, or on a replica (queued or
+    /// mid-decode — its KV is freed). Books `Outcome::Cancelled`.
+    /// Returns false when no live copy of `h` exists.
+    pub fn cancel(&mut self, h: RequestHandle) -> Result<bool> {
+        let mut from_backlog: Option<SubmitRequest> = None;
+        for q in self.backlog.values_mut() {
+            if let Some(i) = q.iter().position(|r| r.id == h.id) {
+                from_backlog = Some(q.remove(i).unwrap());
+                break;
+            }
+        }
+        if let Some(req) = from_backlog {
+            self.note_ingress_terminal(&req, Outcome::Cancelled, false);
+            return Ok(true);
+        }
+        if let Some(i) =
+            self.transfers.iter().position(|tr| tr.state.id() == h.id)
+        {
+            let tr = self.transfers.remove(i);
+            self.note_ingress_terminal(tr.state.request(),
+                                       Outcome::Cancelled, true);
+            return Ok(true);
+        }
+        for r in &mut self.replicas {
+            if r.engine.cancel(h.id)? {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    fn note_ingress_terminal(&mut self, req: &SubmitRequest,
+                             outcome: Outcome, reached_replica: bool) {
+        self.ingress_outcomes.insert(req.id, outcome);
+        self.ingress_terminal.push(IngressEvent {
+            tenant: req.tenant.clone(),
+            outcome,
+            had_deadline: req.slo_deadline.is_some(),
+            reached_replica,
+        });
+    }
+
+    // ---- tenant-fair ingress ------------------------------------------
+
+    /// Each tenant's committed KV bytes: the projected full-length cost
+    /// (under the holding replica's current mask) of everything queued,
+    /// active, parked, or in flight for that tenant. This is what the
+    /// quota caps.
+    fn tenant_kv_usage(&self) -> BTreeMap<Tenant, u64> {
+        let mut usage: BTreeMap<Tenant, u64> = BTreeMap::new();
+        for r in &self.replicas {
+            if !r.live() {
+                continue;
+            }
+            let e = &r.engine;
+            for req in e.batcher.waiting.iter() {
+                *usage.entry(req.tenant.clone()).or_insert(0) +=
+                    e.admission_cost(req) as u64;
+            }
+            for s in e.batcher.active.iter() {
+                *usage.entry(s.req.tenant.clone()).or_insert(0) +=
+                    e.admission_cost(&s.req) as u64;
+            }
+            for st in e.parked_states() {
+                *usage.entry(st.request().tenant.clone()).or_insert(0) +=
+                    e.admission_cost(st.request()) as u64;
+            }
+        }
+        for tr in &self.transfers {
+            let req = tr.state.request();
+            *usage.entry(req.tenant.clone()).or_insert(0) +=
+                self.replicas[tr.dest].engine.admission_cost(req) as u64;
+        }
+        usage
+    }
+
+    /// Deficit-weighted drain of the per-tenant backlogs: while any
+    /// head-of-backlog fits its tenant's quota, dispatch the one whose
+    /// tenant is deepest under quota (largest remaining fraction; ties
+    /// break toward the lexicographically first tenant), placing it by
+    /// RAP-aware scoring. The quota is a hard cap on committed KV
+    /// bytes, so one tenant's flood queues at the front door instead of
+    /// burying the replicas — a tenant whose head is over quota simply
+    /// waits for its own completions to free bytes. No-op for every
+    /// non-tenant-fair policy.
+    fn dispatch_ingress(&mut self, t: f64) {
+        if self.router.policy != RouterPolicy::TenantFair {
+            return;
+        }
+        if self.backlog.values().all(|q| q.is_empty()) {
+            return;
+        }
+        // One full-fleet usage scan per drain; each dispatch then folds
+        // its own projected cost in, which is exactly what a rescan
+        // would see (the request now sits queued on `dest`, priced at
+        // `dest`'s admission cost).
+        let mut usage = self.tenant_kv_usage();
+        loop {
+            // (remaining-quota fraction, tenant, placement, cost):
+            // placement is decided here and reused for the dispatch, so
+            // each released head is scored against the fleet once
+            let mut pick: Option<(f64, Tenant, usize, u64)> = None;
+            for (name, q) in &self.backlog {
+                let Some(head) = q.front() else {
+                    continue;
+                };
+                // price the head on the replica it would land on
+                let Some(dest) =
+                    self.router.place(head, &self.replicas, t)
+                else {
+                    // no accepting replica at all: nothing can dispatch
+                    return;
+                };
+                let cost =
+                    self.replicas[dest].engine.admission_cost(head)
+                        as u64;
+                let used = usage.get(name).copied().unwrap_or(0);
+                let quota = self.router.quotas.bytes_for(name.as_ref());
+                if used.saturating_add(cost) > quota {
+                    continue; // over quota: this tenant waits
+                }
+                let frac =
+                    1.0 - used as f64 / quota.max(1) as f64;
+                if pick.as_ref().map_or(true, |(f, ..)| frac > *f) {
+                    pick = Some((frac, name.clone(), dest, cost));
+                }
+            }
+            let Some((_, name, dest, cost)) = pick else {
+                break; // every backlogged tenant is at its cap
+            };
+            let req =
+                self.backlog.get_mut(&name).unwrap().pop_front().unwrap();
+            let used =
+                usage.entry(name.clone()).or_insert(0);
+            *used += cost;
+            let peak = self.tenant_peak.entry(name).or_insert(0);
+            if *used > *peak {
+                *peak = *used;
+            }
+            self.router.decisions[dest] += 1;
+            self.replicas[dest].submit(req, t);
+        }
     }
 
     // ---- migration ----------------------------------------------------
@@ -262,7 +559,8 @@ impl Fleet {
 
     /// Ship one sequence state from `src` to the best destination, or
     /// hand it back to `src` (a local requeue — the classic eviction)
-    /// when no peer can take it.
+    /// when no peer can take it. The interconnect is charged for the
+    /// live KV slice only (`SeqState::transfer_bytes`).
     fn send_state(&mut self, src: usize, state: SeqState, t: f64) {
         let bytes = state.transfer_bytes();
         match self.pick_target(src, &state, t) {
@@ -297,11 +595,11 @@ impl Fleet {
         };
         match state {
             SeqState::Queued(req) => {
-                self.replicas[home].engine.batcher.waiting.push_back(req);
+                self.replicas[home].engine.batcher.enqueue(req);
             }
             SeqState::Active { req, .. } => {
                 self.replicas[src].engine.metrics.evictions += 1;
-                self.replicas[home].engine.batcher.waiting.push_front(req);
+                self.replicas[home].engine.batcher.requeue_front(req);
             }
         }
     }
@@ -350,6 +648,7 @@ impl Fleet {
             }
             if self.replicas[tr.dest].engine.can_import(&tr.state) {
                 let bytes = tr.state.transfer_bytes() as u64;
+                let padded = tr.state.padded_transfer_bytes() as u64;
                 self.replicas[tr.dest].engine.import_sequence(tr.state)?;
                 // counted on delivery (not dispatch), so abandoned
                 // moves never desynchronize the in/out/aggregate
@@ -358,6 +657,7 @@ impl Fleet {
                 self.replicas[tr.dest].migrations_in += 1;
                 self.migrations += 1;
                 self.migration_bytes += bytes;
+                self.migration_bytes_padded += padded;
             } else {
                 // Shape mismatch across heterogeneous models: the
                 // payload is useless there — the sequence restarts from
@@ -365,7 +665,7 @@ impl Fleet {
                 // migration, in the books.
                 let req = tr.state.request().clone();
                 self.replicas[tr.src].engine.metrics.evictions += 1;
-                self.replicas[tr.dest].engine.enqueue(req);
+                self.replicas[tr.dest].engine.batcher.enqueue(req);
             }
         }
         Ok(())
@@ -376,8 +676,8 @@ impl Fleet {
     /// Lifecycle maintenance: drain replicas under sustained pressure
     /// (never the last serving one), and move drained-empty replicas on
     /// to their next state — a respawn cool-down, or `Retired` when the
-    /// autoscaler flagged them. Respawn completion happens inside
-    /// `Replica::step_to`.
+    /// autoscaler flagged them. Respawn and warm-up completion happen
+    /// inside `Replica::step_to`.
     fn maintain(&mut self, t: f64) {
         let mut serving = self
             .replicas
@@ -409,7 +709,8 @@ impl Fleet {
                         }
                     }
                 }
-                ReplicaState::Respawning { .. }
+                ReplicaState::Warming { .. }
+                | ReplicaState::Respawning { .. }
                 | ReplicaState::Retired => {}
             }
         }
@@ -418,6 +719,10 @@ impl Fleet {
     // ---- autoscaling --------------------------------------------------
 
     /// Fleet-level load signals over the trailing `window` seconds.
+    /// Quota-held ingress backlog is not counted (see
+    /// [`FleetSignals::outstanding`]): new replicas cannot admit work
+    /// the fleet-wide KV quota is holding back, so counting it would
+    /// scale the fleet for demand no capacity can serve.
     fn signals(&mut self, t: f64, window: f64) -> FleetSignals {
         let serving =
             self.replicas.iter().filter(|r| r.accepting()).count();
@@ -427,18 +732,28 @@ impl Fleet {
             .filter(|r| r.live())
             .map(|r| r.outstanding())
             .sum();
+        let mut per_tenant: BTreeMap<Tenant, usize> = BTreeMap::new();
+        for r in self.replicas.iter().filter(|r| r.live()) {
+            r.outstanding_by_tenant(&mut per_tenant);
+        }
+        let max_tenant_outstanding =
+            per_tenant.values().copied().max().unwrap_or(0);
         let t0 = t - window;
         let mut ttfts = Vec::new();
         let mut recent_ooms = 0usize;
+        let mut recent_absorbed = 0usize;
         for r in &mut self.replicas {
             recent_ooms += r.ooms_since(t0);
+            recent_absorbed += r.absorbed_since(t0);
             r.recent_ttfts(t0, &mut ttfts);
         }
         FleetSignals {
             serving,
             outstanding,
+            max_tenant_outstanding,
             p99_ttft: percentile(&ttfts, 99.0),
             recent_ooms,
+            recent_absorbed,
         }
     }
 
@@ -454,7 +769,7 @@ impl Fleet {
         }
         let signals = self.signals(t, scaler.cfg.signal_window_secs);
         let applied = match scaler.decide(t, &signals) {
-            ScaleDecision::Up => self.spawn_replica(),
+            ScaleDecision::Up => self.spawn_replica(t),
             ScaleDecision::Down => self.retire_replica(),
             ScaleDecision::Hold => false,
         };
@@ -467,10 +782,13 @@ impl Fleet {
     /// Add a replica via the installed spawner. Returns false when no
     /// spawner is installed — the fleet then simply cannot scale up —
     /// or when the replicas that will eventually serve again (serving,
-    /// pressure-draining, or respawning) already fill `max_replicas`:
-    /// the scaler's own bound only sees the *currently accepting*
-    /// count, which dips while a drained replica cools down.
-    fn spawn_replica(&mut self) -> bool {
+    /// warming, pressure-draining, or respawning) already fill
+    /// `max_replicas`: the scaler's own bound only sees the *currently
+    /// accepting* count, which dips while a drained replica cools down.
+    /// With `FleetConfig::warmup_secs` set, the new replica enters
+    /// through `Warming` and accepts no routes until the warm-up
+    /// elapses.
+    fn spawn_replica(&mut self, t: f64) -> bool {
         let Some(spawner) = &self.spawner else {
             return false;
         };
@@ -489,6 +807,12 @@ impl Fleet {
         r.id = id;
         r.engine.cfg.eviction = self.cfg.eviction_mode();
         r.engine.cfg.elastic_accounting = self.cfg.elastic_accounting;
+        r.spawned_at = Some(t);
+        if self.cfg.warmup_secs > 0.0 {
+            r.state = ReplicaState::Warming {
+                until: t + self.cfg.warmup_secs,
+            };
+        }
         self.replicas.push(r);
         self.router.decisions.push(0);
         self.spawns += 1;
@@ -523,14 +847,16 @@ impl Fleet {
 
     // ---- the event loop -----------------------------------------------
 
-    /// Replay a trace across the fleet and report. Arrivals are routed
-    /// at their arrival time; the run ends when all work has drained —
-    /// in-flight transfers included — or at `max_sim_secs`.
-    pub fn run_trace(&mut self, mut requests: Vec<Request>)
-                     -> Result<FleetReport> {
+    /// Serve a batch of typed requests across the fleet and report.
+    /// Arrivals are submitted at their arrival time; the run ends when
+    /// all work has drained — in-flight transfers and ingress backlogs
+    /// included — or at `max_sim_secs`. This is the native entry point;
+    /// [`Fleet::run_trace`] adapts a workload trace onto it.
+    pub fn run_requests(&mut self, mut requests: Vec<SubmitRequest>)
+                        -> Result<FleetReport> {
         requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         // relative to where the shared clock already is, so a Fleet can
-        // replay several traces back to back (mirrors Engine::run_trace)
+        // replay several traces back to back (mirrors Engine::run_requests)
         let deadline = self.clock + self.cfg.max_sim_secs;
         let mut next = 0usize;
         while self.clock < deadline {
@@ -546,10 +872,8 @@ impl Fleet {
             {
                 let req = requests[next].clone();
                 next += 1;
-                match self.router.route(&req, &self.replicas, self.clock) {
-                    Some(i) => self.replicas[i].enqueue(req),
-                    None => self.dropped += 1,
-                }
+                let t = self.clock;
+                self.submit_at(req, t);
             }
             if next >= requests.len() && self.all_idle() {
                 break;
@@ -558,12 +882,32 @@ impl Fleet {
         // Arrivals past the deadline were never offered to the router;
         // count them as dropped so the report's accounting invariant
         // (routing-histogram sum + dropped == trace length) holds even
-        // on a truncated run.
+        // on a truncated run. Backlogged requests the run never
+        // released are terminal too: rejected at the front door.
         self.dropped += (requests.len() - next) as u64;
+        let stranded: Vec<SubmitRequest> = self
+            .backlog
+            .values_mut()
+            .flat_map(|q| q.drain(..))
+            .collect();
+        for req in stranded {
+            self.note_ingress_terminal(&req, Outcome::Rejected, false);
+            self.dropped += 1;
+        }
         Ok(self.report())
     }
 
-    /// Snapshot the fleet's metrics (callable after `run_trace`).
+    /// Replay a workload trace across the fleet — the legacy front
+    /// door, now a thin adapter over [`Fleet::run_requests`]: a trace
+    /// is just an iterator of default-tenancy `SubmitRequest`s
+    /// (`api::from_trace`), so replay and the typed API share one
+    /// ingress path.
+    pub fn run_trace(&mut self, requests: Vec<Request>)
+                     -> Result<FleetReport> {
+        self.run_requests(api::from_trace(requests).collect())
+    }
+
+    /// Snapshot the fleet's metrics (callable after `run_requests`).
     pub fn report(&self) -> FleetReport {
         let wall = self.clock.max(1e-9);
         let mut lats = Vec::new();
@@ -571,18 +915,33 @@ impl Fleet {
         let mut completed = 0usize;
         let mut rejected = 0u64;
         let mut evictions = 0u64;
+        let mut cancelled = 0u64;
+        let mut deadline_missed = 0u64;
         let mut oom_events = 0u64;
         let mut absorbed_spikes = 0u64;
         let mut respawns = 0u64;
         let mut replicas = Vec::with_capacity(self.replicas.len());
+        let mut tenant_counts: BTreeMap<Tenant, TenantCounts> =
+            BTreeMap::new();
+        let mut tenant_ttfts: BTreeMap<Tenant, Vec<f64>> =
+            BTreeMap::new();
         for r in &self.replicas {
             for rec in &r.engine.metrics.completed {
                 lats.push(rec.latency());
                 ttfts.push(rec.ttft());
+                tenant_ttfts
+                    .entry(rec.tenant.clone())
+                    .or_default()
+                    .push(rec.ttft());
+            }
+            for (name, c) in &r.engine.metrics.tenants {
+                tenant_counts.entry(name.clone()).or_default().merge(c);
             }
             completed += r.engine.metrics.completed.len();
             rejected += r.engine.metrics.rejected;
             evictions += r.engine.metrics.evictions;
+            cancelled += r.engine.metrics.cancelled;
+            deadline_missed += r.engine.metrics.deadline_missed;
             oom_events += r.engine.metrics.oom_events;
             absorbed_spikes += r.engine.metrics.absorbed_spikes;
             respawns += r.respawns;
@@ -597,6 +956,46 @@ impl Fleet {
                 serve: r.engine.metrics.report(wall),
             });
         }
+        for ev in &self.ingress_terminal {
+            let c = tenant_counts.entry(ev.tenant.clone()).or_default();
+            // an ingress-terminal request was submitted to the fleet
+            // but never reached a replica's ledger (except a cancelled
+            // in-flight transfer, already counted at its source)
+            if !ev.reached_replica {
+                c.submitted += 1;
+            }
+            c.book(ev.outcome, ev.had_deadline);
+            match ev.outcome {
+                Outcome::Cancelled => cancelled += 1,
+                Outcome::DeadlineMissed => deadline_missed += 1,
+                _ => {}
+            }
+        }
+        let quotas_on = self.router.policy == RouterPolicy::TenantFair
+            && self.router.quotas.any_finite();
+        let tenants: Vec<FleetTenantReport> = tenant_counts
+            .iter()
+            .map(|(name, c)| {
+                let tt: &[f64] = tenant_ttfts
+                    .get(name)
+                    .map(|v| v.as_slice())
+                    .unwrap_or(&[]);
+                let qb = self.router.quotas.bytes_for(name.as_ref());
+                FleetTenantReport {
+                    tenant: name.to_string(),
+                    counts: *c,
+                    p50_ttft: percentile(tt, 50.0),
+                    p99_ttft: percentile(tt, 99.0),
+                    quota_bytes: (quotas_on && qb != u64::MAX)
+                        .then_some(qb),
+                    quota_peak_bytes: self
+                        .tenant_peak
+                        .get(name)
+                        .copied()
+                        .unwrap_or(0),
+                }
+            })
+            .collect();
         let routed: u64 = self.router.decisions.iter().sum();
         FleetReport {
             policy: self.router.policy.name().to_string(),
@@ -605,6 +1004,8 @@ impl Fleet {
             completed,
             rejected,
             evictions,
+            cancelled,
+            deadline_missed,
             dropped: self.dropped,
             oom_events,
             absorbed_spikes,
@@ -620,6 +1021,7 @@ impl Fleet {
             p99_ttft: percentile(&ttfts, 99.0),
             throughput_rps: completed as f64 / wall,
             routing: self.router.decisions.clone(),
+            tenants,
             replicas,
         }
     }
@@ -713,6 +1115,26 @@ pub fn uniform_sim_fleet(n: usize, seed: u64, policy: RouterPolicy,
     Fleet::new(replicas, router, cfg).with_spawner(move |id| {
         build_sim_replica(id, &meta, &spec, seed)
     })
+}
+
+/// Equal-share quota table: each of `n` tenants gets 1/n of the
+/// fleet's aggregate KV headroom at t = 0 (capacity minus the current
+/// footprint). `serve-fleet --router tenant-fair --tenants n` uses
+/// this as its default quota.
+pub fn equal_share_quotas(fleet: &Fleet, n: usize) -> TenantQuotas {
+    let total: usize = fleet
+        .replicas
+        .iter()
+        .map(|r| {
+            r.engine
+                .monitor
+                .cfg
+                .capacity
+                .saturating_sub(r.engine.bytes_used())
+        })
+        .sum();
+    TenantQuotas::unlimited()
+        .with_default((total / n.max(1)) as u64)
 }
 
 /// A diurnal + bursty trace sized for `default_sim_meta` (generation cap
@@ -990,6 +1412,132 @@ pub fn burst_storm_trace(seed: u64, secs: f64) -> Vec<Request> {
     reqs
 }
 
+// ---- multi-tenant scenario (ISSUE 5) ----------------------------------
+
+/// Arrival window of the tenant-storm scenario.
+pub const TENANT_STORM_SECS: f64 = 40.0;
+
+/// The latency-sensitive tenant's completion SLO (seconds after
+/// arrival).
+pub const TENANT_STORM_SLO_SECS: f64 = 2.5;
+
+/// The ISSUE-5 acceptance scenario's trace: one noisy tenant flooding
+/// low-priority long-decode requests over a latency-sensitive tenant's
+/// steady stream.
+///
+///   * `latency` — Interactive, ~1.2 req/s for the whole window, short
+///     prompts (≤ 24 tokens) and generations (≤ 8 tokens), every
+///     request carrying a `TENANT_STORM_SLO_SECS` completion deadline;
+///   * `noisy`   — Batch, no deadline, an 8 req/s flood of long decodes
+///     (median ~33 tokens, prompts ≤ 32) from t = 5 s to t = 25 s.
+///
+/// Prompt caps keep single prefills small relative to the SLO, so the
+/// comparison measures queueing discipline, not prefill-size luck.
+/// Ids are assigned in arrival order; deterministic per seed.
+pub fn tenant_storm_trace(seed: u64) -> Vec<SubmitRequest> {
+    let mut out: Vec<SubmitRequest> = Vec::new();
+    let mut gen = TraceGenerator::new(
+        TraceConfig {
+            base_rate: 1.2,
+            diurnal_amp: 0.0,
+            bursts_per_day: 0.0,
+            day_secs: TENANT_STORM_SECS,
+            prompt_max: 24,
+            gen_mu: 1.6,
+            gen_sigma: 0.4,
+            gen_max: 8,
+            ..TraceConfig::default()
+        },
+        seed.wrapping_add(7919),
+    );
+    for r in gen.generate(0.0, TENANT_STORM_SECS) {
+        out.push(SubmitRequest::from_trace(&r)
+            .with_tenant("latency")
+            .with_priority(PriorityClass::Interactive)
+            .with_deadline(r.arrival + TENANT_STORM_SLO_SECS));
+    }
+    let mut gen = TraceGenerator::new(
+        TraceConfig {
+            base_rate: 8.0,
+            diurnal_amp: 0.0,
+            bursts_per_day: 0.0,
+            day_secs: 20.0,
+            prompt_max: 32,
+            gen_mu: 3.5,
+            gen_sigma: 0.3,
+            gen_max: 48,
+            ..TraceConfig::default()
+        },
+        seed.wrapping_add(15838),
+    );
+    for r in gen.generate(0.0, 20.0) {
+        out.push(SubmitRequest::from_trace(&r)
+            .with_tenant("noisy")
+            .with_priority(PriorityClass::Batch)
+            .with_arrival(r.arrival + 5.0));
+    }
+    out.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    for (i, r) in out.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    out
+}
+
+/// The FCFS-baseline decoration of [`tenant_storm_trace`]: identical
+/// arrivals, lengths, tenants, and deadlines (so hit-rates stay
+/// measurable), but every priority flattened to `Normal` — the legacy
+/// trace-replay front door carried no urgency, so its queues were pure
+/// FCFS. Pair it with any non-tenant-fair router (which also turns
+/// deadline *enforcement* off — see [`tenant_storm_fleet`]).
+pub fn tenant_storm_fcfs_trace(seed: u64) -> Vec<SubmitRequest> {
+    let mut reqs = tenant_storm_trace(seed);
+    for r in &mut reqs {
+        r.priority = PriorityClass::Normal;
+    }
+    reqs
+}
+
+/// The fleet `tenant_storm_trace` is aimed at: two identical slow
+/// static-dense replicas (so the outcome is a property of the ingress,
+/// not of controller adaptivity), no drain/respawn, no autoscaling.
+/// Under `RouterPolicy::TenantFair` the noisy tenant gets a KV-byte
+/// quota of 4 worst-case requests fleet-wide (the latency tenant is
+/// uncapped), so its flood queues at the front door. Under any other
+/// policy the fleet models the *legacy* front door the API replaces:
+/// dispatch on arrival, and deadlines measured but never enforced
+/// (`EngineConfig::enforce_deadlines = false`) — pair with
+/// [`tenant_storm_fcfs_trace`] for the full FCFS baseline.
+/// Deterministic per seed.
+pub fn tenant_storm_fleet(seed: u64, policy: RouterPolicy) -> Fleet {
+    let spec = ReplicaSpec {
+        // ~1 req/s per replica: the flood genuinely overloads the pair
+        flops_per_sec: 1.0e8,
+        app_rate: 0.0,   // no interference: isolate the ingress effect
+        adaptive: false, // static dense: no mask motion in the way
+        capacity_mult: 2.5,
+        ..ReplicaSpec::heterogeneous(0)
+    };
+    let cfg = FleetConfig {
+        oom_threshold: usize::MAX, // no drain/respawn
+        max_sim_secs: TENANT_STORM_SECS + 3600.0,
+        ..FleetConfig::default()
+    };
+    let mut fleet = uniform_sim_fleet(2, seed, policy, cfg, spec);
+    if policy == RouterPolicy::TenantFair {
+        // a worst-case noisy request: the capped prompt bucket (32)
+        // plus the generation cap (48)
+        let worst =
+            fleet.replicas[0].engine.kv_bytes_for_len(32 + 48) as u64;
+        fleet.router.quotas = TenantQuotas::unlimited()
+            .with_quota("noisy", 4 * worst);
+    } else {
+        for r in &mut fleet.replicas {
+            r.engine.cfg.enforce_deadlines = false;
+        }
+    }
+    fleet
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1012,6 +1560,11 @@ mod tests {
                 >= n);
         // a fixed fleet never scales or migrates
         assert_eq!(report.spawns + report.retires + report.migrations, 0);
+        // trace replay is default tenancy: one tenant, no deadlines
+        assert_eq!(report.tenants.len(), 1);
+        assert_eq!(report.tenants[0].tenant, crate::api::DEFAULT_TENANT);
+        assert_eq!(report.cancelled, 0);
+        assert_eq!(report.deadline_missed, 0);
     }
 
     #[test]
@@ -1094,6 +1647,52 @@ mod tests {
         let back = ramp.len() - front;
         assert!(back > 2 * front,
                 "ramp-up not ramping: {front} then {back}");
+    }
+
+    #[test]
+    fn tenant_storm_trace_is_deterministic_and_two_sided() {
+        let a = tenant_storm_trace(42);
+        let b = tenant_storm_trace(42);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.priority, y.priority);
+            assert_eq!(x.slo_deadline, y.slo_deadline);
+            assert!((x.arrival - y.arrival).abs() < 1e-12);
+            assert_eq!(x.prompt_len, y.prompt_len);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+        let latency: Vec<&SubmitRequest> =
+            a.iter().filter(|r| r.tenant.as_ref() == "latency").collect();
+        let noisy: Vec<&SubmitRequest> =
+            a.iter().filter(|r| r.tenant.as_ref() == "noisy").collect();
+        assert!(latency.len() >= 20, "thin latency stream: {}",
+                latency.len());
+        // the flood really is a flood: several times the steady stream
+        assert!(noisy.len() >= 2 * latency.len(),
+                "{} noisy vs {} latency", noisy.len(), latency.len());
+        for r in &latency {
+            assert_eq!(r.priority, PriorityClass::Interactive);
+            assert_eq!(r.slo_deadline,
+                       Some(r.arrival + TENANT_STORM_SLO_SECS));
+            assert!(r.max_new_tokens <= 8);
+        }
+        for r in &noisy {
+            assert_eq!(r.priority, PriorityClass::Batch);
+            assert_eq!(r.slo_deadline, None);
+            assert!(r.arrival >= 5.0 && r.arrival <= 25.0 + 1e-9);
+        }
+        // ids are arrival-ordered and unique
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+        let c = tenant_storm_trace(43);
+        assert!(a.len() != c.len()
+                || a.iter().zip(&c).any(|(x, y)| {
+                    (x.arrival - y.arrival).abs() > 1e-12
+                }),
+                "different seeds produced the same storm");
     }
 
     #[test]
@@ -1180,5 +1779,41 @@ mod tests {
         assert!(retired >= 1, "idle fleet never retired");
         assert!(serving >= 1, "retired below min_replicas");
         assert_eq!(fleet.retires as usize, retired);
+    }
+
+    /// The fleet-level lifecycle API: submit → poll → cancel, including
+    /// a cancel that reaches into a replica's queue.
+    #[test]
+    fn fleet_submit_poll_cancel() {
+        let spec = ReplicaSpec {
+            app_rate: 0.0,
+            ..ReplicaSpec::heterogeneous(0)
+        };
+        let mut fleet =
+            uniform_sim_fleet(2, 5, RouterPolicy::LeastOutstanding,
+                              FleetConfig::default(), spec);
+        let h = fleet.submit(SubmitRequest::new(12, 6).with_id(900));
+        assert_eq!(fleet.poll(h), Some(RequestStatus::Queued));
+        assert!(fleet.cancel(h).unwrap());
+        assert_eq!(fleet.poll(h),
+                   Some(RequestStatus::Finished(Outcome::Cancelled)));
+        assert!(!fleet.cancel(h).unwrap(), "already terminal");
+        // a request served to completion polls as Done
+        let h2 = fleet.submit(SubmitRequest::new(12, 6).with_id(901));
+        for k in 1..=40 {
+            fleet.step_all(fleet.clock + 0.5 * k as f64).unwrap();
+            fleet.clock += 0.5 * k as f64;
+            if fleet.poll(h2)
+                == Some(RequestStatus::Finished(Outcome::Done))
+            {
+                break;
+            }
+        }
+        assert_eq!(fleet.poll(h2),
+                   Some(RequestStatus::Finished(Outcome::Done)));
+        assert_eq!(fleet.poll(RequestHandle { id: 12345 }), None);
+        let report = fleet.report();
+        assert_eq!(report.cancelled, 1);
+        assert_eq!(report.completed, 1);
     }
 }

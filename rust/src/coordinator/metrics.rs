@@ -1,9 +1,10 @@
 //! Fleet-level measurement: per-replica summaries plus aggregate tail
-//! latencies, OOM/respawn counts, and the routing histogram — printable
+//! latencies, OOM/respawn counts, per-tenant sections (deadline
+//! hit-rates, quota utilization), and the routing histogram — printable
 //! and serializable to JSON via the in-tree `util::json` writer.
 
 use crate::memory::mib;
-use crate::server::metrics::ServeReport;
+use crate::server::metrics::{ServeReport, TenantCounts};
 use crate::util::json::Json;
 
 /// One replica's slice of a fleet run.
@@ -23,6 +24,39 @@ pub struct ReplicaReport {
     pub serve: ServeReport,
 }
 
+/// One tenant's slice of a fleet run: the merged outcome ledger across
+/// replicas and the ingress, fleet-wide TTFT tails, and — under the
+/// tenant-fair router — the quota and its observed high-water mark.
+#[derive(Clone, Debug)]
+pub struct FleetTenantReport {
+    pub tenant: String,
+    pub counts: TenantCounts,
+    pub p50_ttft: f64,
+    pub p99_ttft: f64,
+    /// The tenant's KV-byte quota (`None` when unlimited or when the
+    /// router carries no quota table).
+    pub quota_bytes: Option<u64>,
+    /// High-water mark of the tenant's committed KV bytes at dispatch.
+    pub quota_peak_bytes: u64,
+}
+
+impl FleetTenantReport {
+    /// See `TenantCounts::deadline_hit_rate`.
+    pub fn deadline_hit_rate(&self) -> f64 {
+        self.counts.deadline_hit_rate()
+    }
+
+    /// Peak quota utilization in [0, 1]-ish (NaN without a quota; > 1
+    /// would mean the cap was breached — the fairness proptest holds it
+    /// ≤ 1).
+    pub fn quota_utilization(&self) -> f64 {
+        match self.quota_bytes {
+            Some(q) if q > 0 => self.quota_peak_bytes as f64 / q as f64,
+            _ => f64::NAN,
+        }
+    }
+}
+
 /// Aggregate results of one fleet trace replay.
 #[derive(Clone, Debug)]
 pub struct FleetReport {
@@ -36,7 +70,14 @@ pub struct FleetReport {
     /// Local evict-and-requeue casualties (OOM evictions), summed over
     /// replicas — the number migration exists to shrink.
     pub evictions: u64,
-    /// Arrivals the router could not place (no accepting replica).
+    /// Requests reclaimed via the lifecycle API (replica-held and
+    /// ingress-held cancels).
+    pub cancelled: u64,
+    /// Terminal `DeadlineMissed` outcomes (late finishes, queue
+    /// expiries, expired sheds), summed over replicas + ingress.
+    pub deadline_missed: u64,
+    /// Arrivals the router could not place (no accepting replica), or
+    /// that the run ended still holding in a tenant backlog.
     pub dropped: u64,
     /// True OOM events (pressure even the min-viable mask couldn't
     /// absorb), summed over replicas.
@@ -49,7 +90,8 @@ pub struct FleetReport {
     pub spawns: u64,
     pub retires: u64,
     /// Cross-replica sequence migrations completed, and the payload
-    /// bytes they moved over the modeled interconnect.
+    /// bytes they moved over the modeled interconnect (live KV slices —
+    /// prefill-bucket padding is never shipped).
     pub migrations: u64,
     pub migration_bytes: u64,
     pub mean_latency: f64,
@@ -60,6 +102,9 @@ pub struct FleetReport {
     pub throughput_rps: f64,
     /// Routing histogram: decisions per replica index.
     pub routing: Vec<u64>,
+    /// Per-tenant sections, sorted by tenant name (one "default" entry
+    /// on undecorated trace replays).
+    pub tenants: Vec<FleetTenantReport>,
     pub replicas: Vec<ReplicaReport>,
 }
 
@@ -79,6 +124,10 @@ impl FleetReport {
                   throughput {:.2} req/s",
                  self.oom_events, self.absorbed_spikes, self.respawns,
                  self.throughput_rps);
+        if self.cancelled + self.deadline_missed > 0 {
+            println!("   cancelled {} | deadline missed {}",
+                     self.cancelled, self.deadline_missed);
+        }
         if self.spawns + self.retires + self.migrations > 0 {
             println!("   elastic: spawned {} | retired {} | migrated {} \
                       ({:.1} MiB moved)",
@@ -90,6 +139,7 @@ impl FleetReport {
                  self.p50_latency, self.p99_latency, self.p50_ttft,
                  self.p99_ttft);
         println!("   routing histogram: {:?}", self.routing);
+        self.print_tenants();
         println!("   {:<4} {:>10} {:>7} {:>9} {:>6} {:>5} {:>9} {:>9}  \
                   state",
                  "id", "cap(MiB)", "routed", "completed", "OOMs", "resp",
@@ -104,8 +154,42 @@ impl FleetReport {
         }
     }
 
-    /// The acceptance-surface JSON: per-replica and aggregate p50/p99
-    /// latency + TTFT, OOM counts, and the routing histogram.
+    /// The per-tenant table (skipped when the run is single-tenant with
+    /// no SLOs or quotas in play — the trace-replay default).
+    pub fn print_tenants(&self) {
+        let interesting = self.tenants.len() > 1
+            || self.tenants.iter().any(|t| {
+                t.counts.deadline_total > 0 || t.quota_bytes.is_some()
+            });
+        if !interesting {
+            return;
+        }
+        println!("   {:<10} {:>9} {:>6} {:>7} {:>7} {:>7} {:>9} {:>9} \
+                  {:>7}",
+                 "tenant", "submitted", "done", "missed", "cancel",
+                 "reject", "p99 ttft", "hit-rate", "quota%");
+        for t in &self.tenants {
+            let hr = if t.counts.deadline_total > 0 {
+                format!("{:>8.1}%", 100.0 * t.deadline_hit_rate())
+            } else {
+                "        —".to_string()
+            };
+            let qu = if t.quota_bytes.is_some() {
+                format!("{:>6.1}%", 100.0 * t.quota_utilization())
+            } else {
+                "      —".to_string()
+            };
+            println!("   {:<10} {:>9} {:>6} {:>7} {:>7} {:>7} {:>8.3}s \
+                      {} {}",
+                     t.tenant, t.counts.submitted, t.counts.finished,
+                     t.counts.deadline_missed, t.counts.cancelled,
+                     t.counts.rejected, zero_nan(t.p99_ttft), hr, qu);
+        }
+    }
+
+    /// The acceptance-surface JSON: per-replica, per-tenant, and
+    /// aggregate p50/p99 latency + TTFT, OOM counts, deadline hit-rates,
+    /// and the routing histogram.
     pub fn to_json(&self) -> Json {
         let replicas: Vec<Json> = self
             .replicas
@@ -123,6 +207,7 @@ impl FleetReport {
                     ("completed", Json::Num(r.serve.completed as f64)),
                     ("rejected", Json::Num(r.serve.rejected as f64)),
                     ("evictions", Json::Num(r.serve.evictions as f64)),
+                    ("cancelled", Json::Num(r.serve.cancelled as f64)),
                     ("oom_events", Json::Num(r.serve.oom_events as f64)),
                     ("absorbed_spikes",
                      Json::Num(r.serve.absorbed_spikes as f64)),
@@ -136,6 +221,35 @@ impl FleetReport {
                 ])
             })
             .collect();
+        let tenants: Vec<Json> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                Json::object(vec![
+                    ("tenant", Json::Str(t.tenant.clone())),
+                    ("submitted", Json::Num(t.counts.submitted as f64)),
+                    ("finished", Json::Num(t.counts.finished as f64)),
+                    ("deadline_missed",
+                     Json::Num(t.counts.deadline_missed as f64)),
+                    ("cancelled", Json::Num(t.counts.cancelled as f64)),
+                    ("rejected", Json::Num(t.counts.rejected as f64)),
+                    ("deadline_hits",
+                     Json::Num(t.counts.deadline_hits as f64)),
+                    ("deadline_total",
+                     Json::Num(t.counts.deadline_total as f64)),
+                    ("deadline_hit_rate", num(t.deadline_hit_rate())),
+                    ("p50_ttft", num(t.p50_ttft)),
+                    ("p99_ttft", num(t.p99_ttft)),
+                    ("quota_bytes", match t.quota_bytes {
+                        Some(q) => Json::Num(q as f64),
+                        None => Json::Null,
+                    }),
+                    ("quota_peak_bytes",
+                     Json::Num(t.quota_peak_bytes as f64)),
+                    ("quota_utilization", num(t.quota_utilization())),
+                ])
+            })
+            .collect();
         Json::object(vec![
             ("router", Json::Str(self.policy.clone())),
             ("sim_secs", num(self.sim_secs)),
@@ -143,6 +257,9 @@ impl FleetReport {
             ("completed", Json::Num(self.completed as f64)),
             ("rejected", Json::Num(self.rejected as f64)),
             ("evictions", Json::Num(self.evictions as f64)),
+            ("cancelled", Json::Num(self.cancelled as f64)),
+            ("deadline_missed",
+             Json::Num(self.deadline_missed as f64)),
             ("dropped", Json::Num(self.dropped as f64)),
             ("oom_events", Json::Num(self.oom_events as f64)),
             ("absorbed_spikes",
@@ -162,6 +279,7 @@ impl FleetReport {
             ("routing_histogram",
              Json::Arr(self.routing.iter()
                        .map(|&c| Json::Num(c as f64)).collect())),
+            ("tenants", Json::Arr(tenants)),
             ("replicas", Json::Arr(replicas)),
         ])
     }
@@ -188,6 +306,8 @@ mod tests {
             completed: 0,
             rejected: 0,
             evictions: 0,
+            cancelled: 0,
+            deadline_missed: 0,
             dropped: 0,
             oom_events: 0,
             absorbed_spikes: 0,
@@ -203,6 +323,14 @@ mod tests {
             p99_ttft: f64::NAN,
             throughput_rps: 0.0,
             routing: vec![0, 0],
+            tenants: vec![FleetTenantReport {
+                tenant: "default".into(),
+                counts: TenantCounts::default(),
+                p50_ttft: f64::NAN,
+                p99_ttft: f64::NAN,
+                quota_bytes: None,
+                quota_peak_bytes: 0,
+            }],
             replicas: vec![ReplicaReport {
                 id: 0,
                 state: "serving".into(),
@@ -223,5 +351,28 @@ mod tests {
                    .usize_vec().unwrap(), vec![0, 0]);
         assert_eq!(parsed.get("replicas").unwrap().arr().unwrap().len(),
                    1);
+        // the tenant section parses, with nulls where no data exists
+        let tenants = parsed.get("tenants").unwrap().arr().unwrap();
+        assert_eq!(tenants.len(), 1);
+        assert_eq!(tenants[0].get("tenant").unwrap().str().unwrap(),
+                   "default");
+        assert_eq!(tenants[0].get("deadline_hit_rate").unwrap(),
+                   &Json::Null);
+        assert_eq!(tenants[0].get("quota_bytes").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn quota_utilization_math() {
+        let t = FleetTenantReport {
+            tenant: "noisy".into(),
+            counts: TenantCounts::default(),
+            p50_ttft: f64::NAN,
+            p99_ttft: f64::NAN,
+            quota_bytes: Some(1000),
+            quota_peak_bytes: 750,
+        };
+        assert!((t.quota_utilization() - 0.75).abs() < 1e-12);
+        let unlimited = FleetTenantReport { quota_bytes: None, ..t };
+        assert!(unlimited.quota_utilization().is_nan());
     }
 }

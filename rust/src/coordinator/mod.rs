@@ -39,36 +39,56 @@
 //! the seeded scenario holding the distinction to zero phantom
 //! migrations and spawns.
 //!
+//! ## Typed ingress (`crate::api`)
+//!
+//! Work enters the fleet exclusively as `api::SubmitRequest`s through
+//! `Fleet::submit` (trace replay is a thin adapter — `Fleet::run_trace`
+//! maps the trace through `api::from_trace`). The request's tenant,
+//! priority class, and SLO deadline thread through every decision
+//! layer: the `tenant-fair` router caps each tenant's committed KV
+//! bytes at its quota (overflow waits in a per-tenant ingress backlog),
+//! engines queue by priority and pick pressure victims
+//! expired-deadline-first / lowest-class-first, and the autoscaler
+//! reads a per-tenant outstanding signal. `Fleet::poll` / `cancel`
+//! complete the lifecycle; `FleetReport::tenants` carries per-tenant
+//! TTFT tails, deadline hit-rates, and quota utilization.
+//!
 //! Module map:
 //!   * [`replica`] — one serving [`crate::server::engine::Engine`] plus
-//!     its lifecycle (`Serving` → `Draining` → `Respawning`/`Retired`)
-//!     and OOM-pressure bookkeeping. Engines are *externally stepped*
-//!     via `Engine::step_to`, which is what lets N of them share a
-//!     clock.
+//!     its lifecycle (`Serving` → `Draining` → `Respawning`/`Retired`,
+//!     with autoscaler spawns optionally entering through `Warming`
+//!     while the warm-up cost elapses) and OOM/absorbed-spike pressure
+//!     bookkeeping. Engines are *externally stepped* via
+//!     `Engine::step_to`, which is what lets N of them share a clock.
 //!   * [`router`] — pluggable dispatch policies: round-robin,
-//!     least-outstanding, KV-headroom-aware, and RAP-aware (scores each
+//!     least-outstanding, KV-headroom-aware, RAP-aware (scores each
 //!     replica by `Sys_avail(t)` headroom against the request's
 //!     estimated KV cost under that replica's *current mask*, weighted
-//!     by mask utility and queue depth).
-//!   * [`fleet`] — the event loop: admit trace arrivals, route, step all
-//!     replicas to the shared clock, drain replicas under sustained OOM
-//!     pressure and respawn them after a cool-down. With
+//!     by mask utility and queue depth), and tenant-fair
+//!     (quota-gated dispatch, RAP-aware placement within a tenant).
+//!   * [`fleet`] — the event loop: admit typed arrivals, route, step
+//!     all replicas to the shared clock, drain replicas under sustained
+//!     OOM pressure and respawn them after a cool-down. With
 //!     `FleetConfig::migrate`, in-flight sequences move off pressured
-//!     replicas (KV intact, transfer cost charged) instead of being
-//!     evicted; with `FleetConfig::autoscale`, the fleet spawns and
-//!     retires replicas from aggregate load signals.
-//!   * [`autoscaler`] — the spawn/retire policy: queue depth, windowed
-//!     p99 TTFT, and OOM rate, behind hysteresis watermarks, a
+//!     replicas (live-slice KV intact, transfer cost charged) instead
+//!     of being evicted; with `FleetConfig::autoscale`, the fleet
+//!     spawns and retires replicas from aggregate load signals,
+//!     charging `FleetConfig::warmup_secs` before a spawn serves.
+//!   * [`autoscaler`] — the spawn/retire policy: queue depth (fleet-
+//!     and worst-tenant), windowed p99 TTFT, OOM rate, and (opt-in) the
+//!     absorbed-spike early warning, behind hysteresis watermarks, a
 //!     persistence hold, and a cooldown.
-//!   * [`metrics`] — `FleetReport`: per-replica and aggregate p50/p99
-//!     TTFT + latency, OOM/eviction/respawn counts, migration and
-//!     spawn/retire totals, and the routing histogram, printable and
-//!     serializable to JSON.
+//!   * [`metrics`] — `FleetReport`: per-replica, per-tenant, and
+//!     aggregate p50/p99 TTFT + latency, OOM/eviction/respawn counts,
+//!     migration and spawn/retire totals, and the routing histogram,
+//!     printable and serializable to JSON.
 //!
 //! Everything is seeded and deterministic: replicas run the sim runtime
 //! backend (`rap::runtime::sim`) by default, so fleet experiments replay
 //! bit-identically — `rap serve-fleet --replicas 4 --router rap` is the
-//! CLI entry point, `experiments::fleet` the policy comparison.
+//! CLI entry point, `experiments::fleet` the policy comparison, and
+//! `rap experiment fleet --tenants` the multi-tenant acceptance
+//! scenario.
 
 pub mod autoscaler;
 pub mod fleet;
@@ -79,6 +99,6 @@ pub mod router;
 pub use autoscaler::{AutoscaleConfig, Autoscaler, FleetSignals,
                      ScaleDecision};
 pub use fleet::{Fleet, FleetConfig};
-pub use metrics::{FleetReport, ReplicaReport};
+pub use metrics::{FleetReport, FleetTenantReport, ReplicaReport};
 pub use replica::{Replica, ReplicaSpec, ReplicaState};
 pub use router::{Router, RouterPolicy};

@@ -1,16 +1,18 @@
 //! One fleet replica: a serving engine with its own memory monitor and
 //! RAP controller, plus the lifecycle and pressure bookkeeping the
 //! coordinator manages (`Serving` → `Draining` → `Respawning`, or →
-//! `Retired` when the autoscaler sheds capacity).
+//! `Retired` when the autoscaler sheds capacity; autoscaler spawns may
+//! enter through `Warming` when the fleet charges a warm-up cost).
 //!
 //! A replica never owns a run loop — the fleet advances every replica to
 //! the shared clock via [`Replica::step_to`], which delegates to the
 //! engine's externally-steppable `step_to` API.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 use anyhow::Result;
 
+use crate::api::{SubmitRequest, Tenant};
 use crate::mask::PruneMask;
 use crate::memory::MemoryModel;
 use crate::model_meta::ModelMeta;
@@ -19,13 +21,17 @@ use crate::runtime::Runtime;
 use crate::server::controller::{Controller, Policy};
 use crate::server::engine::{Engine, EngineConfig};
 use crate::server::memmon::{MemMonConfig, MemoryMonitor};
-use crate::workload::Request;
 
 /// Replica lifecycle, driven by the fleet's maintenance pass.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ReplicaState {
     /// Accepting routed requests.
     Serving,
+    /// Freshly spawned, loading weights / warming caches until the
+    /// given sim time (`FleetConfig::warmup_secs`): part of the working
+    /// set but not yet routable. Becomes `Serving` when the cool-down
+    /// elapses.
+    Warming { until: f64 },
     /// Excluded from routing; finishing outstanding work. Ends in
     /// `Respawning` (pressure drain) or `Retired` (autoscale-down,
     /// flagged by `Replica::retiring`).
@@ -43,6 +49,7 @@ impl ReplicaState {
     pub fn name(&self) -> &'static str {
         match self {
             ReplicaState::Serving => "serving",
+            ReplicaState::Warming { .. } => "warming",
             ReplicaState::Draining => "draining",
             ReplicaState::Respawning { .. } => "respawning",
             ReplicaState::Retired => "retired",
@@ -64,10 +71,22 @@ pub struct Replica {
     pub migrations_out: u64,
     /// Sequences delivered here from a pressured peer.
     pub migrations_in: u64,
+    /// When the autoscaler spawned this replica (`None` for the
+    /// original fleet).
+    pub spawned_at: Option<f64>,
+    /// When the first request was routed here (warm-up regression
+    /// surface: for a spawned replica this is ≥ spawned_at +
+    /// warmup_secs).
+    pub first_routed_at: Option<f64>,
     /// Sim times of recent OOM events (pressure window).
     oom_marks: VecDeque<f64>,
     /// Engine OOM counter at the last harvest.
     oom_seen: u64,
+    /// Sim times of recent mask-absorbed spikes (the autoscaler's
+    /// early-warning window).
+    absorbed_marks: VecDeque<f64>,
+    /// Engine absorbed-spike counter at the last harvest.
+    absorbed_seen: u64,
     /// Scan cursor into `engine.metrics.completed` for the autoscaler's
     /// TTFT window (records are appended in `finished_at` order, so
     /// records behind the cursor are permanently out of window).
@@ -85,8 +104,12 @@ impl Replica {
             retiring: false,
             migrations_out: 0,
             migrations_in: 0,
+            spawned_at: None,
+            first_routed_at: None,
             oom_marks: VecDeque::new(),
             oom_seen: 0,
+            absorbed_marks: VecDeque::new(),
+            absorbed_seen: 0,
             signal_cursor: 0,
         }
     }
@@ -103,6 +126,19 @@ impl Replica {
 
     pub fn outstanding(&self) -> usize {
         self.engine.outstanding()
+    }
+
+    /// Add this replica's queued + in-flight requests to a per-tenant
+    /// tally (the autoscaler's per-tenant outstanding signal and the
+    /// tenant-fair router's usage accounting read this).
+    pub fn outstanding_by_tenant(&self,
+                                 acc: &mut BTreeMap<Tenant, usize>) {
+        for r in self.engine.batcher.waiting.iter() {
+            *acc.entry(r.tenant.clone()).or_insert(0) += 1;
+        }
+        for s in self.engine.batcher.active.iter() {
+            *acc.entry(s.req.tenant.clone()).or_insert(0) += 1;
+        }
     }
 
     /// `Sys_avail(t)` minus the replica's current footprint: the KV
@@ -134,22 +170,30 @@ impl Replica {
         self.engine.mask.param_fraction(self.engine.rt.meta())
     }
 
-    /// Route a request here (the fleet calls this only on `accepting()`
-    /// replicas).
-    pub fn enqueue(&mut self, req: Request) {
+    /// Route a request here at sim time `t` (the fleet calls this only
+    /// on `accepting()` replicas).
+    pub fn submit(&mut self, req: SubmitRequest, t: f64) {
         self.routed += 1;
-        self.engine.enqueue(req);
+        if self.first_routed_at.is_none() {
+            self.first_routed_at = Some(t);
+        }
+        self.engine.submit(req);
     }
 
-    /// Advance to the shared clock, harvesting any OOM events the step
-    /// produced into the pressure window. Also completes a pending
-    /// respawn whose cool-down has elapsed.
+    /// Advance to the shared clock, harvesting the OOM events and
+    /// absorbed spikes the step produced into their pressure windows.
+    /// Also completes a pending respawn or warm-up whose cool-down has
+    /// elapsed.
     pub fn step_to(&mut self, t: f64) -> Result<()> {
-        if let ReplicaState::Respawning { until } = self.state {
-            if t >= until {
+        match self.state {
+            ReplicaState::Respawning { until } if t >= until => {
                 self.state = ReplicaState::Serving;
                 self.oom_marks.clear();
             }
+            ReplicaState::Warming { until } if t >= until => {
+                self.state = ReplicaState::Serving;
+            }
+            _ => {}
         }
         self.engine.step_to(t)?;
         let total = self.engine.metrics.oom_events;
@@ -157,6 +201,21 @@ impl Replica {
             self.oom_marks.push_back(t);
         }
         self.oom_seen = total;
+        let absorbed = self.engine.metrics.absorbed_spikes;
+        for _ in self.absorbed_seen..absorbed {
+            self.absorbed_marks.push_back(t);
+        }
+        self.absorbed_seen = absorbed;
+        // keep the absorbed window from growing without bound (marks
+        // only matter inside the autoscaler's signal window; 120 s
+        // comfortably covers every configured window)
+        while let Some(&m) = self.absorbed_marks.front() {
+            if m < t - 120.0 {
+                self.absorbed_marks.pop_front();
+            } else {
+                break;
+            }
+        }
         Ok(())
     }
 
@@ -180,6 +239,14 @@ impl Replica {
     /// so ask only about horizons inside it.
     pub fn ooms_since(&self, t0: f64) -> usize {
         self.oom_marks.iter().filter(|&&m| m >= t0).count()
+    }
+
+    /// Mask-absorbed spikes at or after `t0` — the autoscaler's
+    /// early-warning signal (`AutoscaleConfig::scale_on_absorption`):
+    /// sustained absorption means the masks are soaking up pressure
+    /// that will become true OOMs if it keeps growing.
+    pub fn absorbed_since(&self, t0: f64) -> usize {
+        self.absorbed_marks.iter().filter(|&&m| m >= t0).count()
     }
 
     /// Append the TTFTs of requests finished at or after `t0` to `out`.
@@ -302,6 +369,35 @@ mod tests {
         r.oom_marks.push_back(10.0);
         assert_eq!(r.recent_ooms(10.0, 2.0), 2);
         assert_eq!(r.recent_ooms(100.0, 2.0), 0);
+    }
+
+    #[test]
+    fn warming_replica_serves_only_after_warmup() {
+        let mut r = build_sim_replica(0, &meta(),
+                                      &ReplicaSpec::heterogeneous(0), 5);
+        r.state = ReplicaState::Warming { until: 8.0 };
+        r.spawned_at = Some(0.0);
+        assert!(!r.accepting(), "warming replicas take no routes");
+        assert!(r.live(), "warming replicas are in the working set");
+        assert_eq!(r.state.name(), "warming");
+        r.step_to(4.0).unwrap();
+        assert!(!r.accepting());
+        r.step_to(8.0).unwrap();
+        assert!(r.accepting(), "warm-up elapsed");
+    }
+
+    #[test]
+    fn absorbed_marks_are_harvested() {
+        let mut r = build_sim_replica(0, &meta(),
+                                      &ReplicaSpec::heterogeneous(0), 5);
+        // fake two absorbed spikes on the engine between steps
+        r.engine.metrics.absorbed_spikes = 2;
+        r.step_to(3.0).unwrap();
+        assert_eq!(r.absorbed_since(0.0), 2);
+        assert_eq!(r.absorbed_since(3.5), 0);
+        r.engine.metrics.absorbed_spikes = 3;
+        r.step_to(5.0).unwrap();
+        assert_eq!(r.absorbed_since(4.0), 1);
     }
 
     #[test]

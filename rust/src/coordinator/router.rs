@@ -1,6 +1,6 @@
 //! Request routing across fleet replicas.
 //!
-//! Four policies, from memory-blind to fully RAP-aware:
+//! Five policies, from memory-blind to fully tenant/RAP-aware:
 //!
 //!   * `RoundRobin`       — cyclic dispatch over accepting replicas (the
 //!                          memory-blind baseline every LB starts with);
@@ -26,14 +26,24 @@
 //!                          `prop_rap_router_never_prefers_infeasible`).
 //!                          This is the fleet-level analogue of the
 //!                          paper's (workload, Sys_avail) state vector.
+//!   * `TenantFair`       — deficit-weighted dispatch over per-tenant
+//!                          KV-byte quotas ([`TenantQuotas`]): each
+//!                          tenant's in-flight KV bytes are capped at
+//!                          its quota, overflow waits in a per-tenant
+//!                          ingress backlog owned by the fleet
+//!                          (`Fleet::dispatch_ingress`), and the tenant
+//!                          deepest under its quota dispatches first.
+//!                          *Within* a tenant, each released request is
+//!                          placed by the same RAP-aware scoring as
+//!                          `RapAware` ([`Router::place`]).
 //!
 //! The router also owns the routing histogram (decisions per replica)
-//! reported by `FleetReport`.
+//! reported by `FleetReport`, and — for `TenantFair` — the quota table.
 
 use anyhow::{bail, Result};
 
 use super::replica::Replica;
-use crate::workload::Request;
+use crate::api::{SubmitRequest, TenantQuotas};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RouterPolicy {
@@ -41,14 +51,16 @@ pub enum RouterPolicy {
     LeastOutstanding,
     KvHeadroom,
     RapAware,
+    TenantFair,
 }
 
 impl RouterPolicy {
-    pub const ALL: [RouterPolicy; 4] = [
+    pub const ALL: [RouterPolicy; 5] = [
         RouterPolicy::RoundRobin,
         RouterPolicy::LeastOutstanding,
         RouterPolicy::KvHeadroom,
         RouterPolicy::RapAware,
+        RouterPolicy::TenantFair,
     ];
 
     pub fn parse(s: &str) -> Result<RouterPolicy> {
@@ -57,8 +69,10 @@ impl RouterPolicy {
             "least" | "least-outstanding" => RouterPolicy::LeastOutstanding,
             "kv" | "kv-headroom" => RouterPolicy::KvHeadroom,
             "rap" | "rap-aware" => RouterPolicy::RapAware,
+            "tenant" | "tenant-fair" => RouterPolicy::TenantFair,
             _ => bail!("unknown router '{s}' (expected round-robin | \
-                        least-outstanding | kv-headroom | rap-aware)"),
+                        least-outstanding | kv-headroom | rap-aware | \
+                        tenant-fair)"),
         })
     }
 
@@ -68,6 +82,7 @@ impl RouterPolicy {
             RouterPolicy::LeastOutstanding => "least-outstanding",
             RouterPolicy::KvHeadroom => "kv-headroom",
             RouterPolicy::RapAware => "rap-aware",
+            RouterPolicy::TenantFair => "tenant-fair",
         }
     }
 }
@@ -76,19 +91,68 @@ pub struct Router {
     pub policy: RouterPolicy,
     /// Routing histogram: requests dispatched to each replica index.
     pub decisions: Vec<u64>,
+    /// Per-tenant KV-byte quotas (consulted only by `TenantFair`;
+    /// unlimited by default, so tenant-fair without quotas degrades to
+    /// pure RAP-aware placement).
+    pub quotas: TenantQuotas,
     rr_next: usize,
 }
 
 impl Router {
     pub fn new(policy: RouterPolicy, n_replicas: usize) -> Router {
-        Router { policy, decisions: vec![0; n_replicas], rr_next: 0 }
+        Router { policy, decisions: vec![0; n_replicas],
+                 quotas: TenantQuotas::unlimited(), rr_next: 0 }
+    }
+
+    /// Install a quota table (tenant-fair fleets).
+    pub fn with_quotas(mut self, quotas: TenantQuotas) -> Router {
+        self.quotas = quotas;
+        self
+    }
+
+    /// Stateless RAP-aware placement: the best replica for `req` right
+    /// now, without touching the histogram. `None` only when no replica
+    /// is accepting. The `RapAware` and `TenantFair` arms of
+    /// [`Router::route`] delegate here; the fleet's tenant-fair
+    /// dispatcher also calls it directly to price a backlogged head
+    /// before committing quota.
+    pub fn place(&self, req: &SubmitRequest, replicas: &[Replica],
+                 t: f64) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, r) in replicas.iter().enumerate() {
+            if !r.accepting() {
+                continue;
+            }
+            let headroom = r.elastic_headroom(t) as f64;
+            // like for like: elastic headroom vs the request's cost
+            // under the mask this replica could shrink to
+            let cost = r.engine.elastic_admission_cost(req) as f64;
+            let surplus = headroom - cost;
+            let score = if surplus > 0.0 {
+                // feasible: quality-weighted memory surplus, discounted
+                // by queue depth — always > 0, so every feasible
+                // replica outranks every infeasible one
+                r.mask_utility() * surplus
+                    / (1.0 + r.outstanding() as f64)
+            } else {
+                // infeasible right now: rank by RAW deficit far below
+                // all feasible scores (never scale a negative surplus
+                // by utility — that inverts the preference),
+                // least-underwater first
+                surplus - 1e18
+            };
+            if best.map_or(true, |(_, s)| score > s) {
+                best = Some((i, score));
+            }
+        }
+        best.map(|(i, _)| i)
     }
 
     /// Pick a replica index for `req` at sim time `t`, or `None` when no
     /// replica is accepting. Ties break toward the lowest index so every
     /// policy is deterministic.
-    pub fn route(&mut self, req: &Request, replicas: &[Replica], t: f64)
-                 -> Option<usize> {
+    pub fn route(&mut self, req: &SubmitRequest, replicas: &[Replica],
+                 t: f64) -> Option<usize> {
         let accepting: Vec<usize> = replicas
             .iter()
             .enumerate()
@@ -123,35 +187,8 @@ impl Router {
                      std::cmp::Reverse(i))
                 })
                 .unwrap(),
-            RouterPolicy::RapAware => {
-                let mut best: Option<(usize, f64)> = None;
-                for &i in &accepting {
-                    let r = &replicas[i];
-                    let headroom = r.elastic_headroom(t) as f64;
-                    // like for like: elastic headroom vs the request's
-                    // cost under the mask this replica could shrink to
-                    let cost =
-                        r.engine.elastic_admission_cost(req) as f64;
-                    let surplus = headroom - cost;
-                    let score = if surplus > 0.0 {
-                        // feasible: quality-weighted memory surplus,
-                        // discounted by queue depth — always > 0, so
-                        // every feasible replica outranks every
-                        // infeasible one
-                        r.mask_utility() * surplus
-                            / (1.0 + r.outstanding() as f64)
-                    } else {
-                        // infeasible right now: rank by RAW deficit far
-                        // below all feasible scores (never scale a
-                        // negative surplus by utility — that inverts
-                        // the preference), least-underwater first
-                        surplus - 1e18
-                    };
-                    if best.map_or(true, |(_, s)| score > s) {
-                        best = Some((i, score));
-                    }
-                }
-                best.unwrap().0
+            RouterPolicy::RapAware | RouterPolicy::TenantFair => {
+                self.place(req, replicas, t).unwrap()
             }
         };
         self.decisions[pick] += 1;
@@ -162,6 +199,7 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::SubmitRequest;
     use crate::coordinator::replica::{build_sim_replica, ReplicaSpec,
                                       ReplicaState};
     use crate::model_meta::ModelMeta;
@@ -171,8 +209,8 @@ mod tests {
         ModelMeta::synthetic("r", 4, 128, 8, 4, 512, 512, 256)
     }
 
-    fn req(id: u64) -> Request {
-        Request { id, arrival: 0.0, prompt_len: 12, gen_len: 6 }
+    fn req(id: u64) -> SubmitRequest {
+        SubmitRequest::new(12, 6).with_id(id)
     }
 
     fn quiet_spec() -> ReplicaSpec {
@@ -192,6 +230,10 @@ mod tests {
                    RouterPolicy::RapAware);
         assert_eq!(RouterPolicy::parse("kv").unwrap(),
                    RouterPolicy::KvHeadroom);
+        assert_eq!(RouterPolicy::parse("tenant-fair").unwrap(),
+                   RouterPolicy::TenantFair);
+        assert_eq!(RouterPolicy::parse("tenant").unwrap(),
+                   RouterPolicy::TenantFair);
         assert!(RouterPolicy::parse("nope").is_err());
     }
 
@@ -214,8 +256,8 @@ mod tests {
     #[test]
     fn least_outstanding_prefers_empty() {
         let mut reps = fleet_of(2);
-        reps[0].enqueue(req(100));
-        reps[0].enqueue(req(101));
+        reps[0].submit(req(100), 0.0);
+        reps[0].submit(req(101), 0.0);
         let mut router = Router::new(RouterPolicy::LeastOutstanding, 2);
         assert_eq!(router.route(&req(0), &reps, 0.0), Some(1));
     }
@@ -230,7 +272,8 @@ mod tests {
         reps[0].engine.monitor =
             MemoryMonitor::walls(cap, &[(0.0, 1e12, cap - params / 2)]);
         assert_eq!(reps[0].kv_headroom(0.0), 0);
-        for policy in [RouterPolicy::KvHeadroom, RouterPolicy::RapAware] {
+        for policy in [RouterPolicy::KvHeadroom, RouterPolicy::RapAware,
+                       RouterPolicy::TenantFair] {
             let mut router = Router::new(policy, 2);
             for i in 0..8 {
                 assert_eq!(router.route(&req(i), &reps, 0.0), Some(1),
@@ -282,5 +325,22 @@ mod tests {
         reps[0].state = ReplicaState::Draining;
         let mut router = Router::new(RouterPolicy::RapAware, 1);
         assert_eq!(router.route(&req(0), &reps, 0.0), None);
+        // the stateless placer agrees
+        assert_eq!(router.place(&req(0), &reps, 0.0), None);
+    }
+
+    /// `place` is `route`'s RapAware arm without the histogram side
+    /// effect — the tenant-fair dispatcher relies on the two agreeing.
+    #[test]
+    fn place_matches_rap_aware_route() {
+        let reps = fleet_of(3);
+        let mut router = Router::new(RouterPolicy::RapAware, 3);
+        for i in 0..6 {
+            let placed = router.place(&req(i), &reps, 1.0);
+            let routed = router.route(&req(i), &reps, 1.0);
+            assert_eq!(placed, routed);
+        }
+        assert_eq!(router.decisions.iter().sum::<u64>(), 6,
+                   "place must not touch the histogram");
     }
 }

@@ -125,6 +125,16 @@ pub fn fig4(model: &str) -> Result<()> {
 /// Fig 5: dynamic memory allocation trace with OOM events under a static
 /// dense deployment vs RAP.
 pub fn fig5(seed: u64, secs: f64) -> Result<()> {
+    fig5_with(seed, secs, 1, None)
+}
+
+/// As [`fig5`], with the CLI's tenancy decoration (`serve --tenants n
+/// --slo secs`): the same trace spread across `tenants` synthetic
+/// tenants, every request carrying a relative completion SLO of `slo`
+/// seconds. The report then includes the per-tenant sections (deadline
+/// hit-rates, per-tenant TTFT tails).
+pub fn fig5_with(seed: u64, secs: f64, tenants: usize,
+                 slo: Option<f64>) -> Result<()> {
     use crate::server::controller::{Controller, Policy};
     use crate::server::engine::{Engine, EngineConfig};
     use crate::server::memmon::{MemMonConfig, MemoryMonitor};
@@ -162,7 +172,10 @@ pub fn fig5(seed: u64, secs: f64) -> Result<()> {
         }, seed + 1);
         let reqs = gen.generate(0.0, secs);
         let n_req = reqs.len();
-        let report = engine.run_trace(reqs)?;
+        // the one ingress path: trace → SubmitRequests (decorated with
+        // tenants/SLO when the CLI asked for them)
+        let subs = crate::api::decorate_trace(reqs, tenants, slo);
+        let report = engine.run_requests(subs)?;
         println!("\n[{label}] {} requests over {:.0}s sim", n_req, secs);
         println!("  t(s)    used(MiB)  avail(MiB)");
         for sample in engine.metrics.mem_trace.iter().step_by(4) {
@@ -177,6 +190,7 @@ pub fn fig5(seed: u64, secs: f64) -> Result<()> {
                  report.oom_events, report.absorbed_spikes,
                  report.evictions, report.rejected, report.completed,
                  report.mask_switches);
+        report.print_tenants();
     }
     println!("\nshape check: static deployment accumulates OOM events when \
               interference spikes; RAP absorbs them by shrinking the \

@@ -8,8 +8,13 @@ use super::common::banner;
 use crate::coordinator::fleet::{absorbable_spike_fleet,
                                 absorbable_spike_trace,
                                 default_fleet_trace, default_sim_fleet,
-                                elastic_demo_fleet, elastic_demo_trace};
-use crate::coordinator::metrics::{zero_nan, FleetReport};
+                                elastic_demo_fleet, elastic_demo_trace,
+                                tenant_storm_fcfs_trace,
+                                tenant_storm_fleet, tenant_storm_trace,
+                                TENANT_STORM_SECS,
+                                TENANT_STORM_SLO_SECS};
+use crate::coordinator::metrics::{zero_nan, FleetReport,
+                                  FleetTenantReport};
 use crate::coordinator::router::RouterPolicy;
 
 /// `rap experiment fleet`: replay the same trace under every routing
@@ -145,6 +150,105 @@ pub fn fleet_absorbable(seed: u64) -> Result<()> {
                   {:.3}s vs {:.3}s).",
                  er.migrations, pr.migrations, er.spawns, pr.spawns,
                  er.p99_ttft, pr.p99_ttft);
+    }
+    Ok(())
+}
+
+fn tenant_row(label: &str, t: &FleetTenantReport) {
+    let hit = if t.counts.deadline_total > 0 {
+        format!("{:>7.1}%", 100.0 * t.deadline_hit_rate())
+    } else {
+        "      —".to_string()
+    };
+    let quota = if t.quota_bytes.is_some() {
+        format!("{:>7.1}%", 100.0 * t.quota_utilization())
+    } else {
+        "      —".to_string()
+    };
+    println!("{:<26} {:>9} {:>6} {:>7} {:>7} {:>9} {} {}",
+             label, t.counts.submitted, t.counts.finished,
+             t.counts.deadline_missed, t.counts.rejected,
+             format!("{:.3}s", zero_nan(t.p99_ttft)), hit, quota);
+}
+
+/// Find one tenant's section of a fleet report.
+fn tenant_section<'a>(r: &'a FleetReport, name: &str)
+                      -> &'a FleetTenantReport {
+    r.tenants
+        .iter()
+        .find(|t| t.tenant == name)
+        .expect("tenant missing from report")
+}
+
+/// `rap experiment fleet --tenants`: the ISSUE-5 acceptance surface.
+/// One seeded two-tenant storm — a noisy tenant flooding low-priority
+/// long decodes over a latency-sensitive tenant's steady SLO-carrying
+/// stream — served twice by otherwise-identical fleets: once behind the
+/// FCFS baseline (round-robin dispatch on arrival) and once behind the
+/// tenant-fair router (per-tenant KV quotas, deficit-first dispatch,
+/// RAP-aware placement within a tenant). Tenant-fair must hold the
+/// latency tenant's p99 TTFT *and* deadline hit-rate strictly better
+/// than FCFS while the noisy tenant's peak quota utilization stays ≤
+/// 100% — the same inequality `tests/tenant_fleet.rs` asserts. The
+/// scenario shape (2 replicas, 40 s window, one 20 s flood) is fixed;
+/// only the seed varies.
+pub fn fleet_tenants(seed: u64) -> Result<()> {
+    banner(&format!(
+        "Fleet — FCFS vs tenant-fair ingress on a two-tenant storm \
+         (seed {seed})"));
+    let reqs = tenant_storm_trace(seed);
+    let latency_n =
+        reqs.iter().filter(|r| r.tenant.as_ref() == "latency").count();
+    println!("trace: {} requests over {:.0}s ({} latency-tenant with a \
+              {:.1}s completion SLO, {} noisy-tenant long decodes) — \
+              fixed scenario, only --seed varies it\n",
+             reqs.len(), TENANT_STORM_SECS, latency_n,
+             TENANT_STORM_SLO_SECS, reqs.len() - latency_n);
+    println!("{:<26} {:>9} {:>6} {:>7} {:>7} {:>9} {:>8} {:>8}",
+             "fleet / tenant", "submitted", "done", "missed", "reject",
+             "p99 ttft", "hit", "quota");
+    // the baseline is the legacy front door: round-robin dispatch,
+    // FCFS queues (priorities flattened), deadlines measured only
+    let mut fcfs = tenant_storm_fleet(seed, RouterPolicy::RoundRobin);
+    let fr = fcfs.run_requests(tenant_storm_fcfs_trace(seed))?;
+    tenant_row("fcfs / latency", tenant_section(&fr, "latency"));
+    tenant_row("fcfs / noisy", tenant_section(&fr, "noisy"));
+    let mut fair = tenant_storm_fleet(seed, RouterPolicy::TenantFair);
+    let tr = fair.run_requests(reqs)?;
+    tenant_row("tenant-fair / latency", tenant_section(&tr, "latency"));
+    tenant_row("tenant-fair / noisy", tenant_section(&tr, "noisy"));
+    let f_lat = tenant_section(&fr, "latency");
+    let t_lat = tenant_section(&tr, "latency");
+    let t_noisy = tenant_section(&tr, "noisy");
+    println!("\nshape check: the quota holds the noisy flood at the \
+              front door, so the latency tenant's requests stop \
+              queueing behind long decodes — its TTFT tail and deadline \
+              hit-rate must both improve strictly, and the noisy \
+              tenant must stay within its KV quota.");
+    println!("tenant-storm: tenant-fair latency p99_ttft={:.3}s \
+              hit_rate={:.3} vs fcfs p99_ttft={:.3}s hit_rate={:.3} \
+              noisy_quota_util={:.3}",
+             t_lat.p99_ttft, t_lat.deadline_hit_rate(), f_lat.p99_ttft,
+             f_lat.deadline_hit_rate(), t_noisy.quota_utilization());
+    if t_lat.p99_ttft < f_lat.p99_ttft
+        && t_lat.deadline_hit_rate() > f_lat.deadline_hit_rate()
+        && t_noisy.quota_utilization() <= 1.0
+    {
+        println!("verdict: tenant-fair ingress wins (p99 ttft {:.3}s \
+                  vs {:.3}s, hit-rate {:.1}% vs {:.1}%, noisy quota \
+                  peak {:.1}%).",
+                 t_lat.p99_ttft, f_lat.p99_ttft,
+                 100.0 * t_lat.deadline_hit_rate(),
+                 100.0 * f_lat.deadline_hit_rate(),
+                 100.0 * t_noisy.quota_utilization());
+    } else {
+        println!("verdict: UNEXPECTED — tenant-fair did not strictly \
+                  win (p99 ttft {:.3}s vs {:.3}s, hit-rate {:.1}% vs \
+                  {:.1}%, noisy quota peak {:.1}%).",
+                 t_lat.p99_ttft, f_lat.p99_ttft,
+                 100.0 * t_lat.deadline_hit_rate(),
+                 100.0 * f_lat.deadline_hit_rate(),
+                 100.0 * t_noisy.quota_utilization());
     }
     Ok(())
 }

@@ -11,11 +11,13 @@
 //!     are AOT-lowered to HLO text under `artifacts/` at build time;
 //!   * L3 (this crate) loads those artifacts via PJRT (`runtime`), owns
 //!     the paper's contribution (`gsi`, `agent`, `pruning`), the
-//!     serving stack (`server`, `workload`), the multi-replica fleet
-//!     coordinator with memory-aware routing (`coordinator`), and
+//!     serving stack (`server`, `workload`) behind the typed
+//!     tenant/SLO-aware request ingress (`api`), the multi-replica
+//!     fleet coordinator with memory-aware routing (`coordinator`), and
 //!     regenerates every table and figure (`experiments`).
 
 pub mod agent;
+pub mod api;
 pub mod coordinator;
 pub mod corpus;
 pub mod evalharness;

@@ -5,19 +5,29 @@
 //!                     (fig2|fig3|fig4|fig5|fig6|fig9|fig10|fig11|
 //!                      table1|table2|table3|table4|fleet|all)
 //!   train-agent       train + save the DQN controller for a model
-//!   serve             replay a synthetic trace through the serving engine
+//!   serve             replay a synthetic trace through the serving
+//!                     engine; --tenants N spreads it across N synthetic
+//!                     tenants and --slo S attaches an S-second
+//!                     completion deadline to every request (per-tenant
+//!                     deadline hit-rates in the report)
 //!   serve-fleet       replay a trace across N heterogeneous replicas
-//!                     behind a pluggable router; emits a JSON FleetReport.
-//!                     --autoscale spawns/retires replicas from load,
-//!                     --migrate moves in-flight sequences off pressured
-//!                     replicas instead of evicting them
+//!                     behind a pluggable router; emits a JSON
+//!                     FleetReport. --autoscale spawns/retires replicas
+//!                     from load (--warmup charges a warm-up cost before
+//!                     a spawn serves), --migrate moves in-flight
+//!                     sequences off pressured replicas instead of
+//!                     evicting them, --router tenant-fair + --tenants N
+//!                     caps each tenant's in-flight KV bytes at an
+//!                     equal share
 //!   gsi               run Greedy Sequential Importance on a model
 //!
 //! Common flags: --model <name> --seed <n> --quick
 
 use anyhow::{bail, Result};
+use rap::api;
 use rap::coordinator::fleet::{default_fleet_trace,
-                              default_sim_fleet_with, AutoscaleConfig,
+                              default_sim_fleet_with,
+                              equal_share_quotas, AutoscaleConfig,
                               FleetConfig};
 use rap::coordinator::router::RouterPolicy;
 use rap::experiments::{figures, fleet, rl, tables};
@@ -50,7 +60,12 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let secs = args.f64_or("secs", 120.0)?;
-            figures::fig5(seed, secs)
+            let tenants = args.usize_or("tenants", 1)?;
+            let slo = match args.get("slo") {
+                Some(v) => Some(v.parse::<f64>()?),
+                None => None,
+            };
+            figures::fig5_with(seed, secs, tenants, slo)
         }
         "serve-fleet" => serve_fleet(seed, &args),
         // ("--help" never reaches here: Args::parse turns --x into a
@@ -69,9 +84,13 @@ fn main() -> Result<()> {
 }
 
 /// `rap serve-fleet --replicas 4 --router rap --secs 120 [--json path]
-/// [--autoscale [--min-replicas N] [--max-replicas N]] [--migrate]`:
+/// [--autoscale [--min-replicas N] [--max-replicas N] [--warmup S]]
+/// [--migrate] [--tenants N] [--slo S]`:
 /// one seeded trace across N heterogeneous sim replicas, with the fleet
 /// report printed and emitted as JSON (stdout, or `--json <path>`).
+/// `--tenants` spreads the trace across N synthetic tenants (and, under
+/// `--router tenant-fair`, gives each an equal KV-byte quota); `--slo`
+/// attaches a relative completion deadline to every request.
 fn serve_fleet(seed: u64, args: &Args) -> Result<()> {
     let replicas = args.usize_or("replicas", 4)?;
     if replicas == 0 {
@@ -79,6 +98,11 @@ fn serve_fleet(seed: u64, args: &Args) -> Result<()> {
     }
     let secs = args.f64_or("secs", 120.0)?;
     let policy = RouterPolicy::parse(&args.str_or("router", "rap"))?;
+    let tenants = args.usize_or("tenants", 1)?;
+    let slo = match args.get("slo") {
+        Some(v) => Some(v.parse::<f64>()?),
+        None => None,
+    };
     let autoscale = if args.bool("autoscale") {
         Some(AutoscaleConfig {
             min_replicas: args.usize_or("min-replicas", 1)?.max(1),
@@ -95,16 +119,21 @@ fn serve_fleet(seed: u64, args: &Args) -> Result<()> {
         max_sim_secs: secs + 3600.0,
         migrate: args.bool("migrate"),
         autoscale,
+        warmup_secs: args.f64_or("warmup", 0.0)?,
         ..FleetConfig::default()
     };
     let mut fleet = default_sim_fleet_with(replicas, seed, policy, cfg);
+    if policy == RouterPolicy::TenantFair && tenants > 1 {
+        fleet.router.quotas = equal_share_quotas(&fleet, tenants);
+    }
     let reqs = default_fleet_trace(seed, secs);
     println!("serve-fleet: {} requests over {secs:.0}s across {replicas} \
-              replicas (router={}, seed={seed}, autoscale={}, \
-              migrate={})",
+              replicas (router={}, seed={seed}, tenants={tenants}, \
+              autoscale={}, migrate={})",
              reqs.len(), policy.name(), cfg.autoscale.is_some(),
              cfg.migrate);
-    let report = fleet.run_trace(reqs)?;
+    let subs = api::decorate_trace(reqs, tenants, slo);
+    let report = fleet.run_requests(subs)?;
     report.print();
     let json = report.to_json().pretty();
     match args.get("json") {
@@ -146,6 +175,10 @@ fn run_experiment(id: &str, model: &str, seed: u64, quick: bool,
                 // fixed scenario (2 replicas, one absorbable wall):
                 // current-mask vs mask-elastic accounting
                 fleet::fleet_absorbable(seed)
+            } else if args.bool("tenants") {
+                // fixed scenario (2 replicas, two tenants, one flood):
+                // FCFS vs tenant-fair ingress
+                fleet::fleet_tenants(seed)
             } else {
                 fleet::fleet_compare(
                     seed,
@@ -180,14 +213,23 @@ fn print_help() {
               autoscale+migration");
     println!("                   fleet takes --absorbable: current-mask \
               vs mask-elastic accounting");
+    println!("                   fleet takes --tenants: FCFS vs \
+              tenant-fair ingress on a two-tenant storm");
     println!("  train-agent      --model <m> --episodes <n> --seed <s>");
-    println!("  serve            --secs <n> --seed <s>");
+    println!("  serve            --secs <n> --seed <s> [--tenants <n>] \
+              [--slo <secs>]");
+    println!("                   (--tenants spreads the trace across n \
+              synthetic tenants;");
+    println!("                    --slo attaches a completion deadline \
+              — per-tenant hit-rates in the report)");
     println!("  serve-fleet      --replicas <n> --router \
-              rr|least|kv|rap  --secs <n> [--json <path>]");
+              rr|least|kv|rap|tenant  --secs <n> [--json <path>]");
     println!("                   [--autoscale [--min-replicas <n>] \
-              [--max-replicas <n>]]");
+              [--max-replicas <n>] [--warmup <secs>]]");
     println!("                   [--migrate]  (move in-flight sequences \
               off pressured replicas)");
+    println!("                   [--tenants <n>] [--slo <secs>]  \
+              (tenant-fair: equal KV quotas per tenant)");
     println!("  gsi              --model <m> --remove <n>");
     println!();
     println!("FLAGS: --model rap-small|qwen-sim|rap-tiny  --seed N  \

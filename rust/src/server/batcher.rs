@@ -7,11 +7,15 @@
 //!   * decode batches the active sequences into the largest compiled
 //!     bucket ≤ active count; membership changes only at step boundaries;
 //!   * admission control rejects/queues work that would exceed the
-//!     *memory-model* budget (Eq. 3+4) for the current mask.
+//!     *memory-model* budget (Eq. 3+4) for the current mask;
+//!   * the admission queue is priority-ordered: a higher
+//!     [`PriorityClass`] waits ahead of a lower one, stable FCFS within
+//!     a class — with uniform priorities (the trace-replay default) this
+//!     is exactly the old FCFS queue.
 
 use std::collections::VecDeque;
 
-use crate::workload::Request;
+use crate::api::SubmitRequest;
 
 /// Compiled shape buckets (must match aot.py's PREFILL_T / DECODE_B).
 pub const PREFILL_BUCKETS: [usize; 4] = [16, 32, 64, 128];
@@ -41,7 +45,7 @@ pub fn decode_bucket(n: usize) -> usize {
 /// A sequence being served.
 #[derive(Clone, Debug)]
 pub struct ActiveSeq {
-    pub req: Request,
+    pub req: SubmitRequest,
     /// Tokens generated so far.
     pub generated: usize,
     /// Last sampled token (next decode input).
@@ -54,7 +58,7 @@ pub struct ActiveSeq {
 /// only the scheduling decisions so they are unit-testable.
 #[derive(Default)]
 pub struct Batcher {
-    pub waiting: VecDeque<Request>,
+    pub waiting: VecDeque<SubmitRequest>,
     pub active: Vec<ActiveSeq>,
     /// Max concurrent decode sequences (largest decode bucket).
     pub max_active: usize,
@@ -66,8 +70,28 @@ impl Batcher {
                   max_active: *DECODE_BUCKETS.last().unwrap() }
     }
 
-    pub fn enqueue(&mut self, req: Request) {
-        self.waiting.push_back(req);
+    /// Admit a new request: it waits behind everything of its own class
+    /// and above, ahead of anything strictly lower.
+    pub fn enqueue(&mut self, req: SubmitRequest) {
+        let pos = self
+            .waiting
+            .iter()
+            .position(|r| r.priority < req.priority)
+            .unwrap_or(self.waiting.len());
+        self.waiting.insert(pos, req);
+    }
+
+    /// Put an evicted-and-requeued request back at the *head* of its
+    /// class (it was already admitted once): ahead of its equals, still
+    /// behind any strictly higher class. With uniform priorities this
+    /// is the classic `push_front`.
+    pub fn requeue_front(&mut self, req: SubmitRequest) {
+        let pos = self
+            .waiting
+            .iter()
+            .position(|r| r.priority <= req.priority)
+            .unwrap_or(self.waiting.len());
+        self.waiting.insert(pos, req);
     }
 
     pub fn queue_len(&self) -> usize {
@@ -80,7 +104,7 @@ impl Batcher {
         !self.waiting.is_empty() && self.active.len() < self.max_active
     }
 
-    pub fn pop_for_prefill(&mut self) -> Option<Request> {
+    pub fn pop_for_prefill(&mut self) -> Option<SubmitRequest> {
         if self.active.len() >= self.max_active {
             return None;
         }
@@ -103,7 +127,9 @@ impl Batcher {
         let mut done = Vec::new();
         let mut i = 0;
         while i < self.active.len() {
-            if self.active[i].generated >= self.active[i].req.gen_len {
+            if self.active[i].generated
+                >= self.active[i].req.max_new_tokens
+            {
                 done.push(self.active.remove(i));
             } else {
                 i += 1;
@@ -120,9 +146,10 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::PriorityClass;
 
-    fn req(id: u64, prompt: usize, gen: usize) -> Request {
-        Request { id, arrival: 0.0, prompt_len: prompt, gen_len: gen }
+    fn req(id: u64, prompt: usize, gen: usize) -> SubmitRequest {
+        SubmitRequest::new(prompt, gen).with_id(id)
     }
 
     fn active(id: u64, gen_left: usize) -> ActiveSeq {
@@ -155,6 +182,25 @@ mod tests {
         assert!(!b.wants_prefill());
     }
 
+    /// Higher classes wait ahead of lower ones; FCFS within a class;
+    /// `requeue_front` re-enters at the head of its own class.
+    #[test]
+    fn priority_orders_the_queue() {
+        let mut b = Batcher::new();
+        b.enqueue(req(1, 8, 4)); // Normal
+        b.enqueue(req(2, 8, 4).with_priority(PriorityClass::Batch));
+        b.enqueue(req(3, 8, 4).with_priority(PriorityClass::Interactive));
+        b.enqueue(req(4, 8, 4)); // Normal, after 1
+        b.enqueue(req(5, 8, 4).with_priority(PriorityClass::Interactive));
+        let order: Vec<u64> = b.waiting.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![3, 5, 1, 4, 2]);
+        // an evicted Normal re-enters ahead of queued Normals but still
+        // behind Interactive work
+        b.requeue_front(req(6, 8, 4));
+        let order: Vec<u64> = b.waiting.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![3, 5, 6, 1, 4, 2]);
+    }
+
     #[test]
     fn active_cap_blocks_prefill() {
         let mut b = Batcher::new();
@@ -180,7 +226,7 @@ mod tests {
     #[test]
     fn retire_removes_done() {
         let mut b = Batcher::new();
-        b.push_active(active(1, 0)); // gen_len 0 → done immediately
+        b.push_active(active(1, 0)); // max_new_tokens 0 → done immediately
         b.push_active(active(2, 3));
         let done = b.retire_finished();
         assert_eq!(done.len(), 1);

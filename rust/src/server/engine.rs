@@ -1,6 +1,15 @@
 //! The serving engine: a continuous-batching event loop over the model
 //! runtime, with RAP's controller in the loop.
 //!
+//! Ingress model: work enters exclusively as typed
+//! [`SubmitRequest`]s through [`Engine::submit`], which returns a
+//! [`RequestHandle`] for the lifecycle API ([`Engine::status`] /
+//! [`Engine::cancel`]; terminal [`Outcome`]s are kept in the metrics
+//! ledger). Trace replay is a thin adapter over this —
+//! [`Engine::run_trace`] maps the trace through `api::from_trace` and
+//! drives [`Engine::run_requests`] — so there is exactly one ingress
+//! path.
+//!
 //! Time model: the engine advances a *simulated* clock fed by the trace's
 //! arrival times; compute steps advance the clock by their duration —
 //! measured wall-clock on the PJRT backend, the modeled cost on the sim
@@ -10,9 +19,9 @@
 //!
 //! Stepping model: the engine no longer owns its run loop. The primitive
 //! is [`Engine::step_to`], which advances the clock to a target time
-//! doing work along the way; [`Engine::run_trace`] is a thin driver over
-//! `enqueue` + `step_to`, and the fleet coordinator drives many engines
-//! against one shared clock the same way.
+//! doing work along the way; [`Engine::run_requests`] is a thin driver
+//! over `submit` + `step_to`, and the fleet coordinator drives many
+//! engines against one shared clock the same way.
 //!
 //! Per unit of work:
 //!   1. controller: observe (active workload, Sys_avail(t)) and re-decide
@@ -23,14 +32,19 @@
 //!      min-viable mask fits `Sys_avail(t)` the spike is absorbable:
 //!      shrink the mask, shed nothing, charge `absorbed_spikes`. Only
 //!      when `Sys_avail(t)` dips below the min-viable footprint is an
-//!      OOM counted and work shed per [`EvictionMode`] (both modes pick
-//!      victims by KV bytes × remaining decode — the shed that frees
-//!      the most memory per eviction). With
-//!      `EngineConfig::elastic_accounting` off, any pressure under the
-//!      current mask counts as an OOM (the pre-outlook behavior, kept
-//!      for comparison runs);
+//!      OOM counted and work shed per [`EvictionMode`]. Victims are
+//!      picked expired-deadline-first, then lowest [`PriorityClass`],
+//!      then largest KV bytes × remaining decode (the shed that frees
+//!      the most memory per eviction) — with uniform priorities and no
+//!      deadlines this is exactly the pre-API order. An expired victim
+//!      is *terminated* (`Outcome::DeadlineMissed`), never requeued or
+//!      migrated. With `EngineConfig::elastic_accounting` off, any
+//!      pressure under the current mask counts as an OOM (the
+//!      pre-outlook behavior, kept for comparison runs);
 //!   3. run one prefill (if queue room + memory headroom) or one decode
 //!      step over the gathered batch; sample tokens; retire finished.
+//!      Admission is priority-aware: a memory-blocked head of queue may
+//!      preempt strictly-lower-class in-flight work, never the reverse.
 
 use anyhow::{bail, Result};
 
@@ -40,17 +54,18 @@ use super::kv::KvManager;
 use super::memmon::MemoryMonitor;
 use super::metrics::{MemSample, Metrics, RequestRecord, ServeReport};
 use super::outlook::MemoryOutlook;
+use crate::api::{Outcome, RequestHandle, RequestStatus, SubmitRequest};
 use crate::mask::PruneMask;
 use crate::memory::{MemoryModel, Workload};
 use crate::runtime::Runtime;
-use crate::workload::Request;
 
 /// How the engine sheds in-flight work when interference pushes its
 /// footprint over `Sys_avail(t)`.
-/// Both modes pick victims the same way — by KV bytes × remaining
-/// decode, the sequence whose removal frees the most memory for the
-/// longest remaining run (`Engine::pressure_victim`) — so a requeueing
-/// engine sheds with the fewest evictions, exactly like a parking one.
+/// Both modes pick victims the same way — expired deadlines first, then
+/// the lowest priority class, then by KV bytes × remaining decode, the
+/// sequence whose removal frees the most memory for the longest
+/// remaining run (`Engine::pressure_victim`) — so a requeueing engine
+/// sheds with the fewest evictions, exactly like a parking one.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum EvictionMode {
     /// Evict the victim and requeue it locally — it restarts from its
@@ -78,6 +93,14 @@ pub struct EngineConfig {
     pub max_sim_secs: f64,
     /// What to do with in-flight sequences under memory pressure.
     pub eviction: EvictionMode,
+    /// Act on SLO deadlines (the default): expired queued requests are
+    /// purged as `DeadlineMissed` without burning a prefill, and
+    /// expired pressure victims are terminated rather than requeued.
+    /// Off = measure-only: deadlines still classify terminal outcomes
+    /// (hit-rates stay reportable) but never change scheduling — the
+    /// legacy trace-replay front door, kept for baseline comparisons
+    /// (`fleet::tenant_storm_fleet`'s FCFS side).
+    pub enforce_deadlines: bool,
     /// Mask-elastic memory accounting: judge pressure against the
     /// [`MemoryOutlook`]'s `min_viable` footprint instead of the
     /// current-mask footprint. On (the default), a spike the controller
@@ -93,6 +116,7 @@ impl Default for EngineConfig {
                        controller_period: 5.0, admission_headroom: 0.95,
                        max_sim_secs: 1e9,
                        eviction: EvictionMode::Requeue,
+                       enforce_deadlines: true,
                        elastic_accounting: true }
     }
 }
@@ -105,10 +129,10 @@ impl Default for EngineConfig {
 #[derive(Clone, Debug)]
 pub enum SeqState {
     /// Queued but unstarted: no KV yet, just the admission ticket.
-    Queued(Request),
+    Queued(SubmitRequest),
     /// Mid-decode: the sequence's KV cache travels with it.
     Active {
-        req: Request,
+        req: SubmitRequest,
         /// Tokens generated so far (prefill's first token included).
         generated: usize,
         /// Last sampled token (next decode input).
@@ -120,9 +144,14 @@ pub enum SeqState {
         kv_len: usize,
         k: Vec<f32>,
         v: Vec<f32>,
-        /// Logical KV bytes under the exporting replica's mask at
-        /// export time — the payload a migration must move.
+        /// Logical KV bytes of the full (bucket-padded) cache under the
+        /// exporting replica's mask at export time.
         kv_bytes: usize,
+        /// Logical KV bytes of the live `prompt + generated` slice
+        /// under the same mask — what a migration actually ships over
+        /// the interconnect (the prefill bucket's padding rows carry no
+        /// information and are re-padded on arrival).
+        live_kv_bytes: usize,
     },
 }
 
@@ -131,7 +160,7 @@ impl SeqState {
         self.request().id
     }
 
-    pub fn request(&self) -> &Request {
+    pub fn request(&self) -> &SubmitRequest {
         match self {
             SeqState::Queued(r) => r,
             SeqState::Active { req, .. } => req,
@@ -139,8 +168,24 @@ impl SeqState {
     }
 
     /// Bytes a migration of this state must move over the interconnect:
-    /// the KV payload plus the prompt token ids.
+    /// the *live* KV slice (`prompt + generated` tokens × the mask's
+    /// active groups) plus the prompt token ids. Bucket padding is not
+    /// shipped.
     pub fn transfer_bytes(&self) -> usize {
+        let prompt = self.request().prompt_len * 4;
+        match self {
+            SeqState::Queued(_) => prompt,
+            SeqState::Active { live_kv_bytes, .. } => {
+                live_kv_bytes + prompt
+            }
+        }
+    }
+
+    /// What the pre-compression accounting charged: the bucket-padded
+    /// cache. Kept so the strict-reduction regression (and the fleet's
+    /// `migration_bytes_padded` counter) can compare without re-deriving
+    /// masks.
+    pub fn padded_transfer_bytes(&self) -> usize {
         let prompt = self.request().prompt_len * 4;
         match self {
             SeqState::Queued(_) => prompt,
@@ -231,10 +276,64 @@ impl Engine {
         self.batcher.active.len() + self.batcher.waiting.len()
     }
 
-    /// Hand the engine a request; it is served on subsequent `step_to`
-    /// calls (external admission — the fleet router's entry point).
-    pub fn enqueue(&mut self, req: Request) {
+    /// The lifecycle entry point: hand the engine one typed request. It
+    /// is served on subsequent `step_to` calls (external admission —
+    /// the fleet router dispatches through this too); the returned
+    /// handle keys [`Engine::status`] / [`Engine::cancel`].
+    pub fn submit(&mut self, req: SubmitRequest) -> RequestHandle {
+        let handle = RequestHandle { id: req.id };
+        self.metrics.note_submitted(&req);
         self.batcher.enqueue(req);
+        handle
+    }
+
+    /// Lifecycle state of a request this engine has seen: queued,
+    /// mid-decode, parked for migration, or finished with a terminal
+    /// [`Outcome`]. `None` for ids this engine does not hold (a fleet
+    /// aggregates over replicas).
+    pub fn status(&self, id: u64) -> Option<RequestStatus> {
+        if let Some(o) = self.metrics.outcome(id) {
+            return Some(RequestStatus::Finished(o));
+        }
+        if self.batcher.active.iter().any(|s| s.req.id == id) {
+            return Some(RequestStatus::Running);
+        }
+        if self.batcher.waiting.iter().any(|r| r.id == id) {
+            return Some(RequestStatus::Queued);
+        }
+        if self.parked.iter().any(|s| s.id() == id) {
+            return Some(RequestStatus::Migrating);
+        }
+        None
+    }
+
+    /// Reclaim a request: queued, mid-decode (its KV is freed), or
+    /// parked. Books `Outcome::Cancelled`. Returns false when the
+    /// engine does not hold `id` live (already terminal, or elsewhere).
+    pub fn cancel(&mut self, id: u64) -> Result<bool> {
+        if let Some(i) =
+            self.batcher.waiting.iter().position(|r| r.id == id)
+        {
+            let req = self.batcher.waiting.remove(i).unwrap();
+            self.metrics.note_terminal(&req, Outcome::Cancelled);
+            return Ok(true);
+        }
+        if let Some(i) =
+            self.batcher.active.iter().position(|s| s.req.id == id)
+        {
+            self.flush_batch()?;
+            let seq = self.batcher.active.remove(i);
+            self.kv.remove(seq.req.id);
+            self.metrics.note_terminal(&seq.req, Outcome::Cancelled);
+            return Ok(true);
+        }
+        if let Some(i) = self.parked.iter().position(|s| s.id() == id) {
+            let state = self.parked.remove(i);
+            self.metrics.note_terminal(state.request(),
+                                       Outcome::Cancelled);
+            return Ok(true);
+        }
+        Ok(false)
     }
 
     /// Current model + KV footprint under the active mask.
@@ -284,9 +383,9 @@ impl Engine {
             .batcher
             .active
             .iter()
-            .map(|s| s.req.prompt_len + s.req.gen_len)
+            .map(|s| s.req.prompt_len + s.req.max_new_tokens)
             .chain(self.batcher.waiting.iter()
-                   .map(|r| r.prompt_len + r.gen_len))
+                   .map(|r| r.prompt_len + r.max_new_tokens))
             .max()
             .unwrap_or(32);
         Workload::new(batch, longest.min(self.rt.meta().max_seq))
@@ -377,17 +476,29 @@ impl Engine {
             && !self.batcher.active.is_empty()
         {
             // Both modes shed the victim whose removal frees the most
-            // memory for the longest remaining run, so Requeue frees
-            // memory with the fewest evictions, exactly like Park.
+            // memory for the longest remaining run (expired deadlines
+            // and lower classes first), so Requeue frees memory with
+            // the fewest evictions, exactly like Park.
             let i = self.pressure_victim().unwrap();
             let seq = self.batcher.active.remove(i);
+            if self.cfg.enforce_deadlines && seq.req.expired(self.sim_time)
+            {
+                // Past-deadline work is terminated, not recycled:
+                // requeueing or migrating a request that already missed
+                // its SLO only burns capacity (the victim order prefers
+                // exactly these).
+                self.kv.remove(seq.req.id);
+                self.metrics.note_terminal(&seq.req,
+                                           Outcome::DeadlineMissed);
+                continue;
+            }
             match self.cfg.eviction {
                 EvictionMode::Requeue => {
                     // The cache is dropped; the request restarts from
                     // its prompt.
                     self.kv.remove(seq.req.id);
                     self.metrics.evictions += 1;
-                    self.batcher.waiting.push_front(seq.req);
+                    self.batcher.requeue_front(seq.req);
                 }
                 EvictionMode::Park => {
                     let state = self.export_active(seq)?;
@@ -399,18 +510,42 @@ impl Engine {
     }
 
     /// Index of the active sequence whose eviction/migration pays off
-    /// most: the one with the largest KV bytes × remaining-decode
-    /// estimate (ties break toward the oldest). `None` when nothing is
-    /// active.
+    /// most. Preference order: already past its deadline first (that
+    /// work can no longer hit its SLO), then the lowest priority class,
+    /// then the largest KV bytes × remaining-decode estimate (ties
+    /// break toward the oldest). With uniform priorities and no
+    /// deadlines this reduces exactly to the pre-API order. `None` when
+    /// nothing is active.
     fn pressure_victim(&self) -> Option<usize> {
-        let mut best: Option<(usize, usize)> = None;
+        self.victim_among(|_| true)
+    }
+
+    /// `pressure_victim` restricted to an eligibility predicate (the
+    /// preemption path restricts to strictly-lower classes).
+    fn victim_among(&self, eligible: impl Fn(&ActiveSeq) -> bool)
+                    -> Option<usize> {
+        use std::cmp::Reverse;
+
+        // Victim preference key, compared lexicographically: expired
+        // first, then lowest class (Reverse), then largest score.
+        type VictimKey =
+            (bool, Reverse<crate::api::PriorityClass>, usize);
+        let mut best: Option<(usize, VictimKey)> = None;
         for (i, s) in self.batcher.active.iter().enumerate() {
+            if !eligible(s) {
+                continue;
+            }
             let len = self.kv.seq_len(s.req.id).unwrap_or(0);
             let remaining =
-                s.req.gen_len.saturating_sub(s.generated).max(1);
+                s.req.max_new_tokens.saturating_sub(s.generated).max(1);
             let score = self.kv_bytes_for_len(len) * remaining;
-            if best.map_or(true, |(_, b)| score > b) {
-                best = Some((i, score));
+            // measure-only mode must not let deadlines steer
+            // scheduling, victim choice included
+            let expired = self.cfg.enforce_deadlines
+                && s.req.expired(self.sim_time);
+            let key = (expired, Reverse(s.req.priority), score);
+            if best.map_or(true, |(_, b)| key > b) {
+                best = Some((i, key));
             }
         }
         best.map(|(i, _)| i)
@@ -439,9 +574,9 @@ impl Engine {
     /// Projected bytes if we admit `req` (its KV at full length) under
     /// the current mask. Public so memory-aware routers can estimate a
     /// request's footprint on each candidate replica.
-    pub fn admission_cost(&self, req: &Request) -> usize {
-        let full_len =
-            (req.prompt_len + req.gen_len).min(self.rt.meta().max_seq);
+    pub fn admission_cost(&self, req: &SubmitRequest) -> usize {
+        let full_len = (req.prompt_len + req.max_new_tokens)
+            .min(self.rt.meta().max_seq);
         self.kv_bytes_for_len(full_len)
     }
 
@@ -463,14 +598,14 @@ impl Engine {
     /// feasibility checks against *elastic* headroom compare like with
     /// like. Equals `admission_cost` for static deployments, with
     /// mask-elastic accounting off, or before the controller has run.
-    pub fn elastic_admission_cost(&self, req: &Request) -> usize {
+    pub fn elastic_admission_cost(&self, req: &SubmitRequest) -> usize {
         let current = self.admission_cost(req);
         if !self.cfg.elastic_accounting {
             return current;
         }
         match &self.min_viable_mask {
             Some(m) => {
-                let full_len = (req.prompt_len + req.gen_len)
+                let full_len = (req.prompt_len + req.max_new_tokens)
                     .min(self.rt.meta().max_seq);
                 self.kv_bytes_for_len_under(m, full_len).min(current)
             }
@@ -481,12 +616,13 @@ impl Engine {
     /// Could a min-viable deployment host `req` within `avail` even
     /// though the current mask cannot? (Admission's counterpart of the
     /// outlook: an empty-but-dense server should shrink, not reject.)
-    fn min_viable_admits(&self, req: &Request, avail: usize) -> bool {
+    fn min_viable_admits(&self, req: &SubmitRequest, avail: usize)
+                         -> bool {
         let Some(m) = &self.min_viable_mask else {
             return false;
         };
-        let full_len =
-            (req.prompt_len + req.gen_len).min(self.rt.meta().max_seq);
+        let full_len = (req.prompt_len + req.max_new_tokens)
+            .min(self.rt.meta().max_seq);
         self.mem.param_bytes(m) + self.kv.bytes_used(m)
             + self.kv_bytes_for_len_under(m, full_len)
             <= avail
@@ -501,6 +637,15 @@ impl Engine {
             anyhow::anyhow!("export: seq {} has no cache", seq.req.id)
         })?;
         let kv_bytes = self.kv_bytes_for_len(cache.len);
+        // The live slice: prompt tokens + decode writes. `cache.len` is
+        // bucket-padded by prefill; the padding rows carry no
+        // information, so a migration ships (and is charged for) only
+        // the live rows.
+        let live_len = (seq.req.prompt_len
+            + cache.len
+                .saturating_sub(prefill_bucket(seq.req.prompt_len)))
+            .min(cache.len);
+        let live_kv_bytes = self.kv_bytes_for_len(live_len);
         Ok(SeqState::Active {
             req: seq.req,
             generated: seq.generated,
@@ -510,6 +655,7 @@ impl Engine {
             k: cache.k,
             v: cache.v,
             kv_bytes,
+            live_kv_bytes,
         })
     }
 
@@ -589,9 +735,15 @@ impl Engine {
         self.parked.len()
     }
 
+    /// The parked states, without draining them (quota accounting and
+    /// the lifecycle API read these).
+    pub fn parked_states(&self) -> &[SeqState] {
+        &self.parked
+    }
+
     /// Drain the admission queue (fleet queue-rebalancing off a
     /// pressured replica).
-    pub fn take_waiting(&mut self) -> Vec<Request> {
+    pub fn take_waiting(&mut self) -> Vec<SubmitRequest> {
         self.batcher.waiting.drain(..).collect()
     }
 
@@ -603,22 +755,114 @@ impl Engine {
         self.sim_time += dt * self.cfg.time_scale;
     }
 
+    /// Terminate queued requests whose completion deadline has already
+    /// passed: serving them cannot hit the SLO, so they are booked as
+    /// `DeadlineMissed` without burning a prefill. A no-op when nothing
+    /// carries a deadline (the trace-replay default).
+    fn drop_expired_queued(&mut self) {
+        if !self.cfg.enforce_deadlines {
+            return;
+        }
+        while let Some(front) = self.batcher.waiting.front() {
+            if !front.expired(self.sim_time) {
+                break;
+            }
+            let req = self.batcher.waiting.pop_front().unwrap();
+            self.metrics.note_terminal(&req, Outcome::DeadlineMissed);
+        }
+    }
+
+    /// Evict strictly-lower-class in-flight work until `req` fits
+    /// within `avail` (or no such victim remains) — priority-aware
+    /// admission's preemption half: a higher class may displace a lower
+    /// one, never the reverse, and with uniform priorities this is a
+    /// no-op. Expired victims are terminated; the rest are shed per the
+    /// eviction mode (requeued behind their class head, or parked for
+    /// migration). Returns whether anything was shed.
+    fn preempt_for(&mut self, req: &SubmitRequest, avail: usize)
+                   -> Result<bool> {
+        // Only start shedding if the eligible victims' KV can actually
+        // cover the shortfall — otherwise the lower-class residents
+        // would lose their decode progress and the head would stay
+        // blocked anyway.
+        let shortfall = (self.bytes_used() + self.admission_cost(req))
+            .saturating_sub(avail);
+        let reclaimable: usize = self
+            .batcher
+            .active
+            .iter()
+            .filter(|s| s.req.priority < req.priority)
+            .map(|s| {
+                self.kv_bytes_for_len(
+                    self.kv.seq_len(s.req.id).unwrap_or(0))
+            })
+            .sum();
+        if reclaimable < shortfall {
+            return Ok(false);
+        }
+        let mut shed = false;
+        while self.bytes_used() + self.admission_cost(req) > avail {
+            let Some(i) =
+                self.victim_among(|s| s.req.priority < req.priority)
+            else {
+                break;
+            };
+            self.flush_batch()?;
+            let seq = self.batcher.active.remove(i);
+            if self.cfg.enforce_deadlines && seq.req.expired(self.sim_time)
+            {
+                self.kv.remove(seq.req.id);
+                self.metrics.note_terminal(&seq.req,
+                                           Outcome::DeadlineMissed);
+            } else {
+                match self.cfg.eviction {
+                    EvictionMode::Requeue => {
+                        self.kv.remove(seq.req.id);
+                        self.metrics.evictions += 1;
+                        self.batcher.requeue_front(seq.req);
+                    }
+                    EvictionMode::Park => {
+                        let state = self.export_active(seq)?;
+                        self.parked.push(state);
+                    }
+                }
+            }
+            shed = true;
+        }
+        Ok(shed)
+    }
+
     fn try_prefill(&mut self) -> Result<bool> {
         if !self.batcher.wants_prefill() {
             return Ok(false);
         }
+        self.drop_expired_queued();
         let avail = (self.monitor.available_at(self.sim_time) as f64
             * self.cfg.admission_headroom) as usize;
         let Some(req) = self.batcher.waiting.front().cloned() else {
             return Ok(false);
         };
         if self.bytes_used() + self.admission_cost(&req) > avail {
-            // Head-of-line blocked on memory. If the system is idle and
-            // even an empty server can't host it under the current
-            // mask, consult the outlook: when a min-viable deployment
-            // *could* host it, force a controller decision (the mask
-            // should shrink, not the queue) and retry next tick;
-            // otherwise reject outright.
+            // Head-of-line blocked on memory. A higher class may
+            // preempt strictly-lower-class in-flight work to fit (the
+            // freed memory admits it next pass); with uniform
+            // priorities this path is inert. Preemption only frees
+            // victims' KV — never parameters — so it can only help a
+            // head that fits alongside the bare model; a doomed head
+            // must fall through to the shrink/reject path below, not
+            // evict every lower-class resident for nothing.
+            if self.mem.param_bytes(&self.mask)
+                + self.admission_cost(&req)
+                <= avail
+                && self.preempt_for(&req, avail)?
+            {
+                return Ok(false);
+            }
+            // If the system is idle and even an empty server can't host
+            // it under the current mask, consult the outlook: when a
+            // min-viable deployment *could* host it, force a controller
+            // decision (the mask should shrink, not the queue) and
+            // retry next tick; otherwise reject outright.
             if self.batcher.active.is_empty()
                 && self.mem.param_bytes(&self.mask)
                     + self.admission_cost(&req) > avail
@@ -643,8 +887,9 @@ impl Engine {
                     }
                     return Ok(false);
                 }
-                self.batcher.waiting.pop_front();
+                let rejected = self.batcher.waiting.pop_front().unwrap();
                 self.metrics.rejected += 1;
+                self.metrics.note_terminal(&rejected, Outcome::Rejected);
             }
             return Ok(false);
         }
@@ -728,13 +973,24 @@ impl Engine {
         }
         for seq in finished {
             self.kv.remove(seq.req.id);
+            // A finish after the deadline is still served (the tokens
+            // exist) but terminates as DeadlineMissed in the ledger.
+            let outcome = if seq.req.deadline_hit(self.sim_time) {
+                Outcome::Done
+            } else {
+                Outcome::DeadlineMissed
+            };
+            self.metrics.note_terminal(&seq.req, outcome);
             self.metrics.completed.push(RequestRecord {
                 id: seq.req.id,
+                tenant: seq.req.tenant.clone(),
+                priority: seq.req.priority,
+                deadline: seq.req.slo_deadline,
                 arrival: seq.req.arrival,
                 first_token_at: seq.prefill_done_at,
                 finished_at: self.sim_time,
                 prompt_len: seq.req.prompt_len,
-                gen_len: seq.req.gen_len,
+                gen_len: seq.req.max_new_tokens,
             });
         }
         Ok(true)
@@ -757,7 +1013,7 @@ impl Engine {
 
     /// Like `step_to`, but returns as soon as the engine runs out of
     /// work instead of jumping the clock to `t` — so a driver that only
-    /// wants "work until done or `t`" (e.g. `run_trace` with a huge
+    /// wants "work until done or `t`" (e.g. `run_requests` with a huge
     /// `max_sim_secs` backstop) keeps a truthful completion time.
     pub fn step_while_busy(&mut self, t: f64) -> Result<()> {
         while self.sim_time < t && !self.idle() {
@@ -772,10 +1028,11 @@ impl Engine {
         Ok(())
     }
 
-    /// Serve a whole trace to completion (or `max_sim_secs`): a thin
-    /// arrival-admission driver over `enqueue` + `step_to`.
-    pub fn run_trace(&mut self, mut requests: Vec<Request>)
-                     -> Result<ServeReport> {
+    /// Serve a batch of typed requests to completion (or
+    /// `max_sim_secs`): a thin arrival-admission driver over `submit` +
+    /// `step_to` — the native front door.
+    pub fn run_requests(&mut self, mut requests: Vec<SubmitRequest>)
+                        -> Result<ServeReport> {
         requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         let t_start = self.sim_time;
         let deadline = t_start + self.cfg.max_sim_secs;
@@ -785,7 +1042,7 @@ impl Engine {
             while next < requests.len()
                 && requests[next].arrival <= self.sim_time
             {
-                self.enqueue(requests[next].clone());
+                self.submit(requests[next].clone());
                 next += 1;
             }
             if self.idle() {
@@ -813,6 +1070,15 @@ impl Engine {
         let wall = (self.sim_time - t_start).max(1e-9);
         Ok(self.metrics.report(wall))
     }
+
+    /// Serve a whole workload trace — the legacy front door, now a thin
+    /// adapter: a trace is just an iterator of default-tenancy
+    /// [`SubmitRequest`]s (`api::from_trace`), so replay and the typed
+    /// API share one ingress path.
+    pub fn run_trace(&mut self, requests: Vec<crate::workload::Request>)
+                     -> Result<ServeReport> {
+        self.run_requests(crate::api::from_trace(requests).collect())
+    }
 }
 
 fn argmax(xs: &[f32]) -> usize {
@@ -828,6 +1094,7 @@ fn argmax(xs: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::PriorityClass;
     use crate::model_meta::ModelMeta;
     use crate::server::controller::Policy;
 
@@ -859,8 +1126,12 @@ mod tests {
         engine_with(capacity_mult, false)
     }
 
-    fn req(id: u64, arrival: f64) -> Request {
-        Request { id, arrival, prompt_len: 12, gen_len: 6 }
+    fn req(id: u64, arrival: f64) -> SubmitRequest {
+        SubmitRequest::new(12, 6).with_id(id).with_arrival(arrival)
+    }
+
+    fn long_req(id: u64, prompt: usize, gen: usize) -> SubmitRequest {
+        SubmitRequest::new(prompt, gen).with_id(id)
     }
 
     #[test]
@@ -874,7 +1145,7 @@ mod tests {
     fn externally_stepped_engine_serves_requests() {
         let mut e = sim_engine(4.0);
         for i in 0..5 {
-            e.enqueue(req(i, 0.0));
+            e.submit(req(i, 0.0));
         }
         assert_eq!(e.outstanding(), 5);
         // step in small external increments, like a fleet would
@@ -893,7 +1164,11 @@ mod tests {
 
     #[test]
     fn run_trace_matches_external_stepping() {
-        let trace: Vec<Request> = (0..8).map(|i| req(i, i as f64 * 0.4))
+        use crate::workload::Request;
+
+        let trace: Vec<Request> = (0..8)
+            .map(|i| Request { id: i, arrival: i as f64 * 0.4,
+                               prompt_len: 12, gen_len: 6 })
             .collect();
         let mut a = sim_engine(4.0);
         let ra = a.run_trace(trace.clone()).unwrap();
@@ -902,7 +1177,7 @@ mod tests {
         let mut t = 0.0;
         while next < trace.len() || !b.idle() {
             while next < trace.len() && trace[next].arrival <= t {
-                b.enqueue(trace[next].clone());
+                b.submit(SubmitRequest::from_trace(&trace[next]));
                 next += 1;
             }
             t += 0.2;
@@ -918,6 +1193,15 @@ mod tests {
         assert!(a.sim_time() < 1e4, "clock jumped to the deadline");
         assert!(ra.throughput_rps > 1e-3,
                 "wall time corrupted: {} req/s", ra.throughput_rps);
+        // the trace adapter is the one ingress: every request got a
+        // terminal outcome and landed in the default tenant's ledger
+        assert_eq!(ra.tenants.len(), 1);
+        assert_eq!(ra.tenants[0].tenant, crate::api::DEFAULT_TENANT);
+        assert_eq!(ra.tenants[0].counts.submitted, 8);
+        assert_eq!(ra.tenants[0].counts.finished, 8);
+        for i in 0..8 {
+            assert_eq!(a.metrics.outcome(i), Some(Outcome::Done));
+        }
     }
 
     /// Step in tiny increments so at most one compute op runs per call
@@ -934,7 +1218,7 @@ mod tests {
     #[test]
     fn export_import_roundtrip_queued() {
         let mut a = sim_engine(4.0);
-        a.enqueue(req(7, 0.0));
+        a.submit(req(7, 0.0));
         let st = a.export_sequence(7).unwrap().unwrap();
         assert!(matches!(st, SeqState::Queued(_)));
         assert_eq!(st.id(), 7);
@@ -952,15 +1236,15 @@ mod tests {
     fn export_import_roundtrip_mid_decode() {
         // control: the same request served by one engine end to end
         let mut control = sim_engine(4.0);
-        control.enqueue(req(3, 0.0));
+        control.submit(req(3, 0.0));
         control.step_to(120.0).unwrap();
         assert_eq!(control.metrics.completed.len(), 1);
         let total = control.metrics.tokens_generated;
-        assert_eq!(total, 6, "gen_len tokens in total");
+        assert_eq!(total, 6, "max_new_tokens tokens in total");
 
         // serve the prefill + two decode steps, then export mid-decode
         let mut a = sim_engine(4.0);
-        a.enqueue(req(3, 0.0));
+        a.submit(req(3, 0.0));
         step_until_tokens(&mut a, 3);
         let st = a.export_sequence(3).unwrap().unwrap();
         let SeqState::Active { generated, kv_len, .. } = &st else {
@@ -970,6 +1254,11 @@ mod tests {
         // prefill bucket (16 for a 12-token prompt) + 2 decode writes
         assert_eq!(*kv_len, 18);
         assert!(st.transfer_bytes() > 0);
+        // migration compression: the charged payload is the live
+        // 12 + 2 = 14 rows, strictly less than the padded 18
+        assert!(st.transfer_bytes() < st.padded_transfer_bytes(),
+                "live {} vs padded {}", st.transfer_bytes(),
+                st.padded_transfer_bytes());
         assert!(a.idle(), "export left state behind");
 
         // identical continuation on two fresh engines
@@ -1005,7 +1294,7 @@ mod tests {
 
         let mut e = sim_engine(4.0);
         e.cfg.eviction = EvictionMode::Park;
-        e.enqueue(req(1, 0.0));
+        e.submit(req(1, 0.0));
         step_until_tokens(&mut e, 2);
         // yank the headroom out: capacity == params, so any KV is over
         let cap = e.mem.param_bytes(&e.mask);
@@ -1026,7 +1315,7 @@ mod tests {
         use crate::server::memmon::MemoryMonitor;
 
         let mut e = sim_engine(4.0);
-        e.enqueue(req(1, 0.0));
+        e.submit(req(1, 0.0));
         step_until_tokens(&mut e, 2);
         let cap = e.mem.param_bytes(&e.mask);
         e.monitor = MemoryMonitor::constant(cap);
@@ -1047,10 +1336,8 @@ mod tests {
 
         let mut e = sim_engine(8.0);
         // A: long prompt (128-token bucket), B: short (16-token bucket)
-        e.enqueue(Request { id: 1, arrival: 0.0, prompt_len: 100,
-                            gen_len: 30 });
-        e.enqueue(Request { id: 2, arrival: 0.0, prompt_len: 12,
-                            gen_len: 30 });
+        e.submit(long_req(1, 100, 30));
+        e.submit(long_req(2, 12, 30));
         step_until_tokens(&mut e, 4); // both prefilled + one decode step
         let len_a = e.kv.seq_len(1).unwrap();
         let len_b = e.kv.seq_len(2).unwrap();
@@ -1089,7 +1376,7 @@ mod tests {
         for elastic in [true, false] {
             let mut e = engine_with(4.0, true);
             e.cfg.elastic_accounting = elastic;
-            e.enqueue(req(1, 0.0));
+            e.submit(req(1, 0.0));
             step_until_tokens(&mut e, 2);
             assert_eq!(e.metrics.oom_events, 0);
             let params =
@@ -1139,7 +1426,7 @@ mod tests {
         // the request was neither admitted nor rejected
         e.monitor =
             MemoryMonitor::constant((params as f64 * 0.60) as usize);
-        e.enqueue(req(1, 0.0));
+        e.submit(req(1, 0.0));
         e.step_to(300.0).unwrap();
         assert_eq!(e.metrics.completed.len(), 1,
                    "request starved in the admission gap");
@@ -1152,13 +1439,13 @@ mod tests {
     #[test]
     fn outlook_reports_the_mask_lattice() {
         let mut s = sim_engine(4.0);
-        s.enqueue(req(1, 0.0));
+        s.submit(req(1, 0.0));
         step_until_tokens(&mut s, 2);
         let o = s.outlook();
         assert_eq!(o.min_viable, o.current, "static mask cannot shrink");
 
         let mut a = engine_with(4.0, true);
-        a.enqueue(req(1, 0.0));
+        a.submit(req(1, 0.0));
         step_until_tokens(&mut a, 2);
         let o = a.outlook();
         assert!(o.min_viable < o.current,
@@ -1170,7 +1457,7 @@ mod tests {
     #[test]
     fn sim_backend_drives_virtual_time() {
         let mut e = sim_engine(4.0);
-        e.enqueue(req(0, 0.0));
+        e.submit(req(0, 0.0));
         let wall = std::time::Instant::now();
         e.step_to(1000.0).unwrap();
         // a single request's modeled compute is far below 1000 virtual
@@ -1178,5 +1465,190 @@ mod tests {
         assert!(e.sim_time() >= 1000.0);
         assert!(wall.elapsed().as_secs_f64() < 30.0);
         assert_eq!(e.metrics.completed.len(), 1);
+    }
+
+    // ---- request-API lifecycle (ISSUE 5) ------------------------------
+
+    #[test]
+    fn submit_poll_cancel_lifecycle_queued() {
+        let mut e = sim_engine(4.0);
+        let h = e.submit(req(1, 0.0));
+        assert_eq!(e.status(h.id), Some(RequestStatus::Queued));
+        assert!(e.cancel(h.id).unwrap());
+        assert_eq!(e.status(h.id),
+                   Some(RequestStatus::Finished(Outcome::Cancelled)));
+        assert!(e.idle());
+        assert_eq!(e.kv.len(), 0);
+        assert_eq!(e.metrics.cancelled, 1);
+        // already terminal: nothing left to cancel
+        assert!(!e.cancel(h.id).unwrap());
+        // a later step must not resurrect it
+        e.step_to(10.0).unwrap();
+        assert_eq!(e.metrics.completed.len(), 0);
+        assert_eq!(e.status(99), None);
+    }
+
+    #[test]
+    fn cancel_mid_decode_frees_kv() {
+        let mut e = sim_engine(4.0);
+        let h = e.submit(req(2, 0.0));
+        step_until_tokens(&mut e, 2);
+        assert_eq!(e.status(h.id), Some(RequestStatus::Running));
+        assert!(e.cancel(h.id).unwrap());
+        assert!(e.idle());
+        // the sequence's cache is gone: the footprint collapses back to
+        // the bare model
+        assert_eq!(e.kv.len(), 0);
+        assert_eq!(e.bytes_used(), e.mem.param_bytes(&e.mask));
+        assert_eq!(e.metrics.outcome(2), Some(Outcome::Cancelled));
+        e.step_to(e.sim_time() + 1.0).unwrap();
+        assert_eq!(e.metrics.completed.len(), 0);
+    }
+
+    #[test]
+    fn deadline_outcomes_are_booked() {
+        // an impossible deadline: served, but terminal DeadlineMissed
+        let mut e = sim_engine(4.0);
+        e.submit(req(1, 0.0).with_deadline(1e-6));
+        e.step_to(120.0).unwrap();
+        assert_eq!(e.metrics.completed.len(), 1);
+        assert_eq!(e.metrics.outcome(1),
+                   Some(Outcome::DeadlineMissed));
+        assert_eq!(e.metrics.deadline_missed, 1);
+        // a comfortable deadline is a hit
+        let mut e = sim_engine(4.0);
+        e.submit(req(2, 0.0).with_deadline(1e6));
+        e.step_to(120.0).unwrap();
+        assert_eq!(e.metrics.outcome(2), Some(Outcome::Done));
+        let rep = e.metrics.report(1.0);
+        assert_eq!(rep.tenants.len(), 1);
+        assert_eq!(rep.tenants[0].counts.deadline_hits, 1);
+        assert_eq!(rep.tenants[0].counts.deadline_total, 1);
+    }
+
+    /// Victim order under pressure: expired deadlines go first (and are
+    /// terminated, not requeued), and lower classes go before higher
+    /// ones.
+    #[test]
+    fn pressure_victims_prefer_expired_then_lowest_class() {
+        use crate::server::memmon::MemoryMonitor;
+
+        let mut e = sim_engine(8.0);
+        e.submit(long_req(1, 12, 30)
+                     .with_priority(PriorityClass::Interactive));
+        e.submit(long_req(2, 12, 30)
+                     .with_priority(PriorityClass::Batch));
+        e.submit(long_req(3, 12, 30)
+                     .with_priority(PriorityClass::Interactive));
+        step_until_tokens(&mut e, 5);
+        assert_eq!(e.batcher.active.len(), 3);
+        // mark 3 as already past its deadline (post-hoc, so queue-purge
+        // timing can't interfere with the scenario)
+        e.batcher.seq_mut(3).unwrap().req.slo_deadline =
+            Some(e.sim_time() - 1.0);
+        // wall: capacity == params → every sequence must be shed
+        let cap = e.mem.param_bytes(&e.mask);
+        e.monitor = MemoryMonitor::constant(cap);
+        e.step_to(e.sim_time() + 1e-4).unwrap();
+        // the expired Interactive was terminated (no eviction charged);
+        // the Batch and the live Interactive were requeued
+        assert_eq!(e.metrics.outcome(3),
+                   Some(Outcome::DeadlineMissed));
+        assert_eq!(e.metrics.evictions, 2);
+        assert!(e.batcher.active.is_empty());
+        assert!(!e.batcher.waiting.iter().any(|r| r.id == 3),
+                "expired victim must not be requeued");
+    }
+
+    /// Priority-aware admission: a memory-blocked Interactive head may
+    /// preempt a resident Batch sequence; a Batch head must never
+    /// displace a resident Interactive one.
+    #[test]
+    fn admission_preempts_only_lower_classes() {
+        use crate::server::memmon::MemoryMonitor;
+
+        // case 1: Interactive arrives, Batch resident → preempted
+        let mut e = sim_engine(8.0);
+        e.submit(long_req(1, 12, 30)
+                     .with_priority(PriorityClass::Batch));
+        step_until_tokens(&mut e, 2);
+        let params = e.mem.param_bytes(&e.mask);
+        let incoming = long_req(2, 12, 30)
+            .with_priority(PriorityClass::Interactive);
+        let need = e.admission_cost(&incoming);
+        // capacity: hosts the incoming request on an otherwise-empty
+        // server, but not alongside the resident sequence
+        let cap = ((params + need) as f64 / 0.95) as usize + 16;
+        let used = e.bytes_used();
+        assert!(used + need > (cap as f64 * 0.95) as usize,
+                "scenario must start memory-blocked");
+        e.monitor = MemoryMonitor::constant(cap);
+        e.submit(incoming);
+        e.step_to(e.sim_time() + 2.0).unwrap();
+        assert!(e.metrics.evictions >= 1,
+                "the Batch resident was never preempted");
+        assert!(e.metrics.completed.iter().any(|r| r.id == 2),
+                "the Interactive request never got through");
+
+        // case 2: the mirror image — Batch arrives, Interactive
+        // resident → no preemption, ever
+        let mut e = sim_engine(8.0);
+        e.submit(long_req(1, 12, 30)
+                     .with_priority(PriorityClass::Interactive));
+        step_until_tokens(&mut e, 2);
+        let params = e.mem.param_bytes(&e.mask);
+        let incoming =
+            long_req(2, 12, 30).with_priority(PriorityClass::Batch);
+        let need = e.admission_cost(&incoming);
+        let cap = ((params + need) as f64 / 0.95) as usize + 16;
+        e.monitor = MemoryMonitor::constant(cap);
+        e.submit(incoming);
+        e.step_to(e.sim_time() + 300.0).unwrap();
+        assert_eq!(e.metrics.evictions, 0,
+                   "a Batch head displaced an Interactive resident");
+        // both still finish — the Batch one simply waits its turn
+        assert_eq!(e.metrics.completed.len(), 2);
+        let pos = |id: u64| {
+            e.metrics.completed.iter().position(|r| r.id == id).unwrap()
+        };
+        assert!(pos(1) < pos(2), "the Interactive resident finished \
+                                  first");
+    }
+
+    /// Queued requests whose deadline already passed are purged as
+    /// DeadlineMissed without burning a prefill.
+    #[test]
+    fn expired_queued_requests_are_purged() {
+        let mut e = sim_engine(4.0);
+        // a long-running resident keeps the engine busy past t = 2
+        e.submit(long_req(1, 12, 40));
+        // this one's deadline expires while it waits behind nothing —
+        // give it an arrival-time deadline already in the past once the
+        // clock moves: deadline 0 can never be hit after t > 0
+        step_until_tokens(&mut e, 2);
+        let dead = long_req(9, 12, 4).with_deadline(
+            e.sim_time() - 1e-9);
+        e.submit(dead);
+        e.step_to(e.sim_time() + 60.0).unwrap();
+        assert_eq!(e.metrics.outcome(9),
+                   Some(Outcome::DeadlineMissed));
+        assert_eq!(e.metrics.prefills, 1,
+                   "the expired request burned a prefill");
+        assert!(e.metrics.completed.iter().all(|r| r.id != 9));
+
+        // measure-only mode (the legacy front door): the same expired
+        // request is served to completion and merely *booked* as missed
+        let mut e = sim_engine(4.0);
+        e.cfg.enforce_deadlines = false;
+        e.submit(long_req(1, 12, 40));
+        step_until_tokens(&mut e, 2);
+        let dead = long_req(9, 12, 4).with_deadline(
+            e.sim_time() - 1e-9);
+        e.submit(dead);
+        e.step_to(e.sim_time() + 60.0).unwrap();
+        assert_eq!(e.metrics.outcome(9),
+                   Some(Outcome::DeadlineMissed));
+        assert_eq!(e.metrics.prefills, 2, "measure-only must serve it");
+        assert!(e.metrics.completed.iter().any(|r| r.id == 9));
     }
 }

@@ -1,11 +1,20 @@
 //! Serving metrics: per-request latency, throughput, memory trace, OOM
-//! events — the measurement layer behind Fig 5 and the end-to-end example.
+//! events, and — since the request API — per-tenant outcome ledgers
+//! (deadline hit-rates, cancellations) behind Fig 5 and the end-to-end
+//! example.
 
+use std::collections::{BTreeMap, HashMap};
+
+use crate::api::{Outcome, PriorityClass, SubmitRequest, Tenant};
 use crate::util::stats::{mean, percentile};
 
 #[derive(Clone, Debug)]
 pub struct RequestRecord {
     pub id: u64,
+    pub tenant: Tenant,
+    pub priority: PriorityClass,
+    /// Absolute completion deadline, when the request carried one.
+    pub deadline: Option<f64>,
     pub arrival: f64,
     pub first_token_at: f64,
     pub finished_at: f64,
@@ -32,6 +41,70 @@ pub struct MemSample {
     pub kv_bytes: usize,
 }
 
+/// One tenant's slice of the outcome ledger. `finished` counts in-SLO
+/// completions only; a late finish lands in `deadline_missed` (its
+/// latency record still exists for the TTFT percentiles).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantCounts {
+    /// Requests submitted to this engine for the tenant.
+    pub submitted: u64,
+    /// Terminal `Done` (finished, SLO honored or absent).
+    pub finished: u64,
+    /// Terminal `DeadlineMissed` (finished late, expired in queue, or
+    /// shed after expiry).
+    pub deadline_missed: u64,
+    pub cancelled: u64,
+    pub rejected: u64,
+    /// Of the terminal requests that carried a deadline, how many hit
+    /// it.
+    pub deadline_hits: u64,
+    pub deadline_total: u64,
+}
+
+impl TenantCounts {
+    /// Fraction of deadline-carrying terminal requests that hit their
+    /// deadline (NaN when none carried one). Cancels are excluded from
+    /// the denominator (user-initiated, not a serving failure);
+    /// rejections with a deadline count as misses.
+    pub fn deadline_hit_rate(&self) -> f64 {
+        self.deadline_hits as f64 / self.deadline_total as f64
+    }
+
+    /// Book one terminal outcome — the single home of the ledger's
+    /// outcome and hit-rate-denominator rules (used by engine-level
+    /// `Metrics::note_terminal` and the fleet's ingress-terminal
+    /// merge).
+    pub fn book(&mut self, outcome: Outcome, had_deadline: bool) {
+        let hd = had_deadline as u64;
+        match outcome {
+            Outcome::Done => {
+                self.finished += 1;
+                self.deadline_total += hd;
+                self.deadline_hits += hd;
+            }
+            Outcome::DeadlineMissed => {
+                self.deadline_missed += 1;
+                self.deadline_total += hd;
+            }
+            Outcome::Cancelled => self.cancelled += 1,
+            Outcome::Rejected => {
+                self.rejected += 1;
+                self.deadline_total += hd;
+            }
+        }
+    }
+
+    pub fn merge(&mut self, o: &TenantCounts) {
+        self.submitted += o.submitted;
+        self.finished += o.finished;
+        self.deadline_missed += o.deadline_missed;
+        self.cancelled += o.cancelled;
+        self.rejected += o.rejected;
+        self.deadline_hits += o.deadline_hits;
+        self.deadline_total += o.deadline_total;
+    }
+}
+
 #[derive(Default)]
 pub struct Metrics {
     pub completed: Vec<RequestRecord>,
@@ -50,6 +123,11 @@ pub struct Metrics {
     /// pressure (they restart from their prompt). Parked-for-migration
     /// victims are NOT counted here — migration is what avoids these.
     pub evictions: u64,
+    /// Requests reclaimed through the lifecycle API's `cancel`.
+    pub cancelled: u64,
+    /// Terminal `DeadlineMissed` outcomes (late finishes + expired work
+    /// shed or purged).
+    pub deadline_missed: u64,
     pub decode_steps: u64,
     pub prefills: u64,
     pub tokens_generated: u64,
@@ -59,20 +137,76 @@ pub struct Metrics {
     /// `ServeReport::wall`).
     pub controller_secs: f64,
     pub exec_secs: f64,
+    /// Per-tenant outcome ledger (deterministic name order).
+    pub tenants: BTreeMap<Tenant, TenantCounts>,
+    /// Terminal outcome per request id — the lifecycle API's lookup.
+    outcomes: HashMap<u64, Outcome>,
 }
 
 impl Metrics {
+    /// Terminal outcome of a request this engine finished, if any.
+    pub fn outcome(&self, id: u64) -> Option<Outcome> {
+        self.outcomes.get(&id).copied()
+    }
+
+    /// Book a submission (the `submit` entry point calls this once per
+    /// request, at the engine it is first dispatched to).
+    pub fn note_submitted(&mut self, req: &SubmitRequest) {
+        self.tenants.entry(req.tenant.clone()).or_default().submitted +=
+            1;
+    }
+
+    /// Book a terminal outcome: the lifecycle map plus the per-tenant
+    /// ledger. Deadline totals count every terminal request that
+    /// carried a deadline except cancels (user-initiated, not a
+    /// serving failure); only `Done` ones count as hits — a rejected
+    /// SLO-carrying request is a miss, not a statistical
+    /// disappearance.
+    pub fn note_terminal(&mut self, req: &SubmitRequest,
+                         outcome: Outcome) {
+        self.outcomes.insert(req.id, outcome);
+        match outcome {
+            Outcome::DeadlineMissed => self.deadline_missed += 1,
+            Outcome::Cancelled => self.cancelled += 1,
+            _ => {}
+        }
+        self.tenants
+            .entry(req.tenant.clone())
+            .or_default()
+            .book(outcome, req.slo_deadline.is_some());
+    }
+
     pub fn report(&self, wall_secs: f64) -> ServeReport {
         let lats: Vec<f64> =
             self.completed.iter().map(|r| r.latency()).collect();
         let ttfts: Vec<f64> =
             self.completed.iter().map(|r| r.ttft()).collect();
+        let tenants = self
+            .tenants
+            .iter()
+            .map(|(name, c)| {
+                let tt: Vec<f64> = self
+                    .completed
+                    .iter()
+                    .filter(|r| r.tenant == *name)
+                    .map(|r| r.ttft())
+                    .collect();
+                TenantReport {
+                    tenant: name.to_string(),
+                    counts: *c,
+                    p50_ttft: percentile(&tt, 50.0),
+                    p99_ttft: percentile(&tt, 99.0),
+                }
+            })
+            .collect();
         ServeReport {
             completed: self.completed.len(),
             oom_events: self.oom_events,
             absorbed_spikes: self.absorbed_spikes,
             rejected: self.rejected,
             evictions: self.evictions,
+            cancelled: self.cancelled,
+            deadline_missed: self.deadline_missed,
             decode_steps: self.decode_steps,
             prefills: self.prefills,
             tokens_generated: self.tokens_generated,
@@ -88,6 +222,7 @@ impl Metrics {
             throughput_tps: self.tokens_generated as f64 / wall_secs,
             wall: WallClockStats { controller_secs: self.controller_secs },
             exec_secs: self.exec_secs,
+            tenants,
         }
     }
 }
@@ -105,6 +240,22 @@ pub struct WallClockStats {
     pub controller_secs: f64,
 }
 
+/// One tenant's section of a [`ServeReport`].
+#[derive(Clone, Debug)]
+pub struct TenantReport {
+    pub tenant: String,
+    pub counts: TenantCounts,
+    pub p50_ttft: f64,
+    pub p99_ttft: f64,
+}
+
+impl TenantReport {
+    /// See [`TenantCounts::deadline_hit_rate`].
+    pub fn deadline_hit_rate(&self) -> f64 {
+        self.counts.deadline_hit_rate()
+    }
+}
+
 /// Aggregated serving results.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -117,6 +268,10 @@ pub struct ServeReport {
     pub rejected: u64,
     /// Local evict-and-requeue events (see `Metrics::evictions`).
     pub evictions: u64,
+    /// Requests reclaimed via the lifecycle API.
+    pub cancelled: u64,
+    /// Terminal `DeadlineMissed` outcomes.
+    pub deadline_missed: u64,
     pub decode_steps: u64,
     pub prefills: u64,
     pub tokens_generated: u64,
@@ -135,6 +290,9 @@ pub struct ServeReport {
     /// Modeled (sim backend) or measured (PJRT) compute seconds. On the
     /// sim backend this is deterministic per seed.
     pub exec_secs: f64,
+    /// Per-tenant sections, sorted by tenant name. A default-tenancy
+    /// run has exactly one ("default").
+    pub tenants: Vec<TenantReport>,
 }
 
 impl ServeReport {
@@ -143,6 +301,8 @@ impl ServeReport {
         println!("   completed        {:>10}", self.completed);
         println!("   rejected         {:>10}", self.rejected);
         println!("   evictions        {:>10}", self.evictions);
+        println!("   cancelled        {:>10}", self.cancelled);
+        println!("   deadline missed  {:>10}", self.deadline_missed);
         println!("   OOM events       {:>10}", self.oom_events);
         println!("   absorbed spikes  {:>10}", self.absorbed_spikes);
         println!("   prefills         {:>10}", self.prefills);
@@ -159,25 +319,66 @@ impl ServeReport {
                  self.throughput_rps, self.throughput_tps);
         println!("   controller time  {:>9.3}s   exec time {:>9.3}s",
                  self.wall.controller_secs, self.exec_secs);
+        self.print_tenants();
+    }
+
+    /// The per-tenant table, printed only when there is tenancy worth
+    /// showing (more than one tenant, or any SLO in play).
+    pub fn print_tenants(&self) {
+        let interesting = self.tenants.len() > 1
+            || self.tenants.iter().any(|t| t.counts.deadline_total > 0);
+        if !interesting {
+            return;
+        }
+        println!("   {:<14} {:>9} {:>8} {:>8} {:>8} {:>8} {:>9} {:>9}",
+                 "tenant", "submitted", "done", "missed", "cancel",
+                 "reject", "hit-rate", "p99 ttft");
+        for t in &self.tenants {
+            let hr = if t.counts.deadline_total > 0 {
+                format!("{:>8.1}%", 100.0 * t.deadline_hit_rate())
+            } else {
+                "       —".to_string()
+            };
+            let p99 = if t.p99_ttft.is_finite() {
+                format!("{:>8.3}s", t.p99_ttft)
+            } else {
+                "       —".to_string()
+            };
+            println!("   {:<14} {:>9} {:>8} {:>8} {:>8} {:>8} {} {}",
+                     t.tenant, t.counts.submitted, t.counts.finished,
+                     t.counts.deadline_missed, t.counts.cancelled,
+                     t.counts.rejected, hr, p99);
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{tenant, Outcome, SubmitRequest};
+
+    fn record(id: u64, tenant_name: &str, arrival: f64)
+              -> RequestRecord {
+        RequestRecord {
+            id,
+            tenant: tenant(tenant_name),
+            priority: PriorityClass::Normal,
+            deadline: None,
+            arrival,
+            first_token_at: arrival + 0.5,
+            finished_at: arrival + 1.0,
+            prompt_len: 8,
+            gen_len: 4,
+        }
+    }
 
     #[test]
     fn latency_accounting() {
         let mut m = Metrics::default();
         for i in 0..10 {
-            m.completed.push(RequestRecord {
-                id: i,
-                arrival: i as f64,
-                first_token_at: i as f64 + 0.5,
-                finished_at: i as f64 + 1.0 + i as f64 * 0.1,
-                prompt_len: 8,
-                gen_len: 4,
-            });
+            let mut r = record(i, "default", i as f64);
+            r.finished_at = i as f64 + 1.0 + i as f64 * 0.1;
+            m.completed.push(r);
             m.tokens_generated += 4;
         }
         let r = m.report(10.0);
@@ -189,5 +390,66 @@ mod tests {
         assert!((r.mean_ttft - 0.5).abs() < 1e-9);
         assert!((r.p50_ttft - 0.5).abs() < 1e-9);
         assert!(r.p99_ttft >= r.p50_ttft);
+    }
+
+    #[test]
+    fn tenant_ledger_tracks_outcomes_and_hit_rate() {
+        let mut m = Metrics::default();
+        let hit = SubmitRequest::new(8, 4)
+            .with_id(1)
+            .with_tenant("a")
+            .with_deadline(10.0);
+        let miss = SubmitRequest::new(8, 4)
+            .with_id(2)
+            .with_tenant("a")
+            .with_deadline(1.0);
+        let free = SubmitRequest::new(8, 4).with_id(3).with_tenant("b");
+        for r in [&hit, &miss, &free] {
+            m.note_submitted(r);
+        }
+        m.note_terminal(&hit, Outcome::Done);
+        m.note_terminal(&miss, Outcome::DeadlineMissed);
+        m.note_terminal(&free, Outcome::Cancelled);
+        assert_eq!(m.outcome(1), Some(Outcome::Done));
+        assert_eq!(m.outcome(2), Some(Outcome::DeadlineMissed));
+        assert_eq!(m.outcome(3), Some(Outcome::Cancelled));
+        assert_eq!(m.outcome(99), None);
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(m.deadline_missed, 1);
+        m.completed.push(record(1, "a", 0.0));
+        let rep = m.report(1.0);
+        assert_eq!(rep.tenants.len(), 2);
+        let a = &rep.tenants[0];
+        assert_eq!(a.tenant, "a");
+        assert_eq!(a.counts.submitted, 2);
+        assert_eq!(a.counts.finished, 1);
+        assert_eq!(a.counts.deadline_missed, 1);
+        assert_eq!(a.counts.deadline_total, 2);
+        assert_eq!(a.counts.deadline_hits, 1);
+        assert!((a.deadline_hit_rate() - 0.5).abs() < 1e-12);
+        let b = &rep.tenants[1];
+        assert_eq!(b.tenant, "b");
+        assert_eq!(b.counts.cancelled, 1);
+        // tenants without a deadline never divide by zero into a panic
+        assert!(b.deadline_hit_rate().is_nan());
+    }
+
+    #[test]
+    fn tenant_counts_merge() {
+        let mut a = TenantCounts { submitted: 2, finished: 1,
+                                   deadline_missed: 1, cancelled: 0,
+                                   rejected: 0, deadline_hits: 1,
+                                   deadline_total: 2 };
+        let b = TenantCounts { submitted: 3, finished: 3,
+                               deadline_missed: 0, cancelled: 1,
+                               rejected: 1, deadline_hits: 2,
+                               deadline_total: 2 };
+        a.merge(&b);
+        assert_eq!(a.submitted, 5);
+        assert_eq!(a.finished, 4);
+        assert_eq!(a.deadline_hits, 3);
+        assert_eq!(a.deadline_total, 4);
+        assert_eq!(a.cancelled, 1);
+        assert_eq!(a.rejected, 1);
     }
 }

@@ -11,7 +11,11 @@
 
 use crate::util::rng::Rng;
 
-/// One inference request as the router sees it.
+/// One trace event: an arrival with sampled lengths. This is *not* the
+/// serving stack's request type any more — engines and fleets consume
+/// `crate::api::SubmitRequest` (tenant, priority class, SLO deadline),
+/// and a trace enters serving only through the `api::from_trace`
+/// adapter, which wraps each event in default tenancy.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,

@@ -338,3 +338,89 @@ fn fleet_report_json_excludes_wall_clock_fields() {
                  determinism-compared JSON");
     }
 }
+
+/// Satellite (ISSUE 5): a spawned replica charges a warm-up cost — it
+/// stays `Warming` for `warmup_secs` of sim time before accepting
+/// routes — regression-tested on the ramp-up trace. Warm-up must delay
+/// a spawn's first route without stranding any work.
+#[test]
+fn spawned_replicas_charge_warmup_before_serving() {
+    const WARMUP: f64 = 8.0;
+    let cfg = FleetConfig { warmup_secs: WARMUP, ..autoscale_cfg(2, 6) };
+    let mut fleet = uniform_sim_fleet(2, 17, RouterPolicy::LeastOutstanding,
+                                      cfg, slow_quiet_spec());
+    let reqs = ramp_up_trace(17, 120.0);
+    let n = reqs.len();
+    let report = fleet.run_trace(reqs).unwrap();
+    assert!(report.spawns >= 1,
+            "the 12× ramp must still scale up under warm-up: {report:?}");
+    // every spawned replica's first route came at least warmup_secs
+    // after its spawn
+    let mut checked = 0;
+    for r in fleet.replicas.iter().filter(|r| r.spawned_at.is_some()) {
+        let spawned = r.spawned_at.unwrap();
+        if let Some(first) = r.first_routed_at {
+            assert!(first >= spawned + WARMUP - 1e-9,
+                    "replica {} routed at {first:.2}s after spawning at \
+                     {spawned:.2}s (warm-up {WARMUP}s skipped)", r.id);
+            checked += 1;
+        }
+    }
+    assert!(checked >= 1, "no spawned replica was ever routed to");
+    // warm-up delays capacity; it must not lose any of it
+    assert_eq!(report.completed, n);
+    assert_eq!(report.oom_events, 0);
+    assert_eq!(report.evictions, 0);
+}
+
+/// Satellite (ISSUE 5): migration ships (and charges) only the live
+/// `prompt + generated` KV slice, not the prefill-bucket-padded cache.
+/// On the PR-3 burst-storm seed the charged bytes must be strictly
+/// below what the padded accounting would have charged.
+#[test]
+fn migration_charges_live_slice_not_padded_cache() {
+    let seed = 7; // the PR-3 acceptance seed: real mid-decode migrations
+    let reqs = elastic_demo_trace(seed);
+    let mut fleet = elastic_demo_fleet(seed, true);
+    let report = fleet.run_trace(reqs).unwrap();
+    assert!(report.migrations >= 1, "nothing migrated: {report:?}");
+    assert!(report.migration_bytes > 0);
+    assert_eq!(report.migration_bytes, fleet.migration_bytes);
+    assert!(fleet.migration_bytes < fleet.migration_bytes_padded,
+            "live-slice charging must strictly undercut the padded \
+             cache: {} vs {}", fleet.migration_bytes,
+            fleet.migration_bytes_padded);
+}
+
+/// Satellite (ISSUE 5, the PR-4 follow-up): `absorbed_spikes` feeds the
+/// autoscaler as an early-warning signal behind
+/// `AutoscaleConfig::scale_on_absorption`. Off (the default), the
+/// absorbable-spike scenario keeps its zero-spawn contract; armed, the
+/// same seeded absorption run scales up *before* any true OOM exists.
+#[test]
+fn sustained_absorption_scales_up_only_when_armed() {
+    let seed = 13;
+    let reqs = absorbable_spike_trace(seed);
+    // default: absorption is invisible to the scaler (PR-4 contract)
+    let mut off = absorbable_spike_fleet(seed, true);
+    let off_report = off.run_trace(reqs.clone()).unwrap();
+    assert!(off_report.absorbed_spikes >= 1,
+            "the wall was never absorbed: {off_report:?}");
+    assert_eq!(off_report.spawns, 0);
+    assert_eq!(off_report.oom_events, 0);
+    // armed: the identical run treats sustained absorption as pressure
+    let base = absorbable_spike_fleet(seed, true);
+    let armed_cfg = AutoscaleConfig {
+        scale_on_absorption: true,
+        high_absorbed_spikes: 1,
+        ..base.cfg.autoscale.unwrap()
+    };
+    let mut armed = base.with_autoscale(armed_cfg);
+    let armed_report = armed.run_trace(reqs).unwrap();
+    assert!(armed_report.absorbed_spikes >= 1);
+    assert!(armed_report.spawns >= 1,
+            "sustained absorption never triggered the early warning: \
+             {armed_report:?}");
+    // the warning fires instead of, not because of, true OOMs
+    assert_eq!(armed_report.oom_events, 0);
+}

@@ -4,6 +4,7 @@
 //! property, seeded and reproducible — shrinkage is replaced by printing
 //! the failing case's seed.
 
+use rap::api::SubmitRequest;
 use rap::coordinator::fleet::{default_sim_meta, uniform_sim_fleet,
                               FleetConfig};
 use rap::coordinator::replica::{build_sim_replica, Replica, ReplicaSpec,
@@ -158,9 +159,11 @@ fn prop_batcher_fcfs_and_caps() {
         let mut b = Batcher::new();
         let n = rng.range(1, 30);
         for id in 0..n as u64 {
-            b.enqueue(Request { id, arrival: id as f64,
-                                prompt_len: rng.range(2, 120),
-                                gen_len: rng.range(2, 60) });
+            // uniform priority: the queue must stay exactly FCFS
+            b.enqueue(SubmitRequest::new(rng.range(2, 120),
+                                         rng.range(2, 60))
+                .with_id(id)
+                .with_arrival(id as f64));
         }
         let mut last = None;
         let mut admitted = 0;
@@ -284,13 +287,14 @@ fn prop_router_only_picks_accepting_replicas() {
         let mut rng = Rng::new(seed);
         let n = rng.range(1, 6);
         let reps = random_fleet_replicas(&mut rng, n, seed);
-        let policy = RouterPolicy::ALL[rng.below(4)];
+        let policy = RouterPolicy::ALL[rng.below(RouterPolicy::ALL.len())];
         let mut router = Router::new(policy, n);
         let t = rng.f64() * 50.0;
         for k in 0..16u64 {
-            let req = Request { id: 1000 + k, arrival: t,
-                                prompt_len: rng.range(2, 120),
-                                gen_len: rng.range(2, 48) };
+            let req = SubmitRequest::new(rng.range(2, 120),
+                                         rng.range(2, 48))
+                .with_id(1000 + k)
+                .with_arrival(t);
             match router.route(&req, &reps, t) {
                 Some(i) => assert!(
                     reps[i].accepting(),
@@ -319,8 +323,7 @@ fn prop_kv_headroom_router_maximizes_elastic_headroom() {
         let reps = random_fleet_replicas(&mut rng, n, seed);
         let mut router = Router::new(RouterPolicy::KvHeadroom, n);
         let t = rng.f64() * 50.0;
-        let req = Request { id: 1, arrival: t, prompt_len: 16,
-                            gen_len: 8 };
+        let req = SubmitRequest::new(16, 8).with_id(1).with_arrival(t);
         if let Some(pick) = router.route(&req, &reps, t) {
             let picked = reps[pick].elastic_headroom(t);
             for (i, r) in reps.iter().enumerate() {
@@ -358,9 +361,10 @@ fn prop_rap_router_never_prefers_infeasible() {
             }
         }
         let t = rng.f64() * 50.0;
-        let req = Request { id: 1, arrival: t,
-                            prompt_len: rng.range(2, 120),
-                            gen_len: rng.range(2, 48) };
+        let req = SubmitRequest::new(rng.range(2, 120),
+                                     rng.range(2, 48))
+            .with_id(1)
+            .with_arrival(t);
         let mut router = Router::new(RouterPolicy::RapAware, n);
         let Some(pick) = router.route(&req, &reps, t) else {
             continue;

@@ -202,6 +202,14 @@ impl SubmitRequest {
     pub fn deadline_hit(&self, at: f64) -> bool {
         self.slo_deadline.map_or(true, |d| at <= d)
     }
+
+    /// Ingress validity gate: a NaN or infinite arrival (a malformed
+    /// trace, a broken client clock) is rejected at the boundary with
+    /// [`Outcome::Rejected`] — it must never reach an arrival sort or
+    /// the admission loop, where non-finite times panic or wedge.
+    pub fn has_finite_arrival(&self) -> bool {
+        self.arrival.is_finite()
+    }
 }
 
 /// Opaque ticket returned by `submit`; feed it to `poll` / `cancel`.

@@ -125,6 +125,12 @@ pub struct FleetSignals {
     /// Mask-absorbed spikes inside the signal window (the early-warning
     /// signal; only consulted when `scale_on_absorption` is set).
     pub recent_absorbed: usize,
+    /// Abrupt capacity losses (replica crashes, spot reclaims) inside
+    /// the signal window. Unlike queue/TTFT pressure this is a *known*
+    /// deficit, not a noisy inference — the scaler replaces the lost
+    /// replica without waiting out `hold_secs` (the cooldown still
+    /// applies, so a cascading failure cannot spawn-storm).
+    pub capacity_losses: usize,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -190,13 +196,21 @@ impl Autoscaler {
             && !tenant_high
             && !(s.p99_ttft > self.cfg.high_p99_ttft_secs)
             && s.recent_ooms == 0
-            && !absorbed_high;
+            && !absorbed_high
+            && s.capacity_losses == 0;
         self.high_since = if high { self.high_since.or(Some(t)) }
                           else { None };
         self.low_since = if low { self.low_since.or(Some(t)) }
                          else { None };
         if t - self.last_action_at < self.cfg.cooldown_secs {
             return ScaleDecision::Hold;
+        }
+        // A crash or reclaim is a step change in capacity, not a signal
+        // to be smoothed: replace immediately (bypassing the hold — the
+        // hold exists to filter noise, and this is not noise), bounded
+        // by max_replicas and the cooldown above.
+        if s.capacity_losses > 0 && s.serving < self.cfg.max_replicas {
+            return ScaleDecision::Up;
         }
         if high
             && s.serving < self.cfg.max_replicas
@@ -241,7 +255,7 @@ mod tests {
         FleetSignals { serving, outstanding,
                        max_tenant_outstanding: outstanding,
                        p99_ttft: f64::NAN, recent_ooms: 0,
-                       recent_absorbed: 0 }
+                       recent_absorbed: 0, capacity_losses: 0 }
     }
 
     fn overloaded(serving: usize) -> FleetSignals {
@@ -342,7 +356,7 @@ mod tests {
         let s = FleetSignals { serving: 2, outstanding: 12,
                                max_tenant_outstanding: 48,
                                p99_ttft: f64::NAN, recent_ooms: 0,
-                               recent_absorbed: 0 };
+                               recent_absorbed: 0, capacity_losses: 0 };
         armed.decide(0.0, &s);
         armed.decide(1.0, &s);
         armed.decide(2.0, &s);
@@ -351,6 +365,35 @@ mod tests {
         let mut unarmed = Autoscaler::new(cfg());
         for t in 0..10 {
             assert_eq!(unarmed.decide(t as f64, &s), ScaleDecision::Hold);
+        }
+    }
+
+    /// A capacity loss (crash / spot reclaim) replaces the lost replica
+    /// on the very first evaluation — no hold — but the cooldown still
+    /// bounds the spawn rate, and an idle window with a loss never
+    /// scales down.
+    #[test]
+    fn capacity_loss_bypasses_hold_but_not_cooldown() {
+        let mut a = Autoscaler::new(cfg());
+        let lost = FleetSignals { capacity_losses: 1,
+                                  ..idle_signals(2) };
+        // immediate — queue/TTFT pressure would need 3 s of hold
+        assert_eq!(a.decide(0.0, &lost), ScaleDecision::Up);
+        a.note_action(0.0);
+        // cooling down: a second loss in the window must wait
+        assert_eq!(a.decide(1.0, &lost), ScaleDecision::Hold);
+        // at max_replicas the loss cannot spawn
+        let mut b = Autoscaler::new(cfg());
+        let at_max = FleetSignals { capacity_losses: 1,
+                                    ..idle_signals(4) };
+        assert_eq!(b.decide(0.0, &at_max), ScaleDecision::Hold);
+        // and a loss in the window vetoes scale-down even when idle
+        let mut c = Autoscaler::new(cfg());
+        let calm_loss = FleetSignals { capacity_losses: 1,
+                                       ..idle_signals(4) };
+        for t in 0..8 {
+            assert_eq!(c.decide(t as f64, &calm_loss),
+                       ScaleDecision::Hold, "scaled down past a loss");
         }
     }
 

@@ -46,19 +46,35 @@
 //! rebalancing, no migration, and — because the engine charges it to
 //! `absorbed_spikes` instead of `oom_events` — no OOM-driven
 //! autoscaling. The `absorbable_spike_fleet` scenario pins this down.
+//!
+//! Failure model (`Fleet::with_fault_plan`): a seeded, deterministic
+//! [`FaultPlan`] can crash replicas (all resident KV lost), degrade or
+//! fully partition the interconnect, and reclaim spot capacity with a
+//! grace window. Engines checkpoint live KV deltas periodically
+//! (`FleetConfig::checkpoint_period_secs`); on a crash, checkpointed
+//! sequences restore onto peers, uncheckpointed in-flight work re-enters
+//! admission at the head of its priority class, and every displaced
+//! request keeps a full `Outcome` lifecycle — never silently dropped,
+//! never double-completed. Deliveries that hit a partition retry with
+//! bounded backoff, then fall back to a local requeue. The autoscaler
+//! sees crashes and reclaims as a distinct capacity-loss signal that
+//! bypasses its hold (but not its cooldown). The `chaos_storm_fleet`
+//! scenario pins the whole path down.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
 use anyhow::Result;
 
 use super::autoscaler::{Autoscaler, FleetSignals, ScaleDecision};
-use super::metrics::{FleetReport, FleetTenantReport, ReplicaReport};
+use super::metrics::{ChaosReport, FleetReport, FleetTenantReport,
+                     ReplicaReport};
 use super::replica::{build_sim_replica, Replica, ReplicaSpec,
                      ReplicaState};
 use super::router::{Router, RouterPolicy};
 use crate::api::{self, Outcome, PriorityClass, RequestHandle,
                  RequestStatus, SubmitRequest, Tenant, TenantQuotas};
 use crate::model_meta::ModelMeta;
+use crate::runtime::{FaultEvent, FaultPlan};
 use crate::server::engine::{EvictionMode, SeqState};
 use crate::server::metrics::TenantCounts;
 use crate::util::stats::{mean, percentile};
@@ -98,6 +114,13 @@ pub struct FleetConfig {
     /// reproduces the pre-outlook (current-mask) behavior for
     /// comparison runs.
     pub elastic_accounting: bool,
+    /// Periodic crash-recovery checkpointing on every replica engine
+    /// (`EngineConfig::checkpoint_period_secs`): each period an engine
+    /// snapshots the live-KV *delta* of its active sequences into
+    /// portable `SeqState`s, paying the modeled interconnect cost — and
+    /// a crashed replica then restores that work onto peers instead of
+    /// losing it. `None` (the default) runs checkpoint-free.
+    pub checkpoint_period_secs: Option<f64>,
 }
 
 impl FleetConfig {
@@ -123,9 +146,16 @@ impl Default for FleetConfig {
             autoscale: None,
             warmup_secs: 0.0,
             elastic_accounting: true,
+            checkpoint_period_secs: None,
         }
     }
 }
+
+/// Deliveries that hit a full interconnect partition retry this many
+/// times (backing off `RETRY_BACKOFF_SECS` × attempt) before the move
+/// is abandoned and the sequence requeues at its source.
+const MAX_TRANSFER_RETRIES: u32 = 3;
+const RETRY_BACKOFF_SECS: f64 = 0.5;
 
 /// One sequence state in flight between replicas.
 struct Transfer {
@@ -134,6 +164,13 @@ struct Transfer {
     dest: usize,
     /// Sim time the payload lands (dispatch + modeled transfer cost).
     arrive_at: f64,
+    /// Delivery attempts burned against `MAX_TRANSFER_RETRIES` (bumped
+    /// each time a partition blocks the landing).
+    attempts: u32,
+    /// A crash-recovery restore rather than a migration: lands in the
+    /// restore counters, and falling back to a local requeue loses the
+    /// checkpointed progress (`seq_lost`).
+    is_restore: bool,
 }
 
 /// A terminal outcome decided at the fleet ingress itself (dropped at
@@ -189,6 +226,36 @@ pub struct Fleet {
     /// Outcome per request id for ingress-terminal requests (the
     /// lifecycle API's lookup for ids no replica ever saw).
     ingress_outcomes: HashMap<u64, Outcome>,
+    /// Backlog heads skipped because their queue vanished between
+    /// scoring and dispatch (defensive — see `dispatch_ingress`).
+    pub ingress_skipped: u64,
+    /// The injected failure schedule (empty unless
+    /// [`Fleet::with_fault_plan`] installed one) and the cursor of the
+    /// next unfired event.
+    fault_plan: FaultPlan,
+    next_fault: usize,
+    /// Reclaimed replicas racing their grace window: (index, doom
+    /// deadline). Swept every step; a replica still live past its
+    /// deadline crashes with whatever it failed to drain.
+    doomed: Vec<(usize, f64)>,
+    /// Chaos ledger (see [`ChaosReport`]).
+    pub failures_injected: u64,
+    pub crashes: u64,
+    pub reclaims: u64,
+    /// Sequences whose decode progress was destroyed: uncheckpointed
+    /// actives on a crashed replica, plus restores that could not land.
+    pub seq_lost: u64,
+    /// Checkpointed sequences successfully restored onto a peer.
+    pub seq_restored: u64,
+    pub transfer_retries: u64,
+    pub transfer_failures: u64,
+    /// Sim times of abrupt capacity losses (crash / reclaim) — the
+    /// autoscaler's replace-immediately signal, trimmed to its window.
+    capacity_loss_marks: Vec<f64>,
+    /// Every request a fault displaced, and whether it carried an SLO —
+    /// keys the recovery-latency and chaos hit-rate report (BTreeMap so
+    /// report iteration is deterministic).
+    chaos_ids: BTreeMap<u64, bool>,
 }
 
 impl Fleet {
@@ -199,6 +266,8 @@ impl Fleet {
         for r in &mut replicas {
             r.engine.cfg.eviction = cfg.eviction_mode();
             r.engine.cfg.elastic_accounting = cfg.elastic_accounting;
+            r.engine.cfg.checkpoint_period_secs =
+                cfg.checkpoint_period_secs;
         }
         Fleet {
             autoscaler: cfg.autoscale.map(Autoscaler::new),
@@ -218,7 +287,43 @@ impl Fleet {
             tenant_peak: BTreeMap::new(),
             ingress_terminal: Vec::new(),
             ingress_outcomes: HashMap::new(),
+            ingress_skipped: 0,
+            fault_plan: FaultPlan::default(),
+            next_fault: 0,
+            doomed: Vec::new(),
+            failures_injected: 0,
+            crashes: 0,
+            reclaims: 0,
+            seq_lost: 0,
+            seq_restored: 0,
+            transfer_retries: 0,
+            transfer_failures: 0,
+            capacity_loss_marks: Vec::new(),
+            chaos_ids: BTreeMap::new(),
         }
+    }
+
+    /// Install a failure schedule. Crash and reclaim events fire as the
+    /// shared clock passes them; degradation and partition windows are
+    /// consulted lazily when transfers are priced and delivered; any
+    /// pressure cliffs are folded into replica 0's memory monitor here
+    /// (interference is a per-device phenomenon, and the plan's
+    /// pressure events name no replica).
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Fleet {
+        use crate::server::memmon::MemoryMonitor;
+
+        let has_pressure = plan
+            .events
+            .iter()
+            .any(|e| matches!(e, FaultEvent::Pressure { .. }));
+        if has_pressure && !self.replicas.is_empty() {
+            let cap = self.replicas[0].engine.monitor.cfg.capacity;
+            self.replicas[0].engine.monitor =
+                MemoryMonitor::with_faults(cap, &plan);
+        }
+        self.fault_plan = plan;
+        self.next_fault = 0;
+        self
     }
 
     /// Install a replica factory so autoscale-up can add capacity. The
@@ -252,6 +357,7 @@ impl Fleet {
     /// tenant-fair ingress drain (capacity freed by completions admits
     /// backlogged tenants).
     fn step_all(&mut self, t: f64) -> Result<()> {
+        self.apply_faults(t)?;
         if self.cfg.migrate {
             self.rebalance_queued(t);
         }
@@ -351,7 +457,9 @@ impl Fleet {
         let mut from_backlog: Option<SubmitRequest> = None;
         for q in self.backlog.values_mut() {
             if let Some(i) = q.iter().position(|r| r.id == h.id) {
-                from_backlog = Some(q.remove(i).unwrap());
+                // the position is fresh, but degrade rather than panic
+                // if the slot is somehow gone
+                from_backlog = q.remove(i);
                 break;
             }
         }
@@ -474,8 +582,18 @@ impl Fleet {
             let Some((_, name, dest, cost)) = pick else {
                 break; // every backlogged tenant is at its cap
             };
-            let req =
-                self.backlog.get_mut(&name).unwrap().pop_front().unwrap();
+            // The scored head should still be there — but if the queue
+            // vanished between scoring and dispatch, skip the pick and
+            // rescore rather than bring the whole fleet down.
+            let Some(req) = self
+                .backlog
+                .get_mut(&name)
+                .and_then(|q| q.pop_front())
+            else {
+                self.ingress_skipped += 1;
+                self.backlog.remove(&name);
+                continue;
+            };
             let used =
                 usage.entry(name.clone()).or_insert(0);
             *used += cost;
@@ -486,6 +604,205 @@ impl Fleet {
             self.router.decisions[dest] += 1;
             self.replicas[dest].submit(req, t);
         }
+    }
+
+    // ---- failure injection & recovery ---------------------------------
+
+    /// Fire every scheduled fault whose start time the clock has
+    /// passed, then sweep reclaim grace deadlines. Runs at the head of
+    /// `step_all`, so a fault lands *before* the replicas step over it.
+    /// Degrade / Partition windows need no action here — the
+    /// interconnect model (`link_transfer_cost`, `deliver_transfers`)
+    /// consults the plan lazily — and Pressure cliffs were folded into
+    /// the memory monitor by [`Fleet::with_fault_plan`].
+    fn apply_faults(&mut self, t: f64) -> Result<()> {
+        while self.next_fault < self.fault_plan.events.len()
+            && self.fault_plan.events[self.next_fault].start() <= t
+        {
+            let ev = self.fault_plan.events[self.next_fault];
+            self.next_fault += 1;
+            self.failures_injected += 1;
+            match ev {
+                FaultEvent::Crash { replica, .. } => {
+                    self.crash_replica(replica, t);
+                }
+                FaultEvent::Reclaim { at, replica, grace_secs } => {
+                    self.reclaim_replica(replica, at + grace_secs, t)?;
+                }
+                FaultEvent::Degrade { .. }
+                | FaultEvent::Partition { .. }
+                | FaultEvent::Pressure { .. } => {}
+            }
+        }
+        let doomed = std::mem::take(&mut self.doomed);
+        for (i, deadline) in doomed {
+            if t >= deadline {
+                // grace expired with work still on board: the reclaim
+                // becomes a crash (crash_replica no-ops if the drain
+                // finished and the replica already retired)
+                self.crash_replica(i, t);
+            } else {
+                self.doomed.push((i, deadline));
+            }
+        }
+        Ok(())
+    }
+
+    /// Abrupt loss of one replica: every resident KV byte, queue slot,
+    /// and parked state is destroyed. Checkpointed sequences restore
+    /// onto peers, where they re-enter admission and resume mid-decode
+    /// on dispatch (losing only the tokens decoded since their last
+    /// snapshot); uncheckpointed in-flight work re-enters admission at
+    /// the head of its priority class on the least-loaded peer (its
+    /// decode progress is gone, but the request is never silently
+    /// dropped); queued work requeues normally. With no accepting peer
+    /// left the displaced requests are booked `Rejected` — terminal and
+    /// visible, never a double completion.
+    fn crash_replica(&mut self, idx: usize, t: f64) {
+        if idx >= self.replicas.len() || !self.replicas[idx].live() {
+            return;
+        }
+        self.crashes += 1;
+        self.replicas[idx].crashes += 1;
+        self.replicas[idx].state = ReplicaState::Failed;
+        self.capacity_loss_marks.push(t);
+        let (ckpts, lost, queued) =
+            self.replicas[idx].engine.crash_dump();
+        for state in ckpts {
+            let req = state.request();
+            self.chaos_ids.insert(req.id, req.slo_deadline.is_some());
+            self.send_restore(idx, state, t);
+        }
+        for req in lost {
+            self.chaos_ids.insert(req.id, req.slo_deadline.is_some());
+            self.seq_lost += 1;
+            match self.least_loaded_peer(idx) {
+                Some(peer) => self.replicas[peer]
+                    .engine
+                    .batcher
+                    .requeue_front(req),
+                None => self.reject_displaced(idx, &req),
+            }
+        }
+        for req in queued {
+            self.chaos_ids.insert(req.id, req.slo_deadline.is_some());
+            match self.least_loaded_peer(idx) {
+                Some(peer) => {
+                    self.replicas[peer].engine.batcher.enqueue(req);
+                }
+                None => self.reject_displaced(idx, &req),
+            }
+        }
+    }
+
+    /// Spot reclaim with a grace window: the replica stops accepting
+    /// routes and immediately evacuates everything it holds — queued
+    /// work and exported in-flight sequences ship to peers over the
+    /// interconnect — then retires cleanly once drained (`maintain`
+    /// sees `retiring`). If the grace deadline passes first, whatever
+    /// is left crashes with it (the doom sweep in `apply_faults`).
+    fn reclaim_replica(&mut self, idx: usize, deadline: f64, t: f64)
+                       -> Result<()> {
+        if idx >= self.replicas.len()
+            || !self.replicas[idx].live()
+            || self.replicas[idx].retiring
+        {
+            return Ok(());
+        }
+        self.reclaims += 1;
+        self.capacity_loss_marks.push(t);
+        self.replicas[idx].retiring = true;
+        self.replicas[idx].state = ReplicaState::Draining;
+        self.doomed.push((idx, deadline));
+        let queued = self.replicas[idx].engine.take_waiting();
+        for req in queued {
+            self.chaos_ids.insert(req.id, req.slo_deadline.is_some());
+            // a queued request that is really an un-resumed restore
+            // evacuates as its snapshot — decode progress in hand
+            match self.replicas[idx].engine.take_resumable(req.id) {
+                Some(state) => self.send_state(idx, state, t),
+                None => self.send_state(idx, SeqState::Queued(req), t),
+            }
+        }
+        let active_ids: Vec<u64> = self.replicas[idx]
+            .engine
+            .batcher
+            .active
+            .iter()
+            .map(|s| s.req.id)
+            .collect();
+        for id in active_ids {
+            if let Some(state) =
+                self.replicas[idx].engine.export_sequence(id)?
+            {
+                let req = state.request();
+                self.chaos_ids
+                    .insert(req.id, req.slo_deadline.is_some());
+                self.send_state(idx, state, t);
+            }
+        }
+        Ok(())
+    }
+
+    /// Ship one checkpointed state off a failed replica to the best
+    /// peer over the (possibly degraded) interconnect. With no viable
+    /// peer the checkpoint is useless: the sequence's progress is lost
+    /// and the request falls back to a plain requeue.
+    fn send_restore(&mut self, src: usize, state: SeqState, t: f64) {
+        let bytes = state.transfer_bytes();
+        match self.pick_target(src, &state, t) {
+            Some(dest) => {
+                let cost = self.link_transfer_cost(src, bytes, t);
+                self.transfers.push(Transfer {
+                    state,
+                    src,
+                    dest,
+                    arrive_at: t + cost,
+                    attempts: 0,
+                    is_restore: true,
+                });
+            }
+            None => {
+                self.seq_lost += 1;
+                self.requeue_local(src, state);
+            }
+        }
+    }
+
+    /// Modeled transfer duration from `src` at `t`, scaled by any
+    /// active interconnect degradation. A full partition does not block
+    /// dispatch — the payload goes out and `deliver_transfers` retries
+    /// the landing until the partition heals or the retry budget runs
+    /// out.
+    fn link_transfer_cost(&self, src: usize, bytes: usize, t: f64)
+                          -> f64 {
+        let base = self.replicas[src].engine.rt.transfer_cost(bytes);
+        match self.fault_plan.link_factor(t) {
+            Some(f) => base * f,
+            None => base,
+        }
+    }
+
+    /// The accepting replica with the fewest outstanding requests, ties
+    /// toward the lowest index — where a crashed replica's displaced
+    /// queue re-enters admission.
+    fn least_loaded_peer(&self, src: usize) -> Option<usize> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(i, r)| *i != src && r.accepting())
+            .min_by_key(|(i, r)| (r.outstanding(), *i))
+            .map(|(i, _)| i)
+    }
+
+    /// Terminal fallback for a displaced request when no replica can
+    /// take it: booked `Rejected` on the replica that lost it, so the
+    /// lifecycle stays intact (poll sees a terminal outcome) and the
+    /// per-tenant ledger counts the miss.
+    fn reject_displaced(&mut self, src: usize, req: &SubmitRequest) {
+        let m = &mut self.replicas[src].engine.metrics;
+        m.rejected += 1;
+        m.note_terminal(req, Outcome::Rejected);
     }
 
     // ---- migration ----------------------------------------------------
@@ -515,7 +832,10 @@ impl Fleet {
             }
             let reqs = self.replicas[src].engine.take_waiting();
             for req in reqs {
-                self.send_state(src, SeqState::Queued(req), t);
+                match self.replicas[src].engine.take_resumable(req.id) {
+                    Some(state) => self.send_state(src, state, t),
+                    None => self.send_state(src, SeqState::Queued(req), t),
+                }
             }
         }
     }
@@ -565,13 +885,14 @@ impl Fleet {
         let bytes = state.transfer_bytes();
         match self.pick_target(src, &state, t) {
             Some(dest) => {
-                let cost =
-                    self.replicas[src].engine.rt.transfer_cost(bytes);
+                let cost = self.link_transfer_cost(src, bytes, t);
                 self.transfers.push(Transfer {
                     state,
                     src,
                     dest,
                     arrive_at: t + cost,
+                    attempts: 0,
+                    is_restore: false,
                 });
             }
             None => self.requeue_local(src, state),
@@ -593,6 +914,18 @@ impl Fleet {
                 .position(|r| r.accepting())
                 .unwrap_or(src)
         };
+        // Nowhere alive to requeue: the source itself failed and no
+        // peer accepts. The request must still reach a terminal state —
+        // book it rejected rather than parking it on a dead engine
+        // nothing will ever step again.
+        if !self.replicas[home].live() {
+            let req = state.request().clone();
+            if matches!(state, SeqState::Active { .. }) {
+                self.replicas[src].engine.metrics.evictions += 1;
+            }
+            self.reject_displaced(src, &req);
+            return;
+        }
         match state {
             SeqState::Queued(req) => {
                 self.replicas[home].engine.batcher.enqueue(req);
@@ -615,6 +948,29 @@ impl Fleet {
         for tr in pending {
             if tr.arrive_at > t {
                 self.transfers.push(tr);
+                continue;
+            }
+            // A partitioned interconnect fails the landing. The payload
+            // is still in hand: back off and retry a bounded number of
+            // times, then abandon the move and requeue at the source —
+            // a sequence must never spin in flight forever.
+            if self.fault_plan.link_factor(t).is_none() {
+                if tr.attempts < MAX_TRANSFER_RETRIES {
+                    self.transfer_retries += 1;
+                    let backoff = RETRY_BACKOFF_SECS
+                        * (tr.attempts + 1) as f64;
+                    self.transfers.push(Transfer {
+                        attempts: tr.attempts + 1,
+                        arrive_at: t + backoff,
+                        ..tr
+                    });
+                } else {
+                    self.transfer_failures += 1;
+                    if tr.is_restore {
+                        self.seq_lost += 1;
+                    }
+                    self.requeue_local(tr.src, tr.state);
+                }
                 continue;
             }
             if !self.replicas[tr.dest].accepting() {
@@ -640,6 +996,9 @@ impl Fleet {
                                 .engine
                                 .import_sequence(tr.state)?;
                         } else {
+                            if tr.is_restore {
+                                self.seq_lost += 1;
+                            }
                             self.requeue_local(tr.src, tr.state);
                         }
                     }
@@ -649,6 +1008,18 @@ impl Fleet {
             if self.replicas[tr.dest].engine.can_import(&tr.state) {
                 let bytes = tr.state.transfer_bytes() as u64;
                 let padded = tr.state.padded_transfer_bytes() as u64;
+                if tr.is_restore {
+                    // A crash restore is recovery, not load balancing:
+                    // it lands in its own books — and it re-enters
+                    // ADMISSION at the head of its priority class (the
+                    // snapshot held aside, KV re-attached on dispatch)
+                    // rather than seizing a decode slot ahead of
+                    // queued higher-priority work.
+                    self.replicas[tr.dest].engine.resume_import(tr.state)?;
+                    self.seq_restored += 1;
+                    self.replicas[tr.dest].restored_in += 1;
+                    continue;
+                }
                 self.replicas[tr.dest].engine.import_sequence(tr.state)?;
                 // counted on delivery (not dispatch), so abandoned
                 // moves never desynchronize the in/out/aggregate
@@ -662,7 +1033,11 @@ impl Fleet {
                 // Shape mismatch across heterogeneous models: the
                 // payload is useless there — the sequence restarts from
                 // its prompt. A lossy move is an eviction, not a
-                // migration, in the books.
+                // migration, in the books (and a lossy restore is a
+                // lost sequence).
+                if tr.is_restore {
+                    self.seq_lost += 1;
+                }
                 let req = tr.state.request().clone();
                 self.replicas[tr.src].engine.metrics.evictions += 1;
                 self.replicas[tr.dest].engine.batcher.enqueue(req);
@@ -711,7 +1086,8 @@ impl Fleet {
                 }
                 ReplicaState::Warming { .. }
                 | ReplicaState::Respawning { .. }
-                | ReplicaState::Retired => {}
+                | ReplicaState::Retired
+                | ReplicaState::Failed => {}
             }
         }
     }
@@ -747,6 +1123,7 @@ impl Fleet {
             recent_absorbed += r.absorbed_since(t0);
             r.recent_ttfts(t0, &mut ttfts);
         }
+        self.capacity_loss_marks.retain(|&m| m >= t0);
         FleetSignals {
             serving,
             outstanding,
@@ -754,6 +1131,7 @@ impl Fleet {
             p99_ttft: percentile(&ttfts, 99.0),
             recent_ooms,
             recent_absorbed,
+            capacity_losses: self.capacity_loss_marks.len(),
         }
     }
 
@@ -807,6 +1185,8 @@ impl Fleet {
         r.id = id;
         r.engine.cfg.eviction = self.cfg.eviction_mode();
         r.engine.cfg.elastic_accounting = self.cfg.elastic_accounting;
+        r.engine.cfg.checkpoint_period_secs =
+            self.cfg.checkpoint_period_secs;
         r.spawned_at = Some(t);
         if self.cfg.warmup_secs > 0.0 {
             r.state = ReplicaState::Warming {
@@ -852,9 +1232,19 @@ impl Fleet {
     /// all work has drained — in-flight transfers and ingress backlogs
     /// included — or at `max_sim_secs`. This is the native entry point;
     /// [`Fleet::run_trace`] adapts a workload trace onto it.
-    pub fn run_requests(&mut self, mut requests: Vec<SubmitRequest>)
+    pub fn run_requests(&mut self, requests: Vec<SubmitRequest>)
                         -> Result<FleetReport> {
-        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        // A non-finite arrival can neither be ordered nor served:
+        // reject it at the front door (terminal, visible in the tenant
+        // ledger) instead of letting it poison the sort.
+        let (mut requests, bad): (Vec<_>, Vec<_>) = requests
+            .into_iter()
+            .partition(|r| r.has_finite_arrival());
+        for req in bad {
+            self.note_ingress_terminal(&req, Outcome::Rejected, false);
+            self.dropped += 1;
+        }
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         // relative to where the shared clock already is, so a Fleet can
         // replay several traces back to back (mirrors Engine::run_requests)
         let deadline = self.clock + self.cfg.max_sim_secs;
@@ -920,6 +1310,9 @@ impl Fleet {
         let mut oom_events = 0u64;
         let mut absorbed_spikes = 0u64;
         let mut respawns = 0u64;
+        let mut checkpoints_taken = 0u64;
+        let mut checkpoint_bytes = 0u64;
+        let mut chaos_ttfts = Vec::new();
         let mut replicas = Vec::with_capacity(self.replicas.len());
         let mut tenant_counts: BTreeMap<Tenant, TenantCounts> =
             BTreeMap::new();
@@ -929,6 +1322,9 @@ impl Fleet {
             for rec in &r.engine.metrics.completed {
                 lats.push(rec.latency());
                 ttfts.push(rec.ttft());
+                if self.chaos_ids.contains_key(&rec.id) {
+                    chaos_ttfts.push(rec.ttft());
+                }
                 tenant_ttfts
                     .entry(rec.tenant.clone())
                     .or_default()
@@ -945,6 +1341,8 @@ impl Fleet {
             oom_events += r.engine.metrics.oom_events;
             absorbed_spikes += r.engine.metrics.absorbed_spikes;
             respawns += r.respawns;
+            checkpoints_taken += r.engine.metrics.checkpoints_taken;
+            checkpoint_bytes += r.engine.metrics.checkpoint_bytes;
             replicas.push(ReplicaReport {
                 id: r.id,
                 state: r.state.name().to_string(),
@@ -953,6 +1351,8 @@ impl Fleet {
                 respawns: r.respawns,
                 migrations_in: r.migrations_in,
                 migrations_out: r.migrations_out,
+                crashes: r.crashes,
+                restored_in: r.restored_in,
                 serve: r.engine.metrics.report(wall),
             });
         }
@@ -996,6 +1396,43 @@ impl Fleet {
                 }
             })
             .collect();
+        // Chaos recovery quality: over the SLO-carrying requests a
+        // fault displaced, how many still finished inside their
+        // deadline (cancels and still-unfinished ids don't count
+        // against the rate; NaN when no fault touched one).
+        let mut chaos_hit = 0u64;
+        let mut chaos_total = 0u64;
+        for (&id, &had_deadline) in &self.chaos_ids {
+            if !had_deadline {
+                continue;
+            }
+            match self.outcome_of(id) {
+                Some(Outcome::Done) => {
+                    chaos_hit += 1;
+                    chaos_total += 1;
+                }
+                Some(Outcome::DeadlineMissed)
+                | Some(Outcome::Rejected) => chaos_total += 1,
+                _ => {}
+            }
+        }
+        let chaos = ChaosReport {
+            failures_injected: self.failures_injected,
+            crashes: self.crashes,
+            reclaims: self.reclaims,
+            seq_lost: self.seq_lost,
+            seq_restored: self.seq_restored,
+            checkpoints_taken,
+            checkpoint_bytes,
+            transfer_retries: self.transfer_retries,
+            transfer_failures: self.transfer_failures,
+            recovery_p99_ttft: percentile(&chaos_ttfts, 99.0),
+            chaos_deadline_hit_rate: if chaos_total > 0 {
+                chaos_hit as f64 / chaos_total as f64
+            } else {
+                f64::NAN
+            },
+        };
         let routed: u64 = self.router.decisions.iter().sum();
         FleetReport {
             policy: self.router.policy.name().to_string(),
@@ -1021,9 +1458,22 @@ impl Fleet {
             p99_ttft: percentile(&ttfts, 99.0),
             throughput_rps: completed as f64 / wall,
             routing: self.router.decisions.clone(),
+            ingress_skipped: self.ingress_skipped,
+            chaos,
             tenants,
             replicas,
         }
+    }
+
+    /// Terminal outcome of `id`, wherever it was booked — the ingress
+    /// ledger first, then the replicas in index order.
+    fn outcome_of(&self, id: u64) -> Option<Outcome> {
+        if let Some(&o) = self.ingress_outcomes.get(&id) {
+            return Some(o);
+        }
+        self.replicas
+            .iter()
+            .find_map(|r| r.engine.metrics.outcome(id))
     }
 }
 
@@ -1476,7 +1926,7 @@ pub fn tenant_storm_trace(seed: u64) -> Vec<SubmitRequest> {
             .with_priority(PriorityClass::Batch)
             .with_arrival(r.arrival + 5.0));
     }
-    out.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    out.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
     for (i, r) in out.iter_mut().enumerate() {
         r.id = i as u64;
     }
@@ -1536,6 +1986,150 @@ pub fn tenant_storm_fleet(seed: u64, policy: RouterPolicy) -> Fleet {
         }
     }
     fleet
+}
+
+// ---- chaos scenario (ISSUE 6) -----------------------------------------
+
+/// Arrival window of the chaos-storm scenario (the fault plan below is
+/// laid out inside it).
+pub const CHAOS_STORM_SECS: f64 = 40.0;
+
+/// The chaos-storm latency tenant's completion SLO (seconds after
+/// arrival). Long-decode requests under a deadline a few times their
+/// service time: loose enough that an undisturbed request usually
+/// makes it, tight enough that losing a crashed request's decode
+/// progress usually costs the deadline.
+pub const CHAOS_STORM_SLO_SECS: f64 = 7.0;
+
+/// The fixed fault schedule the chaos-storm scenario injects: the
+/// interconnect degrades 3× from t = 10 and fully partitions over
+/// [16, 19); replica 1 crashes outright at t = 14 (mid-flood, queues
+/// deep, long decodes live — the worst moment); and replica 2 is
+/// spot-reclaimed at t = 24 with a 5 s grace window to drain through
+/// the migration path.
+pub fn chaos_storm_plan() -> FaultPlan {
+    FaultPlan::new(vec![
+        FaultEvent::Degrade { from: 10.0, until: 20.0, factor: 3.0 },
+        FaultEvent::Crash { at: 14.0, replica: 1 },
+        FaultEvent::Partition { from: 16.0, until: 19.0 },
+        FaultEvent::Reclaim { at: 24.0, replica: 2, grace_secs: 5.0 },
+    ])
+}
+
+/// The chaos-storm arrivals — the tenant-storm *shape* retuned so
+/// crash-destroyed progress is what decides deadlines:
+///
+///   * `latency` — Interactive, ~0.8 req/s across the window, short
+///     prompts but LONG decodes (median ~49 tokens, cap 64), each
+///     request under a `CHAOS_STORM_SLO_SECS` completion deadline.
+///     These sequences are resident for seconds, so the crash lands on
+///     *their* decode progress, and whether a checkpoint preserved it
+///     shows up directly in the deadline hit-rate.
+///   * `noisy`   — Batch, no deadline, a 5 req/s long-decode flood
+///     from t = 5 s to t = 25 s that keeps queues deep and decode
+///     slots contended through every fault in the plan.
+///
+/// Ids are assigned in arrival order; deterministic per seed.
+pub fn chaos_storm_trace(seed: u64) -> Vec<SubmitRequest> {
+    let mut out: Vec<SubmitRequest> = Vec::new();
+    let mut gen = TraceGenerator::new(
+        TraceConfig {
+            base_rate: 0.8,
+            diurnal_amp: 0.0,
+            bursts_per_day: 0.0,
+            day_secs: CHAOS_STORM_SECS,
+            prompt_max: 24,
+            gen_mu: 3.9,
+            gen_sigma: 0.15,
+            gen_max: 64,
+            ..TraceConfig::default()
+        },
+        seed.wrapping_add(7919),
+    );
+    for r in gen.generate(0.0, CHAOS_STORM_SECS) {
+        out.push(SubmitRequest::from_trace(&r)
+            .with_tenant("latency")
+            .with_priority(PriorityClass::Interactive)
+            .with_deadline(r.arrival + CHAOS_STORM_SLO_SECS));
+    }
+    let mut gen = TraceGenerator::new(
+        TraceConfig {
+            base_rate: 5.0,
+            diurnal_amp: 0.0,
+            bursts_per_day: 0.0,
+            day_secs: 20.0,
+            prompt_max: 32,
+            gen_mu: 3.5,
+            gen_sigma: 0.3,
+            gen_max: 48,
+            ..TraceConfig::default()
+        },
+        seed.wrapping_add(15838),
+    );
+    for r in gen.generate(0.0, 20.0) {
+        out.push(SubmitRequest::from_trace(&r)
+            .with_tenant("noisy")
+            .with_priority(PriorityClass::Batch)
+            .with_arrival(r.arrival + 5.0));
+    }
+    out.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    for (i, r) in out.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    out
+}
+
+/// The ISSUE-6 acceptance scenario: three identical slow static-dense
+/// replicas behind the least-outstanding router, serving
+/// [`chaos_storm_trace`] while [`chaos_storm_plan`] tears pieces out of
+/// the fleet. Migration is on; the autoscaler can act on the
+/// capacity-loss signal only (every load watermark is parked out of
+/// reach), so each spawn in this scenario is a crash/reclaim
+/// replacement by construction. `checkpointed = true` turns on 1 s
+/// periodic KV checkpointing — the crash then restores checkpointed
+/// sequences onto peers, where they re-enter admission and resume
+/// mid-decode; `false` is the checkpoint-free baseline that loses
+/// every in-flight sequence on the crashed replica. Everything else is
+/// identical, and deterministic per seed.
+pub fn chaos_storm_fleet(seed: u64, checkpointed: bool) -> Fleet {
+    let spec = ReplicaSpec {
+        // ~2 req/s per replica: the flood genuinely overloads the trio,
+        // so the crash catches deep queues and live decodes
+        flops_per_sec: 2.0e8,
+        app_rate: 0.0,   // faults are the explicit plan above
+        adaptive: false, // static dense: isolate recovery mechanics
+        capacity_mult: 2.5,
+        ..ReplicaSpec::heterogeneous(0)
+    };
+    let cfg = FleetConfig {
+        migrate: true,
+        oom_threshold: usize::MAX, // no pressure-drains in the way
+        checkpoint_period_secs: if checkpointed {
+            Some(1.0)
+        } else {
+            None
+        },
+        autoscale: Some(AutoscaleConfig {
+            min_replicas: 3,
+            max_replicas: 4,
+            // only the capacity-loss signal can fire
+            high_queue_per_replica: 1e12,
+            low_queue_per_replica: 0.0,
+            high_p99_ttft_secs: 1e12,
+            high_oom_events: usize::MAX,
+            hold_secs: 1.0,
+            cooldown_secs: 5.0,
+            eval_every_secs: 0.5,
+            signal_window_secs: 10.0,
+            ..AutoscaleConfig::default()
+        }),
+        warmup_secs: 1.0,
+        max_sim_secs: CHAOS_STORM_SECS + 3600.0,
+        ..FleetConfig::default()
+    };
+    uniform_sim_fleet(3, seed, RouterPolicy::LeastOutstanding, cfg,
+                      spec)
+        .with_fault_plan(chaos_storm_plan())
 }
 
 #[cfg(test)]
@@ -1779,6 +2373,190 @@ mod tests {
         assert!(retired >= 1, "idle fleet never retired");
         assert!(serving >= 1, "retired below min_replicas");
         assert_eq!(fleet.retires as usize, retired);
+    }
+
+    fn chaos_test_fleet(plan: FaultPlan, cfg: FleetConfig) -> Fleet {
+        let spec = ReplicaSpec {
+            flops_per_sec: 1.0e8,
+            app_rate: 0.0,
+            adaptive: false,
+            capacity_mult: 2.5,
+            ..ReplicaSpec::heterogeneous(0)
+        };
+        uniform_sim_fleet(2, 9, RouterPolicy::LeastOutstanding, cfg,
+                          spec)
+            .with_fault_plan(plan)
+    }
+
+    fn chaos_test_reqs(n: u64) -> Vec<SubmitRequest> {
+        (0..n)
+            .map(|i| SubmitRequest::new(16, 24)
+                .with_id(i)
+                .with_arrival(0.05 * i as f64))
+            .collect()
+    }
+
+    /// A mid-run crash destroys a replica's resident work, but every
+    /// displaced request still reaches exactly one terminal outcome —
+    /// nothing is silently dropped, nothing double-completes.
+    #[test]
+    fn crash_displaces_work_without_losing_requests() {
+        let cfg = FleetConfig {
+            migrate: true,
+            oom_threshold: usize::MAX,
+            ..FleetConfig::default()
+        };
+        let plan = FaultPlan::new(vec![FaultEvent::Crash {
+            at: 2.0,
+            replica: 1,
+        }]);
+        let mut fleet = chaos_test_fleet(plan, cfg);
+        let report = fleet.run_requests(chaos_test_reqs(24)).unwrap();
+        assert_eq!(report.chaos.crashes, 1);
+        assert_eq!(report.chaos.failures_injected, 1);
+        // checkpoint-free: the crash's in-flight work lost its progress
+        assert!(report.chaos.seq_lost > 0,
+                "crash caught no live work: {report:?}");
+        assert_eq!(report.chaos.seq_restored, 0);
+        assert_eq!(fleet.replicas[1].state, ReplicaState::Failed);
+        assert_eq!(fleet.replicas[1].crashes, 1);
+        for id in 0..24u64 {
+            match fleet.poll(RequestHandle { id }) {
+                Some(RequestStatus::Finished(_)) => {}
+                other => panic!("request {id} not terminal: {other:?}"),
+            }
+        }
+    }
+
+    /// With periodic checkpointing on, the same crash restores
+    /// snapshotted sequences onto the surviving peer instead of losing
+    /// them all.
+    #[test]
+    fn checkpointed_crash_restores_onto_peers() {
+        let cfg = FleetConfig {
+            migrate: true,
+            oom_threshold: usize::MAX,
+            checkpoint_period_secs: Some(0.25),
+            ..FleetConfig::default()
+        };
+        let plan = FaultPlan::new(vec![FaultEvent::Crash {
+            at: 4.0,
+            replica: 1,
+        }]);
+        let mut fleet = chaos_test_fleet(plan, cfg);
+        let report = fleet.run_requests(chaos_test_reqs(24)).unwrap();
+        assert_eq!(report.chaos.crashes, 1);
+        assert!(report.chaos.checkpoints_taken > 0,
+                "no checkpoint cycles ran: {report:?}");
+        assert!(report.chaos.checkpoint_bytes > 0);
+        assert!(report.chaos.seq_restored > 0,
+                "nothing restored from checkpoints: {report:?}");
+        assert_eq!(fleet.replicas[0].restored_in,
+                   report.chaos.seq_restored);
+        for id in 0..24u64 {
+            match fleet.poll(RequestHandle { id }) {
+                Some(RequestStatus::Finished(_)) => {}
+                other => panic!("request {id} not terminal: {other:?}"),
+            }
+        }
+    }
+
+    /// A spot reclaim with a generous grace window evacuates everything
+    /// through the migration path and retires cleanly: no crash, no
+    /// lost sequence, every request completed.
+    #[test]
+    fn generous_grace_reclaim_drains_losslessly() {
+        let cfg = FleetConfig {
+            migrate: true,
+            oom_threshold: usize::MAX,
+            ..FleetConfig::default()
+        };
+        let plan = FaultPlan::new(vec![FaultEvent::Reclaim {
+            at: 1.0,
+            replica: 1,
+            grace_secs: 500.0,
+        }]);
+        let mut fleet = chaos_test_fleet(plan, cfg);
+        let report = fleet.run_requests(chaos_test_reqs(24)).unwrap();
+        assert_eq!(report.chaos.reclaims, 1);
+        assert_eq!(report.chaos.crashes, 0,
+                   "grace expired despite 500 s window: {report:?}");
+        assert_eq!(report.chaos.seq_lost, 0);
+        assert_eq!(report.completed, 24, "lossy reclaim: {report:?}");
+        assert_eq!(fleet.replicas[1].state, ReplicaState::Retired);
+    }
+
+    /// A crash feeds the autoscaler's capacity-loss signal: the fleet
+    /// spawns a replacement without waiting out the hold, even though
+    /// every load watermark is unreachable.
+    #[test]
+    fn crash_triggers_replacement_spawn() {
+        let cfg = FleetConfig {
+            migrate: true,
+            oom_threshold: usize::MAX,
+            autoscale: Some(AutoscaleConfig {
+                min_replicas: 2,
+                max_replicas: 3,
+                high_queue_per_replica: 1e12,
+                low_queue_per_replica: 0.0,
+                high_p99_ttft_secs: 1e12,
+                high_oom_events: usize::MAX,
+                hold_secs: 30.0, // far longer than the run
+                cooldown_secs: 2.0,
+                eval_every_secs: 0.5,
+                signal_window_secs: 10.0,
+                ..AutoscaleConfig::default()
+            }),
+            ..FleetConfig::default()
+        };
+        let plan = FaultPlan::new(vec![FaultEvent::Crash {
+            at: 2.0,
+            replica: 1,
+        }]);
+        let mut fleet = chaos_test_fleet(plan, cfg);
+        let report = fleet.run_requests(chaos_test_reqs(24)).unwrap();
+        assert!(report.spawns >= 1,
+                "capacity loss never spawned a replacement: {report:?}");
+        assert_eq!(report.replicas.len(), 3);
+        assert_eq!(report.chaos.crashes, 1);
+    }
+
+    /// Non-finite arrivals are rejected at the fleet's front door —
+    /// terminal, counted, and kept out of the arrival sort.
+    #[test]
+    fn non_finite_arrivals_are_rejected_at_ingress() {
+        let mut fleet = chaos_test_fleet(FaultPlan::default(),
+                                         FleetConfig::default());
+        let mut reqs = chaos_test_reqs(4);
+        reqs.push(SubmitRequest::new(16, 8)
+            .with_id(100)
+            .with_arrival(f64::NAN));
+        reqs.push(SubmitRequest::new(16, 8)
+            .with_id(101)
+            .with_arrival(f64::INFINITY));
+        let report = fleet.run_requests(reqs).unwrap();
+        assert_eq!(report.completed, 4);
+        assert_eq!(report.dropped, 2);
+        for id in [100u64, 101] {
+            assert_eq!(fleet.poll(RequestHandle { id }),
+                       Some(RequestStatus::Finished(Outcome::Rejected)),
+                       "bad arrival {id} not terminal");
+        }
+    }
+
+    /// The chaos-storm scenario is deterministic per seed: two builds
+    /// serve the same trace to byte-identical reports.
+    #[test]
+    fn chaos_storm_is_deterministic_per_seed() {
+        let run = |seed| {
+            let mut fleet = chaos_storm_fleet(seed, true);
+            fleet.run_requests(chaos_storm_trace(seed))
+                .unwrap()
+                .to_json()
+                .pretty()
+        };
+        assert_eq!(run(7), run(7), "same seed diverged");
+        assert_ne!(run(7), run(8), "different seeds identical");
     }
 
     /// The fleet-level lifecycle API: submit → poll → cancel, including

@@ -21,7 +21,62 @@ pub struct ReplicaReport {
     /// fleet's migration pass.
     pub migrations_out: u64,
     pub migrations_in: u64,
+    /// Injected failures this replica absorbed (crashes include expired
+    /// reclaim grace windows), and checkpointed sequences delivered
+    /// *into* it by crash recovery.
+    pub crashes: u64,
+    pub restored_in: u64,
     pub serve: ServeReport,
+}
+
+/// The failure-injection and recovery ledger of one fleet run. All
+/// zeros (and NaN rates) on runs without a fault plan.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    /// Scheduled fault events that fired.
+    pub failures_injected: u64,
+    /// Replica crashes (outright, plus reclaims whose grace expired).
+    pub crashes: u64,
+    /// Spot reclaims that began draining.
+    pub reclaims: u64,
+    /// Sequences whose decode progress was destroyed: uncheckpointed
+    /// in-flight work on a crashed replica, plus restores that could
+    /// not land anywhere.
+    pub seq_lost: u64,
+    /// Checkpointed sequences successfully restored onto a peer.
+    pub seq_restored: u64,
+    /// Checkpoint cycles that shipped anything, and the interconnect
+    /// bytes they charged (live-KV deltas only), summed over replicas.
+    pub checkpoints_taken: u64,
+    pub checkpoint_bytes: u64,
+    /// Transfer landings deferred by an interconnect partition, and
+    /// moves abandoned after the retry budget ran out.
+    pub transfer_retries: u64,
+    pub transfer_failures: u64,
+    /// p99 TTFT over the requests a fault displaced (NaN when none
+    /// completed).
+    pub recovery_p99_ttft: f64,
+    /// Of the SLO-carrying requests a fault displaced, the fraction
+    /// that still finished inside their deadline (NaN when none).
+    pub chaos_deadline_hit_rate: f64,
+}
+
+impl Default for ChaosReport {
+    fn default() -> Self {
+        ChaosReport {
+            failures_injected: 0,
+            crashes: 0,
+            reclaims: 0,
+            seq_lost: 0,
+            seq_restored: 0,
+            checkpoints_taken: 0,
+            checkpoint_bytes: 0,
+            transfer_retries: 0,
+            transfer_failures: 0,
+            recovery_p99_ttft: f64::NAN,
+            chaos_deadline_hit_rate: f64::NAN,
+        }
+    }
 }
 
 /// One tenant's slice of a fleet run: the merged outcome ledger across
@@ -102,6 +157,12 @@ pub struct FleetReport {
     pub throughput_rps: f64,
     /// Routing histogram: decisions per replica index.
     pub routing: Vec<u64>,
+    /// Backlog heads skipped defensively at dispatch (should stay 0;
+    /// see `Fleet::dispatch_ingress`).
+    pub ingress_skipped: u64,
+    /// Failure-injection and recovery ledger (all zeros without a
+    /// fault plan).
+    pub chaos: ChaosReport,
     /// Per-tenant sections, sorted by tenant name (one "default" entry
     /// on undecorated trace replays).
     pub tenants: Vec<FleetTenantReport>,
@@ -133,6 +194,21 @@ impl FleetReport {
                       ({:.1} MiB moved)",
                      self.spawns, self.retires, self.migrations,
                      mib(self.migration_bytes as usize));
+        }
+        if self.chaos.failures_injected > 0 {
+            let c = &self.chaos;
+            println!("   chaos: {} faults | crashes {} | reclaims {} | \
+                      seq lost {} | restored {}",
+                     c.failures_injected, c.crashes, c.reclaims,
+                     c.seq_lost, c.seq_restored);
+            println!("   recovery: checkpoints {} ({:.1} MiB) | \
+                      retries {} | failed moves {} | p99 ttft {:.3}s | \
+                      SLO hit-rate {:.1}%",
+                     c.checkpoints_taken,
+                     mib(c.checkpoint_bytes as usize),
+                     c.transfer_retries, c.transfer_failures,
+                     zero_nan(c.recovery_p99_ttft),
+                     100.0 * zero_nan(c.chaos_deadline_hit_rate));
         }
         println!("   latency p50/p99  {:.3}s / {:.3}s   ttft p50/p99  \
                   {:.3}s / {:.3}s",
@@ -204,6 +280,8 @@ impl FleetReport {
                     ("migrations_out",
                      Json::Num(r.migrations_out as f64)),
                     ("migrations_in", Json::Num(r.migrations_in as f64)),
+                    ("crashes", Json::Num(r.crashes as f64)),
+                    ("restored_in", Json::Num(r.restored_in as f64)),
                     ("completed", Json::Num(r.serve.completed as f64)),
                     ("rejected", Json::Num(r.serve.rejected as f64)),
                     ("evictions", Json::Num(r.serve.evictions as f64)),
@@ -279,6 +357,29 @@ impl FleetReport {
             ("routing_histogram",
              Json::Arr(self.routing.iter()
                        .map(|&c| Json::Num(c as f64)).collect())),
+            ("ingress_skipped",
+             Json::Num(self.ingress_skipped as f64)),
+            ("chaos", Json::object(vec![
+                ("failures_injected",
+                 Json::Num(self.chaos.failures_injected as f64)),
+                ("crashes", Json::Num(self.chaos.crashes as f64)),
+                ("reclaims", Json::Num(self.chaos.reclaims as f64)),
+                ("seq_lost", Json::Num(self.chaos.seq_lost as f64)),
+                ("seq_restored",
+                 Json::Num(self.chaos.seq_restored as f64)),
+                ("checkpoints_taken",
+                 Json::Num(self.chaos.checkpoints_taken as f64)),
+                ("checkpoint_bytes",
+                 Json::Num(self.chaos.checkpoint_bytes as f64)),
+                ("transfer_retries",
+                 Json::Num(self.chaos.transfer_retries as f64)),
+                ("transfer_failures",
+                 Json::Num(self.chaos.transfer_failures as f64)),
+                ("recovery_p99_ttft",
+                 num(self.chaos.recovery_p99_ttft)),
+                ("chaos_deadline_hit_rate",
+                 num(self.chaos.chaos_deadline_hit_rate)),
+            ])),
             ("tenants", Json::Arr(tenants)),
             ("replicas", Json::Arr(replicas)),
         ])
@@ -323,6 +424,8 @@ mod tests {
             p99_ttft: f64::NAN,
             throughput_rps: 0.0,
             routing: vec![0, 0],
+            ingress_skipped: 0,
+            chaos: ChaosReport::default(),
             tenants: vec![FleetTenantReport {
                 tenant: "default".into(),
                 counts: TenantCounts::default(),
@@ -339,6 +442,8 @@ mod tests {
                 respawns: 0,
                 migrations_out: 0,
                 migrations_in: 0,
+                crashes: 0,
+                restored_in: 0,
                 serve: empty,
             }],
         };
@@ -359,6 +464,12 @@ mod tests {
         assert_eq!(tenants[0].get("deadline_hit_rate").unwrap(),
                    &Json::Null);
         assert_eq!(tenants[0].get("quota_bytes").unwrap(), &Json::Null);
+        // the chaos section parses, with nulls for the empty rates
+        let chaos = parsed.get("chaos").unwrap();
+        assert_eq!(chaos.get("crashes").unwrap(), &Json::Num(0.0));
+        assert_eq!(chaos.get("recovery_p99_ttft").unwrap(), &Json::Null);
+        assert_eq!(chaos.get("chaos_deadline_hit_rate").unwrap(),
+                   &Json::Null);
     }
 
     #[test]

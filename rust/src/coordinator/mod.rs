@@ -80,8 +80,20 @@
 //!     persistence hold, and a cooldown.
 //!   * [`metrics`] — `FleetReport`: per-replica, per-tenant, and
 //!     aggregate p50/p99 TTFT + latency, OOM/eviction/respawn counts,
-//!     migration and spawn/retire totals, and the routing histogram,
-//!     printable and serializable to JSON.
+//!     migration and spawn/retire totals, the chaos/recovery ledger
+//!     (`ChaosReport`), and the routing histogram, printable and
+//!     serializable to JSON.
+//!
+//! ## Failure injection & recovery (`Fleet::with_fault_plan`)
+//!
+//! A seeded [`crate::runtime::FaultPlan`] can crash replicas, degrade
+//! or partition the interconnect, and reclaim spot capacity with a
+//! grace window. Engines checkpoint live-KV deltas periodically
+//! (`FleetConfig::checkpoint_period_secs`); a crash restores
+//! checkpointed sequences onto peers, re-enters uncheckpointed work at
+//! the head of its priority class, and feeds the autoscaler a
+//! capacity-loss signal that bypasses its hold. `fleet::
+//! chaos_storm_fleet` is the seeded acceptance scenario.
 //!
 //! Everything is seeded and deterministic: replicas run the sim runtime
 //! backend (`rap::runtime::sim`) by default, so fleet experiments replay
@@ -99,6 +111,7 @@ pub mod router;
 pub use autoscaler::{AutoscaleConfig, Autoscaler, FleetSignals,
                      ScaleDecision};
 pub use fleet::{Fleet, FleetConfig};
-pub use metrics::{FleetReport, FleetTenantReport, ReplicaReport};
+pub use metrics::{ChaosReport, FleetReport, FleetTenantReport,
+                  ReplicaReport};
 pub use replica::{Replica, ReplicaSpec, ReplicaState};
 pub use router::{Router, RouterPolicy};

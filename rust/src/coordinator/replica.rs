@@ -43,6 +43,12 @@ pub enum ReplicaState {
     /// (ids are never reused, reports keep its history) but is never
     /// routed to, stepped into work, or respawned.
     Retired,
+    /// Killed by an injected fault (crash, or a spot reclaim whose
+    /// grace expired with work still resident). Like `Retired` it stays
+    /// in the roster for reports but leaves the working set — unlike a
+    /// drain it never comes back, and everything resident at the moment
+    /// of death was destroyed (see `Engine::crash_dump`).
+    Failed,
 }
 
 impl ReplicaState {
@@ -53,6 +59,7 @@ impl ReplicaState {
             ReplicaState::Draining => "draining",
             ReplicaState::Respawning { .. } => "respawning",
             ReplicaState::Retired => "retired",
+            ReplicaState::Failed => "failed",
         }
     }
 }
@@ -71,6 +78,12 @@ pub struct Replica {
     pub migrations_out: u64,
     /// Sequences delivered here from a pressured peer.
     pub migrations_in: u64,
+    /// Injected failures that killed this replica (crash events plus
+    /// expired spot-reclaim graces).
+    pub crashes: u64,
+    /// Checkpointed sequences restored onto this replica after a peer
+    /// crashed.
+    pub restored_in: u64,
     /// When the autoscaler spawned this replica (`None` for the
     /// original fleet).
     pub spawned_at: Option<f64>,
@@ -104,6 +117,8 @@ impl Replica {
             retiring: false,
             migrations_out: 0,
             migrations_in: 0,
+            crashes: 0,
+            restored_in: 0,
             spawned_at: None,
             first_routed_at: None,
             oom_marks: VecDeque::new(),
@@ -119,9 +134,13 @@ impl Replica {
         matches!(self.state, ReplicaState::Serving)
     }
 
-    /// Part of the fleet's working set (anything but `Retired`).
+    /// Part of the fleet's working set (anything but `Retired` or
+    /// `Failed`) — a crashed replica holds no work and contributes no
+    /// signals, and excluding it from the autoscaler's returning-count
+    /// is what lets a replacement spawn through `max_replicas`.
     pub fn live(&self) -> bool {
-        !matches!(self.state, ReplicaState::Retired)
+        !matches!(self.state,
+                  ReplicaState::Retired | ReplicaState::Failed)
     }
 
     pub fn outstanding(&self) -> usize {
@@ -384,6 +403,19 @@ mod tests {
         assert!(!r.accepting());
         r.step_to(8.0).unwrap();
         assert!(r.accepting(), "warm-up elapsed");
+    }
+
+    #[test]
+    fn failed_replica_leaves_the_working_set() {
+        let mut r = build_sim_replica(0, &meta(),
+                                      &ReplicaSpec::heterogeneous(0), 5);
+        r.state = ReplicaState::Failed;
+        assert!(!r.accepting(), "failed replicas take no routes");
+        assert!(!r.live(), "failed replicas leave the working set");
+        assert_eq!(r.state.name(), "failed");
+        // unlike a drain, stepping never resurrects it
+        r.step_to(100.0).unwrap();
+        assert_eq!(r.state, ReplicaState::Failed);
     }
 
     #[test]

@@ -7,11 +7,12 @@ use anyhow::Result;
 use super::common::banner;
 use crate::coordinator::fleet::{absorbable_spike_fleet,
                                 absorbable_spike_trace,
+                                chaos_storm_fleet, chaos_storm_trace,
                                 default_fleet_trace, default_sim_fleet,
                                 elastic_demo_fleet, elastic_demo_trace,
                                 tenant_storm_fcfs_trace,
                                 tenant_storm_fleet, tenant_storm_trace,
-                                TENANT_STORM_SECS,
+                                CHAOS_STORM_SECS, TENANT_STORM_SECS,
                                 TENANT_STORM_SLO_SECS};
 use crate::coordinator::metrics::{zero_nan, FleetReport,
                                   FleetTenantReport};
@@ -178,6 +179,96 @@ fn tenant_section<'a>(r: &'a FleetReport, name: &str)
         .iter()
         .find(|t| t.tenant == name)
         .expect("tenant missing from report")
+}
+
+fn chaos_row(label: &str, r: &FleetReport) {
+    let lat = tenant_section(r, "latency");
+    println!("{:<18} {:>9} {:>7} {:>5} {:>9} {:>8} {:>6} {:>7} {:>9} \
+              {:>7.1}%",
+             label, r.completed, r.rejected, r.chaos.seq_lost,
+             r.chaos.seq_restored, r.chaos.checkpoints_taken, r.spawns,
+             r.chaos.transfer_retries,
+             format!("{:.3}s", zero_nan(r.p99_ttft)),
+             100.0 * lat.deadline_hit_rate())
+}
+
+/// Arrivals still non-terminal when the run drained — must be zero, or
+/// the recovery path leaked a request.
+fn nonterminal(r: &FleetReport) -> u64 {
+    (r.total_requests).saturating_sub(
+        r.completed as u64 + r.rejected + r.cancelled
+            + r.deadline_missed + r.dropped)
+}
+
+/// `rap experiment fleet --chaos`: the ISSUE-6 acceptance surface.
+/// One seeded two-tenant storm served twice by otherwise-identical
+/// fleets while the same fault plan tears pieces out of them — the
+/// interconnect degrades and partitions, one replica crashes mid-flood,
+/// another is spot-reclaimed with a grace window. The only difference
+/// between the two fleets is periodic KV checkpointing: with it, the
+/// crash restores checkpointed sequences onto peers; without it, every
+/// in-flight sequence on the crashed replica is lost and must restart
+/// from scratch. The checkpointed fleet must lose strictly fewer
+/// sequences AND hold a strictly better latency-tenant deadline
+/// hit-rate — the same inequality `tests/chaos_fleet.rs` asserts. The
+/// scenario shape (3 replicas, 40 s window, the fault schedule) is
+/// fixed; only the seed varies.
+pub fn fleet_chaos(seed: u64) -> Result<()> {
+    banner(&format!(
+        "Fleet — checkpointed vs checkpoint-free recovery under one \
+         seeded fault plan (seed {seed})"));
+    let reqs = chaos_storm_trace(seed);
+    println!("trace: {} requests over {:.0}s; fault plan: 3x link \
+              degrade [10,20)s, crash replica 1 @14s, partition \
+              [16,19)s, reclaim replica 2 @24s (5s grace) — fixed \
+              scenario, only --seed varies it\n",
+             reqs.len(), CHAOS_STORM_SECS);
+    println!("{:<18} {:>9} {:>7} {:>5} {:>9} {:>8} {:>6} {:>7} {:>9} \
+              {:>8}",
+             "fleet", "completed", "reject", "lost", "restored",
+             "ckpts", "spawns", "retries", "p99 ttft", "hit");
+    let mut plain = chaos_storm_fleet(seed, false);
+    let pr = plain.run_requests(reqs.clone())?;
+    chaos_row("checkpoint-free", &pr);
+    let mut ckpt = chaos_storm_fleet(seed, true);
+    let cr = ckpt.run_requests(reqs)?;
+    chaos_row("checkpointed", &cr);
+    let p_lat = tenant_section(&pr, "latency");
+    let c_lat = tenant_section(&cr, "latency");
+    println!("\nshape check: both fleets eat the same crash, but the \
+              checkpointed one restores the crashed replica's \
+              checkpointed sequences onto peers — where they re-enter \
+              admission and resume mid-decode — instead of restarting \
+              them from the prompt: fewer sequences lost, and the \
+              latency tenant's deadline hit-rate holds up through the \
+              fault window.");
+    println!("chaos-storm: ckpt lost={} restored={} hit_rate={:.3} \
+              nonterminal={} vs plain lost={} hit_rate={:.3} \
+              nonterminal={}",
+             cr.chaos.seq_lost, cr.chaos.seq_restored,
+             c_lat.deadline_hit_rate(), nonterminal(&cr),
+             pr.chaos.seq_lost, p_lat.deadline_hit_rate(),
+             nonterminal(&pr));
+    if cr.chaos.seq_lost < pr.chaos.seq_lost
+        && c_lat.deadline_hit_rate() > p_lat.deadline_hit_rate()
+        && nonterminal(&cr) == 0
+        && nonterminal(&pr) == 0
+    {
+        println!("verdict: checkpointing wins (lost {} vs {}, \
+                  hit-rate {:.1}% vs {:.1}%, every request terminal).",
+                 cr.chaos.seq_lost, pr.chaos.seq_lost,
+                 100.0 * c_lat.deadline_hit_rate(),
+                 100.0 * p_lat.deadline_hit_rate());
+    } else {
+        println!("verdict: UNEXPECTED — checkpointing did not strictly \
+                  win (lost {} vs {}, hit-rate {:.1}% vs {:.1}%, \
+                  nonterminal {} / {}).",
+                 cr.chaos.seq_lost, pr.chaos.seq_lost,
+                 100.0 * c_lat.deadline_hit_rate(),
+                 100.0 * p_lat.deadline_hit_rate(),
+                 nonterminal(&cr), nonterminal(&pr));
+    }
+    Ok(())
 }
 
 /// `rap experiment fleet --tenants`: the ISSUE-5 acceptance surface.

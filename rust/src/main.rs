@@ -18,7 +18,9 @@
 //!                     sequences off pressured replicas instead of
 //!                     evicting them, --router tenant-fair + --tenants N
 //!                     caps each tenant's in-flight KV bytes at an
-//!                     equal share
+//!                     equal share, --fault-plan <seed> injects a seeded
+//!                     failure schedule and --checkpoint <secs> turns on
+//!                     periodic KV checkpointing for crash recovery
 //!   gsi               run Greedy Sequential Importance on a model
 //!
 //! Common flags: --model <name> --seed <n> --quick
@@ -31,6 +33,7 @@ use rap::coordinator::fleet::{default_fleet_trace,
                               FleetConfig};
 use rap::coordinator::router::RouterPolicy;
 use rap::experiments::{figures, fleet, rl, tables};
+use rap::runtime::FaultPlan;
 use rap::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -85,12 +88,17 @@ fn main() -> Result<()> {
 
 /// `rap serve-fleet --replicas 4 --router rap --secs 120 [--json path]
 /// [--autoscale [--min-replicas N] [--max-replicas N] [--warmup S]]
-/// [--migrate] [--tenants N] [--slo S]`:
+/// [--migrate] [--tenants N] [--slo S] [--fault-plan SEED]
+/// [--checkpoint S]`:
 /// one seeded trace across N heterogeneous sim replicas, with the fleet
 /// report printed and emitted as JSON (stdout, or `--json <path>`).
 /// `--tenants` spreads the trace across N synthetic tenants (and, under
 /// `--router tenant-fair`, gives each an equal KV-byte quota); `--slo`
 /// attaches a relative completion deadline to every request.
+/// `--fault-plan <seed>` injects a seeded failure schedule (crashes,
+/// link degradation/partitions, spot reclaims, memory pressure) drawn
+/// over the arrival window; `--checkpoint <secs>` turns on periodic KV
+/// checkpointing so crashes restore in-flight sequences onto peers.
 fn serve_fleet(seed: u64, args: &Args) -> Result<()> {
     let replicas = args.usize_or("replicas", 4)?;
     if replicas == 0 {
@@ -113,6 +121,16 @@ fn serve_fleet(seed: u64, args: &Args) -> Result<()> {
     } else {
         None
     };
+    let checkpoint = match args.get("checkpoint") {
+        Some(v) => {
+            let period = v.parse::<f64>()?;
+            if !period.is_finite() || period <= 0.0 {
+                bail!("--checkpoint must be a positive number of seconds");
+            }
+            Some(period)
+        }
+        None => None,
+    };
     let cfg = FleetConfig {
         // never truncate the requested trace: arrivals span `secs`,
         // plus a generous drain window
@@ -120,18 +138,24 @@ fn serve_fleet(seed: u64, args: &Args) -> Result<()> {
         migrate: args.bool("migrate"),
         autoscale,
         warmup_secs: args.f64_or("warmup", 0.0)?,
+        checkpoint_period_secs: checkpoint,
         ..FleetConfig::default()
     };
     let mut fleet = default_sim_fleet_with(replicas, seed, policy, cfg);
+    if let Some(v) = args.get("fault-plan") {
+        let fault_seed = v.parse::<u64>()?;
+        fleet = fleet
+            .with_fault_plan(FaultPlan::seeded(fault_seed, secs, replicas));
+    }
     if policy == RouterPolicy::TenantFair && tenants > 1 {
         fleet.router.quotas = equal_share_quotas(&fleet, tenants);
     }
     let reqs = default_fleet_trace(seed, secs);
     println!("serve-fleet: {} requests over {secs:.0}s across {replicas} \
               replicas (router={}, seed={seed}, tenants={tenants}, \
-              autoscale={}, migrate={})",
+              autoscale={}, migrate={}, fault_plan={}, checkpoint={:?})",
              reqs.len(), policy.name(), cfg.autoscale.is_some(),
-             cfg.migrate);
+             cfg.migrate, args.get("fault-plan").is_some(), checkpoint);
     let subs = api::decorate_trace(reqs, tenants, slo);
     let report = fleet.run_requests(subs)?;
     report.print();
@@ -179,6 +203,10 @@ fn run_experiment(id: &str, model: &str, seed: u64, quick: bool,
                 // fixed scenario (2 replicas, two tenants, one flood):
                 // FCFS vs tenant-fair ingress
                 fleet::fleet_tenants(seed)
+            } else if args.bool("chaos") {
+                // fixed scenario (3 replicas, one fault plan):
+                // checkpointed vs checkpoint-free recovery
+                fleet::fleet_chaos(seed)
             } else {
                 fleet::fleet_compare(
                     seed,
@@ -215,6 +243,8 @@ fn print_help() {
               vs mask-elastic accounting");
     println!("                   fleet takes --tenants: FCFS vs \
               tenant-fair ingress on a two-tenant storm");
+    println!("                   fleet takes --chaos: checkpointed vs \
+              checkpoint-free recovery under one fault plan");
     println!("  train-agent      --model <m> --episodes <n> --seed <s>");
     println!("  serve            --secs <n> --seed <s> [--tenants <n>] \
               [--slo <secs>]");
@@ -230,6 +260,10 @@ fn print_help() {
               off pressured replicas)");
     println!("                   [--tenants <n>] [--slo <secs>]  \
               (tenant-fair: equal KV quotas per tenant)");
+    println!("                   [--fault-plan <seed>] [--checkpoint \
+              <secs>]  (seeded failure injection; periodic KV");
+    println!("                    checkpoints restore crashed work onto \
+              peers)");
     println!("  gsi              --model <m> --remove <n>");
     println!();
     println!("FLAGS: --model rap-small|qwen-sim|rap-tiny  --seed N  \

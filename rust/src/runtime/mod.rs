@@ -23,6 +23,8 @@ use xla::Literal;
 pub mod pjrt;
 pub mod sim;
 
+pub use sim::{FaultEvent, FaultPlan};
+
 use crate::mask::PruneMask;
 use crate::model_meta::{DType, EntrySpec, ModelMeta};
 
@@ -343,6 +345,18 @@ impl Runtime {
                 let d = sim::SimConfig::default();
                 d.migration_latency_secs
                     + bytes as f64 / d.link_bytes_per_sec
+            }
+        }
+    }
+
+    /// Streaming variant of [`Runtime::transfer_cost`]: bytes-only
+    /// pricing with no per-transfer setup latency, for checkpoint
+    /// deltas that ride an always-open replication stream.
+    pub fn stream_cost(&self, bytes: usize) -> f64 {
+        match &self.backend {
+            Backend::Sim(s) => s.stream_cost(bytes),
+            Backend::Pjrt(_) => {
+                bytes as f64 / sim::SimConfig::default().link_bytes_per_sec
             }
         }
     }

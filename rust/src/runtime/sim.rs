@@ -55,6 +55,145 @@ impl Default for SimConfig {
     }
 }
 
+/// One scheduled fault in a [`FaultPlan`]. Times are shared-clock sim
+/// seconds; replica indices refer to the coordinator's replica vector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// Replica `replica` dies at `at`: every resident KV cache, queued
+    /// request, and parked state on it is destroyed.
+    Crash { at: f64, replica: usize },
+    /// Interconnect degradation over `[from, until)`: transfers started
+    /// inside the window take `factor`× their modeled duration.
+    Degrade { from: f64, until: f64, factor: f64 },
+    /// Full interconnect partition over `[from, until)`: no transfer
+    /// can complete inside the window — deliveries retry with bounded
+    /// backoff and eventually fail back to a local requeue.
+    Partition { from: f64, until: f64 },
+    /// Spot-capacity reclaim at `at`: the replica gets `grace_secs` to
+    /// drain through the Park/migrate path, then is forcibly killed if
+    /// work remains.
+    Reclaim { at: f64, replica: usize, grace_secs: f64 },
+    /// Device-memory pressure cliff over `[from, until)`: co-running
+    /// interference suddenly holds `frac` of the device capacity
+    /// (drives `Sys_avail(t)` through the monitor's walls mechanism).
+    Pressure { from: f64, until: f64, frac: f64 },
+}
+
+impl FaultEvent {
+    /// When the event first takes effect (the plan sorts by this).
+    pub fn start(&self) -> f64 {
+        match *self {
+            FaultEvent::Crash { at, .. } => at,
+            FaultEvent::Degrade { from, .. } => from,
+            FaultEvent::Partition { from, .. } => from,
+            FaultEvent::Reclaim { at, .. } => at,
+            FaultEvent::Pressure { from, .. } => from,
+        }
+    }
+}
+
+/// A seeded, deterministic schedule of failure events for one run. The
+/// plan is data, not behavior: the fleet coordinator applies crash and
+/// reclaim events as its clock passes them, and consults
+/// [`FaultPlan::link_factor`] when pricing or delivering transfers.
+/// Engine-level tests feed the pressure events straight into a
+/// [`MemoryMonitor`](crate::server::memmon::MemoryMonitor) via
+/// `MemoryMonitor::with_faults` — no fleet required.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Events sorted by start time (ties keep insertion order).
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new(mut events: Vec<FaultEvent>) -> FaultPlan {
+        events.sort_by(|a, b| a.start().total_cmp(&b.start()));
+        FaultPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// A seeded storm sized to `horizon` seconds over `replicas`
+    /// replicas: one crash mid-run, one degradation window, one full
+    /// partition, and (fleets of 2+) a spot reclaim of a different
+    /// replica with a few seconds of grace. Deterministic per seed.
+    pub fn seeded(seed: u64, horizon: f64, replicas: usize) -> FaultPlan {
+        if replicas == 0 || horizon <= 0.0 {
+            return FaultPlan::default();
+        }
+        let mut rng = Rng::new(seed ^ 0xFA_17_BAD);
+        let victim = rng.below(replicas);
+        let mut events = vec![FaultEvent::Crash {
+            at: horizon * (0.25 + 0.2 * rng.f64()),
+            replica: victim,
+        }];
+        let dg_from = horizon * (0.15 + 0.15 * rng.f64());
+        events.push(FaultEvent::Degrade {
+            from: dg_from,
+            until: dg_from + horizon * (0.15 + 0.1 * rng.f64()),
+            factor: 2.0 + 4.0 * rng.f64(),
+        });
+        let pt_from = horizon * (0.35 + 0.15 * rng.f64());
+        events.push(FaultEvent::Partition {
+            from: pt_from,
+            until: pt_from + horizon * (0.05 + 0.08 * rng.f64()),
+        });
+        if replicas > 1 {
+            let other =
+                (victim + 1 + rng.below(replicas - 1)) % replicas;
+            events.push(FaultEvent::Reclaim {
+                at: horizon * (0.55 + 0.15 * rng.f64()),
+                replica: other,
+                grace_secs: 3.0 + 4.0 * rng.f64(),
+            });
+        }
+        FaultPlan::new(events)
+    }
+
+    /// State of the interconnect at `t`: `None` while a partition
+    /// window covers `t` (nothing can be delivered), otherwise the
+    /// product of all active degradation factors (1.0 on a healthy
+    /// link) to scale a transfer's duration by.
+    pub fn link_factor(&self, t: f64) -> Option<f64> {
+        let mut factor = 1.0;
+        for ev in &self.events {
+            match *ev {
+                FaultEvent::Partition { from, until }
+                    if t >= from && t < until =>
+                {
+                    return None;
+                }
+                FaultEvent::Degrade { from, until, factor: f }
+                    if t >= from && t < until =>
+                {
+                    factor *= f;
+                }
+                _ => {}
+            }
+        }
+        Some(factor)
+    }
+
+    /// The plan's pressure cliffs as `(start, end, bytes)` interference
+    /// spans against a device of `capacity` bytes — the
+    /// `MemoryMonitor::with_spans` wire format.
+    pub fn pressure_spans(&self, capacity: usize)
+                          -> Vec<(f64, f64, usize)> {
+        self.events
+            .iter()
+            .filter_map(|ev| match *ev {
+                FaultEvent::Pressure { from, until, frac } => {
+                    Some((from, until,
+                          (capacity as f64 * frac) as usize))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+}
+
 pub struct SimRuntime {
     pub meta: ModelMeta,
     pub cfg: SimConfig,
@@ -92,6 +231,14 @@ impl SimRuntime {
     pub fn transfer_cost(&self, bytes: usize) -> f64 {
         self.cfg.migration_latency_secs
             + bytes as f64 / self.cfg.link_bytes_per_sec
+    }
+
+    /// Virtual duration of streaming `bytes` over the interconnect
+    /// with no per-transfer setup latency: periodic checkpoint deltas
+    /// ride an always-open replication stream, so only the bytes are
+    /// charged (discrete migrations pay `transfer_cost`).
+    pub fn stream_cost(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.cfg.link_bytes_per_sec
     }
 
     /// Modeled mean NLL under `mask` (additive damage + layer synergy).
@@ -247,6 +394,53 @@ mod tests {
         assert!(big > small, "more bytes must cost more: {small} vs {big}");
         // an empty payload still pays the fixed latency
         assert_eq!(s.transfer_cost(0), s.cfg.migration_latency_secs);
+    }
+
+    #[test]
+    fn fault_plan_is_sorted_and_deterministic_per_seed() {
+        let a = FaultPlan::seeded(11, 40.0, 3);
+        let b = FaultPlan::seeded(11, 40.0, 3);
+        let c = FaultPlan::seeded(12, 40.0, 3);
+        assert_eq!(a.events, b.events);
+        assert_ne!(a.events, c.events);
+        assert!(a.events.windows(2)
+                 .all(|w| w[0].start() <= w[1].start()));
+        // a 2+-replica storm reclaims a replica other than the crashed
+        let crash = a.events.iter().find_map(|e| match *e {
+            FaultEvent::Crash { replica, .. } => Some(replica),
+            _ => None,
+        });
+        let reclaim = a.events.iter().find_map(|e| match *e {
+            FaultEvent::Reclaim { replica, .. } => Some(replica),
+            _ => None,
+        });
+        assert!(crash.is_some() && reclaim.is_some());
+        assert_ne!(crash, reclaim);
+        assert!(FaultPlan::seeded(1, 40.0, 0).is_empty());
+    }
+
+    #[test]
+    fn link_factor_models_partition_and_degradation() {
+        let plan = FaultPlan::new(vec![
+            FaultEvent::Degrade { from: 5.0, until: 15.0, factor: 3.0 },
+            FaultEvent::Degrade { from: 10.0, until: 20.0, factor: 2.0 },
+            FaultEvent::Partition { from: 12.0, until: 14.0 },
+        ]);
+        assert_eq!(plan.link_factor(0.0), Some(1.0));
+        assert_eq!(plan.link_factor(6.0), Some(3.0));
+        assert_eq!(plan.link_factor(11.0), Some(6.0)); // both stack
+        assert_eq!(plan.link_factor(13.0), None); // partitioned
+        assert_eq!(plan.link_factor(14.0), Some(6.0)); // heals
+        assert_eq!(plan.link_factor(25.0), Some(1.0));
+    }
+
+    #[test]
+    fn pressure_spans_scale_to_capacity() {
+        let plan = FaultPlan::new(vec![
+            FaultEvent::Pressure { from: 2.0, until: 8.0, frac: 0.5 },
+            FaultEvent::Crash { at: 3.0, replica: 0 },
+        ]);
+        assert_eq!(plan.pressure_spans(1000), vec![(2.0, 8.0, 500)]);
     }
 
     #[test]

@@ -46,6 +46,8 @@
 //!      Admission is priority-aware: a memory-blocked head of queue may
 //!      preempt strictly-lower-class in-flight work, never the reverse.
 
+use std::collections::HashMap;
+
 use anyhow::{bail, Result};
 
 use super::batcher::{decode_bucket, prefill_bucket, ActiveSeq, Batcher};
@@ -108,6 +110,12 @@ pub struct EngineConfig {
     /// reproduces the pre-outlook behavior (every current-mask
     /// transgression is an OOM) for comparison runs.
     pub elastic_accounting: bool,
+    /// Periodically snapshot every active sequence into the portable
+    /// [`SeqState`] format (the crash-recovery checkpoint), charging
+    /// the modeled interconnect cost for the KV delta since the last
+    /// snapshot. `None` (the default) disables checkpointing — a crash
+    /// then loses all in-flight decode progress.
+    pub checkpoint_period_secs: Option<f64>,
 }
 
 impl Default for EngineConfig {
@@ -117,7 +125,8 @@ impl Default for EngineConfig {
                        max_sim_secs: 1e9,
                        eviction: EvictionMode::Requeue,
                        enforce_deadlines: true,
-                       elastic_accounting: true }
+                       elastic_accounting: true,
+                       checkpoint_period_secs: None }
     }
 }
 
@@ -233,6 +242,18 @@ pub struct Engine {
     /// Dense (full-mask) parameter bytes — mask-independent, cached so
     /// the outlook's hot path never re-walks the full mask.
     dense_param_bytes: usize,
+    /// Latest checkpoint per live sequence id (the crash-recovery
+    /// stash, conceptually held off-device — a crash keeps it). Looked
+    /// up by id only, never iterated into decisions or output.
+    checkpoints: HashMap<u64, SeqState>,
+    last_checkpoint_at: f64,
+    /// Restored-but-not-yet-resumed snapshots, keyed by request id. A
+    /// crash restore re-enters ADMISSION: the request waits at the
+    /// head of its priority class while its snapshot is held aside
+    /// here, and `try_prefill` re-attaches the KV in place of a
+    /// prefill — recovered work queues like work instead of seizing a
+    /// decode slot ahead of admitted higher-priority requests.
+    resumable: HashMap<u64, SeqState>,
 }
 
 impl Engine {
@@ -259,6 +280,9 @@ impl Engine {
             parked: Vec::new(),
             min_viable_mask: None,
             dense_param_bytes,
+            checkpoints: HashMap::new(),
+            last_checkpoint_at: f64::NEG_INFINITY,
+            resumable: HashMap::new(),
         }
     }
 
@@ -315,6 +339,8 @@ impl Engine {
             self.batcher.waiting.iter().position(|r| r.id == id)
         {
             let req = self.batcher.waiting.remove(i).unwrap();
+            self.drop_checkpoint(id);
+            self.resumable.remove(&id);
             self.metrics.note_terminal(&req, Outcome::Cancelled);
             return Ok(true);
         }
@@ -324,11 +350,13 @@ impl Engine {
             self.flush_batch()?;
             let seq = self.batcher.active.remove(i);
             self.kv.remove(seq.req.id);
+            self.drop_checkpoint(id);
             self.metrics.note_terminal(&seq.req, Outcome::Cancelled);
             return Ok(true);
         }
         if let Some(i) = self.parked.iter().position(|s| s.id() == id) {
             let state = self.parked.remove(i);
+            self.drop_checkpoint(id);
             self.metrics.note_terminal(state.request(),
                                        Outcome::Cancelled);
             return Ok(true);
@@ -488,6 +516,7 @@ impl Engine {
                 // its SLO only burns capacity (the victim order prefers
                 // exactly these).
                 self.kv.remove(seq.req.id);
+                self.drop_checkpoint(seq.req.id);
                 self.metrics.note_terminal(&seq.req,
                                            Outcome::DeadlineMissed);
                 continue;
@@ -495,8 +524,10 @@ impl Engine {
             match self.cfg.eviction {
                 EvictionMode::Requeue => {
                     // The cache is dropped; the request restarts from
-                    // its prompt.
+                    // its prompt — the checkpoint with it (one copy of
+                    // the sequence's truth at a time).
                     self.kv.remove(seq.req.id);
+                    self.drop_checkpoint(seq.req.id);
                     self.metrics.evictions += 1;
                     self.batcher.requeue_front(seq.req);
                 }
@@ -669,12 +700,19 @@ impl Engine {
         {
             self.flush_batch()?;
             let seq = self.batcher.active.remove(i);
+            self.drop_checkpoint(id);
             return Ok(Some(self.export_active(seq)?));
         }
         if let Some(i) =
             self.batcher.waiting.iter().position(|r| r.id == id)
         {
             let req = self.batcher.waiting.remove(i).unwrap();
+            self.drop_checkpoint(id);
+            if let Some(state) = self.resumable.remove(&id) {
+                // an un-resumed restore travels as its snapshot: the
+                // recovered decode progress survives the move
+                return Ok(Some(state));
+            }
             return Ok(Some(SeqState::Queued(req)));
         }
         Ok(None)
@@ -687,6 +725,7 @@ impl Engine {
         if self.kv.contains(id)
             || self.batcher.active.iter().any(|s| s.req.id == id)
             || self.batcher.waiting.iter().any(|r| r.id == id)
+            || self.resumable.contains_key(&id)
         {
             return false;
         }
@@ -725,6 +764,38 @@ impl Engine {
         Ok(())
     }
 
+    /// Land a restored checkpoint without seizing a decode slot: the
+    /// request re-enters admission at the head of its priority class
+    /// while its snapshot waits in the `resumable` stash; when
+    /// admission pops the request, the sequence re-attaches its KV and
+    /// resumes mid-decode with no re-prefill (its first token was
+    /// served before the crash). Only active states resume — a queued
+    /// state has no progress to hold aside and should just `submit`.
+    /// Fails, leaving the engine untouched, on a live id collision or
+    /// a mismatched cache shape (the restore is then worthless here).
+    pub fn resume_import(&mut self, state: SeqState) -> Result<()> {
+        if !self.can_import(&state) {
+            bail!("resume: sequence {} rejected (duplicate id or \
+                   mismatched cache shape)", state.id());
+        }
+        if !matches!(state, SeqState::Active { .. }) {
+            bail!("resume: sequence {} has no decode progress to hold \
+                   aside", state.id());
+        }
+        let req = state.request().clone();
+        self.resumable.insert(req.id, state);
+        self.batcher.requeue_front(req);
+        Ok(())
+    }
+
+    /// Detach and return the un-resumed restore snapshot for `id`, if
+    /// one is pending. Evacuation paths (spot-reclaim drains, queue
+    /// rebalancing) ship this state instead of the bare queued request
+    /// so the restored decode progress survives the move.
+    pub fn take_resumable(&mut self, id: u64) -> Option<SeqState> {
+        self.resumable.remove(&id)
+    }
+
     /// Drain the states parked by `EvictionMode::Park` (the fleet
     /// coordinator's pickup point).
     pub fn take_parked(&mut self) -> Vec<SeqState> {
@@ -745,6 +816,144 @@ impl Engine {
     /// pressured replica).
     pub fn take_waiting(&mut self) -> Vec<SubmitRequest> {
         self.batcher.waiting.drain(..).collect()
+    }
+
+    // ---- checkpoint / crash recovery ----------------------------------
+
+    /// Live checkpoints currently held (tests and reports).
+    pub fn checkpoint_len(&self) -> usize {
+        self.checkpoints.len()
+    }
+
+    /// A sequence left this engine (finished, cancelled, rejected, or
+    /// exported): its checkpoint is stale and must never restore.
+    fn drop_checkpoint(&mut self, id: u64) {
+        self.checkpoints.remove(&id);
+    }
+
+    /// Snapshot one active sequence into the portable [`SeqState`]
+    /// format without disturbing it (the caller has flushed the batch).
+    fn snapshot_active(&self, seq: &ActiveSeq) -> Option<SeqState> {
+        let cache = self.kv.get(seq.req.id)?;
+        let kv_bytes = self.kv_bytes_for_len(cache.len);
+        let live_len = (seq.req.prompt_len
+            + cache.len
+                .saturating_sub(prefill_bucket(seq.req.prompt_len)))
+            .min(cache.len);
+        Some(SeqState::Active {
+            req: seq.req.clone(),
+            generated: seq.generated,
+            next_token: seq.next_token,
+            prefill_done_at: seq.prefill_done_at,
+            kv_len: cache.len,
+            k: cache.k.clone(),
+            v: cache.v.clone(),
+            kv_bytes,
+            live_kv_bytes: self.kv_bytes_for_len(live_len),
+        })
+    }
+
+    /// Periodic crash-recovery checkpoint: when due, snapshot every
+    /// active sequence whose live KV grew since its last snapshot and
+    /// charge the modeled interconnect cost for the *delta* bytes (the
+    /// padding-free slice that actually ships). A no-op unless
+    /// `checkpoint_period_secs` is set and something changed.
+    fn maybe_checkpoint(&mut self) -> Result<()> {
+        let Some(period) = self.cfg.checkpoint_period_secs else {
+            return Ok(());
+        };
+        if self.sim_time - self.last_checkpoint_at < period {
+            return Ok(());
+        }
+        self.last_checkpoint_at = self.sim_time;
+        if self.batcher.active.is_empty() {
+            return Ok(());
+        }
+        self.flush_batch()?;
+        let mut delta_bytes = 0usize;
+        let mut snaps = Vec::new();
+        for seq in &self.batcher.active {
+            let Some(state) = self.snapshot_active(seq) else {
+                continue;
+            };
+            let new_bytes = state.transfer_bytes();
+            let old_bytes = self
+                .checkpoints
+                .get(&seq.req.id)
+                .map(|s| s.transfer_bytes())
+                .unwrap_or(0);
+            if new_bytes > old_bytes {
+                delta_bytes += new_bytes - old_bytes;
+                snaps.push(state);
+            }
+        }
+        if snaps.is_empty() {
+            return Ok(());
+        }
+        for state in snaps {
+            self.checkpoints.insert(state.id(), state);
+        }
+        self.metrics.checkpoints_taken += 1;
+        self.metrics.checkpoint_bytes += delta_bytes as u64;
+        // Deltas ride an always-open replication stream: serving is
+        // charged for the bytes (what makes the period a real knob)
+        // but not a per-transfer setup latency — that would price a
+        // periodic snapshot like a discrete migration.
+        self.sim_time += self.rt.stream_cost(delta_bytes)
+            * self.cfg.time_scale;
+        Ok(())
+    }
+
+    /// Catastrophic loss of this engine (replica crash / expired spot
+    /// grace): every resident cache, queued request, and parked state
+    /// is destroyed. Returns what a coordinator needs to recover:
+    /// `(checkpointed, lost, queued)` — sequences with a live
+    /// checkpoint (restorable on a peer, losing only tokens decoded
+    /// since the snapshot), in-flight work with *no* checkpoint (its
+    /// decode progress is gone; the request must re-enter admission),
+    /// and queued-but-unstarted requests (nothing lost but the queue
+    /// slot). Terminal outcomes already booked are untouched; the
+    /// engine is left empty and idle.
+    pub fn crash_dump(&mut self)
+                      -> (Vec<SeqState>, Vec<SubmitRequest>,
+                          Vec<SubmitRequest>) {
+        self.batch = None;
+        let mut ckpts = Vec::new();
+        let mut lost = Vec::new();
+        let mut queued = Vec::new();
+        let waiting: Vec<SubmitRequest> =
+            self.batcher.waiting.drain(..).collect();
+        for req in waiting {
+            // an un-resumed restore is checkpoint-equivalent: its
+            // snapshot is in hand, restorable again on a peer
+            match self
+                .resumable
+                .remove(&req.id)
+                .or_else(|| self.checkpoints.remove(&req.id))
+            {
+                Some(state) => ckpts.push(state),
+                None => queued.push(req),
+            }
+        }
+        self.resumable.clear();
+        let active: Vec<ActiveSeq> =
+            self.batcher.active.drain(..).collect();
+        for seq in active {
+            self.kv.remove(seq.req.id);
+            match self.checkpoints.remove(&seq.req.id) {
+                Some(state) => ckpts.push(state),
+                None => lost.push(seq.req),
+            }
+        }
+        let parked = std::mem::take(&mut self.parked);
+        for state in parked {
+            match self.checkpoints.remove(&state.id()) {
+                Some(ckpt) => ckpts.push(ckpt),
+                None => lost.push(state.request().clone()),
+            }
+        }
+        self.checkpoints.clear();
+        (ckpts, lost, queued)
     }
 
     /// Advance the clock by one unit of compute: modeled cost when the
@@ -768,6 +977,8 @@ impl Engine {
                 break;
             }
             let req = self.batcher.waiting.pop_front().unwrap();
+            self.drop_checkpoint(req.id);
+            self.resumable.remove(&req.id);
             self.metrics.note_terminal(&req, Outcome::DeadlineMissed);
         }
     }
@@ -812,12 +1023,14 @@ impl Engine {
             if self.cfg.enforce_deadlines && seq.req.expired(self.sim_time)
             {
                 self.kv.remove(seq.req.id);
+                self.drop_checkpoint(seq.req.id);
                 self.metrics.note_terminal(&seq.req,
                                            Outcome::DeadlineMissed);
             } else {
                 match self.cfg.eviction {
                     EvictionMode::Requeue => {
                         self.kv.remove(seq.req.id);
+                        self.drop_checkpoint(seq.req.id);
                         self.metrics.evictions += 1;
                         self.batcher.requeue_front(seq.req);
                     }
@@ -888,12 +1101,32 @@ impl Engine {
                     return Ok(false);
                 }
                 let rejected = self.batcher.waiting.pop_front().unwrap();
+                self.drop_checkpoint(rejected.id);
+                self.resumable.remove(&rejected.id);
                 self.metrics.rejected += 1;
                 self.metrics.note_terminal(&rejected, Outcome::Rejected);
             }
             return Ok(false);
         }
         let req = self.batcher.pop_for_prefill().unwrap();
+        if let Some(SeqState::Active {
+            req, generated, next_token, prefill_done_at, kv_len, k, v, ..
+        }) = self.resumable.remove(&req.id)
+        {
+            // A restored sequence waited its turn like any admission,
+            // but resumes mid-decode: the snapshot's KV attaches in
+            // place and no prefill is re-run — its first token was
+            // served before the crash, so TTFT keeps the original
+            // prefill time.
+            self.kv.insert(req.id, k, v, kv_len, &self.mask)?;
+            self.batcher.push_active(ActiveSeq {
+                req,
+                generated,
+                next_token,
+                prefill_done_at,
+            });
+            return Ok(true);
+        }
         let bucket = prefill_bucket(req.prompt_len);
         // Trace prompts are clamped to the largest bucket.
         let plen = req.prompt_len.min(bucket);
@@ -973,6 +1206,7 @@ impl Engine {
         }
         for seq in finished {
             self.kv.remove(seq.req.id);
+            self.drop_checkpoint(seq.req.id);
             // A finish after the deadline is still served (the tokens
             // exist) but terminates as DeadlineMissed in the ledger.
             let outcome = if seq.req.deadline_hit(self.sim_time) {
@@ -1018,6 +1252,7 @@ impl Engine {
     pub fn step_while_busy(&mut self, t: f64) -> Result<()> {
         while self.sim_time < t && !self.idle() {
             self.run_controller(false)?;
+            self.maybe_checkpoint()?;
             self.handle_memory_pressure()?;
             self.sample_memory();
             if !self.try_prefill()? && !self.decode_step()? {
@@ -1033,7 +1268,18 @@ impl Engine {
     /// `step_to` — the native front door.
     pub fn run_requests(&mut self, mut requests: Vec<SubmitRequest>)
                         -> Result<ServeReport> {
-        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        // A malformed trace (NaN/∞ arrival) must not panic the sort or
+        // wedge the admission loop: such requests are rejected at the
+        // boundary, terminally, and everything else is served.
+        for req in &requests {
+            if !req.has_finite_arrival() {
+                self.metrics.note_submitted(req);
+                self.metrics.rejected += 1;
+                self.metrics.note_terminal(req, Outcome::Rejected);
+            }
+        }
+        requests.retain(|r| r.has_finite_arrival());
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         let t_start = self.sim_time;
         let deadline = t_start + self.cfg.max_sim_secs;
         let mut next = 0usize;
@@ -1278,6 +1524,81 @@ mod tests {
         // no token generated twice or lost across the move
         assert_eq!(a.metrics.tokens_generated
                    + b1.metrics.tokens_generated, total);
+    }
+
+    /// Tentpole: a periodically-checkpointed engine survives a crash
+    /// losing only the tokens decoded since the snapshot — the restored
+    /// copy finishes exactly once on a peer.
+    #[test]
+    fn checkpoint_then_crash_restores_on_peer() {
+        let mut a = sim_engine(4.0);
+        a.cfg.checkpoint_period_secs = Some(1e-6); // every step
+        a.batcher.max_active = 1; // keep the second request queued
+        a.submit(req(3, 0.0));
+        a.submit(req(4, 0.0));
+        step_until_tokens(&mut a, 4);
+        assert!(a.checkpoint_len() >= 1);
+        assert!(a.metrics.checkpoints_taken >= 1);
+        assert!(a.metrics.checkpoint_bytes > 0);
+
+        let (ckpts, lost, queued) = a.crash_dump();
+        assert_eq!(ckpts.len(), 1);
+        assert!(lost.is_empty());
+        assert_eq!(queued.len(), 1);
+        assert_eq!(queued[0].id, 4);
+        assert!(a.idle() && a.checkpoint_len() == 0);
+
+        // the snapshot trails the live sequence by ≥ 0 tokens
+        let SeqState::Active { generated, .. } = &ckpts[0] else {
+            panic!("checkpoint of a mid-decode seq must be Active");
+        };
+        assert!(*generated >= 1 && *generated <= 4);
+
+        let mut b = sim_engine(4.0);
+        b.import_sequence(ckpts.into_iter().next().unwrap()).unwrap();
+        b.step_to(120.0).unwrap();
+        assert_eq!(b.metrics.completed.len(), 1);
+        assert_eq!(b.metrics.completed[0].id, 3);
+        // exactly once: the crashed engine never completed it
+        assert_eq!(a.metrics.completed.len(), 0);
+    }
+
+    /// Without checkpoints a crash destroys decode progress: the
+    /// request comes back as a bare re-admission ticket, never a
+    /// silently-dropped id.
+    #[test]
+    fn crash_dump_without_checkpoints_loses_progress() {
+        let mut a = sim_engine(4.0);
+        a.submit(req(3, 0.0));
+        step_until_tokens(&mut a, 3);
+        let (ckpts, lost, queued) = a.crash_dump();
+        assert!(ckpts.is_empty());
+        assert_eq!(lost.len(), 1);
+        assert_eq!(lost[0].id, 3);
+        assert!(queued.is_empty());
+        assert!(a.idle());
+        // the lifecycle survives: resubmitting serves it from scratch
+        let mut b = sim_engine(4.0);
+        b.submit(lost.into_iter().next().unwrap().with_arrival(0.0));
+        b.step_to(120.0).unwrap();
+        assert_eq!(b.metrics.completed.len(), 1);
+    }
+
+    /// Satellite: non-finite arrivals are rejected at the boundary
+    /// (terminal `Rejected`), not panicked on in the arrival sort.
+    #[test]
+    fn non_finite_arrivals_are_rejected_not_panicked() {
+        let mut e = sim_engine(4.0);
+        let reqs = vec![req(1, 0.0),
+                        req(2, f64::NAN),
+                        req(3, f64::INFINITY),
+                        req(4, 0.5)];
+        let report = e.run_requests(reqs).unwrap();
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.rejected, 2);
+        assert_eq!(e.metrics.outcome(2), Some(Outcome::Rejected));
+        assert_eq!(e.metrics.outcome(3), Some(Outcome::Rejected));
+        assert_eq!(e.metrics.outcome(1), Some(Outcome::Done));
     }
 
     #[test]

@@ -90,6 +90,12 @@ impl KvManager {
         Ok(())
     }
 
+    /// Borrow one sequence's cache without removing it — the periodic
+    /// checkpoint path snapshots live caches in place.
+    pub fn get(&self, id: u64) -> Option<&SeqCache> {
+        self.seqs.get(&id)
+    }
+
     pub fn remove(&mut self, id: u64) -> Option<SeqCache> {
         let removed = self.seqs.remove(&id);
         if let Some(s) = &removed {

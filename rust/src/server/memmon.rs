@@ -100,6 +100,16 @@ impl MemoryMonitor {
                                   spans)
     }
 
+    /// A monitor driven by a fault plan's pressure events: each
+    /// `FaultEvent::Pressure` becomes an interference wall holding its
+    /// fraction of `capacity`, so engine-level tests inject the same
+    /// `Sys_avail(t)` cliffs a chaos fleet sees — without a fleet.
+    pub fn with_faults(capacity: usize,
+                       plan: &crate::runtime::FaultPlan)
+                       -> MemoryMonitor {
+        MemoryMonitor::walls(capacity, &plan.pressure_spans(capacity))
+    }
+
     /// Queries past the precomputed horizon wrap around into `[0,
     /// horizon)`: the interference process extends periodically instead
     /// of silently reporting an idle device forever (which would let a
@@ -215,6 +225,22 @@ mod tests {
         for t in [0.0, 12.0, 25.0] {
             assert_eq!(a.available_at(t), b.available_at(t));
         }
+    }
+
+    /// Satellite: the fault plan's pressure cliffs flow through the
+    /// walls mechanism — a `Pressure{frac}` event is a sudden
+    /// `Sys_avail(t)` drop of exactly that fraction.
+    #[test]
+    fn fault_plan_drives_pressure_cliffs() {
+        use crate::runtime::{FaultEvent, FaultPlan};
+        let plan = FaultPlan::new(vec![
+            FaultEvent::Pressure { from: 10.0, until: 20.0, frac: 0.6 },
+            FaultEvent::Crash { at: 12.0, replica: 0 }, // not a wall
+        ]);
+        let m = MemoryMonitor::with_faults(1000, &plan);
+        assert_eq!(m.available_at(5.0), 1000);
+        assert_eq!(m.available_at(15.0), 400);
+        assert_eq!(m.available_at(20.0), 1000);
     }
 
     #[test]

@@ -132,6 +132,11 @@ pub struct Metrics {
     pub prefills: u64,
     pub tokens_generated: u64,
     pub mask_switches: u64,
+    /// Crash-recovery checkpoint cycles that shipped anything
+    /// (`EngineConfig::checkpoint_period_secs`).
+    pub checkpoints_taken: u64,
+    /// Interconnect bytes charged to checkpointing (deltas only).
+    pub checkpoint_bytes: u64,
     /// Host wall-clock seconds spent in controller decisions
     /// (accumulated from `std::time::Instant` — nondeterministic; see
     /// `ServeReport::wall`).

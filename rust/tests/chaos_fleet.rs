@@ -1,0 +1,124 @@
+//! Chaos-recovery harness (ISSUE 6): the chaos-storm acceptance
+//! scenario — on the same seeded fault plan (link degrade, replica
+//! crash mid-flood, partition, spot reclaim), the checkpoint-enabled
+//! fleet must lose strictly fewer sequences AND hold a strictly better
+//! latency-tenant deadline hit-rate than the checkpoint-free fleet,
+//! with every arrival reaching exactly one terminal state — plus the
+//! determinism contracts for the chaos report JSON and the seeded
+//! fault-plan generator.
+
+use rap::coordinator::fleet::{chaos_storm_fleet, chaos_storm_trace};
+use rap::coordinator::metrics::{FleetReport, FleetTenantReport};
+use rap::runtime::FaultPlan;
+
+fn tenant<'a>(r: &'a FleetReport, name: &str) -> &'a FleetTenantReport {
+    r.tenants
+        .iter()
+        .find(|t| t.tenant == name)
+        .unwrap_or_else(|| panic!("tenant '{name}' missing: {r:?}"))
+}
+
+/// Arrivals that never reached a terminal outcome by drain time.
+fn nonterminal(r: &FleetReport) -> u64 {
+    r.total_requests.saturating_sub(
+        r.completed as u64 + r.rejected + r.cancelled + r.deadline_missed
+            + r.dropped)
+}
+
+/// The ISSUE-6 acceptance inequality on the CI smoke seed: same trace,
+/// same fault plan, the only difference is 1 s periodic KV
+/// checkpointing — and that difference must buy strictly fewer lost
+/// sequences AND a strictly better latency-tenant deadline hit-rate,
+/// with zero requests stuck non-terminal in either run. Reproducible
+/// via `rap experiment fleet --chaos --seed 42`.
+#[test]
+fn checkpointed_fleet_beats_checkpoint_free_on_the_chaos_storm() {
+    let seed = 42;
+    let reqs = chaos_storm_trace(seed);
+    let n = reqs.len() as u64;
+    let mut plain = chaos_storm_fleet(seed, false);
+    let pr = plain.run_requests(reqs.clone()).unwrap();
+    let mut ckpt = chaos_storm_fleet(seed, true);
+    let cr = ckpt.run_requests(reqs).unwrap();
+
+    // the fault plan really fired, identically, in both runs
+    for r in [&pr, &cr] {
+        assert_eq!(r.chaos.failures_injected, 4,
+                   "fault plan did not fully fire: {r:?}");
+        assert!(r.chaos.crashes >= 1, "no crash landed: {r:?}");
+        assert_eq!(r.chaos.reclaims, 1, "no reclaim landed: {r:?}");
+    }
+    // the baseline takes the crash with no safety net
+    assert_eq!(pr.chaos.checkpoints_taken, 0);
+    assert_eq!(pr.chaos.seq_restored, 0);
+    assert!(pr.chaos.seq_lost > 0,
+            "the crash cost the baseline nothing — toothless: {pr:?}");
+    // the checkpointed fleet actually checkpointed and restored
+    assert!(cr.chaos.checkpoints_taken > 0, "no checkpoints: {cr:?}");
+    assert!(cr.chaos.checkpoint_bytes > 0, "free checkpoints: {cr:?}");
+    assert!(cr.chaos.seq_restored > 0, "nothing restored: {cr:?}");
+
+    // the acceptance inequality, strict on both axes
+    assert!(cr.chaos.seq_lost < pr.chaos.seq_lost,
+            "checkpointing did not strictly cut sequences lost: {} vs {}",
+            cr.chaos.seq_lost, pr.chaos.seq_lost);
+    let p_lat = tenant(&pr, "latency");
+    let c_lat = tenant(&cr, "latency");
+    assert!(c_lat.deadline_hit_rate() > p_lat.deadline_hit_rate(),
+            "checkpointing did not strictly lift the latency tenant's \
+             hit-rate: {:.3} vs {:.3}",
+            c_lat.deadline_hit_rate(), p_lat.deadline_hit_rate());
+
+    // conservation: every arrival reached exactly one terminal state —
+    // nothing lost forever, nothing double-completed
+    for r in [&pr, &cr] {
+        assert_eq!(nonterminal(r), 0,
+                   "requests stuck non-terminal at drain: {r:?}");
+        let accounted: usize = r
+            .tenants
+            .iter()
+            .map(|t| {
+                t.counts.finished + t.counts.deadline_missed
+                    + t.counts.cancelled + t.counts.rejected
+            })
+            .sum();
+        assert_eq!(accounted as u64 + r.dropped, n,
+                   "arrivals unaccounted for: {r:?}");
+    }
+}
+
+/// Same seed twice → byte-identical report JSON: the determinism
+/// contract extends through failure injection and recovery.
+#[test]
+fn chaos_storm_is_deterministic_per_seed() {
+    let run = |seed: u64| {
+        let mut fleet = chaos_storm_fleet(seed, true);
+        let report = fleet.run_requests(chaos_storm_trace(seed)).unwrap();
+        report.to_json().pretty()
+    };
+    let a = run(17);
+    let b = run(17);
+    assert_eq!(a, b, "same seed must reproduce the report byte for byte");
+    let c = run(18);
+    assert_ne!(a, c, "different seeds should differ");
+}
+
+/// `FaultPlan::seeded` is a pure function of its inputs: same seed →
+/// the same schedule, different seed → a different one, and every
+/// event lands inside the horizon with a valid replica index.
+#[test]
+fn seeded_fault_plans_are_deterministic_and_well_formed() {
+    let a = FaultPlan::seeded(5, 40.0, 3);
+    let b = FaultPlan::seeded(5, 40.0, 3);
+    assert_eq!(a.events, b.events, "same seed must reproduce the plan");
+    let c = FaultPlan::seeded(6, 40.0, 3);
+    assert_ne!(a.events, c.events, "different seeds should differ");
+    assert!(!a.events.is_empty());
+    for e in &a.events {
+        let t = e.start();
+        assert!((0.0..=40.0).contains(&t), "event outside horizon: {e:?}");
+    }
+    // degenerate inputs yield an empty, harmless plan
+    assert!(FaultPlan::seeded(5, 0.0, 3).events.is_empty());
+    assert!(FaultPlan::seeded(5, 40.0, 0).events.is_empty());
+}

@@ -237,7 +237,7 @@ fn prop_tenant_fair_never_exceeds_quota() {
                     .with_tenant(names[rng.below(3)])
             })
             .collect();
-        reqs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        reqs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         let mut handles = Vec::new();
         let mut peaks: std::collections::BTreeMap<String, u64> =
             std::collections::BTreeMap::new();

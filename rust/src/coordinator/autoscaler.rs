@@ -234,6 +234,44 @@ impl Autoscaler {
         self.high_since = None;
         self.low_since = None;
     }
+
+    /// Name the signal that motivated `decision` given `s` — the
+    /// decision-audit label on autoscale telemetry events. Mirrors
+    /// `decide`'s precedence: capacity loss first (it bypasses the
+    /// hold), then the high watermarks in evaluation order.
+    pub fn explain(&self, s: &FleetSignals, decision: ScaleDecision)
+                   -> &'static str {
+        match decision {
+            ScaleDecision::Down => "idle",
+            ScaleDecision::Hold => "hold",
+            ScaleDecision::Up => {
+                let per =
+                    s.outstanding as f64 / s.serving.max(1) as f64;
+                let tenant_per = s.max_tenant_outstanding as f64
+                    / s.serving.max(1) as f64;
+                if s.capacity_losses > 0 {
+                    "capacity-loss"
+                } else if per > self.cfg.high_queue_per_replica {
+                    "queue-depth"
+                } else if tenant_per
+                    > self.cfg.high_tenant_queue_per_replica
+                {
+                    "tenant-queue"
+                } else if s.p99_ttft > self.cfg.high_p99_ttft_secs {
+                    "p99-ttft"
+                } else if s.recent_ooms >= self.cfg.high_oom_events {
+                    "oom-rate"
+                } else if self.cfg.scale_on_absorption
+                    && s.recent_absorbed
+                        >= self.cfg.high_absorbed_spikes
+                {
+                    "absorbed-spikes"
+                } else {
+                    "pressure"
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -395,6 +433,34 @@ mod tests {
             assert_eq!(c.decide(t as f64, &calm_loss),
                        ScaleDecision::Hold, "scaled down past a loss");
         }
+    }
+
+    /// `explain` attributes an applied decision to the signal that
+    /// fired it, in `decide`'s own precedence order.
+    #[test]
+    fn explain_names_the_firing_signal() {
+        let a = Autoscaler::new(cfg());
+        let lost = FleetSignals { capacity_losses: 1,
+                                  ..idle_signals(2) };
+        assert_eq!(a.explain(&lost, ScaleDecision::Up),
+                   "capacity-loss");
+        assert_eq!(a.explain(&overloaded(2), ScaleDecision::Up),
+                   "queue-depth");
+        let ooming = FleetSignals { recent_ooms: 50,
+                                    ..idle_signals(2) };
+        assert_eq!(a.explain(&ooming, ScaleDecision::Up), "oom-rate");
+        let slow = FleetSignals { p99_ttft: 30.0, ..idle_signals(2) };
+        assert_eq!(a.explain(&slow, ScaleDecision::Up), "p99-ttft");
+        // capacity loss outranks a simultaneous queue signal, exactly
+        // as it does in `decide`
+        let both = FleetSignals { capacity_losses: 1,
+                                  ..overloaded(2) };
+        assert_eq!(a.explain(&both, ScaleDecision::Up),
+                   "capacity-loss");
+        assert_eq!(a.explain(&idle_signals(3), ScaleDecision::Down),
+                   "idle");
+        assert_eq!(a.explain(&idle_signals(3), ScaleDecision::Hold),
+                   "hold");
     }
 
     /// The PR-4 follow-up: sustained mask absorption scales up — but

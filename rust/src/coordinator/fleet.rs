@@ -61,7 +61,9 @@
 //! bypasses its hold (but not its cooldown). The `chaos_storm_fleet`
 //! scenario pins the whole path down.
 
+use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::rc::Rc;
 
 use anyhow::Result;
 
@@ -77,6 +79,10 @@ use crate::model_meta::ModelMeta;
 use crate::runtime::{FaultEvent, FaultPlan};
 use crate::server::engine::{EvictionMode, SeqState};
 use crate::server::metrics::TenantCounts;
+use crate::telemetry::registry::{series, FLEET};
+use crate::telemetry::{Bus, EventKind, Recorder, Registry,
+                       SignalSnapshot};
+use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
 use crate::workload::{Request, TraceConfig, TraceGenerator};
 
@@ -203,8 +209,8 @@ pub struct Fleet {
     pub migrations: u64,
     pub migration_bytes: u64,
     /// What the same migrations would have cost under the
-    /// pre-compression accounting (bucket-padded caches). Debug/
-    /// regression surface only — never serialized.
+    /// pre-compression accounting (bucket-padded caches); serialized in
+    /// [`FleetReport`] so the compression win is auditable per run.
     pub migration_bytes_padded: u64,
     /// Replicas added by the autoscaler.
     pub spawns: u64,
@@ -249,13 +255,25 @@ pub struct Fleet {
     pub seq_restored: u64,
     pub transfer_retries: u64,
     pub transfer_failures: u64,
-    /// Sim times of abrupt capacity losses (crash / reclaim) — the
-    /// autoscaler's replace-immediately signal, trimmed to its window.
-    capacity_loss_marks: Vec<f64>,
     /// Every request a fault displaced, and whether it carried an SLO —
     /// keys the recovery-latency and chaos hit-rate report (BTreeMap so
     /// report iteration is deterministic).
     chaos_ids: BTreeMap<u64, bool>,
+    /// The metrics registry — always present (never gated on telemetry)
+    /// because the autoscaler's windowed signals live in its series:
+    /// OOM/absorbed/TTFT marks harvested from each replica, and the
+    /// capacity-loss marks pushed by crash/reclaim handling under the
+    /// fleet-level key `FLEET`.
+    pub registry: Registry,
+    /// Fleet-level event bus handle (disabled unless
+    /// [`Fleet::enable_telemetry`] attached a recorder).
+    bus: Bus,
+    /// The shared recorder behind `bus` and every engine's bus.
+    recorder: Option<Rc<RefCell<Recorder>>>,
+    /// Sample every counter/gauge into the registry timeline at this
+    /// sim-time period (`None` disables sampling).
+    metrics_period: Option<f64>,
+    last_sample_at: f64,
 }
 
 impl Fleet {
@@ -298,9 +316,53 @@ impl Fleet {
             seq_restored: 0,
             transfer_retries: 0,
             transfer_failures: 0,
-            capacity_loss_marks: Vec::new(),
             chaos_ids: BTreeMap::new(),
+            registry: Registry::new(),
+            bus: Bus::disabled(),
+            recorder: None,
+            metrics_period: None,
+            last_sample_at: 0.0,
         }
+    }
+
+    /// Attach a shared flight recorder: the fleet and every engine —
+    /// including later autoscale spawns — emit lifecycle events through
+    /// it. Purely additive: events carry sim time only, so seeded
+    /// reports are byte-identical with telemetry on or off.
+    pub fn enable_telemetry(&mut self) {
+        let rec = Rc::new(RefCell::new(Recorder::default()));
+        self.bus = Bus::attached(&rec, None);
+        for r in &mut self.replicas {
+            r.engine.bus = Bus::attached(&rec, Some(r.id));
+        }
+        self.recorder = Some(rec);
+    }
+
+    pub fn telemetry_enabled(&self) -> bool {
+        self.recorder.is_some()
+    }
+
+    /// Sample the registry's counters and gauges into its JSON timeline
+    /// every `period_secs` of sim time.
+    pub fn enable_metrics_sampling(&mut self, period_secs: f64) {
+        assert!(period_secs > 0.0 && period_secs.is_finite(),
+                "metrics period must be positive");
+        self.metrics_period = Some(period_secs);
+    }
+
+    /// Export the recorded event stream as a Chrome/Perfetto trace
+    /// (`None` when telemetry was never enabled).
+    pub fn trace_json(&self) -> Option<Json> {
+        let rec = self.recorder.as_ref()?;
+        let rec = rec.borrow();
+        Some(crate::telemetry::trace::chrome_trace(
+            &rec.events,
+            &rec.dumps,
+            self.clock,
+            vec![("source", Json::Str("rap fleet".into())),
+                 ("replicas",
+                  Json::Num(self.replicas.len() as f64))],
+        ))
     }
 
     /// Install a failure schedule. Crash and reclaim events fire as the
@@ -363,6 +425,7 @@ impl Fleet {
         }
         for r in &mut self.replicas {
             r.step_to(t)?;
+            r.harvest(t, &mut self.registry);
         }
         if self.cfg.migrate {
             self.dispatch_parked(t);
@@ -371,7 +434,82 @@ impl Fleet {
         self.maintain(t);
         self.autoscale(t);
         self.dispatch_ingress(t);
+        self.sample_metrics(t);
         Ok(())
+    }
+
+    /// Push the fleet's serving-state ledgers onto the registry's
+    /// counter/gauge surface. Pure reads of fleet state; the registry's
+    /// counters are write-only from the control plane's point of view.
+    pub fn publish_metrics(&mut self) {
+        let mut completed = 0u64;
+        let mut rejected = 0u64;
+        let mut ooms = 0u64;
+        let mut absorbed = 0u64;
+        let mut evictions = 0u64;
+        let mut cancelled = 0u64;
+        let mut deadline_missed = 0u64;
+        let mut checkpoints = 0u64;
+        let mut checkpoint_bytes = 0u64;
+        let mut outstanding = 0usize;
+        let mut serving = 0usize;
+        for r in &self.replicas {
+            let m = &r.engine.metrics;
+            completed += m.completed.len() as u64;
+            rejected += m.rejected;
+            ooms += m.oom_events;
+            absorbed += m.absorbed_spikes;
+            evictions += m.evictions;
+            cancelled += m.cancelled;
+            deadline_missed += m.deadline_missed;
+            checkpoints += m.checkpoints_taken;
+            checkpoint_bytes += m.checkpoint_bytes;
+            outstanding += r.outstanding();
+            serving += r.accepting() as usize;
+        }
+        let reg = &mut self.registry;
+        reg.set_counter("rap_requests_completed_total", completed);
+        reg.set_counter("rap_requests_rejected_total", rejected);
+        reg.set_counter("rap_requests_dropped_total", self.dropped);
+        reg.set_counter("rap_requests_cancelled_total", cancelled);
+        reg.set_counter("rap_deadline_missed_total", deadline_missed);
+        reg.set_counter("rap_oom_events_total", ooms);
+        reg.set_counter("rap_absorbed_spikes_total", absorbed);
+        reg.set_counter("rap_evictions_total", evictions);
+        reg.set_counter("rap_checkpoints_total", checkpoints);
+        reg.set_counter("rap_checkpoint_bytes_total", checkpoint_bytes);
+        reg.set_counter("rap_migrations_total", self.migrations);
+        reg.set_counter("rap_migration_bytes_total",
+                        self.migration_bytes);
+        reg.set_counter("rap_transfer_retries_total",
+                        self.transfer_retries);
+        reg.set_counter("rap_spawns_total", self.spawns);
+        reg.set_counter("rap_retires_total", self.retires);
+        reg.set_counter("rap_crashes_total", self.crashes);
+        reg.set_counter("rap_reclaims_total", self.reclaims);
+        reg.set_counter("rap_seq_restored_total", self.seq_restored);
+        reg.set_counter("rap_seq_lost_total", self.seq_lost);
+        reg.set_gauge("rap_replicas_serving", serving as f64);
+        reg.set_gauge("rap_outstanding", outstanding as f64);
+        let p99 = reg.histogram("rap_ttft_seconds")
+            .map(|h| h.quantile(99.0))
+            .unwrap_or(f64::NAN);
+        reg.set_gauge("rap_p99_ttft_seconds", p99);
+    }
+
+    /// Timeline sampling tick: refresh counters/gauges and snapshot
+    /// them, at most once per `metrics_period` of sim time. Reads only
+    /// — never perturbs a seeded run.
+    fn sample_metrics(&mut self, t: f64) {
+        let Some(period) = self.metrics_period else { return };
+        if self.registry.samples() > 0
+            && t < self.last_sample_at + period
+        {
+            return;
+        }
+        self.last_sample_at = t;
+        self.publish_metrics();
+        self.registry.sample(t);
     }
 
     // ---- the request lifecycle (the one ingress path) -----------------
@@ -406,6 +544,8 @@ impl Fleet {
     /// policy; into the per-tenant ingress backlog (then an immediate
     /// quota-gated drain) under `tenant-fair`.
     fn offer(&mut self, req: SubmitRequest, t: f64) {
+        self.bus.emit(t, Some(req.id), Some(&req.tenant),
+                      || EventKind::Submit);
         if self.router.policy == RouterPolicy::TenantFair {
             self.backlog
                 .entry(req.tenant.clone())
@@ -415,8 +555,20 @@ impl Fleet {
             return;
         }
         match self.router.route(&req, &self.replicas, t) {
-            Some(i) => self.replicas[i].submit(req, t),
+            Some(i) => {
+                self.bus.emit(t, Some(req.id), Some(&req.tenant), || {
+                    EventKind::Route {
+                        dest: i,
+                        policy: self.router.policy.name().to_string(),
+                    }
+                });
+                self.replicas[i].submit(req, t)
+            }
             None => {
+                self.bus.emit(t, Some(req.id), Some(&req.tenant), || {
+                    EventKind::Reject { reason: "no-accepting-replica" }
+                });
+                self.bus.flight_dump(t, "terminal rejection at ingress");
                 self.note_ingress_terminal(&req, Outcome::Rejected,
                                            false);
                 self.dropped += 1;
@@ -602,6 +754,12 @@ impl Fleet {
                 *peak = *used;
             }
             self.router.decisions[dest] += 1;
+            self.bus.emit(t, Some(req.id), Some(&req.tenant), || {
+                EventKind::Route {
+                    dest,
+                    policy: self.router.policy.name().to_string(),
+                }
+            });
             self.replicas[dest].submit(req, t);
         }
     }
@@ -622,6 +780,9 @@ impl Fleet {
             let ev = self.fault_plan.events[self.next_fault];
             self.next_fault += 1;
             self.failures_injected += 1;
+            self.bus.emit(t, None, None, || EventKind::FaultInjected {
+                fault: ev.describe(),
+            });
             match ev {
                 FaultEvent::Crash { replica, .. } => {
                     self.crash_replica(replica, t);
@@ -665,32 +826,49 @@ impl Fleet {
         self.crashes += 1;
         self.replicas[idx].crashes += 1;
         self.replicas[idx].state = ReplicaState::Failed;
-        self.capacity_loss_marks.push(t);
+        self.registry.mark(series::CAPACITY_LOSS, FLEET, t);
+        // emit through the dying replica's own bus so the death carries
+        // its replica stamp in the control-plane track
+        self.replicas[idx].engine.bus.emit(t, None, None, || {
+            EventKind::Crash { disposition: "replica-failed" }
+        });
+        if self.bus.enabled() {
+            self.bus.flight_dump(t, &format!("crash: replica {idx}"));
+        }
         let (ckpts, lost, queued) =
             self.replicas[idx].engine.crash_dump();
         for state in ckpts {
             let req = state.request();
             self.chaos_ids.insert(req.id, req.slo_deadline.is_some());
+            self.bus.emit(t, Some(req.id), Some(&req.tenant), || {
+                EventKind::Crash { disposition: "checkpointed" }
+            });
             self.send_restore(idx, state, t);
         }
         for req in lost {
             self.chaos_ids.insert(req.id, req.slo_deadline.is_some());
             self.seq_lost += 1;
+            self.bus.emit(t, Some(req.id), Some(&req.tenant), || {
+                EventKind::Crash { disposition: "lost" }
+            });
             match self.least_loaded_peer(idx) {
                 Some(peer) => self.replicas[peer]
                     .engine
                     .batcher
                     .requeue_front(req),
-                None => self.reject_displaced(idx, &req),
+                None => self.reject_displaced(idx, &req, t),
             }
         }
         for req in queued {
             self.chaos_ids.insert(req.id, req.slo_deadline.is_some());
+            self.bus.emit(t, Some(req.id), Some(&req.tenant), || {
+                EventKind::Crash { disposition: "requeued" }
+            });
             match self.least_loaded_peer(idx) {
                 Some(peer) => {
                     self.replicas[peer].engine.batcher.enqueue(req);
                 }
-                None => self.reject_displaced(idx, &req),
+                None => self.reject_displaced(idx, &req, t),
             }
         }
     }
@@ -710,7 +888,7 @@ impl Fleet {
             return Ok(());
         }
         self.reclaims += 1;
-        self.capacity_loss_marks.push(t);
+        self.registry.mark(series::CAPACITY_LOSS, FLEET, t);
         self.replicas[idx].retiring = true;
         self.replicas[idx].state = ReplicaState::Draining;
         self.doomed.push((idx, deadline));
@@ -764,7 +942,7 @@ impl Fleet {
             }
             None => {
                 self.seq_lost += 1;
-                self.requeue_local(src, state);
+                self.requeue_local(src, state, t);
             }
         }
     }
@@ -799,10 +977,15 @@ impl Fleet {
     /// take it: booked `Rejected` on the replica that lost it, so the
     /// lifecycle stays intact (poll sees a terminal outcome) and the
     /// per-tenant ledger counts the miss.
-    fn reject_displaced(&mut self, src: usize, req: &SubmitRequest) {
+    fn reject_displaced(&mut self, src: usize, req: &SubmitRequest,
+                        t: f64) {
         let m = &mut self.replicas[src].engine.metrics;
         m.rejected += 1;
         m.note_terminal(req, Outcome::Rejected);
+        self.bus.emit(t, Some(req.id), Some(&req.tenant), || {
+            EventKind::Reject { reason: "displaced-no-peer" }
+        });
+        self.bus.flight_dump(t, "terminal rejection of displaced work");
     }
 
     // ---- migration ----------------------------------------------------
@@ -895,7 +1078,7 @@ impl Fleet {
                     is_restore: false,
                 });
             }
-            None => self.requeue_local(src, state),
+            None => self.requeue_local(src, state, t),
         }
     }
 
@@ -905,7 +1088,7 @@ impl Fleet {
     /// offline while the move was in flight (drained, retiring), the
     /// request joins the first accepting replica's queue instead:
     /// offline replicas must never be handed new work.
-    fn requeue_local(&mut self, src: usize, state: SeqState) {
+    fn requeue_local(&mut self, src: usize, state: SeqState, t: f64) {
         let home = if self.replicas[src].accepting() {
             src
         } else {
@@ -923,7 +1106,7 @@ impl Fleet {
             if matches!(state, SeqState::Active { .. }) {
                 self.replicas[src].engine.metrics.evictions += 1;
             }
-            self.reject_displaced(src, &req);
+            self.reject_displaced(src, &req, t);
             return;
         }
         match state {
@@ -969,7 +1152,7 @@ impl Fleet {
                     if tr.is_restore {
                         self.seq_lost += 1;
                     }
-                    self.requeue_local(tr.src, tr.state);
+                    self.requeue_local(tr.src, tr.state, t);
                 }
                 continue;
             }
@@ -999,7 +1182,7 @@ impl Fleet {
                             if tr.is_restore {
                                 self.seq_lost += 1;
                             }
-                            self.requeue_local(tr.src, tr.state);
+                            self.requeue_local(tr.src, tr.state, t);
                         }
                     }
                 }
@@ -1008,6 +1191,24 @@ impl Fleet {
             if self.replicas[tr.dest].engine.can_import(&tr.state) {
                 let bytes = tr.state.transfer_bytes() as u64;
                 let padded = tr.state.padded_transfer_bytes() as u64;
+                let req = tr.state.request();
+                if tr.is_restore {
+                    self.bus.emit(t, Some(req.id), Some(&req.tenant),
+                                  || EventKind::Restore {
+                                      dest: tr.dest,
+                                  });
+                } else {
+                    self.bus.emit(t, Some(req.id), Some(&req.tenant),
+                                  || EventKind::Migrate {
+                        src: tr.src,
+                        dest: tr.dest,
+                        bytes,
+                        state: match tr.state {
+                            SeqState::Active { .. } => "active",
+                            SeqState::Queued(_) => "queued",
+                        },
+                    });
+                }
                 if tr.is_restore {
                     // A crash restore is recovery, not load balancing:
                     // it lands in its own books — and it re-enters
@@ -1064,9 +1265,14 @@ impl Fleet {
         for r in &mut self.replicas {
             match r.state {
                 ReplicaState::Serving => {
+                    // same destructive window the replicas' private
+                    // mark lists kept: drop marks older than the
+                    // horizon, count the rest
                     if threshold != usize::MAX
                         && serving > 1
-                        && r.recent_ooms(t, window) >= threshold
+                        && self.registry.trim_count(series::OOM, r.id,
+                                                    t - window)
+                            >= threshold
                     {
                         r.state = ReplicaState::Draining;
                         serving -= 1;
@@ -1118,12 +1324,16 @@ impl Fleet {
         let mut ttfts = Vec::new();
         let mut recent_ooms = 0usize;
         let mut recent_absorbed = 0usize;
-        for r in &mut self.replicas {
-            recent_ooms += r.ooms_since(t0);
-            recent_absorbed += r.absorbed_since(t0);
-            r.recent_ttfts(t0, &mut ttfts);
+        for r in &self.replicas {
+            recent_ooms +=
+                self.registry.count_since(series::OOM, r.id, t0);
+            recent_absorbed +=
+                self.registry.count_since(series::ABSORBED, r.id, t0);
+            self.registry
+                .values_since(series::TTFT, r.id, t0, &mut ttfts);
         }
-        self.capacity_loss_marks.retain(|&m| m >= t0);
+        let capacity_losses =
+            self.registry.trim_count(series::CAPACITY_LOSS, FLEET, t0);
         FleetSignals {
             serving,
             outstanding,
@@ -1131,7 +1341,7 @@ impl Fleet {
             p99_ttft: percentile(&ttfts, 99.0),
             recent_ooms,
             recent_absorbed,
-            capacity_losses: self.capacity_loss_marks.len(),
+            capacity_losses,
         }
     }
 
@@ -1146,13 +1356,51 @@ impl Fleet {
             return;
         }
         let signals = self.signals(t, scaler.cfg.signal_window_secs);
-        let applied = match scaler.decide(t, &signals) {
-            ScaleDecision::Up => self.spawn_replica(t),
-            ScaleDecision::Down => self.retire_replica(),
-            ScaleDecision::Hold => false,
+        let decision = scaler.decide(t, &signals);
+        let (applied, victim) = match decision {
+            ScaleDecision::Up => (self.spawn_replica(t), None),
+            ScaleDecision::Down => {
+                let v = self.retire_replica();
+                (v.is_some(), v)
+            }
+            ScaleDecision::Hold => (false, None),
         };
         if applied {
             scaler.note_action(t);
+            // audit trail: which windowed signal pulled the trigger,
+            // and what every signal read at decision time
+            let trigger = scaler.explain(&signals, decision);
+            let snap = SignalSnapshot {
+                serving: signals.serving,
+                outstanding: signals.outstanding,
+                p99_ttft: signals.p99_ttft,
+                recent_ooms: signals.recent_ooms,
+                recent_absorbed: signals.recent_absorbed,
+                capacity_losses: signals.capacity_losses,
+            };
+            match decision {
+                ScaleDecision::Up => {
+                    let new_replica = self.replicas.len() - 1;
+                    self.bus.emit(t, None, None, || {
+                        EventKind::AutoscaleSpawn {
+                            new_replica,
+                            trigger,
+                            signals: snap,
+                        }
+                    });
+                }
+                ScaleDecision::Down => {
+                    let victim = victim.expect("applied retire");
+                    self.bus.emit(t, None, None, || {
+                        EventKind::AutoscaleRetire {
+                            victim,
+                            trigger,
+                            signals: snap,
+                        }
+                    });
+                }
+                ScaleDecision::Hold => {}
+            }
         }
         self.autoscaler = Some(scaler);
     }
@@ -1188,6 +1436,9 @@ impl Fleet {
         r.engine.cfg.checkpoint_period_secs =
             self.cfg.checkpoint_period_secs;
         r.spawned_at = Some(t);
+        if let Some(rec) = &self.recorder {
+            r.engine.bus = Bus::attached(rec, Some(id));
+        }
         if self.cfg.warmup_secs > 0.0 {
             r.state = ReplicaState::Warming {
                 until: t + self.cfg.warmup_secs,
@@ -1202,12 +1453,13 @@ impl Fleet {
     /// Begin retiring the least-loaded serving replica: it stops
     /// accepting work, drains, and parks as `Retired`. Ties break
     /// toward the highest id so the original fleet core is the last to
-    /// go. Returns false when only one serving replica remains.
-    fn retire_replica(&mut self) -> bool {
+    /// go. Returns the victim's id, or `None` when only one serving
+    /// replica remains.
+    fn retire_replica(&mut self) -> Option<usize> {
         let serving =
             self.replicas.iter().filter(|r| r.accepting()).count();
         if serving <= 1 {
-            return false;
+            return None;
         }
         let pick = self
             .replicas
@@ -1216,13 +1468,11 @@ impl Fleet {
             .filter(|(_, r)| r.accepting())
             .min_by_key(|(i, r)| (r.outstanding(), std::cmp::Reverse(*i)))
             .map(|(i, _)| i);
-        let Some(i) = pick else {
-            return false;
-        };
+        let i = pick?;
         self.replicas[i].retiring = true;
         self.replicas[i].state = ReplicaState::Draining;
         self.retires += 1;
-        true
+        Some(i)
     }
 
     // ---- the event loop -----------------------------------------------
@@ -1451,6 +1701,7 @@ impl Fleet {
             retires: self.retires,
             migrations: self.migrations,
             migration_bytes: self.migration_bytes,
+            migration_bytes_padded: self.migration_bytes_padded,
             mean_latency: mean(&lats),
             p50_latency: percentile(&lats, 50.0),
             p99_latency: percentile(&lats, 99.0),

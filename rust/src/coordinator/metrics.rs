@@ -149,6 +149,10 @@ pub struct FleetReport {
     /// prefill-bucket padding is never shipped).
     pub migrations: u64,
     pub migration_bytes: u64,
+    /// What the same migrations would have cost under the
+    /// pre-compression accounting (bucket-padded caches) — the
+    /// compression win is `migration_bytes_padded - migration_bytes`.
+    pub migration_bytes_padded: u64,
     pub mean_latency: f64,
     pub p50_latency: f64,
     pub p99_latency: f64,
@@ -191,9 +195,10 @@ impl FleetReport {
         }
         if self.spawns + self.retires + self.migrations > 0 {
             println!("   elastic: spawned {} | retired {} | migrated {} \
-                      ({:.1} MiB moved)",
+                      ({:.1} MiB moved, {:.1} MiB padded-equivalent)",
                      self.spawns, self.retires, self.migrations,
-                     mib(self.migration_bytes as usize));
+                     mib(self.migration_bytes as usize),
+                     mib(self.migration_bytes_padded as usize));
         }
         if self.chaos.failures_injected > 0 {
             let c = &self.chaos;
@@ -291,6 +296,12 @@ impl FleetReport {
                      Json::Num(r.serve.absorbed_spikes as f64)),
                     ("mask_switches",
                      Json::Num(r.serve.mask_switches as f64)),
+                    ("deadline_missed",
+                     Json::Num(r.serve.deadline_missed as f64)),
+                    ("checkpoints_taken",
+                     Json::Num(r.serve.checkpoints_taken as f64)),
+                    ("checkpoint_bytes",
+                     Json::Num(r.serve.checkpoint_bytes as f64)),
                     ("p50_latency", num(r.serve.p50_latency)),
                     ("p99_latency", num(r.serve.p99_latency)),
                     ("p50_ttft", num(r.serve.p50_ttft)),
@@ -348,6 +359,8 @@ impl FleetReport {
             ("migrations", Json::Num(self.migrations as f64)),
             ("migration_bytes",
              Json::Num(self.migration_bytes as f64)),
+            ("migration_bytes_padded",
+             Json::Num(self.migration_bytes_padded as f64)),
             ("mean_latency", num(self.mean_latency)),
             ("p50_latency", num(self.p50_latency)),
             ("p99_latency", num(self.p99_latency)),
@@ -417,6 +430,7 @@ mod tests {
             retires: 0,
             migrations: 0,
             migration_bytes: 0,
+            migration_bytes_padded: 0,
             mean_latency: f64::NAN,
             p50_latency: f64::NAN,
             p99_latency: f64::NAN,
@@ -470,6 +484,93 @@ mod tests {
         assert_eq!(chaos.get("recovery_p99_ttft").unwrap(), &Json::Null);
         assert_eq!(chaos.get("chaos_deadline_hit_rate").unwrap(),
                    &Json::Null);
+    }
+
+    /// Counter-completeness audit: every ledger field the fleet keeps
+    /// must survive into the serialized report — a counter that exists
+    /// on the struct but not in the JSON is invisible to every consumer
+    /// downstream of `--json`. The key lists are maintained by hand
+    /// (no reflection); adding a field to `FleetReport`/`ChaosReport`/
+    /// the replica entries means adding it here too.
+    #[test]
+    fn serialized_report_carries_every_counter() {
+        let empty = Metrics::default().report(1.0);
+        let report = FleetReport {
+            policy: "rap-aware".into(),
+            sim_secs: 1.0,
+            total_requests: 0,
+            completed: 0,
+            rejected: 0,
+            evictions: 0,
+            cancelled: 0,
+            deadline_missed: 0,
+            dropped: 0,
+            oom_events: 0,
+            absorbed_spikes: 0,
+            respawns: 0,
+            spawns: 0,
+            retires: 0,
+            migrations: 0,
+            migration_bytes: 0,
+            migration_bytes_padded: 0,
+            mean_latency: f64::NAN,
+            p50_latency: f64::NAN,
+            p99_latency: f64::NAN,
+            p50_ttft: f64::NAN,
+            p99_ttft: f64::NAN,
+            throughput_rps: 0.0,
+            routing: vec![0],
+            ingress_skipped: 0,
+            chaos: ChaosReport::default(),
+            tenants: vec![],
+            replicas: vec![ReplicaReport {
+                id: 0,
+                state: "serving".into(),
+                capacity_bytes: 1 << 20,
+                routed: 0,
+                respawns: 0,
+                migrations_out: 0,
+                migrations_in: 0,
+                crashes: 0,
+                restored_in: 0,
+                serve: empty,
+            }],
+        };
+        let j = report.to_json();
+        let top = [
+            "router", "sim_secs", "total_requests", "completed",
+            "rejected", "evictions", "cancelled", "deadline_missed",
+            "dropped", "oom_events", "absorbed_spikes", "respawns",
+            "spawns", "retires", "migrations", "migration_bytes",
+            "migration_bytes_padded", "mean_latency", "p50_latency",
+            "p99_latency", "p50_ttft", "p99_ttft", "throughput_rps",
+            "routing_histogram", "ingress_skipped", "chaos", "tenants",
+            "replicas",
+        ];
+        for key in top {
+            assert!(j.get(key).is_ok(), "report JSON lost `{key}`");
+        }
+        let chaos = j.get("chaos").unwrap();
+        for key in ["failures_injected", "crashes", "reclaims",
+                    "seq_lost", "seq_restored", "checkpoints_taken",
+                    "checkpoint_bytes", "transfer_retries",
+                    "transfer_failures", "recovery_p99_ttft",
+                    "chaos_deadline_hit_rate"] {
+            assert!(chaos.get(key).is_ok(),
+                    "chaos section lost `{key}`");
+        }
+        let replica = &j.get("replicas").unwrap().arr().unwrap()[0];
+        for key in ["id", "state", "capacity_bytes", "routed",
+                    "respawns", "migrations_out", "migrations_in",
+                    "crashes", "restored_in", "completed", "rejected",
+                    "evictions", "cancelled", "oom_events",
+                    "absorbed_spikes", "mask_switches",
+                    "deadline_missed", "checkpoints_taken",
+                    "checkpoint_bytes", "p50_latency", "p99_latency",
+                    "p50_ttft", "p99_ttft", "throughput_rps"] {
+            assert!(replica.get(key).is_ok(),
+                    "replica section lost `{key}`");
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! the shared clock via [`Replica::step_to`], which delegates to the
 //! engine's externally-steppable `step_to` API.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::BTreeMap;
 
 use anyhow::Result;
 
@@ -21,6 +21,8 @@ use crate::runtime::Runtime;
 use crate::server::controller::{Controller, Policy};
 use crate::server::engine::{Engine, EngineConfig};
 use crate::server::memmon::{MemMonConfig, MemoryMonitor};
+use crate::telemetry::registry::series;
+use crate::telemetry::Registry;
 
 /// Replica lifecycle, driven by the fleet's maintenance pass.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -91,19 +93,18 @@ pub struct Replica {
     /// surface: for a spawned replica this is ≥ spawned_at +
     /// warmup_secs).
     pub first_routed_at: Option<f64>,
-    /// Sim times of recent OOM events (pressure window).
-    oom_marks: VecDeque<f64>,
-    /// Engine OOM counter at the last harvest.
+    /// Engine OOM counter at the last harvest (the marks themselves
+    /// live in the telemetry [`Registry`], keyed by replica id).
     oom_seen: u64,
-    /// Sim times of recent mask-absorbed spikes (the autoscaler's
-    /// early-warning window).
-    absorbed_marks: VecDeque<f64>,
     /// Engine absorbed-spike counter at the last harvest.
     absorbed_seen: u64,
-    /// Scan cursor into `engine.metrics.completed` for the autoscaler's
-    /// TTFT window (records are appended in `finished_at` order, so
-    /// records behind the cursor are permanently out of window).
+    /// Scan cursor into `engine.metrics.completed`: records behind the
+    /// cursor have already been harvested into the registry's TTFT
+    /// series.
     signal_cursor: usize,
+    /// A respawn cool-down elapsed; the next harvest clears this
+    /// replica's OOM series so it restarts with a clean history.
+    oom_reset_pending: bool,
 }
 
 impl Replica {
@@ -121,11 +122,10 @@ impl Replica {
             restored_in: 0,
             spawned_at: None,
             first_routed_at: None,
-            oom_marks: VecDeque::new(),
             oom_seen: 0,
-            absorbed_marks: VecDeque::new(),
             absorbed_seen: 0,
             signal_cursor: 0,
+            oom_reset_pending: false,
         }
     }
 
@@ -199,90 +199,62 @@ impl Replica {
         self.engine.submit(req);
     }
 
-    /// Advance to the shared clock, harvesting the OOM events and
-    /// absorbed spikes the step produced into their pressure windows.
-    /// Also completes a pending respawn or warm-up whose cool-down has
-    /// elapsed.
+    /// Advance to the shared clock; completes a pending respawn or
+    /// warm-up whose cool-down has elapsed. The fleet follows every
+    /// step with a [`Replica::harvest`] so the pressure signals the
+    /// step produced land in the telemetry registry.
     pub fn step_to(&mut self, t: f64) -> Result<()> {
         match self.state {
             ReplicaState::Respawning { until } if t >= until => {
                 self.state = ReplicaState::Serving;
-                self.oom_marks.clear();
+                self.oom_reset_pending = true;
             }
             ReplicaState::Warming { until } if t >= until => {
                 self.state = ReplicaState::Serving;
             }
             _ => {}
         }
-        self.engine.step_to(t)?;
+        self.engine.step_to(t)
+    }
+
+    /// Harvest the engine-side deltas since the last call into the
+    /// shared registry: OOM events and absorbed spikes become timestamped
+    /// marks on this replica's series (the autoscaler's pressure
+    /// windows), completed requests contribute `(finished_at, ttft)`
+    /// points to the TTFT window plus observations on the exported
+    /// latency histograms. A respawn that completed since the last
+    /// harvest clears the OOM series first — a restarted replica begins
+    /// with a clean pressure history.
+    pub fn harvest(&mut self, t: f64, reg: &mut Registry) {
+        if self.oom_reset_pending {
+            reg.clear(series::OOM, self.id);
+            self.oom_reset_pending = false;
+        }
         let total = self.engine.metrics.oom_events;
         for _ in self.oom_seen..total {
-            self.oom_marks.push_back(t);
+            reg.mark(series::OOM, self.id, t);
         }
         self.oom_seen = total;
         let absorbed = self.engine.metrics.absorbed_spikes;
         for _ in self.absorbed_seen..absorbed {
-            self.absorbed_marks.push_back(t);
+            reg.mark(series::ABSORBED, self.id, t);
         }
         self.absorbed_seen = absorbed;
         // keep the absorbed window from growing without bound (marks
         // only matter inside the autoscaler's signal window; 120 s
         // comfortably covers every configured window)
-        while let Some(&m) = self.absorbed_marks.front() {
-            if m < t - 120.0 {
-                self.absorbed_marks.pop_front();
-            } else {
-                break;
-            }
-        }
-        Ok(())
-    }
-
-    /// OOM events observed within the trailing `window` seconds
-    /// (trimming older marks as a side effect).
-    pub fn recent_ooms(&mut self, t: f64, window: f64) -> usize {
-        while let Some(&m) = self.oom_marks.front() {
-            if m < t - window {
-                self.oom_marks.pop_front();
-            } else {
-                break;
-            }
-        }
-        self.oom_marks.len()
-    }
-
-    /// OOM events at or after `t0`, without trimming — the autoscaler's
-    /// read of the pressure window (so its signal window can differ from
-    /// the drain policy's without the two fighting over the marks).
-    /// Marks older than the drain policy's window may already be gone,
-    /// so ask only about horizons inside it.
-    pub fn ooms_since(&self, t0: f64) -> usize {
-        self.oom_marks.iter().filter(|&&m| m >= t0).count()
-    }
-
-    /// Mask-absorbed spikes at or after `t0` — the autoscaler's
-    /// early-warning signal (`AutoscaleConfig::scale_on_absorption`):
-    /// sustained absorption means the masks are soaking up pressure
-    /// that will become true OOMs if it keeps growing.
-    pub fn absorbed_since(&self, t0: f64) -> usize {
-        self.absorbed_marks.iter().filter(|&&m| m >= t0).count()
-    }
-
-    /// Append the TTFTs of requests finished at or after `t0` to `out`.
-    /// Amortized O(new completions): the completed log is appended in
-    /// `finished_at` order, so a cursor skips everything that already
-    /// aged out of the (monotonically advancing) signal window instead
-    /// of rescanning the whole history every evaluation.
-    pub fn recent_ttfts(&mut self, t0: f64, out: &mut Vec<f64>) {
+        reg.trim(series::ABSORBED, self.id, t - 120.0);
+        // the completed log is appended in finished_at order, so the
+        // cursor makes this amortized O(new completions)
         let completed = &self.engine.metrics.completed;
-        while self.signal_cursor < completed.len()
-            && completed[self.signal_cursor].finished_at < t0
-        {
-            self.signal_cursor += 1;
-        }
         for rec in &completed[self.signal_cursor..] {
-            out.push(rec.ttft());
+            reg.record(series::TTFT, self.id, rec.finished_at,
+                       rec.ttft());
+            reg.observe("rap_ttft_seconds", rec.ttft());
+            reg.observe("rap_latency_seconds", rec.latency());
         }
+        self.signal_cursor = completed.len();
+        reg.trim(series::TTFT, self.id, t - 120.0);
     }
 }
 
@@ -373,21 +345,25 @@ mod tests {
 
     #[test]
     fn lifecycle_and_pressure_window() {
+        let mut reg = Registry::new();
         let mut r = build_sim_replica(0, &meta(),
                                       &ReplicaSpec::heterogeneous(0), 5);
         assert!(r.accepting());
         r.state = ReplicaState::Respawning { until: 10.0 };
         assert!(!r.accepting());
         r.step_to(5.0).unwrap();
+        r.harvest(5.0, &mut reg);
         assert!(matches!(r.state, ReplicaState::Respawning { .. }));
+        // marks accumulated before the cool-down elapses…
+        reg.mark(series::OOM, 0, 1.0);
+        reg.mark(series::OOM, 0, 9.0);
+        assert_eq!(reg.trim_count(series::OOM, 0, 10.0 - 2.0), 1);
         r.step_to(10.0).unwrap();
         assert!(r.accepting(), "respawn cool-down elapsed");
-        // pressure window trims old marks
-        r.oom_marks.push_back(1.0);
-        r.oom_marks.push_back(9.0);
-        r.oom_marks.push_back(10.0);
-        assert_eq!(r.recent_ooms(10.0, 2.0), 2);
-        assert_eq!(r.recent_ooms(100.0, 2.0), 0);
+        // …are forgotten at the next harvest: a respawned replica
+        // starts with a clean pressure history
+        r.harvest(10.0, &mut reg);
+        assert_eq!(reg.count_since(series::OOM, 0, 0.0), 0);
     }
 
     #[test]
@@ -420,16 +396,19 @@ mod tests {
 
     #[test]
     fn absorbed_marks_are_harvested() {
+        let mut reg = Registry::new();
         let mut r = build_sim_replica(0, &meta(),
                                       &ReplicaSpec::heterogeneous(0), 5);
         // fake two absorbed spikes on the engine between steps
         r.engine.metrics.absorbed_spikes = 2;
         r.step_to(3.0).unwrap();
-        assert_eq!(r.absorbed_since(0.0), 2);
-        assert_eq!(r.absorbed_since(3.5), 0);
+        r.harvest(3.0, &mut reg);
+        assert_eq!(reg.count_since(series::ABSORBED, 0, 0.0), 2);
+        assert_eq!(reg.count_since(series::ABSORBED, 0, 3.5), 0);
         r.engine.metrics.absorbed_spikes = 3;
         r.step_to(5.0).unwrap();
-        assert_eq!(r.absorbed_since(4.0), 1);
+        r.harvest(5.0, &mut reg);
+        assert_eq!(reg.count_since(series::ABSORBED, 0, 4.0), 1);
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! `rap bench fleet` — the serving-stack throughput benchmark: replay
+//! the seeded tenant-storm and chaos-storm scenario traces and record
+//! sim-side requests/sec, wall-clock, and peak RSS, each with telemetry
+//! off and on (the observer-cost surface CI watches).
+//!
+//! Unlike every report/trace JSON in the repo, `BENCH_fleet.json`
+//! deliberately carries wall-clock numbers — it *measures* the host, so
+//! its bytes are not expected to be seed-deterministic. Sim-side
+//! figures (requests, completions, sim seconds, rps) still are.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::common::banner;
+use crate::coordinator::fleet::{chaos_storm_fleet, chaos_storm_trace,
+                                tenant_storm_fleet, tenant_storm_trace};
+use crate::coordinator::router::RouterPolicy;
+use crate::util::json::Json;
+
+/// Peak resident set size in bytes, from `/proc/self/status` `VmHWM`.
+/// 0 when the file is unavailable (non-Linux hosts).
+fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb = rest.trim().trim_end_matches("kB").trim();
+            return kb.parse::<u64>().unwrap_or(0) * 1024;
+        }
+    }
+    0
+}
+
+struct BenchRow {
+    scenario: &'static str,
+    telemetry: bool,
+    requests: usize,
+    completed: usize,
+    sim_secs: f64,
+    sim_rps: f64,
+    wall_secs: f64,
+    audit_events: f64,
+}
+
+fn bench_one(scenario: &'static str, telemetry: bool, seed: u64)
+             -> Result<BenchRow> {
+    let (mut fleet, reqs) = match scenario {
+        "tenant-storm" => {
+            (tenant_storm_fleet(seed, RouterPolicy::TenantFair),
+             tenant_storm_trace(seed))
+        }
+        _ => (chaos_storm_fleet(seed, true), chaos_storm_trace(seed)),
+    };
+    if telemetry {
+        fleet.enable_telemetry();
+        fleet.enable_metrics_sampling(1.0);
+    }
+    let requests = reqs.len();
+    let t0 = Instant::now();
+    let report = fleet.run_requests(reqs)?;
+    let wall_secs = t0.elapsed().as_secs_f64();
+    // audit-stream size comes back out of the exported trace, so the
+    // benchmark also exercises the export path end to end
+    let audit_events = fleet
+        .trace_json()
+        .and_then(|t| t.get("metadata").ok()?.get("events").ok()?
+                       .num().ok())
+        .unwrap_or(0.0);
+    Ok(BenchRow {
+        scenario,
+        telemetry,
+        requests,
+        completed: report.completed,
+        sim_secs: report.sim_secs,
+        sim_rps: report.throughput_rps,
+        wall_secs,
+        audit_events,
+    })
+}
+
+/// `rap bench fleet [--json path]`: both storm scenarios, telemetry off
+/// then on, written to `BENCH_fleet.json` (or `--json <path>`).
+pub fn bench_fleet(seed: u64, json_path: Option<&str>) -> Result<()> {
+    banner(&format!(
+        "Bench — fleet serving throughput, telemetry off vs on \
+         (seed {seed})"));
+    println!("{:<14} {:>9} {:>9} {:>9} {:>9} {:>10} {:>10} {:>8}",
+             "scenario", "telemetry", "requests", "completed",
+             "sim secs", "sim req/s", "wall secs", "events");
+    let mut rows = Vec::new();
+    for scenario in ["tenant-storm", "chaos-storm"] {
+        for telemetry in [false, true] {
+            let row = bench_one(scenario, telemetry, seed)?;
+            println!("{:<14} {:>9} {:>9} {:>9} {:>9.1} {:>10.2} \
+                      {:>10.3} {:>8}",
+                     row.scenario, if row.telemetry { "on" } else
+                     { "off" },
+                     row.requests, row.completed, row.sim_secs,
+                     row.sim_rps, row.wall_secs, row.audit_events);
+            rows.push(row);
+        }
+    }
+    let peak_rss = peak_rss_bytes();
+    println!("peak RSS: {:.1} MiB", peak_rss as f64 / (1024.0 * 1024.0));
+    let json = Json::object(vec![
+        ("seed", Json::Num(seed as f64)),
+        ("peak_rss_bytes", Json::Num(peak_rss as f64)),
+        ("runs", Json::Arr(rows.iter().map(|r| {
+            Json::object(vec![
+                ("scenario", Json::Str(r.scenario.to_string())),
+                ("telemetry", Json::Bool(r.telemetry)),
+                ("requests", Json::Num(r.requests as f64)),
+                ("completed", Json::Num(r.completed as f64)),
+                ("sim_secs", Json::Num(r.sim_secs)),
+                ("sim_rps", Json::Num(r.sim_rps)),
+                ("wall_secs", Json::Num(r.wall_secs)),
+                ("audit_events", Json::Num(r.audit_events)),
+            ])
+        }).collect())),
+    ]);
+    let path = json_path.unwrap_or("BENCH_fleet.json");
+    std::fs::write(path, json.pretty())?;
+    println!("bench JSON written to {path}");
+    Ok(())
+}

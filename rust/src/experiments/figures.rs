@@ -125,19 +125,23 @@ pub fn fig4(model: &str) -> Result<()> {
 /// Fig 5: dynamic memory allocation trace with OOM events under a static
 /// dense deployment vs RAP.
 pub fn fig5(seed: u64, secs: f64) -> Result<()> {
-    fig5_with(seed, secs, 1, None)
+    fig5_with(seed, secs, 1, None, None)
 }
 
 /// As [`fig5`], with the CLI's tenancy decoration (`serve --tenants n
 /// --slo secs`): the same trace spread across `tenants` synthetic
 /// tenants, every request carrying a relative completion SLO of `slo`
 /// seconds. The report then includes the per-tenant sections (deadline
-/// hit-rates, per-tenant TTFT tails).
+/// hit-rates, per-tenant TTFT tails). `trace_out` attaches a flight
+/// recorder to the RAP engine and writes its Chrome-trace JSON there.
 pub fn fig5_with(seed: u64, secs: f64, tenants: usize,
-                 slo: Option<f64>) -> Result<()> {
+                 slo: Option<f64>, trace_out: Option<&str>)
+                 -> Result<()> {
     use crate::server::controller::{Controller, Policy};
     use crate::server::engine::{Engine, EngineConfig};
     use crate::server::memmon::{MemMonConfig, MemoryMonitor};
+    use crate::telemetry::{Bus, Recorder};
+    use crate::util::json::Json;
 
     banner("Figure 5 — dynamic memory trace with co-running interference");
     for (label, adaptive) in [("static-dense", false), ("RAP", true)] {
@@ -166,6 +170,16 @@ pub fn fig5_with(seed: u64, secs: f64, tenants: usize,
                                          max_sim_secs: secs,
                                          ..EngineConfig::default()
                                      });
+        // flight-record the RAP run (the one whose decisions are worth
+        // auditing) when the CLI asked for a trace file
+        let recorder = if adaptive && trace_out.is_some() {
+            let rec = std::rc::Rc::new(std::cell::RefCell::new(
+                Recorder::default()));
+            engine.bus = Bus::attached(&rec, Some(0));
+            Some(rec)
+        } else {
+            None
+        };
         let mut gen = TraceGenerator::new(TraceConfig {
             base_rate: 1.2,
             ..TraceConfig::default()
@@ -191,6 +205,15 @@ pub fn fig5_with(seed: u64, secs: f64, tenants: usize,
                  report.evictions, report.rejected, report.completed,
                  report.mask_switches);
         report.print_tenants();
+        if let (Some(path), Some(rec)) = (trace_out, recorder) {
+            let r = rec.borrow();
+            let trace = crate::telemetry::trace::chrome_trace(
+                &r.events, &r.dumps, engine.sim_time(),
+                vec![("source", Json::Str("rap serve".to_string())),
+                     ("seed", Json::Num(seed as f64))]);
+            std::fs::write(path, trace.pretty())?;
+            println!("  trace written to {path}");
+        }
     }
     println!("\nshape check: static deployment accumulates OOM events when \
               interference spikes; RAP absorbs them by shrinking the \

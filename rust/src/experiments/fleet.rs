@@ -213,7 +213,9 @@ fn nonterminal(r: &FleetReport) -> u64 {
 /// hit-rate — the same inequality `tests/chaos_fleet.rs` asserts. The
 /// scenario shape (3 replicas, 40 s window, the fault schedule) is
 /// fixed; only the seed varies.
-pub fn fleet_chaos(seed: u64) -> Result<()> {
+/// `trace_out` flight-records the checkpointed fleet (the run whose
+/// recovery decisions are worth auditing) and writes Chrome-trace JSON.
+pub fn fleet_chaos(seed: u64, trace_out: Option<&str>) -> Result<()> {
     banner(&format!(
         "Fleet — checkpointed vs checkpoint-free recovery under one \
          seeded fault plan (seed {seed})"));
@@ -231,8 +233,15 @@ pub fn fleet_chaos(seed: u64) -> Result<()> {
     let pr = plain.run_requests(reqs.clone())?;
     chaos_row("checkpoint-free", &pr);
     let mut ckpt = chaos_storm_fleet(seed, true);
+    if trace_out.is_some() {
+        ckpt.enable_telemetry();
+    }
     let cr = ckpt.run_requests(reqs)?;
     chaos_row("checkpointed", &cr);
+    if let (Some(path), Some(trace)) = (trace_out, ckpt.trace_json()) {
+        std::fs::write(path, trace.pretty())?;
+        println!("trace written to {path}");
+    }
     let p_lat = tenant_section(&pr, "latency");
     let c_lat = tenant_section(&cr, "latency");
     println!("\nshape check: both fleets eat the same crash, but the \

@@ -1,6 +1,7 @@
 //! Experiment drivers — one per paper table/figure (DESIGN.md §5 maps
 //! each to its source). All are runnable via `rap experiment <id>`.
 
+pub mod bench;
 pub mod common;
 pub mod figures;
 pub mod fleet;

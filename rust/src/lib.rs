@@ -13,7 +13,8 @@
 //!     the paper's contribution (`gsi`, `agent`, `pruning`), the
 //!     serving stack (`server`, `workload`) behind the typed
 //!     tenant/SLO-aware request ingress (`api`), the multi-replica
-//!     fleet coordinator with memory-aware routing (`coordinator`), and
+//!     fleet coordinator with memory-aware routing (`coordinator`), the
+//!     flight-recorder observability layer (`telemetry`), and
 //!     regenerates every table and figure (`experiments`).
 
 pub mod agent;
@@ -29,6 +30,7 @@ pub mod model_meta;
 pub mod pruning;
 pub mod runtime;
 pub mod server;
+pub mod telemetry;
 pub mod util;
 pub mod workload;
 

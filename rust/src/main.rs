@@ -22,19 +22,26 @@
 //!                     failure schedule and --checkpoint <secs> turns on
 //!                     periodic KV checkpointing for crash recovery
 //!   gsi               run Greedy Sequential Importance on a model
+//!   trace             summarize/validate a flight-recorder trace file
+//!                     written by --trace (serve / serve-fleet /
+//!                     experiment fleet --chaos)
+//!   bench             fleet serving throughput with telemetry off vs
+//!                     on, written to BENCH_fleet.json
 //!
 //! Common flags: --model <name> --seed <n> --quick
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use rap::api;
 use rap::coordinator::fleet::{default_fleet_trace,
                               default_sim_fleet_with,
                               equal_share_quotas, AutoscaleConfig,
                               FleetConfig};
 use rap::coordinator::router::RouterPolicy;
-use rap::experiments::{figures, fleet, rl, tables};
+use rap::experiments::{bench, figures, fleet, rl, tables};
 use rap::runtime::FaultPlan;
+use rap::telemetry::trace;
 use rap::util::cli::Args;
+use rap::util::json::Json;
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -68,9 +75,23 @@ fn main() -> Result<()> {
                 Some(v) => Some(v.parse::<f64>()?),
                 None => None,
             };
-            figures::fig5_with(seed, secs, tenants, slo)
+            figures::fig5_with(seed, secs, tenants, slo,
+                               args.get("trace").map(|s| s.as_str()))
         }
         "serve-fleet" => serve_fleet(seed, &args),
+        "trace" => run_trace_tool(&args),
+        "bench" => {
+            let what = args
+                .positional
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("fleet");
+            if what != "fleet" {
+                bail!("unknown bench target '{what}' (try: fleet)");
+            }
+            bench::bench_fleet(seed,
+                               args.get("json").map(|s| s.as_str()))
+        }
         // ("--help" never reaches here: Args::parse turns --x into a
         // flag, leaving cmd at its "help" default)
         "help" | "-h" => {
@@ -83,6 +104,44 @@ fn main() -> Result<()> {
             print_help();
             bail!("unknown command '{other}'")
         }
+    }
+}
+
+/// `rap trace summarize <file> [--request <id>]` reconstructs one
+/// request's life story from a flight-recorder trace (no id: the most
+/// eventful — in a chaos run, the crash-disturbed — request);
+/// `rap trace validate <file>` checks the structural invariants
+/// (monotonic timestamps, balanced begin/end spans, no orphan ids).
+fn run_trace_tool(args: &Args) -> Result<()> {
+    let action = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("summarize");
+    let path = args
+        .positional
+        .get(2)
+        .context("usage: rap trace summarize|validate <file>")?;
+    let doc = Json::parse_file(std::path::Path::new(path))?;
+    match action {
+        "summarize" => {
+            let want = match args.get("request") {
+                Some(v) => Some(v.parse::<u64>()?),
+                None => None,
+            };
+            print!("{}", trace::summarize(&doc, want)?);
+            Ok(())
+        }
+        "validate" => {
+            let stats = trace::validate(&doc)?;
+            println!("trace OK: {} trace events ({} spans, {} \
+                      instants), {} requests, {} audit events",
+                     stats.trace_events, stats.spans, stats.instants,
+                     stats.requests, stats.audit_events);
+            Ok(())
+        }
+        other => bail!("unknown trace action '{other}' \
+                        (try: summarize, validate)"),
     }
 }
 
@@ -99,6 +158,10 @@ fn main() -> Result<()> {
 /// link degradation/partitions, spot reclaims, memory pressure) drawn
 /// over the arrival window; `--checkpoint <secs>` turns on periodic KV
 /// checkpointing so crashes restore in-flight sequences onto peers.
+/// Observability: `--trace <path>` writes the Chrome/Perfetto flight
+/// recording, `--metrics <path>` the Prometheus text exposition,
+/// `--metrics-json <path>` the sampled time-series (period:
+/// `--metrics-period <secs>`, default 5).
 fn serve_fleet(seed: u64, args: &Args) -> Result<()> {
     let replicas = args.usize_or("replicas", 4)?;
     if replicas == 0 {
@@ -150,6 +213,20 @@ fn serve_fleet(seed: u64, args: &Args) -> Result<()> {
     if policy == RouterPolicy::TenantFair && tenants > 1 {
         fleet.router.quotas = equal_share_quotas(&fleet, tenants);
     }
+    let trace_path = args.get("trace");
+    let metrics_path = args.get("metrics");
+    let metrics_json_path = args.get("metrics-json");
+    if trace_path.is_some() {
+        fleet.enable_telemetry();
+    }
+    if metrics_path.is_some() || metrics_json_path.is_some() {
+        let period = args.f64_or("metrics-period", 5.0)?;
+        if !period.is_finite() || period <= 0.0 {
+            bail!("--metrics-period must be a positive number of \
+                   seconds");
+        }
+        fleet.enable_metrics_sampling(period);
+    }
     let reqs = default_fleet_trace(seed, secs);
     println!("serve-fleet: {} requests over {secs:.0}s across {replicas} \
               replicas (router={}, seed={seed}, tenants={tenants}, \
@@ -166,6 +243,25 @@ fn serve_fleet(seed: u64, args: &Args) -> Result<()> {
             println!("fleet report JSON written to {path}");
         }
         None => println!("{json}"),
+    }
+    if let (Some(path), Some(trace)) = (trace_path, fleet.trace_json())
+    {
+        std::fs::write(path, trace.pretty())?;
+        println!("trace written to {path}");
+    }
+    if metrics_path.is_some() || metrics_json_path.is_some() {
+        // refresh the counters one last time so the exposition reflects
+        // the fully drained run, not the last in-run sample
+        fleet.publish_metrics();
+        if let Some(path) = metrics_path {
+            std::fs::write(path, fleet.registry.prometheus())?;
+            println!("metrics exposition written to {path}");
+        }
+        if let Some(path) = metrics_json_path {
+            std::fs::write(path,
+                           fleet.registry.timeline_json().pretty())?;
+            println!("metrics time-series written to {path}");
+        }
     }
     Ok(())
 }
@@ -205,8 +301,11 @@ fn run_experiment(id: &str, model: &str, seed: u64, quick: bool,
                 fleet::fleet_tenants(seed)
             } else if args.bool("chaos") {
                 // fixed scenario (3 replicas, one fault plan):
-                // checkpointed vs checkpoint-free recovery
-                fleet::fleet_chaos(seed)
+                // checkpointed vs checkpoint-free recovery; --trace
+                // flight-records the checkpointed run
+                fleet::fleet_chaos(seed,
+                                   args.get("trace")
+                                       .map(|s| s.as_str()))
             } else {
                 fleet::fleet_compare(
                     seed,
@@ -264,6 +363,17 @@ fn print_help() {
               <secs>]  (seeded failure injection; periodic KV");
     println!("                    checkpoints restore crashed work onto \
               peers)");
+    println!("                   [--trace <path>]  (Chrome/Perfetto \
+              flight recording — also on serve and");
+    println!("                    experiment fleet --chaos)");
+    println!("                   [--metrics <path>] [--metrics-json \
+              <path>] [--metrics-period <secs>]");
+    println!("                    (Prometheus exposition / sampled \
+              time-series of the fleet registry)");
+    println!("  trace            summarize|validate <file> \
+              [--request <id>]");
+    println!("  bench            fleet [--json <path>]  (storm-scenario \
+              throughput, telemetry off vs on)");
     println!("  gsi              --model <m> --remove <n>");
     println!();
     println!("FLAGS: --model rap-small|qwen-sim|rap-tiny  --seed N  \

@@ -90,6 +90,31 @@ impl FaultEvent {
             FaultEvent::Pressure { from, .. } => from,
         }
     }
+
+    /// Audit label for the telemetry event stream, e.g.
+    /// `crash replica 1 at 14s`.
+    pub fn describe(&self) -> String {
+        match *self {
+            FaultEvent::Crash { at, replica } => {
+                format!("crash replica {replica} at {at}s")
+            }
+            FaultEvent::Degrade { from, until, factor } => {
+                format!("degrade link x{factor} over [{from}s, \
+                         {until}s)")
+            }
+            FaultEvent::Partition { from, until } => {
+                format!("partition link over [{from}s, {until}s)")
+            }
+            FaultEvent::Reclaim { at, replica, grace_secs } => {
+                format!("reclaim replica {replica} at {at}s (grace \
+                         {grace_secs}s)")
+            }
+            FaultEvent::Pressure { from, until, frac } => {
+                format!("pressure {frac} of capacity over [{from}s, \
+                         {until}s)")
+            }
+        }
+    }
 }
 
 /// A seeded, deterministic schedule of failure events for one run. The

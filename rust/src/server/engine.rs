@@ -60,6 +60,7 @@ use crate::api::{Outcome, RequestHandle, RequestStatus, SubmitRequest};
 use crate::mask::PruneMask;
 use crate::memory::{MemoryModel, Workload};
 use crate::runtime::Runtime;
+use crate::telemetry::{Bus, EventKind};
 
 /// How the engine sheds in-flight work when interference pushes its
 /// footprint over `Sys_avail(t)`.
@@ -226,6 +227,11 @@ pub struct Engine {
     pub cfg: EngineConfig,
     pub mask: PruneMask,
     pub metrics: Metrics,
+    /// Telemetry event bus — disabled (and free) unless a recorder is
+    /// attached. Every lifecycle transition this engine decides is
+    /// emitted here; numerics never read from it (observer-effect
+    /// guard: a seeded run's report is byte-identical on or off).
+    pub bus: Bus,
     sim_time: f64,
     last_controller_at: f64,
     last_sample_at: f64,
@@ -273,6 +279,7 @@ impl Engine {
             cfg,
             mask,
             metrics: Metrics::default(),
+            bus: Bus::disabled(),
             sim_time: 0.0,
             last_controller_at: f64::NEG_INFINITY,
             last_sample_at: f64::NEG_INFINITY,
@@ -306,6 +313,8 @@ impl Engine {
     /// handle keys [`Engine::status`] / [`Engine::cancel`].
     pub fn submit(&mut self, req: SubmitRequest) -> RequestHandle {
         let handle = RequestHandle { id: req.id };
+        self.bus.emit(self.sim_time, Some(req.id), Some(&req.tenant),
+                      || EventKind::Submit);
         self.metrics.note_submitted(&req);
         self.batcher.enqueue(req);
         handle
@@ -341,6 +350,8 @@ impl Engine {
             let req = self.batcher.waiting.remove(i).unwrap();
             self.drop_checkpoint(id);
             self.resumable.remove(&id);
+            self.bus.emit(self.sim_time, Some(id), Some(&req.tenant),
+                          || EventKind::Cancel);
             self.metrics.note_terminal(&req, Outcome::Cancelled);
             return Ok(true);
         }
@@ -351,12 +362,17 @@ impl Engine {
             let seq = self.batcher.active.remove(i);
             self.kv.remove(seq.req.id);
             self.drop_checkpoint(id);
+            self.bus.emit(self.sim_time, Some(id),
+                          Some(&seq.req.tenant), || EventKind::Cancel);
             self.metrics.note_terminal(&seq.req, Outcome::Cancelled);
             return Ok(true);
         }
         if let Some(i) = self.parked.iter().position(|s| s.id() == id) {
             let state = self.parked.remove(i);
             self.drop_checkpoint(id);
+            self.bus.emit(self.sim_time, Some(id),
+                          Some(&state.request().tenant),
+                          || EventKind::Cancel);
             self.metrics.note_terminal(state.request(),
                                        Outcome::Cancelled);
             return Ok(true);
@@ -442,8 +458,28 @@ impl Engine {
         if new_mask != self.mask {
             self.metrics.mask_switches += 1;
             self.mask = new_mask;
+            self.emit_mask_deploy(w, avail, false);
         }
         Ok(())
+    }
+
+    /// Audit a mask deployment: the GSI decision inputs (workload
+    /// bucket, `Sys_avail(t)`) and the [`MemoryOutlook`] lattice at
+    /// decision time. Emission only — a pure read of engine state.
+    fn emit_mask_deploy(&self, w: Workload, avail: usize, forced: bool) {
+        self.bus.emit(self.sim_time, None, None, || {
+            let ol = self.outlook();
+            EventKind::MaskDeploy {
+                batch: w.batch,
+                seqlen: w.seqlen,
+                avail: avail as u64,
+                min_viable: ol.min_viable as u64,
+                current: ol.current as u64,
+                dense: ol.dense as u64,
+                retained: self.mask.param_fraction(self.rt.meta()),
+                forced,
+            }
+        });
     }
 
     fn sample_memory(&mut self) {
@@ -476,6 +512,7 @@ impl Engine {
             && self.cfg.elastic_accounting;
         if !absorbable {
             self.metrics.oom_events += 1;
+            self.emit_oom();
         }
         // Give the controller a chance to shrink the model first.
         self.run_controller(true)?;
@@ -492,11 +529,14 @@ impl Engine {
                 <= self.monitor.available_at(self.sim_time)
             {
                 self.metrics.absorbed_spikes += 1;
+                self.bus.emit(self.sim_time, None, None,
+                              || EventKind::AbsorbedSpike);
                 return Ok(());
             }
             // Even the min-viable mask did not fit (the monitor moved,
             // or the outlook was stale): this is a true OOM after all.
             self.metrics.oom_events += 1;
+            self.emit_oom();
         }
         self.flush_batch()?;
         while self.bytes_used()
@@ -517,6 +557,10 @@ impl Engine {
                 // exactly these).
                 self.kv.remove(seq.req.id);
                 self.drop_checkpoint(seq.req.id);
+                self.bus.emit(self.sim_time, Some(seq.req.id),
+                              Some(&seq.req.tenant), || {
+                    EventKind::DeadlineMiss { site: "pressure" }
+                });
                 self.metrics.note_terminal(&seq.req,
                                            Outcome::DeadlineMissed);
                 continue;
@@ -529,15 +573,33 @@ impl Engine {
                     self.kv.remove(seq.req.id);
                     self.drop_checkpoint(seq.req.id);
                     self.metrics.evictions += 1;
+                    self.bus.emit(self.sim_time, Some(seq.req.id),
+                                  Some(&seq.req.tenant), || {
+                        EventKind::Evict { mode: "requeue" }
+                    });
                     self.batcher.requeue_front(seq.req);
                 }
                 EvictionMode::Park => {
+                    self.bus.emit(self.sim_time, Some(seq.req.id),
+                                  Some(&seq.req.tenant), || {
+                        EventKind::Evict { mode: "park" }
+                    });
                     let state = self.export_active(seq)?;
                     self.parked.push(state);
                 }
             }
         }
         Ok(())
+    }
+
+    /// True-OOM audit: the instant event plus a flight-recorder dump —
+    /// an OOM is exactly the moment a postmortem wants the ring for.
+    fn emit_oom(&self) {
+        self.bus.emit(self.sim_time, None, None, || EventKind::Oom);
+        if self.bus.enabled() {
+            self.bus
+                .flight_dump(self.sim_time, "true OOM under pressure");
+        }
     }
 
     /// Index of the active sequence whose eviction/migration pays off
@@ -619,6 +681,12 @@ impl Engine {
             if m != self.mask {
                 self.metrics.mask_switches += 1;
                 self.mask = m;
+                if self.bus.enabled() {
+                    let w = self.observed_workload();
+                    let avail =
+                        self.monitor.available_at(self.sim_time);
+                    self.emit_mask_deploy(w, avail, true);
+                }
             }
         }
     }
@@ -884,6 +952,12 @@ impl Engine {
                 .unwrap_or(0);
             if new_bytes > old_bytes {
                 delta_bytes += new_bytes - old_bytes;
+                self.bus.emit(self.sim_time, Some(seq.req.id),
+                              Some(&seq.req.tenant), || {
+                    EventKind::Checkpoint {
+                        bytes: (new_bytes - old_bytes) as u64,
+                    }
+                });
                 snaps.push(state);
             }
         }
@@ -979,6 +1053,10 @@ impl Engine {
             let req = self.batcher.waiting.pop_front().unwrap();
             self.drop_checkpoint(req.id);
             self.resumable.remove(&req.id);
+            self.bus.emit(self.sim_time, Some(req.id),
+                          Some(&req.tenant), || {
+                EventKind::DeadlineMiss { site: "queue" }
+            });
             self.metrics.note_terminal(&req, Outcome::DeadlineMissed);
         }
     }
@@ -1024,9 +1102,17 @@ impl Engine {
             {
                 self.kv.remove(seq.req.id);
                 self.drop_checkpoint(seq.req.id);
+                self.bus.emit(self.sim_time, Some(seq.req.id),
+                              Some(&seq.req.tenant), || {
+                    EventKind::DeadlineMiss { site: "preempt" }
+                });
                 self.metrics.note_terminal(&seq.req,
                                            Outcome::DeadlineMissed);
             } else {
+                self.bus.emit(self.sim_time, Some(seq.req.id),
+                              Some(&seq.req.tenant), || {
+                    EventKind::Preempt { for_request: req.id }
+                });
                 match self.cfg.eviction {
                     EvictionMode::Requeue => {
                         self.kv.remove(seq.req.id);
@@ -1104,6 +1190,16 @@ impl Engine {
                 self.drop_checkpoint(rejected.id);
                 self.resumable.remove(&rejected.id);
                 self.metrics.rejected += 1;
+                self.bus.emit(self.sim_time, Some(rejected.id),
+                              Some(&rejected.tenant), || {
+                    EventKind::Reject { reason: "admission-no-fit" }
+                });
+                if self.bus.enabled() {
+                    self.bus.flight_dump(
+                        self.sim_time,
+                        "terminal rejection at admission",
+                    );
+                }
                 self.metrics.note_terminal(&rejected, Outcome::Rejected);
             }
             return Ok(false);
@@ -1118,6 +1214,8 @@ impl Engine {
             // place and no prefill is re-run — its first token was
             // served before the crash, so TTFT keeps the original
             // prefill time.
+            self.bus.emit(self.sim_time, Some(req.id),
+                          Some(&req.tenant), || EventKind::Resume);
             self.kv.insert(req.id, k, v, kv_len, &self.mask)?;
             self.batcher.push_active(ActiveSeq {
                 req,
@@ -1143,6 +1241,8 @@ impl Engine {
         self.metrics.prefills += 1;
 
         let next_token = argmax(&logits) as i32;
+        self.bus.emit(self.sim_time, Some(req.id), Some(&req.tenant),
+                      || EventKind::Admit);
         self.kv.insert(req.id, k, v, bucket, &self.mask)?;
         self.batcher.push_active(ActiveSeq {
             req,
@@ -1214,6 +1314,10 @@ impl Engine {
             } else {
                 Outcome::DeadlineMissed
             };
+            self.bus.emit(self.sim_time, Some(seq.req.id),
+                          Some(&seq.req.tenant), || {
+                EventKind::Finish { outcome: outcome.name() }
+            });
             self.metrics.note_terminal(&seq.req, outcome);
             self.metrics.completed.push(RequestRecord {
                 id: seq.req.id,

@@ -216,6 +216,8 @@ impl Metrics {
             prefills: self.prefills,
             tokens_generated: self.tokens_generated,
             mask_switches: self.mask_switches,
+            checkpoints_taken: self.checkpoints_taken,
+            checkpoint_bytes: self.checkpoint_bytes,
             mean_latency: mean(&lats),
             p50_latency: percentile(&lats, 50.0),
             p95_latency: percentile(&lats, 95.0),
@@ -281,6 +283,11 @@ pub struct ServeReport {
     pub prefills: u64,
     pub tokens_generated: u64,
     pub mask_switches: u64,
+    /// Crash-recovery checkpoint cycles that shipped anything (see
+    /// `Metrics::checkpoints_taken`).
+    pub checkpoints_taken: u64,
+    /// Interconnect bytes charged to checkpointing (deltas only).
+    pub checkpoint_bytes: u64,
     pub mean_latency: f64,
     pub p50_latency: f64,
     pub p95_latency: f64,
@@ -314,6 +321,10 @@ impl ServeReport {
         println!("   decode steps     {:>10}", self.decode_steps);
         println!("   tokens generated {:>10}", self.tokens_generated);
         println!("   mask switches    {:>10}", self.mask_switches);
+        if self.checkpoints_taken > 0 {
+            println!("   checkpoints      {:>10}   ({} bytes)",
+                     self.checkpoints_taken, self.checkpoint_bytes);
+        }
         println!("   latency mean/p50/p95/p99  {:.3}s / {:.3}s / {:.3}s \
                   / {:.3}s",
                  self.mean_latency, self.p50_latency, self.p95_latency,

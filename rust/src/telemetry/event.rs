@@ -1,0 +1,299 @@
+//! Typed telemetry events: one variant per control-plane decision or
+//! request lifecycle transition, stamped with sim time, replica id,
+//! request id, and tenant. The event stream is the ground-truth record
+//! the ROADMAP's learned-control-plane item needs — every mask deploy
+//! carries its GSI decision inputs and the `MemoryOutlook` lattice at
+//! decision time, every autoscale action its triggering signal values.
+
+use crate::api::Tenant;
+use crate::util::json::Json;
+
+/// The autoscaler's signal values at the moment it acted — the decision
+/// audit attached to every spawn/retire event (a plain copy so the
+/// telemetry layer does not depend on coordinator types).
+#[derive(Clone, Copy, Debug)]
+pub struct SignalSnapshot {
+    pub serving: usize,
+    pub outstanding: usize,
+    pub p99_ttft: f64,
+    pub recent_ooms: usize,
+    pub recent_absorbed: usize,
+    pub capacity_losses: usize,
+}
+
+/// What happened. Names (see [`EventKind::name`]) are the stable,
+/// greppable vocabulary of the audit stream and the `trace summarize`
+/// output.
+#[derive(Clone, Debug)]
+pub enum EventKind {
+    /// A request entered the serving system (engine admission queue, or
+    /// the fleet front door before routing).
+    Submit,
+    /// The router placed the request on a replica.
+    Route { dest: usize, policy: String },
+    /// Admission popped the request and ran its prefill.
+    Admit,
+    /// A restored snapshot re-attached its KV in place of a prefill.
+    Resume,
+    /// Finished decoding; `outcome` is `done` or `deadline-missed`.
+    Finish { outcome: &'static str },
+    /// Terminal admission rejection.
+    Reject { reason: &'static str },
+    /// Shed under memory pressure (`mode` = `requeue` or `park`).
+    Evict { mode: &'static str },
+    /// Displaced by priority-aware admission to fit `for_request`.
+    Preempt { for_request: u64 },
+    /// Reclaimed through the lifecycle API.
+    Cancel,
+    /// Terminal `DeadlineMissed` (`site` = where it was caught:
+    /// `queue`, `pressure`, or `preempt`).
+    DeadlineMiss { site: &'static str },
+    /// This sequence's live-KV delta shipped in a checkpoint cycle.
+    Checkpoint { bytes: u64 },
+    /// With a request id: that sequence's disposition when its replica
+    /// died (`checkpointed` / `lost` / `requeued`). Without one: the
+    /// replica-level death itself.
+    Crash { disposition: &'static str },
+    /// A checkpointed sequence landed on a peer and re-entered
+    /// admission there.
+    Restore { dest: usize },
+    /// A sequence moved between replicas (`state` = `active` or
+    /// `queued`; `bytes` is the live payload charged to the link).
+    Migrate { src: usize, dest: usize, bytes: u64, state: &'static str },
+    /// The controller deployed a new mask. Carries the GSI decision
+    /// inputs (observed workload + `Sys_avail`) and the
+    /// [`MemoryOutlook`](crate::server::outlook::MemoryOutlook) lattice
+    /// at decision time; `forced` marks the pressure/admission
+    /// min-viable override path.
+    MaskDeploy {
+        batch: usize,
+        seqlen: usize,
+        avail: u64,
+        min_viable: u64,
+        current: u64,
+        dense: u64,
+        retained: f64,
+        forced: bool,
+    },
+    /// A true OOM: pressure even the min-viable mask could not absorb.
+    Oom,
+    /// A spike absorbed purely by mask-shrinking (no work shed).
+    AbsorbedSpike,
+    /// The autoscaler added a replica; `trigger` names the signal that
+    /// fired (`Autoscaler::explain`).
+    AutoscaleSpawn {
+        new_replica: usize,
+        trigger: &'static str,
+        signals: SignalSnapshot,
+    },
+    /// The autoscaler began draining a replica toward retirement.
+    AutoscaleRetire {
+        victim: usize,
+        trigger: &'static str,
+        signals: SignalSnapshot,
+    },
+    /// A scheduled fault fired (`fault` is the plan entry's
+    /// description).
+    FaultInjected { fault: String },
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Submit => "submit",
+            EventKind::Route { .. } => "route",
+            EventKind::Admit => "admit",
+            EventKind::Resume => "resume",
+            // the terminal outcome IS the event name: life stories read
+            // "submit → … → done" without an args indirection
+            EventKind::Finish { outcome } => outcome,
+            EventKind::Reject { .. } => "reject",
+            EventKind::Evict { .. } => "evict",
+            EventKind::Preempt { .. } => "preempt",
+            EventKind::Cancel => "cancel",
+            EventKind::DeadlineMiss { .. } => "deadline-miss",
+            EventKind::Checkpoint { .. } => "checkpoint",
+            EventKind::Crash { .. } => "crash",
+            EventKind::Restore { .. } => "restore",
+            EventKind::Migrate { .. } => "migrate",
+            EventKind::MaskDeploy { .. } => "mask-deploy",
+            EventKind::Oom => "oom",
+            EventKind::AbsorbedSpike => "absorbed-spike",
+            EventKind::AutoscaleSpawn { .. } => "autoscale-spawn",
+            EventKind::AutoscaleRetire { .. } => "autoscale-retire",
+            EventKind::FaultInjected { .. } => "fault-injected",
+        }
+    }
+
+    /// Structured payload for the audit stream (empty for payload-free
+    /// kinds).
+    fn args(&self) -> Vec<(&'static str, Json)> {
+        fn n(x: f64) -> Json {
+            if x.is_finite() { Json::Num(x) } else { Json::Null }
+        }
+        fn u(x: u64) -> Json {
+            Json::Num(x as f64)
+        }
+        fn signals(s: &SignalSnapshot) -> Json {
+            Json::object(vec![
+                ("serving", u(s.serving as u64)),
+                ("outstanding", u(s.outstanding as u64)),
+                ("p99_ttft", n(s.p99_ttft)),
+                ("recent_ooms", u(s.recent_ooms as u64)),
+                ("recent_absorbed", u(s.recent_absorbed as u64)),
+                ("capacity_losses", u(s.capacity_losses as u64)),
+            ])
+        }
+        match self {
+            EventKind::Route { dest, policy } => vec![
+                ("dest", u(*dest as u64)),
+                ("policy", Json::Str(policy.clone())),
+            ],
+            EventKind::Finish { outcome } => {
+                vec![("outcome", Json::Str(outcome.to_string()))]
+            }
+            EventKind::Reject { reason } => {
+                vec![("reason", Json::Str(reason.to_string()))]
+            }
+            EventKind::Evict { mode } => {
+                vec![("mode", Json::Str(mode.to_string()))]
+            }
+            EventKind::Preempt { for_request } => {
+                vec![("for_request", u(*for_request))]
+            }
+            EventKind::DeadlineMiss { site } => {
+                vec![("site", Json::Str(site.to_string()))]
+            }
+            EventKind::Checkpoint { bytes } => vec![("bytes", u(*bytes))],
+            EventKind::Crash { disposition } => {
+                vec![("disposition", Json::Str(disposition.to_string()))]
+            }
+            EventKind::Restore { dest } => {
+                vec![("dest", u(*dest as u64))]
+            }
+            EventKind::Migrate { src, dest, bytes, state } => vec![
+                ("src", u(*src as u64)),
+                ("dest", u(*dest as u64)),
+                ("bytes", u(*bytes)),
+                ("state", Json::Str(state.to_string())),
+            ],
+            EventKind::MaskDeploy { batch, seqlen, avail, min_viable,
+                                    current, dense, retained, forced } => {
+                vec![
+                    ("batch", u(*batch as u64)),
+                    ("seqlen", u(*seqlen as u64)),
+                    ("avail_bytes", u(*avail)),
+                    ("min_viable_bytes", u(*min_viable)),
+                    ("current_bytes", u(*current)),
+                    ("dense_bytes", u(*dense)),
+                    ("retained_fraction", n(*retained)),
+                    ("forced", Json::Bool(*forced)),
+                ]
+            }
+            EventKind::AutoscaleSpawn { new_replica, trigger,
+                                        signals: s } => vec![
+                ("new_replica", u(*new_replica as u64)),
+                ("trigger", Json::Str(trigger.to_string())),
+                ("signals", signals(s)),
+            ],
+            EventKind::AutoscaleRetire { victim, trigger, signals: s } => {
+                vec![
+                    ("victim", u(*victim as u64)),
+                    ("trigger", Json::Str(trigger.to_string())),
+                    ("signals", signals(s)),
+                ]
+            }
+            EventKind::FaultInjected { fault } => {
+                vec![("fault", Json::Str(fault.clone()))]
+            }
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// One stamped telemetry event. `t` is *sim* time — wall-clock values
+/// never enter the event stream (the PR-4 determinism contract: trace
+/// files are byte-identical per seed).
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub t: f64,
+    /// Global emission order (ties on `t` across replicas are broken by
+    /// the order the control plane actually acted in).
+    pub seq: u64,
+    pub replica: Option<usize>,
+    pub request: Option<u64>,
+    pub tenant: Option<Tenant>,
+    pub kind: EventKind,
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("t", Json::Num(self.t)),
+            ("seq", Json::Num(self.seq as f64)),
+            ("event", Json::Str(self.kind.name().to_string())),
+        ];
+        if let Some(r) = self.replica {
+            fields.push(("replica", Json::Num(r as f64)));
+        }
+        if let Some(id) = self.request {
+            fields.push(("request", Json::Num(id as f64)));
+        }
+        if let Some(tn) = &self.tenant {
+            fields.push(("tenant", Json::Str(tn.to_string())));
+        }
+        let args = self.kind.args();
+        if !args.is_empty() {
+            fields.push(("args", Json::object(args)));
+        }
+        Json::object(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_json_carries_stamp_and_args() {
+        let ev = Event {
+            t: 14.25,
+            seq: 7,
+            replica: Some(1),
+            request: Some(42),
+            tenant: Some(crate::api::tenant("burst")),
+            kind: EventKind::Migrate { src: 1, dest: 2, bytes: 4096,
+                                       state: "active" },
+        };
+        let j = ev.to_json();
+        assert_eq!(j.get("event").unwrap().str().unwrap(), "migrate");
+        assert_eq!(j.get("request").unwrap().usize().unwrap(), 42);
+        assert_eq!(j.get("replica").unwrap().usize().unwrap(), 1);
+        assert_eq!(j.get("tenant").unwrap().str().unwrap(), "burst");
+        let args = j.get("args").unwrap();
+        assert_eq!(args.get("dest").unwrap().usize().unwrap(), 2);
+        assert_eq!(args.get("state").unwrap().str().unwrap(), "active");
+    }
+
+    #[test]
+    fn finish_events_are_named_by_outcome() {
+        let done = EventKind::Finish { outcome: "done" };
+        assert_eq!(done.name(), "done");
+        let missed = EventKind::Finish { outcome: "deadline-missed" };
+        assert_eq!(missed.name(), "deadline-missed");
+        // NaN signal values serialize as null, not as invalid JSON
+        let spawn = EventKind::AutoscaleSpawn {
+            new_replica: 3,
+            trigger: "capacity-loss",
+            signals: SignalSnapshot { serving: 2, outstanding: 9,
+                                      p99_ttft: f64::NAN, recent_ooms: 0,
+                                      recent_absorbed: 0,
+                                      capacity_losses: 1 },
+        };
+        let args = Json::object(spawn.args());
+        assert_eq!(args.get("trigger").unwrap().str().unwrap(),
+                   "capacity-loss");
+        assert_eq!(args.get("signals").unwrap().get("p99_ttft").unwrap(),
+                   &Json::Null);
+    }
+}

@@ -1,0 +1,185 @@
+//! Flight recorder for the RAP control plane: typed event bus,
+//! metrics registry, Chrome/Perfetto trace export, and a bounded
+//! ring buffer dumped on crash/OOM/terminal rejection.
+//!
+//! Design rules, in priority order:
+//!
+//! 1. **Zero cost when disabled.** A disabled [`Bus`] is a `None`
+//!    check; event payloads are built inside a closure that is never
+//!    called, so hot paths pay one branch.
+//! 2. **No observer effect.** Events carry sim time only and touch no
+//!    RNG, no clocks, and no scheduling state — seeded
+//!    `ServeReport`/`FleetReport` JSON is byte-identical with
+//!    telemetry on or off, and trace files are byte-identical across
+//!    runs at the same seed (guarded by `tests/telemetry.rs`).
+//! 3. **Load-bearing metrics.** The autoscaler's windowed signals read
+//!    the [`Registry`] series (`coordinator::fleet::Fleet::signals`)
+//!    rather than private mark lists, so what `--metrics` exports is
+//!    what the control plane decided on.
+
+pub mod event;
+pub mod registry;
+pub mod trace;
+
+pub use event::{Event, EventKind, SignalSnapshot};
+pub use registry::Registry;
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::api::Tenant;
+
+/// Flight-recorder ring capacity: enough context to read the run-up to
+/// a crash without unbounded growth.
+pub const FLIGHT_RING_CAP: usize = 256;
+/// Dumps kept in full; later triggers only bump `dumps_total`.
+pub const MAX_FLIGHT_DUMPS: usize = 8;
+
+/// The last [`FLIGHT_RING_CAP`] events at the moment something went
+/// wrong (replica crash, true OOM, terminal rejection).
+#[derive(Clone, Debug)]
+pub struct FlightDump {
+    pub t: f64,
+    pub reason: String,
+    pub events: Vec<Event>,
+}
+
+/// Shared event sink: the append-only audit stream, the bounded ring,
+/// and any dumps taken. One recorder serves a whole fleet; engines
+/// write through per-replica [`Bus`] handles.
+#[derive(Default)]
+pub struct Recorder {
+    next_seq: u64,
+    pub events: Vec<Event>,
+    ring: VecDeque<Event>,
+    pub dumps: Vec<FlightDump>,
+    pub dumps_total: u64,
+}
+
+impl Recorder {
+    fn push(&mut self, mut ev: Event) {
+        ev.seq = self.next_seq;
+        self.next_seq += 1;
+        if self.ring.len() == FLIGHT_RING_CAP {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(ev.clone());
+        self.events.push(ev);
+    }
+
+    fn flight_dump(&mut self, t: f64, reason: &str) {
+        self.dumps_total += 1;
+        if self.dumps.len() < MAX_FLIGHT_DUMPS {
+            self.dumps.push(FlightDump {
+                t,
+                reason: reason.to_string(),
+                events: self.ring.iter().cloned().collect(),
+            });
+        }
+    }
+}
+
+/// A cheap, cloneable handle an engine (or the fleet) emits through.
+/// Disabled by default: [`Bus::emit`] returns before evaluating the
+/// event payload, so instrumentation costs one `Option` check on the
+/// hot path. Attached handles share one [`Recorder`] and stamp their
+/// replica id onto every event.
+#[derive(Clone, Default)]
+pub struct Bus {
+    inner: Option<Rc<RefCell<Recorder>>>,
+    replica: Option<usize>,
+}
+
+impl Bus {
+    pub fn disabled() -> Bus {
+        Bus::default()
+    }
+
+    pub fn attached(rec: &Rc<RefCell<Recorder>>,
+                    replica: Option<usize>) -> Bus {
+        Bus { inner: Some(Rc::clone(rec)), replica }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Emit one event. `kind` is a closure so payload construction
+    /// (string formatting, signal snapshots) is skipped entirely when
+    /// the bus is disabled.
+    pub fn emit(&self, t: f64, request: Option<u64>,
+                tenant: Option<&Tenant>,
+                kind: impl FnOnce() -> EventKind) {
+        let Some(rec) = &self.inner else { return };
+        rec.borrow_mut().push(Event {
+            t,
+            seq: 0, // assigned by the recorder
+            replica: self.replica,
+            request,
+            tenant: tenant.cloned(),
+            kind: kind(),
+        });
+    }
+
+    /// Snapshot the ring buffer (crash, true OOM, terminal rejection).
+    pub fn flight_dump(&self, t: f64, reason: &str) {
+        if let Some(rec) = &self.inner {
+            rec.borrow_mut().flight_dump(t, reason);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_bus_is_inert_and_skips_payload_construction() {
+        let bus = Bus::disabled();
+        assert!(!bus.enabled());
+        let mut built = false;
+        bus.emit(1.0, None, None, || {
+            built = true;
+            EventKind::Oom
+        });
+        assert!(!built, "payload closure ran on a disabled bus");
+        bus.flight_dump(1.0, "oom"); // no-op, must not panic
+    }
+
+    #[test]
+    fn recorder_assigns_seq_and_bounds_the_ring() {
+        let rec = Rc::new(RefCell::new(Recorder::default()));
+        let bus = Bus::attached(&rec, Some(2));
+        for i in 0..(FLIGHT_RING_CAP + 10) {
+            bus.emit(i as f64, Some(i as u64), None, || EventKind::Admit);
+        }
+        bus.flight_dump(999.0, "crash: replica 2");
+        let r = rec.borrow();
+        assert_eq!(r.events.len(), FLIGHT_RING_CAP + 10);
+        assert_eq!(r.events[0].seq, 0);
+        assert_eq!(r.events.last().unwrap().seq,
+                   (FLIGHT_RING_CAP + 9) as u64);
+        assert_eq!(r.events[0].replica, Some(2));
+        assert_eq!(r.dumps.len(), 1);
+        assert_eq!(r.dumps_total, 1);
+        let dump = &r.dumps[0];
+        assert_eq!(dump.events.len(), FLIGHT_RING_CAP);
+        // the ring kept the *latest* events
+        assert_eq!(dump.events[0].request, Some(10));
+        assert_eq!(dump.reason, "crash: replica 2");
+    }
+
+    #[test]
+    fn dump_count_is_bounded_but_total_keeps_counting() {
+        let rec = Rc::new(RefCell::new(Recorder::default()));
+        let bus = Bus::attached(&rec, None);
+        bus.emit(0.0, None, None, || EventKind::Oom);
+        for i in 0..(MAX_FLIGHT_DUMPS + 3) {
+            bus.flight_dump(i as f64, "oom");
+        }
+        let r = rec.borrow();
+        assert_eq!(r.dumps.len(), MAX_FLIGHT_DUMPS);
+        assert_eq!(r.dumps_total, (MAX_FLIGHT_DUMPS + 3) as u64);
+    }
+}

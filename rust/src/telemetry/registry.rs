@@ -1,0 +1,261 @@
+//! Metrics registry: counters, gauges, log-bucketed histograms, and the
+//! timestamped mark/value series behind the autoscaler's windowed
+//! signals. The registry is *load-bearing*: `Fleet::signals` reads the
+//! oom/absorbed/ttft/capacity-loss series from here (replicas no longer
+//! keep private mark lists), so the numbers a `--metrics` dump exports
+//! are, by construction, the numbers the control plane acted on.
+//!
+//! Everything here is keyed by sim time; sampling and exposition are
+//! pure reads, so enabling output cannot perturb a seeded run.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::util::json::Json;
+use crate::util::stats::LogHistogram;
+
+/// Series key for fleet-level (not per-replica) signals.
+pub const FLEET: usize = usize::MAX;
+
+/// Series names shared by the signal producers (`Replica::harvest`,
+/// fleet crash handling) and readers (`Fleet::signals`, maintenance).
+pub mod series {
+    /// True OOM events, one mark per event, keyed by replica.
+    pub const OOM: &str = "oom";
+    /// Mask-absorbed spikes, keyed by replica.
+    pub const ABSORBED: &str = "absorbed";
+    /// `(finished_at, ttft)` per completed request, keyed by replica.
+    pub const TTFT: &str = "ttft";
+    /// Replica deaths (crash / expired reclaim), keyed by the
+    /// fleet-level sentinel key `FLEET`.
+    pub const CAPACITY_LOSS: &str = "capacity-loss";
+}
+
+#[derive(Default)]
+pub struct Registry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    histograms: BTreeMap<&'static str, LogHistogram>,
+    /// `(series name, replica id)` → time-ordered `(t, value)` points.
+    series: BTreeMap<(&'static str, usize), VecDeque<(f64, f64)>>,
+    timeline: Vec<Json>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    // ---- counters / gauges (exposition + JSON timeline surface) ----
+
+    pub fn set_counter(&mut self, name: &'static str, v: u64) {
+        self.counters.insert(name, v);
+    }
+
+    pub fn set_gauge(&mut self, name: &'static str, v: f64) {
+        self.gauges.insert(name, v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    // ---- distributions -------------------------------------------
+
+    pub fn observe(&mut self, name: &'static str, x: f64) {
+        self.histograms.entry(name).or_insert_with(LogHistogram::seconds)
+            .observe(x);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&LogHistogram> {
+        self.histograms.get(name)
+    }
+
+    // ---- mark/value series (the signal windows) -------------------
+    //
+    // The operations below reproduce the exact semantics of the mark
+    // lists they replaced, so seeded autoscaler behaviour is unchanged:
+    // `count_since` is the non-destructive `ooms_since`/`absorbed_since`
+    // read, `trim_count` the destructive `recent_ooms` window used by
+    // fleet maintenance, `values_since` the cursor-style TTFT harvest.
+
+    pub fn mark(&mut self, name: &'static str, key: usize, t: f64) {
+        self.record(name, key, t, 1.0);
+    }
+
+    pub fn record(&mut self, name: &'static str, key: usize, t: f64,
+                  v: f64) {
+        self.series.entry((name, key)).or_default().push_back((t, v));
+    }
+
+    /// Points at `t >= t0`, without discarding older ones.
+    pub fn count_since(&self, name: &'static str, key: usize,
+                       t0: f64) -> usize {
+        match self.series.get(&(name, key)) {
+            Some(s) => s.iter().filter(|&&(t, _)| t >= t0).count(),
+            None => 0,
+        }
+    }
+
+    /// Drop points older than `t0`, then count what remains.
+    pub fn trim_count(&mut self, name: &'static str, key: usize,
+                      t0: f64) -> usize {
+        let s = self.series.entry((name, key)).or_default();
+        while s.front().is_some_and(|&(t, _)| t < t0) {
+            s.pop_front();
+        }
+        s.len()
+    }
+
+    /// Drop points older than `t0` (bounded-memory upkeep).
+    pub fn trim(&mut self, name: &'static str, key: usize, t0: f64) {
+        self.trim_count(name, key, t0);
+    }
+
+    /// Drop points older than `t0`, then append the surviving values to
+    /// `out`. Series are time-ordered, so with a monotone `t0` this is
+    /// exactly the advancing-cursor read the TTFT window used.
+    pub fn values_since(&mut self, name: &'static str, key: usize,
+                        t0: f64, out: &mut Vec<f64>) {
+        let s = self.series.entry((name, key)).or_default();
+        while s.front().is_some_and(|&(t, _)| t < t0) {
+            s.pop_front();
+        }
+        out.extend(s.iter().map(|&(_, v)| v));
+    }
+
+    /// Forget a series entirely (e.g. a replica's OOM marks on respawn).
+    pub fn clear(&mut self, name: &'static str, key: usize) {
+        self.series.remove(&(name, key));
+    }
+
+    // ---- time-series output ---------------------------------------
+
+    /// Snapshot every counter and gauge into the JSON timeline.
+    pub fn sample(&mut self, t: f64) {
+        let mut fields: Vec<(&str, Json)> = vec![("t", Json::Num(t))];
+        for (name, v) in &self.counters {
+            fields.push((name, Json::Num(*v as f64)));
+        }
+        for (name, v) in &self.gauges {
+            let j = if v.is_finite() { Json::Num(*v) } else { Json::Null };
+            fields.push((name, j));
+        }
+        self.timeline.push(Json::object(fields));
+    }
+
+    pub fn samples(&self) -> usize {
+        self.timeline.len()
+    }
+
+    pub fn timeline_json(&self) -> Json {
+        Json::Arr(self.timeline.clone())
+    }
+
+    /// Prometheus text exposition of the final counter/gauge/histogram
+    /// state. Histogram buckets are cumulative with an explicit `+Inf`,
+    /// per the exposition format.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        for (name, h) in &self.histograms {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = h.underflow;
+            for (edge, c) in h.edges().iter().zip(h.counts()) {
+                cum += c;
+                out.push_str(&format!(
+                    "{name}_bucket{{le=\"{edge}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n",
+                                  h.count));
+            out.push_str(&format!("{name}_sum {}\n", h.sum));
+            out.push_str(&format!("{name}_count {}\n", h.count));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_window_semantics_match_the_old_mark_lists() {
+        let mut r = Registry::new();
+        r.mark("oom", 1, 2.0);
+        r.mark("oom", 1, 9.0);
+        r.mark("oom", 1, 9.5);
+        // non-destructive read: everything still present afterwards
+        assert_eq!(r.count_since("oom", 1, 8.0), 2);
+        assert_eq!(r.count_since("oom", 1, 0.0), 3);
+        // destructive window: drops t=2.0, keeps counting the rest
+        assert_eq!(r.trim_count("oom", 1, 8.0), 2);
+        assert_eq!(r.count_since("oom", 1, 0.0), 2);
+        // other keys are independent; clearing forgets the series
+        assert_eq!(r.count_since("oom", 2, 0.0), 0);
+        r.clear("oom", 1);
+        assert_eq!(r.count_since("oom", 1, 0.0), 0);
+    }
+
+    #[test]
+    fn values_since_reads_like_an_advancing_cursor() {
+        let mut r = Registry::new();
+        r.record("ttft", 0, 1.0, 0.5);
+        r.record("ttft", 0, 2.0, 0.7);
+        r.record("ttft", 0, 3.0, 0.9);
+        let mut out = Vec::new();
+        r.values_since("ttft", 0, 2.0, &mut out);
+        assert_eq!(out, vec![0.7, 0.9]);
+        // t0 only moves forward, so the trim is safe to repeat
+        out.clear();
+        r.values_since("ttft", 0, 2.5, &mut out);
+        assert_eq!(out, vec![0.9]);
+    }
+
+    #[test]
+    fn prometheus_exposition_has_cumulative_buckets() {
+        let mut r = Registry::new();
+        r.set_counter("rap_requests_completed_total", 12);
+        r.set_gauge("rap_outstanding", 3.0);
+        let mut h = LogHistogram::new(1.0, 2.0, 2); // edges 2, 4
+        h.observe(1.5);
+        h.observe(3.0);
+        h.observe(100.0); // +Inf bucket
+        r.histograms.insert("rap_ttft_seconds", h);
+        let text = r.prometheus();
+        assert!(text.contains(
+            "# TYPE rap_requests_completed_total counter"));
+        assert!(text.contains("rap_requests_completed_total 12"));
+        assert!(text.contains("rap_outstanding 3"));
+        assert!(text.contains("rap_ttft_seconds_bucket{le=\"2\"} 1"));
+        assert!(text.contains("rap_ttft_seconds_bucket{le=\"4\"} 2"));
+        assert!(text.contains("rap_ttft_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("rap_ttft_seconds_count 3"));
+    }
+
+    #[test]
+    fn timeline_samples_snapshot_counters_and_gauges() {
+        let mut r = Registry::new();
+        r.set_counter("rap_requests_total", 5);
+        r.set_gauge("rap_p99_ttft_seconds", f64::NAN);
+        r.sample(10.0);
+        r.set_counter("rap_requests_total", 8);
+        r.sample(20.0);
+        assert_eq!(r.samples(), 2);
+        let tl = r.timeline_json();
+        let first = &tl.arr().unwrap()[0];
+        assert_eq!(first.get("t").unwrap().num().unwrap(), 10.0);
+        assert_eq!(first.get("rap_requests_total").unwrap()
+                        .usize().unwrap(), 5);
+        // NaN gauges sample as null so the dump stays valid JSON
+        assert_eq!(first.get("rap_p99_ttft_seconds").unwrap(),
+                   &Json::Null);
+        let second = &tl.arr().unwrap()[1];
+        assert_eq!(second.get("rap_requests_total").unwrap()
+                         .usize().unwrap(), 8);
+    }
+}

@@ -1,0 +1,471 @@
+//! Chrome/Perfetto trace-event export, trace validation, and the
+//! `rap trace summarize` life-story reconstruction.
+//!
+//! The export is the object form of the trace-event format: a
+//! `traceEvents` array (loadable by Perfetto / `chrome://tracing`,
+//! which ignore unknown sibling keys) plus our own `events` decision
+//! audit, `metadata`, and `flightRecorder` dumps. Request lifecycles
+//! become span trees on pid 1 (one thread per request id, phases
+//! `queued` / `running` / `recovering`); control-plane decisions become
+//! instant events on pid 2 (one thread per replica, plus a fleet
+//! thread). All timestamps are sim time in microseconds — wall-clock
+//! values never appear, so a seeded run exports byte-identical bytes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::event::{Event, EventKind};
+use super::FlightDump;
+
+const PID_REQUESTS: u64 = 1;
+const PID_CONTROL: u64 = 2;
+
+fn field_str(ph: &str, name: &str, pid: u64, tid: u64,
+             ts: f64) -> Vec<(&'static str, Json)> {
+    vec![
+        ("ph", Json::Str(ph.to_string())),
+        ("name", Json::Str(name.to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ts * 1e6)),
+    ]
+}
+
+fn span_entry(ph: &str, phase: &str, tid: u64, ts: f64) -> Json {
+    let mut f = field_str(ph, phase, PID_REQUESTS, tid, ts);
+    f.push(("cat", Json::Str("request".to_string())));
+    Json::object(f)
+}
+
+fn instant_entry(ev: &Event, pid: u64, tid: u64, ts: f64) -> Json {
+    let mut f = field_str("i", ev.kind.name(), pid, tid, ts);
+    f.push(("s", Json::Str("t".to_string())));
+    f.push(("cat", Json::Str("decision".to_string())));
+    f.push(("args", ev.to_json()));
+    Json::object(f)
+}
+
+fn meta_entry(kind: &str, pid: u64, tid: Option<u64>,
+              name: &str) -> Json {
+    let mut f = vec![
+        ("ph", Json::Str("M".to_string())),
+        ("name", Json::Str(kind.to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("ts", Json::Num(0.0)),
+        ("args", Json::object(vec![("name",
+                                    Json::Str(name.to_string()))])),
+    ];
+    if let Some(tid) = tid {
+        f.push(("tid", Json::Num(tid as f64)));
+    }
+    Json::object(f)
+}
+
+/// One request's open phase. `last_t` clamps span timestamps to be
+/// monotone per thread: engine steps may overshoot the fleet clock, so
+/// a crash stamped at the fleet tick can precede the victim's last
+/// engine-side event — the audit keeps raw times, the span tree clamps.
+#[derive(Default)]
+struct Track {
+    phase: Option<(&'static str, f64)>,
+    last_t: f64,
+    seen: bool,
+}
+
+/// Build the full trace document from a recorder's event stream.
+/// `end_t` closes any still-open spans (requests in flight at shutdown).
+pub fn chrome_trace(events: &[Event], dumps: &[FlightDump], end_t: f64,
+                    metadata: Vec<(&'static str, Json)>) -> Json {
+    let mut entries: Vec<(f64, Json)> = Vec::new();
+    let mut tracks: BTreeMap<u64, Track> = BTreeMap::new();
+    let mut req_tenant: BTreeMap<u64, String> = BTreeMap::new();
+    let mut control_tids: BTreeMap<u64, String> = BTreeMap::new();
+
+    for ev in events {
+        let Some(id) = ev.request else {
+            // control-plane decision: instant on pid 2
+            let (tid, label) = match ev.replica {
+                Some(r) => (r as u64 + 1, format!("replica {r}")),
+                None => (0, "fleet".to_string()),
+            };
+            control_tids.entry(tid).or_insert(label);
+            entries.push((ev.t, instant_entry(ev, PID_CONTROL, tid,
+                                              ev.t)));
+            continue;
+        };
+        if let Some(tn) = &ev.tenant {
+            req_tenant.entry(id).or_insert_with(|| tn.to_string());
+        }
+        let track = tracks.entry(id).or_default();
+        track.seen = true;
+        let t = ev.t.max(track.last_t);
+        track.last_t = t;
+        // close the open phase, then decide what (if anything) opens
+        let next: Option<&'static str> = match &ev.kind {
+            EventKind::Submit | EventKind::Route { .. } => {
+                match track.phase {
+                    Some(_) => continue, // already tracked; audit-only
+                    None => Some("queued"),
+                }
+            }
+            EventKind::Admit | EventKind::Resume => Some("running"),
+            EventKind::Evict { .. } | EventKind::Preempt { .. } => {
+                Some("queued")
+            }
+            EventKind::Crash { .. } => Some("recovering"),
+            EventKind::Restore { .. } => Some("queued"),
+            EventKind::Migrate { state, .. } => {
+                if *state == "active" { Some("running") }
+                else { Some("queued") }
+            }
+            EventKind::Finish { .. } | EventKind::Reject { .. }
+            | EventKind::Cancel | EventKind::DeadlineMiss { .. } => None,
+            // per-request instant, no phase change
+            _ => {
+                entries.push((t, instant_entry(ev, PID_REQUESTS, id,
+                                               t)));
+                continue;
+            }
+        };
+        if let Some((phase, t0)) = track.phase.take() {
+            entries.push((t0, span_entry("B", phase, id, t0)));
+            entries.push((t, span_entry("E", phase, id, t)));
+        } else if next.is_none() {
+            // terminal with nothing open (e.g. backlog cancel): emit a
+            // zero-length queued span so the request still has a track
+            entries.push((t, span_entry("B", "queued", id, t)));
+            entries.push((t, span_entry("E", "queued", id, t)));
+        }
+        if matches!(ev.kind, EventKind::Crash { .. }
+                             | EventKind::Restore { .. }) {
+            entries.push((t, instant_entry(ev, PID_REQUESTS, id, t)));
+        }
+        if let Some(phase) = next {
+            track.phase = Some((phase, t));
+        }
+    }
+    // close spans still open at shutdown
+    for (id, track) in &mut tracks {
+        if let Some((phase, t0)) = track.phase.take() {
+            let t1 = end_t.max(track.last_t);
+            entries.push((t0, span_entry("B", phase, *id, t0)));
+            entries.push((t1, span_entry("E", phase, *id, t1)));
+        }
+    }
+    // stable sort by timestamp: per-tid emission order is already
+    // correct (last_t clamping), ties keep control-plane causal order
+    entries.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    let mut trace_events =
+        vec![meta_entry("process_name", PID_REQUESTS, None, "requests"),
+             meta_entry("process_name", PID_CONTROL, None,
+                        "control-plane")];
+    for (tid, label) in &control_tids {
+        trace_events.push(meta_entry("thread_name", PID_CONTROL,
+                                     Some(*tid), label));
+    }
+    for (id, track) in &tracks {
+        if track.seen {
+            let label = match req_tenant.get(id) {
+                Some(tn) => format!("req {id} [{tn}]"),
+                None => format!("req {id}"),
+            };
+            trace_events.push(meta_entry("thread_name", PID_REQUESTS,
+                                         Some(*id), &label));
+        }
+    }
+    trace_events.extend(entries.into_iter().map(|(_, e)| e));
+
+    let mut meta = metadata;
+    meta.push(("requests", Json::Num(tracks.len() as f64)));
+    meta.push(("events", Json::Num(events.len() as f64)));
+    meta.push(("end_t", Json::Num(end_t)));
+
+    let dump_json: Vec<Json> = dumps.iter().map(|d| {
+        Json::object(vec![
+            ("t", Json::Num(d.t)),
+            ("reason", Json::Str(d.reason.clone())),
+            ("events", Json::Arr(d.events.iter().map(Event::to_json)
+                                               .collect())),
+        ])
+    }).collect();
+
+    Json::object(vec![
+        ("traceEvents", Json::Arr(trace_events)),
+        ("events", Json::Arr(events.iter().map(Event::to_json)
+                                          .collect())),
+        ("metadata", Json::object(meta)),
+        ("flightRecorder", Json::Arr(dump_json)),
+    ])
+}
+
+pub struct TraceStats {
+    pub trace_events: usize,
+    pub spans: usize,
+    pub instants: usize,
+    pub requests: usize,
+    pub audit_events: usize,
+}
+
+/// Structural validation: monotonic timestamps, balanced begin/end
+/// spans per thread, and no orphan request ids (every request in the
+/// audit stream has a span track, and vice versa).
+pub fn validate(trace: &Json) -> Result<TraceStats> {
+    let te = trace.get("traceEvents")
+        .context("trace has no traceEvents array")?.arr()?;
+    let audit = trace.get("events")
+        .context("trace has no decision-audit events array")?.arr()?;
+    let mut prev_ts = f64::NEG_INFINITY;
+    let mut depth: BTreeMap<(u64, u64), i64> = BTreeMap::new();
+    let mut span_tids: BTreeMap<u64, usize> = BTreeMap::new();
+    let (mut spans, mut instants) = (0usize, 0usize);
+    for (i, e) in te.iter().enumerate() {
+        let ph = e.get("ph")?.str()?;
+        if ph == "M" {
+            continue;
+        }
+        let ts = e.get("ts")?.num()?;
+        if !ts.is_finite() {
+            bail!("entry {i}: non-finite ts");
+        }
+        if ts < prev_ts {
+            bail!("entry {i}: ts {ts} goes backwards (prev {prev_ts})");
+        }
+        prev_ts = ts;
+        let pid = e.get("pid")?.num()? as u64;
+        let tid = e.get("tid")?.num()? as u64;
+        match ph {
+            "B" => {
+                spans += 1;
+                *depth.entry((pid, tid)).or_insert(0) += 1;
+                if pid == PID_REQUESTS {
+                    *span_tids.entry(tid).or_insert(0) += 1;
+                }
+            }
+            "E" => {
+                let d = depth.entry((pid, tid)).or_insert(0);
+                *d -= 1;
+                if *d < 0 {
+                    bail!("entry {i}: end with no begin on \
+                           pid {pid} tid {tid}");
+                }
+            }
+            "i" => instants += 1,
+            other => bail!("entry {i}: unknown phase {other:?}"),
+        }
+    }
+    for ((pid, tid), d) in &depth {
+        if *d != 0 {
+            bail!("unbalanced spans on pid {pid} tid {tid}: depth {d}");
+        }
+    }
+    let mut audit_ids: BTreeMap<u64, usize> = BTreeMap::new();
+    for e in audit {
+        if let Ok(id) = e.get("request").and_then(|j| j.num()) {
+            *audit_ids.entry(id as u64).or_insert(0) += 1;
+        }
+    }
+    for id in audit_ids.keys() {
+        if !span_tids.contains_key(id) {
+            bail!("request {id} appears in the audit stream but has \
+                   no span track");
+        }
+    }
+    for id in span_tids.keys() {
+        if !audit_ids.contains_key(id) {
+            bail!("span track {id} has no audit events (orphan id)");
+        }
+    }
+    Ok(TraceStats { trace_events: te.len(), spans, instants,
+                    requests: span_tids.len(),
+                    audit_events: audit.len() })
+}
+
+fn render_value(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.dumps(),
+    }
+}
+
+fn render_event_line(e: &Json) -> Result<String> {
+    let t = e.get("t")?.num()?;
+    let name = e.get("event")?.str()?;
+    let replica = match e.get("replica") {
+        Ok(r) => format!("replica {}", r.usize()?),
+        Err(_) => "fleet    ".to_string(),
+    };
+    let mut line = format!("  [{t:>9.3}s] {replica:<10} {name:<16}");
+    if let Ok(Json::Obj(args)) = e.get("args") {
+        let parts: Vec<String> = args.iter()
+            .map(|(k, v)| format!("{k}={}", render_value(v)))
+            .collect();
+        line.push_str(&parts.join(" "));
+    }
+    Ok(line.trim_end().to_string())
+}
+
+/// Reconstruct one request's life story from the decision audit. With
+/// no explicit id, picks the most *eventful* request — the one whose
+/// lifecycle passed through the most distinct transition kinds (ties
+/// break to the smallest id), which in a chaos run is the
+/// crash-disturbed one you want to read about.
+pub fn summarize(trace: &Json, want: Option<u64>) -> Result<String> {
+    let audit = trace.get("events")
+        .context("trace has no decision-audit events array")?.arr()?;
+    let mut by_req: BTreeMap<u64, Vec<&Json>> = BTreeMap::new();
+    for e in audit {
+        if let Ok(id) = e.get("request").and_then(|j| j.num()) {
+            by_req.entry(id as u64).or_default().push(e);
+        }
+    }
+    if by_req.is_empty() {
+        bail!("trace contains no request events");
+    }
+    let id = match want {
+        Some(id) => {
+            if !by_req.contains_key(&id) {
+                bail!("request {id} not present in trace \
+                       ({} requests recorded)", by_req.len());
+            }
+            id
+        }
+        None => *by_req.iter()
+            .max_by_key(|(id, evs)| {
+                let kinds: std::collections::BTreeSet<&str> = evs.iter()
+                    .filter_map(|e| e.get("event").and_then(|j| j.str())
+                                     .ok())
+                    .collect();
+                // more distinct kinds first; ties → smallest id
+                (kinds.len(), std::cmp::Reverse(**id))
+            })
+            .map(|(id, _)| id)
+            .unwrap(),
+    };
+    let evs = &by_req[&id];
+    let tenant = evs.iter()
+        .find_map(|e| e.get("tenant").and_then(|j| j.str()).ok())
+        .unwrap_or("-");
+    let last = evs.last().unwrap().get("event")?.str()?;
+    let mut out = format!(
+        "request {id} (tenant {tenant}): {} events, final state: {last}\n",
+        evs.len());
+    for e in evs {
+        out.push_str(&render_event_line(e)?);
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::tenant;
+
+    fn ev(t: f64, seq: u64, replica: Option<usize>, request: Option<u64>,
+          kind: EventKind) -> Event {
+        Event { t, seq, replica, request,
+                tenant: request.map(|_| tenant("acme")), kind }
+    }
+
+    /// A crash-disturbed lifecycle: submit → admit → checkpoint →
+    /// crash → restore → resume → done, with a capacity-loss spawn in
+    /// the control plane.
+    fn storyline() -> Vec<Event> {
+        use super::super::event::SignalSnapshot;
+        let sig = SignalSnapshot { serving: 2, outstanding: 4,
+                                   p99_ttft: 1.5, recent_ooms: 0,
+                                   recent_absorbed: 0,
+                                   capacity_losses: 1 };
+        vec![
+            ev(1.0, 0, None, Some(7), EventKind::Submit),
+            ev(1.0, 1, None, Some(7),
+               EventKind::Route { dest: 1, policy: "least".into() }),
+            ev(1.2, 2, Some(1), Some(7), EventKind::Submit),
+            ev(1.5, 3, Some(1), Some(7), EventKind::Admit),
+            ev(2.0, 4, Some(1), Some(7),
+               EventKind::Checkpoint { bytes: 2048 }),
+            // engine overshoot: event at 2.6 recorded before the fleet
+            // crash stamped at 2.5 — the span builder must clamp
+            ev(2.6, 5, Some(1), Some(7),
+               EventKind::Checkpoint { bytes: 128 }),
+            ev(2.5, 6, Some(1), None,
+               EventKind::Crash { disposition: "failed" }),
+            ev(2.5, 7, Some(1), Some(7),
+               EventKind::Crash { disposition: "checkpointed" }),
+            ev(2.5, 8, None, None,
+               EventKind::AutoscaleSpawn { new_replica: 3,
+                                           trigger: "capacity-loss",
+                                           signals: sig }),
+            ev(3.0, 9, Some(2), Some(7),
+               EventKind::Restore { dest: 2 }),
+            ev(3.1, 10, Some(2), Some(7), EventKind::Resume),
+            ev(4.0, 11, Some(2), Some(7),
+               EventKind::Finish { outcome: "done" }),
+        ]
+    }
+
+    #[test]
+    fn exported_trace_validates() {
+        let trace = chrome_trace(&storyline(), &[], 5.0, vec![]);
+        let stats = validate(&trace).unwrap();
+        assert_eq!(stats.requests, 1);
+        assert!(stats.spans >= 4); // queued/running/recovering/…
+        assert!(stats.instants >= 4); // ckpt ×2, crash, restore, spawn
+        assert_eq!(stats.audit_events, 12);
+    }
+
+    #[test]
+    fn validate_rejects_unbalanced_spans() {
+        let trace = chrome_trace(&storyline(), &[], 5.0, vec![]);
+        // drop the last E entry → unbalanced
+        let te = trace.get("traceEvents").unwrap().arr().unwrap();
+        let last_e = te.iter().rposition(|e| {
+            e.get("ph").unwrap().str().unwrap() == "E"
+        }).unwrap();
+        let broken: Vec<Json> = te.iter().enumerate()
+            .filter(|(i, _)| *i != last_e)
+            .map(|(_, e)| e.clone()).collect();
+        let bad = Json::object(vec![
+            ("traceEvents", Json::Arr(broken)),
+            ("events", trace.get("events").unwrap().clone()),
+        ]);
+        assert!(validate(&bad).is_err());
+    }
+
+    #[test]
+    fn summarize_reconstructs_the_crash_disturbed_lifecycle() {
+        let trace = chrome_trace(&storyline(), &[], 5.0, vec![]);
+        let story = summarize(&trace, None).unwrap();
+        assert!(story.starts_with("request 7 (tenant acme)"));
+        for step in ["submit", "admit", "checkpoint", "crash",
+                     "restore", "resume", "done"] {
+            assert!(story.contains(step), "missing {step} in:\n{story}");
+        }
+        let order: Vec<usize> =
+            ["admit", "checkpoint", "crash", "restore", "resume",
+             "done"].iter().map(|s| story.find(s).unwrap()).collect();
+        assert!(order.windows(2).all(|w| w[0] < w[1]),
+                "life story out of order:\n{story}");
+        assert!(summarize(&trace, Some(99)).is_err());
+    }
+
+    #[test]
+    fn span_timestamps_clamp_engine_overshoot() {
+        // raw event times go 2.6 → 2.5 across the crash; the span tree
+        // must still be monotone (validate checks global ts order)
+        let trace = chrome_trace(&storyline(), &[], 5.0, vec![]);
+        validate(&trace).unwrap();
+        let te = trace.get("traceEvents").unwrap().arr().unwrap();
+        let crash_instant = te.iter().find(|e| {
+            e.get("ph").unwrap().str().unwrap() == "i"
+                && e.get("name").unwrap().str().unwrap() == "crash"
+                && e.get("pid").unwrap().num().unwrap() == 1.0
+        }).unwrap();
+        assert_eq!(crash_instant.get("ts").unwrap().num().unwrap(),
+                   2.6 * 1e6);
+    }
+}

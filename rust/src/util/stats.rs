@@ -35,6 +35,13 @@ impl Summary {
 }
 
 /// Percentile over a sample (linear interpolation, p in [0, 100]).
+///
+/// This is the *single* exact-percentile implementation in the tree:
+/// report aggregation (`coordinator::metrics`), the autoscaler's
+/// windowed p99-TTFT signal (via `telemetry::Registry`), and the
+/// experiment tables all call here. Bucketed estimates (Prometheus
+/// exposition, the telemetry time-series) use [`LogHistogram`] instead
+/// — never a third re-derivation.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -105,6 +112,115 @@ impl Histogram {
     }
 }
 
+/// Log-bucketed histogram: bucket `i` covers
+/// `[lo · growth^i, lo · growth^(i+1))`, values below `lo` land in
+/// `underflow`, values past the last edge in `overflow` (the Prometheus
+/// `+Inf` bucket). This is the shared bounded-memory distribution type
+/// behind the telemetry registry's latency/TTFT series and the
+/// Prometheus exposition; quantiles from it are bucket-edge estimates —
+/// exact percentiles stay with [`percentile`].
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    lo: f64,
+    growth: f64,
+    counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    pub count: u64,
+    pub sum: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    pub fn new(lo: f64, growth: f64, nbuckets: usize) -> LogHistogram {
+        assert!(lo > 0.0 && growth > 1.0 && nbuckets > 0);
+        LogHistogram { lo, growth, counts: vec![0; nbuckets],
+                       underflow: 0, overflow: 0, count: 0, sum: 0.0,
+                       max: f64::NEG_INFINITY }
+    }
+
+    /// Seconds-scaled default: 1 ms to ~17 minutes in quarter-octave
+    /// buckets — wide enough for TTFTs and end-to-end latencies alike.
+    pub fn seconds() -> LogHistogram {
+        LogHistogram::new(1e-3, 2.0_f64.powf(0.25), 80)
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.count += 1;
+        self.sum += x;
+        self.max = self.max.max(x);
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        // Walk the edges by repeated multiplication: deterministic and
+        // boundary-exact against the same edges `edges()` reports
+        // (a log/floor index can mis-bin right on an edge).
+        let mut edge = self.lo * self.growth;
+        for c in self.counts.iter_mut() {
+            if x < edge {
+                *c += 1;
+                return;
+            }
+            edge *= self.growth;
+        }
+        self.overflow += 1;
+    }
+
+    /// Upper bucket edges, in order (the Prometheus `le` label values;
+    /// `overflow` is the implicit `+Inf` bucket after the last).
+    pub fn edges(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.counts.len());
+        let mut edge = self.lo;
+        for _ in &self.counts {
+            edge *= self.growth;
+            out.push(edge);
+        }
+        out
+    }
+
+    /// Per-bucket counts (same order as [`LogHistogram::edges`]).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Bucket-edge quantile estimate (p in [0, 100]): the upper edge of
+    /// the bucket holding the rank — conservative, like reading a
+    /// Prometheus histogram. Underflow reports `lo`, overflow the
+    /// observed max. NaN on an empty histogram.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0)
+            .min(self.count as f64) as u64;
+        let mut seen = self.underflow;
+        if seen >= target {
+            return self.lo;
+        }
+        let mut edge = self.lo;
+        for &c in &self.counts {
+            edge *= self.growth;
+            seen += c;
+            if seen >= target {
+                return edge;
+            }
+        }
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,5 +259,46 @@ mod tests {
         assert_eq!(h.underflow, 1);
         assert_eq!(h.overflow, 1);
         assert_eq!(h.total(), 12);
+    }
+
+    /// Pin the log-bucketed quantiles on known inputs: with lo = 1 and
+    /// growth = 2 the buckets are [1,2) [2,4) [4,8) [8,16), so every
+    /// expected value below is an exact bucket edge.
+    #[test]
+    fn log_histogram_pins_quantiles_on_known_inputs() {
+        let mut h = LogHistogram::new(1.0, 2.0, 4);
+        for x in [1.5, 1.5, 3.0, 3.0, 3.0, 3.0, 5.0, 5.0, 5.0, 9.0] {
+            h.observe(x);
+        }
+        assert_eq!(h.count, 10);
+        assert_eq!(h.counts(), &[2, 4, 3, 1]);
+        assert_eq!(h.edges(), vec![2.0, 4.0, 8.0, 16.0]);
+        // ranks: p10 → 1st value (bucket [1,2) → edge 2), p50 → 5th
+        // (bucket [2,4) → edge 4), p90 → 9th (bucket [4,8) → edge 8),
+        // p99 → 10th (bucket [8,16) → edge 16)
+        assert_eq!(h.quantile(10.0), 2.0);
+        assert_eq!(h.quantile(50.0), 4.0);
+        assert_eq!(h.quantile(90.0), 8.0);
+        assert_eq!(h.quantile(99.0), 16.0);
+        assert!((h.mean() - 3.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_histogram_underflow_overflow_and_edge_values() {
+        let mut h = LogHistogram::new(1.0, 2.0, 3); // edges 2, 4, 8
+        h.observe(0.5); // underflow
+        h.observe(2.0); // exactly on an edge → the [2,4) bucket
+        h.observe(100.0); // overflow
+        h.observe(f64::NAN); // ignored entirely
+        assert_eq!(h.count, 3);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.counts(), &[0, 1, 0]);
+        // low quantiles report lo, top quantiles the observed max
+        assert_eq!(h.quantile(1.0), 1.0);
+        assert_eq!(h.quantile(100.0), 100.0);
+        let empty = LogHistogram::seconds();
+        assert!(empty.quantile(50.0).is_nan());
+        assert!(empty.mean().is_nan());
     }
 }

@@ -1,0 +1,177 @@
+//! Flight-recorder acceptance (ISSUE 7): the observer-effect guard —
+//! attaching the full telemetry stack (event bus, trace export, metrics
+//! sampler) to a seeded run must not move a single byte of the report
+//! JSON — plus trace-export determinism, structural trace validation,
+//! and the chaos-storm life-story reconstruction: a crash-disturbed
+//! request whose audit shows submit → checkpoint → crash → restore →
+//! resume → done, with the replacement spawn attributed to the
+//! capacity-loss signal.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use rap::coordinator::fleet::{chaos_storm_fleet, chaos_storm_trace,
+                              elastic_demo_fleet, elastic_demo_trace,
+                              tenant_storm_fleet, tenant_storm_trace,
+                              Fleet};
+use rap::coordinator::router::RouterPolicy;
+use rap::telemetry::trace;
+use rap::util::json::Json;
+
+fn with_telemetry(mut fleet: Fleet) -> Fleet {
+    fleet.enable_telemetry();
+    fleet.enable_metrics_sampling(1.0);
+    fleet
+}
+
+/// Run the chaos storm with telemetry attached and return (report JSON,
+/// trace document).
+fn chaos_run(seed: u64) -> (String, Json) {
+    let mut fleet = with_telemetry(chaos_storm_fleet(seed, true));
+    let report = fleet.run_requests(chaos_storm_trace(seed)).unwrap();
+    let trace = fleet.trace_json().expect("telemetry was enabled");
+    (report.to_json().pretty(), trace)
+}
+
+/// The tentpole contract: seeded report bytes are identical with the
+/// recorder, trace export, and metrics sampler attached vs detached, on
+/// every fleet scenario family (PR-3 elastic, PR-5 tenant storm, PR-6
+/// chaos storm).
+#[test]
+fn telemetry_does_not_perturb_seeded_reports() {
+    // PR-3 elastic demo (engine-level Request trace)
+    let plain = elastic_demo_fleet(7, true)
+        .run_trace(elastic_demo_trace(7)).unwrap();
+    let observed = with_telemetry(elastic_demo_fleet(7, true))
+        .run_trace(elastic_demo_trace(7)).unwrap();
+    assert_eq!(plain.to_json().pretty(), observed.to_json().pretty(),
+               "telemetry perturbed the elastic-demo report");
+
+    // PR-5 tenant storm (SLO ingress + fair routing)
+    let plain = tenant_storm_fleet(42, RouterPolicy::TenantFair)
+        .run_requests(tenant_storm_trace(42)).unwrap();
+    let observed =
+        with_telemetry(tenant_storm_fleet(42, RouterPolicy::TenantFair))
+            .run_requests(tenant_storm_trace(42)).unwrap();
+    assert_eq!(plain.to_json().pretty(), observed.to_json().pretty(),
+               "telemetry perturbed the tenant-storm report");
+
+    // PR-6 chaos storm (faults, checkpoints, capacity-loss autoscale)
+    let plain = chaos_storm_fleet(42, true)
+        .run_requests(chaos_storm_trace(42)).unwrap();
+    let (observed, _) = chaos_run(42);
+    assert_eq!(plain.to_json().pretty(), observed,
+               "telemetry perturbed the chaos-storm report");
+}
+
+/// Same seed, two runs → byte-identical trace files. Sim time only —
+/// no wall-clock leaks into the export.
+#[test]
+fn seeded_trace_export_is_byte_deterministic() {
+    let (_, a) = chaos_run(42);
+    let (_, b) = chaos_run(42);
+    assert_eq!(a.pretty(), b.pretty(),
+               "same seed produced different trace bytes");
+    let (_, c) = chaos_run(7);
+    assert_ne!(a.pretty(), c.pretty(),
+               "different seeds produced identical traces — \
+                the export is not actually recording the run");
+}
+
+/// The chaos-storm export is structurally a Chrome trace: monotone
+/// timestamps, balanced spans, and a span track for every audited
+/// request — and the crash tripped the flight recorder.
+#[test]
+fn chaos_storm_trace_is_a_valid_chrome_trace() {
+    let (_, doc) = chaos_run(42);
+    let stats = trace::validate(&doc).unwrap();
+    assert!(stats.requests > 0, "no request tracks in the trace");
+    assert!(stats.spans > 0 && stats.instants > 0);
+    assert!(stats.audit_events > stats.requests,
+            "audit stream thinner than one event per request");
+    let dumps = doc.get("flightRecorder").unwrap().arr().unwrap();
+    assert!(!dumps.is_empty(),
+            "the replica crash did not trip a flight-recorder dump");
+    assert!(dumps.iter().any(|d| {
+        d.get("reason").unwrap().str().unwrap().contains("crash")
+    }), "no crash-attributed dump: {dumps:?}");
+}
+
+/// Per-request event-kind sets from the decision audit stream.
+fn kinds_by_request(doc: &Json) -> BTreeMap<u64, BTreeSet<String>> {
+    let mut by_req: BTreeMap<u64, BTreeSet<String>> = BTreeMap::new();
+    for e in doc.get("events").unwrap().arr().unwrap() {
+        if let Ok(id) = e.get("request").and_then(|j| j.num()) {
+            by_req.entry(id as u64).or_default()
+                .insert(e.get("event").unwrap().str().unwrap()
+                         .to_string());
+        }
+    }
+    by_req
+}
+
+/// The acceptance lifecycle: at seed 42 the checkpointed chaos fleet
+/// restores crash-interrupted work, so some request's audit must show
+/// the full submit → checkpoint → crash → restore → resume → done
+/// chain, and the autoscaler's replacement spawn must be attributed to
+/// the capacity-loss signal it actually fired on.
+#[test]
+fn chaos_trace_reconstructs_a_crash_disturbed_lifecycle() {
+    let (_, doc) = chaos_run(42);
+    let by_req = kinds_by_request(&doc);
+    // terminal events are named by their outcome ("done"), so the full
+    // chain is directly readable from the per-request kind sets
+    let chain = ["submit", "checkpoint", "crash", "restore", "resume",
+                 "done"];
+    let audit = doc.get("events").unwrap().arr().unwrap();
+    let survivor = by_req.iter().find(|(_, kinds)| {
+        chain.iter().all(|k| kinds.contains(*k))
+    });
+    let (&id, _) = survivor.unwrap_or_else(|| {
+        panic!("no request survived the full crash-recovery chain \
+                {chain:?}; per-request kinds: {by_req:?}")
+    });
+
+    // `rap trace summarize` tells that story, in causal order
+    let story = trace::summarize(&doc, Some(id)).unwrap();
+    let order: Vec<usize> = ["submit", "checkpoint", "crash", "restore",
+                             "resume", "outcome=done"]
+        .iter()
+        .map(|s| story.find(s).unwrap_or_else(|| {
+            panic!("step {s:?} missing from life story:\n{story}")
+        }))
+        .collect();
+    assert!(order.windows(2).all(|w| w[0] < w[1]),
+            "life story out of causal order:\n{story}");
+
+    // the replacement capacity is audited with its triggering signal
+    let spawn = audit.iter().find(|e| {
+        e.get("event").and_then(|k| k.str())
+            .is_ok_and(|k| k == "autoscale-spawn")
+    }).expect("no autoscale-spawn in the chaos audit");
+    let args = spawn.get("args").unwrap();
+    assert_eq!(args.get("trigger").unwrap().str().unwrap(),
+               "capacity-loss");
+    assert!(args.get("signals").unwrap().get("capacity_losses")
+                .unwrap().num().unwrap() >= 1.0,
+            "spawn attributed to capacity loss but the snapshot \
+             recorded none: {spawn:?}");
+}
+
+/// The metrics registry is load-bearing (the autoscaler reads it), so
+/// it is populated even without telemetry; the exposition must carry
+/// the counter families CI greps for.
+#[test]
+fn prometheus_exposition_carries_core_families() {
+    let mut fleet = with_telemetry(chaos_storm_fleet(42, true));
+    fleet.run_requests(chaos_storm_trace(42)).unwrap();
+    fleet.publish_metrics();
+    let text = fleet.registry.prometheus();
+    for family in ["rap_requests_completed_total", "rap_oom_events_total",
+                   "rap_ttft_seconds", "rap_replicas_serving",
+                   "rap_checkpoints_total"] {
+        assert!(text.contains(family),
+                "family {family} missing from exposition:\n{text}");
+    }
+    assert!(fleet.registry.samples() > 0,
+            "metrics sampler produced no timeline samples");
+}

@@ -17,9 +17,17 @@
 //! arrival, exactly as before.
 //!
 //! Time model: the fleet advances in events — the next trace arrival or
-//! the next maintenance tick, whichever comes first. Every replica is
-//! stepped to that time (`Replica::step_to`), then due arrivals are
-//! routed. Individual engines may overshoot the barrier by at most one
+//! the next maintenance tick, whichever comes first. At each such
+//! barrier the *due* replicas are stepped (`Replica::step_to`), then
+//! due arrivals are routed. Under the default event-driven scheduler
+//! (`FleetConfig::event_driven`) the due set is every replica holding
+//! work plus every queued lifecycle wake-up (warm-up / respawn
+//! completion) drained from a priority queue in (time, replica id,
+//! seq) order — idle replicas are skipped entirely and their engine
+//! clocks jumped forward lazily when work next reaches them, which is
+//! a pure clock jump for an idle engine, so seeded reports are
+//! byte-identical to the lockstep sweep (`event_driven: false`).
+//! Individual engines may overshoot the barrier by at most one
 //! compute step (documented on `Engine::step_to`); latency accounting
 //! uses true arrival times, so the skew never leaks into metrics.
 //!
@@ -62,7 +70,9 @@
 //! scenario pins the whole path down.
 
 use std::cell::RefCell;
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap,
+                       VecDeque};
 use std::rc::Rc;
 
 use anyhow::Result;
@@ -127,6 +137,22 @@ pub struct FleetConfig {
     /// a crashed replica then restores that work onto peers instead of
     /// losing it. `None` (the default) runs checkpoint-free.
     pub checkpoint_period_secs: Option<f64>,
+    /// Event-driven stepping (the default): each barrier advances only
+    /// the replicas holding work plus the ones whose next lifecycle
+    /// event (warm-up / respawn completion) is due, found through the
+    /// fleet's event queue — idle replicas cost nothing. Seeded runs
+    /// are byte-identical either way (`tests/event_fleet.rs` pins every
+    /// scenario family); `false` restores the full lockstep sweep as
+    /// the comparison baseline.
+    pub event_driven: bool,
+    /// Power-of-d-choices placement for the RAP-aware scorers: sample
+    /// `d` replicas from the better of two routing cells (≤ 32 replicas
+    /// each, ranked by aggregate elastic headroom) instead of scanning
+    /// the full roster per request. `None` (the default) keeps the
+    /// exact full-scan placement — sampling changes *which* accepting
+    /// replica wins, so the seeded small-fleet scenarios leave it off
+    /// and the scale bench turns it on.
+    pub sample_d: Option<usize>,
 }
 
 impl FleetConfig {
@@ -153,6 +179,8 @@ impl Default for FleetConfig {
             warmup_secs: 0.0,
             elastic_accounting: true,
             checkpoint_period_secs: None,
+            event_driven: true,
+            sample_d: None,
         }
     }
 }
@@ -192,6 +220,21 @@ struct IngressEvent {
     /// therefore already counted as submitted there) — true only for
     /// cancels of in-flight transfers.
     reached_replica: bool,
+}
+
+/// Where a live request currently sits — the O(1) `poll` / `cancel`
+/// index. Terminal requests keep the location of their last holder
+/// (that replica's metrics own the outcome record), and ids the fleet
+/// rejected at the ingress are answered by `ingress_outcomes` before
+/// this index is consulted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Location {
+    /// Held in the tenant-fair ingress backlog.
+    Backlog,
+    /// In flight between replicas (migration or crash restore).
+    Transfer,
+    /// Queued, active, parked, or terminal on this replica.
+    Replica(usize),
 }
 
 pub struct Fleet {
@@ -274,10 +317,46 @@ pub struct Fleet {
     /// sim-time period (`None` disables sampling).
     metrics_period: Option<f64>,
     last_sample_at: f64,
+    /// Requests submitted at the fleet ingress (`offer`), plus arrivals
+    /// rejected before ever being offered (non-finite or past the run
+    /// deadline) — the conservation total `FleetReport::total_requests`
+    /// reports.
+    pub submitted: u64,
+    /// id → current holder (see [`Location`]); maintained exactly-once
+    /// across route, migrate, crash-restore, and cancel so `poll` is
+    /// O(1) at 1k replicas.
+    locations: HashMap<u64, Location>,
+    // -- event-driven scheduler (`FleetConfig::event_driven`) ----------
+    /// Replicas that must be stepped at every barrier: engine holds
+    /// work (active, waiting, or parked) or the replica is draining.
+    hot: BTreeSet<usize>,
+    /// Pending finite wake-ups as `Reverse((time bits, replica, seq))`:
+    /// warm-up and respawn completions. `f64::to_bits` is order-
+    /// preserving for the non-negative sim times stored here, and the
+    /// (time, replica, seq) tuple is the deterministic tie-break.
+    events: BinaryHeap<Reverse<(u64, usize, u64)>>,
+    /// Latest schedule generation per replica; heap entries with a
+    /// stale seq are ignored when popped.
+    sched_seq: Vec<u64>,
+    next_seq: u64,
+    /// Serving replicas with un-expired OOM marks: `maintain` must keep
+    /// judging them even after they go idle, until the marks age out.
+    oom_watch: BTreeSet<usize>,
+    /// Mirror of `all_idle`'s per-replica scan (`!idle || parked > 0`),
+    /// maintained by `wake` so the idle check is O(1).
+    engaged: Vec<bool>,
+    engaged_count: usize,
+    /// The previous `step_all` barrier, and the clock every engine
+    /// would hold under lockstep at the current point of the phase
+    /// order (pre-step phases see the previous barrier, post-step
+    /// phases the current one). `sync_engine` jumps stale idle engines
+    /// to `engine_clock` before handing them work.
+    last_barrier: f64,
+    engine_clock: f64,
 }
 
 impl Fleet {
-    pub fn new(mut replicas: Vec<Replica>, router: Router,
+    pub fn new(mut replicas: Vec<Replica>, mut router: Router,
                cfg: FleetConfig) -> Fleet {
         assert_eq!(router.decisions.len(), replicas.len(),
                    "router sized for a different fleet");
@@ -287,7 +366,11 @@ impl Fleet {
             r.engine.cfg.checkpoint_period_secs =
                 cfg.checkpoint_period_secs;
         }
-        Fleet {
+        if let Some(d) = cfg.sample_d {
+            router.enable_sampling(d, 0x5EED_CE11);
+        }
+        let n = replicas.len();
+        let mut fleet = Fleet {
             autoscaler: cfg.autoscale.map(Autoscaler::new),
             cfg,
             replicas,
@@ -322,7 +405,22 @@ impl Fleet {
             recorder: None,
             metrics_period: None,
             last_sample_at: 0.0,
+            submitted: 0,
+            locations: HashMap::new(),
+            hot: BTreeSet::new(),
+            events: BinaryHeap::new(),
+            sched_seq: vec![0; n],
+            next_seq: 0,
+            oom_watch: BTreeSet::new(),
+            engaged: vec![false; n],
+            engaged_count: 0,
+            last_barrier: 0.0,
+            engine_clock: 0.0,
+        };
+        for i in 0..n {
+            fleet.wake(i);
         }
+        fleet
     }
 
     /// Attach a shared flight recorder: the fleet and every engine —
@@ -406,19 +504,128 @@ impl Fleet {
     }
 
     fn all_idle(&self) -> bool {
-        self.transfers.is_empty()
-            && self.backlog.values().all(|q| q.is_empty())
-            && self.replicas.iter().all(|r| {
+        if !self.transfers.is_empty()
+            || !self.backlog.values().all(|q| q.is_empty())
+        {
+            return false;
+        }
+        if self.cfg.event_driven {
+            let idle = self.engaged_count == 0;
+            debug_assert_eq!(
+                idle,
+                self.replicas.iter().all(|r| {
+                    r.engine.idle() && r.engine.parked_len() == 0
+                }),
+                "engaged ledger drifted from the roster scan"
+            );
+            idle
+        } else {
+            self.replicas.iter().all(|r| {
                 r.engine.idle() && r.engine.parked_len() == 0
             })
+        }
     }
 
-    /// Step every replica to `t`, then run the maintenance passes:
+    /// Re-index one replica in the event scheduler after anything that
+    /// could change its next wake-up: always-due (`hot`) while its
+    /// engine holds work or it is draining, a finite heap entry for a
+    /// warm-up / respawn completion, nothing while idle. Also maintains
+    /// the `engaged` mirror of `all_idle`'s roster scan and dirties the
+    /// router's cell aggregate. Cheap and safe to call redundantly, in
+    /// both stepping modes.
+    fn wake(&mut self, i: usize) {
+        let at = self.replicas[i].next_event_at();
+        self.next_seq += 1;
+        self.sched_seq[i] = self.next_seq;
+        if at == f64::NEG_INFINITY {
+            self.hot.insert(i);
+        } else {
+            self.hot.remove(&i);
+            if at.is_finite() {
+                self.events
+                    .push(Reverse((at.to_bits(), i, self.next_seq)));
+            }
+        }
+        let engaged = {
+            let e = &self.replicas[i].engine;
+            !e.idle() || e.parked_len() > 0
+        };
+        if engaged != self.engaged[i] {
+            self.engaged[i] = engaged;
+            if engaged {
+                self.engaged_count += 1;
+            } else {
+                self.engaged_count -= 1;
+            }
+        }
+        self.router.note_dirty(i);
+    }
+
+    /// Event-driven mode leaves idle replicas un-stepped, so an idle
+    /// engine's clock can lag the fleet's. Before handing such a
+    /// replica new work (or cancelling into it), jump it to the clock
+    /// every engine would hold under lockstep at this point of the
+    /// phase order (`engine_clock`); on an idle engine this is a pure
+    /// clock jump, and on an already-current engine a no-op, so seeded
+    /// behavior stays byte-identical to the lockstep sweep.
+    fn sync_engine(&mut self, i: usize) {
+        if !self.cfg.event_driven {
+            return;
+        }
+        let t = self.engine_clock;
+        if self.replicas[i].engine.sim_time() >= t {
+            return;
+        }
+        self.replicas[i]
+            .step_to(t)
+            .expect("idle engine clock jump cannot fail");
+        self.replicas[i].harvest(t, &mut self.registry);
+    }
+
+    /// The replicas a barrier at `t` must step: every hot replica plus
+    /// every valid wake-up due by `t`, in ascending id order (the same
+    /// order the lockstep sweep visits them).
+    fn due_replicas(&mut self, t: f64) -> Vec<usize> {
+        let mut due: Vec<usize> = self.hot.iter().copied().collect();
+        while let Some(&Reverse((bits, i, seq))) = self.events.peek() {
+            if f64::from_bits(bits) > t {
+                break;
+            }
+            self.events.pop();
+            if self.sched_seq[i] == seq {
+                due.push(i);
+            }
+        }
+        due.sort_unstable();
+        due.dedup();
+        #[cfg(debug_assertions)]
+        for (i, r) in self.replicas.iter().enumerate() {
+            debug_assert!(
+                (r.engine.idle() && r.engine.parked_len() == 0)
+                    || self.hot.contains(&i),
+                "replica {i} holds work but is not scheduled hot"
+            );
+        }
+        due
+    }
+
+    /// Step the fleet to barrier `t`, then run the maintenance passes:
     /// migration (queue rebalance before the step, parked pickup and
     /// transfer delivery after), drain/respawn, autoscaling, and the
     /// tenant-fair ingress drain (capacity freed by completions admits
-    /// backlogged tenants).
+    /// backlogged tenants). Dispatches on `FleetConfig::event_driven`;
+    /// both paths run the same phases in the same order and produce
+    /// byte-identical seeded reports.
     fn step_all(&mut self, t: f64) -> Result<()> {
+        if self.cfg.event_driven {
+            self.step_all_event(t)
+        } else {
+            self.step_all_lockstep(t)
+        }
+    }
+
+    /// The original full sweep: every replica steps at every barrier.
+    fn step_all_lockstep(&mut self, t: f64) -> Result<()> {
         self.apply_faults(t)?;
         if self.cfg.migrate {
             self.rebalance_queued(t);
@@ -426,6 +633,65 @@ impl Fleet {
         for r in &mut self.replicas {
             r.step_to(t)?;
             r.harvest(t, &mut self.registry);
+        }
+        self.engine_clock = t;
+        if self.cfg.migrate {
+            self.dispatch_parked(t);
+        }
+        self.deliver_transfers(t)?;
+        self.maintain(t);
+        self.autoscale(t);
+        self.dispatch_ingress(t);
+        self.sample_metrics(t);
+        self.last_barrier = t;
+        Ok(())
+    }
+
+    /// Event-driven barrier: only the due set steps. Idle replicas are
+    /// left on stale clocks and jumped forward (`sync_engine`) the
+    /// moment anything hands them work — a pure clock jump, since an
+    /// idle engine does nothing in between.
+    fn step_all_event(&mut self, t: f64) -> Result<()> {
+        // A firing fault (or a pending doom sweep) mutates arbitrary
+        // replicas mid-phase; sync the whole roster to the previous
+        // barrier and run a full sweep so the handlers observe exactly
+        // the lockstep state. Faults are rare, so this costs nothing.
+        let fault_active = !self.doomed.is_empty()
+            || (self.next_fault < self.fault_plan.events.len()
+                && self.fault_plan.events[self.next_fault].start()
+                    <= t);
+        if fault_active {
+            for i in 0..self.replicas.len() {
+                self.sync_engine(i);
+            }
+        }
+        self.apply_faults(t)?;
+        if self.cfg.migrate {
+            self.rebalance_queued(t);
+        }
+        let due: Vec<usize> = if fault_active {
+            (0..self.replicas.len()).collect()
+        } else {
+            self.due_replicas(t)
+        };
+        for &i in &due {
+            self.replicas[i].step_to(t)?;
+            self.replicas[i].harvest(t, &mut self.registry);
+        }
+        self.engine_clock = t;
+        let threshold = self.cfg.oom_threshold;
+        for &i in &due {
+            self.wake(i);
+            if threshold != usize::MAX
+                && self.replicas[i].accepting()
+                && self.registry.count_since(
+                    series::OOM,
+                    self.replicas[i].id,
+                    t - self.cfg.oom_window_secs,
+                ) > 0
+            {
+                self.oom_watch.insert(i);
+            }
         }
         if self.cfg.migrate {
             self.dispatch_parked(t);
@@ -435,6 +701,7 @@ impl Fleet {
         self.autoscale(t);
         self.dispatch_ingress(t);
         self.sample_metrics(t);
+        self.last_barrier = t;
         Ok(())
     }
 
@@ -544,9 +811,11 @@ impl Fleet {
     /// policy; into the per-tenant ingress backlog (then an immediate
     /// quota-gated drain) under `tenant-fair`.
     fn offer(&mut self, req: SubmitRequest, t: f64) {
+        self.submitted += 1;
         self.bus.emit(t, Some(req.id), Some(&req.tenant),
                       || EventKind::Submit);
         if self.router.policy == RouterPolicy::TenantFair {
+            self.locations.insert(req.id, Location::Backlog);
             self.backlog
                 .entry(req.tenant.clone())
                 .or_default()
@@ -562,7 +831,10 @@ impl Fleet {
                         policy: self.router.policy.name().to_string(),
                     }
                 });
-                self.replicas[i].submit(req, t)
+                self.locations.insert(req.id, Location::Replica(i));
+                self.sync_engine(i);
+                self.replicas[i].submit(req, t);
+                self.wake(i);
             }
             None => {
                 self.bus.emit(t, Some(req.id), Some(&req.tenant), || {
@@ -578,8 +850,26 @@ impl Fleet {
 
     /// Lifecycle state of a submitted request: ingress-terminal,
     /// backlogged, in flight between replicas, or wherever its replica
-    /// says it is. `None` for ids the fleet has never seen.
+    /// says it is. `None` for ids the fleet has never seen. O(1): one
+    /// lookup in the location index, never a fleet scan.
     pub fn poll(&self, h: RequestHandle) -> Option<RequestStatus> {
+        if let Some(&o) = self.ingress_outcomes.get(&h.id) {
+            return Some(RequestStatus::Finished(o));
+        }
+        match self.locations.get(&h.id) {
+            Some(Location::Backlog) => Some(RequestStatus::Queued),
+            Some(Location::Transfer) => Some(RequestStatus::Migrating),
+            Some(&Location::Replica(i)) => {
+                self.replicas[i].engine.status(h.id)
+            }
+            None => None,
+        }
+    }
+
+    /// The pre-index full scan (backlog → transfers → every replica) —
+    /// kept as the oracle the exactly-once proptest holds the location
+    /// index to.
+    pub fn poll_scan(&self, h: RequestHandle) -> Option<RequestStatus> {
         if let Some(&o) = self.ingress_outcomes.get(&h.id) {
             return Some(RequestStatus::Finished(o));
         }
@@ -604,35 +894,53 @@ impl Fleet {
     /// Reclaim a request wherever it currently lives: ingress backlog,
     /// in flight between replicas, or on a replica (queued or
     /// mid-decode — its KV is freed). Books `Outcome::Cancelled`.
-    /// Returns false when no live copy of `h` exists.
+    /// Returns false when no live copy of `h` exists. The location
+    /// index narrows the search to the one holder — no fleet scan.
     pub fn cancel(&mut self, h: RequestHandle) -> Result<bool> {
-        let mut from_backlog: Option<SubmitRequest> = None;
-        for q in self.backlog.values_mut() {
-            if let Some(i) = q.iter().position(|r| r.id == h.id) {
-                // the position is fresh, but degrade rather than panic
-                // if the slot is somehow gone
-                from_backlog = q.remove(i);
-                break;
+        if self.ingress_outcomes.contains_key(&h.id) {
+            return Ok(false); // already terminal at the ingress
+        }
+        match self.locations.get(&h.id).copied() {
+            Some(Location::Backlog) => {
+                let mut from_backlog: Option<SubmitRequest> = None;
+                for q in self.backlog.values_mut() {
+                    if let Some(i) =
+                        q.iter().position(|r| r.id == h.id)
+                    {
+                        // the position is fresh, but degrade rather
+                        // than panic if the slot is somehow gone
+                        from_backlog = q.remove(i);
+                        break;
+                    }
+                }
+                let Some(req) = from_backlog else {
+                    return Ok(false);
+                };
+                self.note_ingress_terminal(&req, Outcome::Cancelled,
+                                           false);
+                Ok(true)
             }
-        }
-        if let Some(req) = from_backlog {
-            self.note_ingress_terminal(&req, Outcome::Cancelled, false);
-            return Ok(true);
-        }
-        if let Some(i) =
-            self.transfers.iter().position(|tr| tr.state.id() == h.id)
-        {
-            let tr = self.transfers.remove(i);
-            self.note_ingress_terminal(tr.state.request(),
-                                       Outcome::Cancelled, true);
-            return Ok(true);
-        }
-        for r in &mut self.replicas {
-            if r.engine.cancel(h.id)? {
-                return Ok(true);
+            Some(Location::Transfer) => {
+                let Some(i) = self
+                    .transfers
+                    .iter()
+                    .position(|tr| tr.state.id() == h.id)
+                else {
+                    return Ok(false);
+                };
+                let tr = self.transfers.remove(i);
+                self.note_ingress_terminal(tr.state.request(),
+                                           Outcome::Cancelled, true);
+                Ok(true)
             }
+            Some(Location::Replica(i)) => {
+                self.sync_engine(i);
+                let hit = self.replicas[i].engine.cancel(h.id)?;
+                self.wake(i);
+                Ok(hit)
+            }
+            None => Ok(false),
         }
-        Ok(false)
     }
 
     fn note_ingress_terminal(&mut self, req: &SubmitRequest,
@@ -651,8 +959,34 @@ impl Fleet {
     /// Each tenant's committed KV bytes: the projected full-length cost
     /// (under the holding replica's current mask) of everything queued,
     /// active, parked, or in flight for that tenant. This is what the
-    /// quota caps.
+    /// quota caps. Served from each engine's incrementally-maintained
+    /// committed-token ledger (`Engine::committed_kv_bytes`) — pricing
+    /// is exactly linear in committed tokens, so the ledger reproduces
+    /// the old per-request rescan to the byte; the rescan survives as
+    /// the `debug_assertions` oracle below (and the quota proptest's).
     fn tenant_kv_usage(&self) -> BTreeMap<Tenant, u64> {
+        let mut usage: BTreeMap<Tenant, u64> = BTreeMap::new();
+        for r in &self.replicas {
+            if !r.live() {
+                continue;
+            }
+            r.engine.committed_kv_bytes(&mut usage);
+        }
+        for tr in &self.transfers {
+            let req = tr.state.request();
+            *usage.entry(req.tenant.clone()).or_insert(0) +=
+                self.replicas[tr.dest].engine.admission_cost(req) as u64;
+        }
+        debug_assert_eq!(usage, self.tenant_kv_usage_rescan(),
+                         "committed-byte ledger drifted from the \
+                          full rescan");
+        usage
+    }
+
+    /// The full waiting/active/parked rescan the ledger replaced — the
+    /// independent oracle `tenant_kv_usage` is held to under
+    /// `debug_assertions`, and the quota proptest's reference.
+    pub fn tenant_kv_usage_rescan(&self) -> BTreeMap<Tenant, u64> {
         let mut usage: BTreeMap<Tenant, u64> = BTreeMap::new();
         for r in &self.replicas {
             if !r.live() {
@@ -760,7 +1094,10 @@ impl Fleet {
                     policy: self.router.policy.name().to_string(),
                 }
             });
+            self.locations.insert(req.id, Location::Replica(dest));
+            self.sync_engine(dest);
             self.replicas[dest].submit(req, t);
+            self.wake(dest);
         }
     }
 
@@ -837,6 +1174,7 @@ impl Fleet {
         }
         let (ckpts, lost, queued) =
             self.replicas[idx].engine.crash_dump();
+        self.wake(idx);
         for state in ckpts {
             let req = state.request();
             self.chaos_ids.insert(req.id, req.slo_deadline.is_some());
@@ -852,10 +1190,12 @@ impl Fleet {
                 EventKind::Crash { disposition: "lost" }
             });
             match self.least_loaded_peer(idx) {
-                Some(peer) => self.replicas[peer]
-                    .engine
-                    .batcher
-                    .requeue_front(req),
+                Some(peer) => {
+                    self.locations
+                        .insert(req.id, Location::Replica(peer));
+                    self.replicas[peer].engine.adopt_front(req);
+                    self.wake(peer);
+                }
                 None => self.reject_displaced(idx, &req, t),
             }
         }
@@ -866,7 +1206,10 @@ impl Fleet {
             });
             match self.least_loaded_peer(idx) {
                 Some(peer) => {
-                    self.replicas[peer].engine.batcher.enqueue(req);
+                    self.locations
+                        .insert(req.id, Location::Replica(peer));
+                    self.replicas[peer].engine.adopt(req);
+                    self.wake(peer);
                 }
                 None => self.reject_displaced(idx, &req, t),
             }
@@ -891,6 +1234,7 @@ impl Fleet {
         self.registry.mark(series::CAPACITY_LOSS, FLEET, t);
         self.replicas[idx].retiring = true;
         self.replicas[idx].state = ReplicaState::Draining;
+        self.wake(idx);
         self.doomed.push((idx, deadline));
         let queued = self.replicas[idx].engine.take_waiting();
         for req in queued {
@@ -919,6 +1263,7 @@ impl Fleet {
                 self.send_state(idx, state, t);
             }
         }
+        self.wake(idx);
         Ok(())
     }
 
@@ -931,6 +1276,8 @@ impl Fleet {
         match self.pick_target(src, &state, t) {
             Some(dest) => {
                 let cost = self.link_transfer_cost(src, bytes, t);
+                self.locations
+                    .insert(state.id(), Location::Transfer);
                 self.transfers.push(Transfer {
                     state,
                     src,
@@ -979,6 +1326,7 @@ impl Fleet {
     /// per-tenant ledger counts the miss.
     fn reject_displaced(&mut self, src: usize, req: &SubmitRequest,
                         t: f64) {
+        self.locations.insert(req.id, Location::Replica(src));
         let m = &mut self.replicas[src].engine.metrics;
         m.rejected += 1;
         m.note_terminal(req, Outcome::Rejected);
@@ -1001,7 +1349,14 @@ impl Fleet {
     /// `elastic_accounting` off the outlook is rigid and this reduces
     /// to the old `bytes_used > Sys_avail` test).
     fn rebalance_queued(&mut self, t: f64) {
-        for src in 0..self.replicas.len() {
+        // only a replica with queued work can collapse, and queued work
+        // makes it hot — the hot set is a complete candidate list
+        let candidates: Vec<usize> = if self.cfg.event_driven {
+            self.hot.iter().copied().collect()
+        } else {
+            (0..self.replicas.len()).collect()
+        };
+        for src in candidates {
             let collapsed = {
                 let r = &self.replicas[src];
                 r.live()
@@ -1020,13 +1375,20 @@ impl Fleet {
                     None => self.send_state(src, SeqState::Queued(req), t),
                 }
             }
+            self.wake(src);
         }
     }
 
     /// Collect the sequences each engine parked under memory pressure
     /// during this step and ship them out.
     fn dispatch_parked(&mut self, t: f64) {
-        for src in 0..self.replicas.len() {
+        // parked work keeps a replica hot, so the hot set is complete
+        let candidates: Vec<usize> = if self.cfg.event_driven {
+            self.hot.iter().copied().collect()
+        } else {
+            (0..self.replicas.len()).collect()
+        };
+        for src in candidates {
             if self.replicas[src].engine.parked_len() == 0 {
                 continue;
             }
@@ -1034,6 +1396,7 @@ impl Fleet {
             for state in parked {
                 self.send_state(src, state, t);
             }
+            self.wake(src);
         }
     }
 
@@ -1069,6 +1432,8 @@ impl Fleet {
         match self.pick_target(src, &state, t) {
             Some(dest) => {
                 let cost = self.link_transfer_cost(src, bytes, t);
+                self.locations
+                    .insert(state.id(), Location::Transfer);
                 self.transfers.push(Transfer {
                     state,
                     src,
@@ -1109,15 +1474,21 @@ impl Fleet {
             self.reject_displaced(src, &req, t);
             return;
         }
+        self.sync_engine(home);
         match state {
             SeqState::Queued(req) => {
-                self.replicas[home].engine.batcher.enqueue(req);
+                self.locations
+                    .insert(req.id, Location::Replica(home));
+                self.replicas[home].engine.adopt(req);
             }
             SeqState::Active { req, .. } => {
                 self.replicas[src].engine.metrics.evictions += 1;
-                self.replicas[home].engine.batcher.requeue_front(req);
+                self.locations
+                    .insert(req.id, Location::Replica(home));
+                self.replicas[home].engine.adopt_front(req);
             }
         }
+        self.wake(home);
     }
 
     /// Land transfers whose payload has arrived. A destination that
@@ -1175,9 +1546,15 @@ impl Fleet {
                                     tr.state.request())
                             && src.engine.can_import(&tr.state);
                         if src_ok {
+                            self.sync_engine(tr.src);
+                            self.locations.insert(
+                                tr.state.id(),
+                                Location::Replica(tr.src),
+                            );
                             self.replicas[tr.src]
                                 .engine
                                 .import_sequence(tr.state)?;
+                            self.wake(tr.src);
                         } else {
                             if tr.is_restore {
                                 self.seq_lost += 1;
@@ -1188,6 +1565,7 @@ impl Fleet {
                 }
                 continue;
             }
+            self.sync_engine(tr.dest);
             if self.replicas[tr.dest].engine.can_import(&tr.state) {
                 let bytes = tr.state.transfer_bytes() as u64;
                 let padded = tr.state.padded_transfer_bytes() as u64;
@@ -1216,11 +1594,16 @@ impl Fleet {
                     // snapshot held aside, KV re-attached on dispatch)
                     // rather than seizing a decode slot ahead of
                     // queued higher-priority work.
+                    self.locations.insert(tr.state.id(),
+                                          Location::Replica(tr.dest));
                     self.replicas[tr.dest].engine.resume_import(tr.state)?;
                     self.seq_restored += 1;
                     self.replicas[tr.dest].restored_in += 1;
+                    self.wake(tr.dest);
                     continue;
                 }
+                self.locations.insert(tr.state.id(),
+                                      Location::Replica(tr.dest));
                 self.replicas[tr.dest].engine.import_sequence(tr.state)?;
                 // counted on delivery (not dispatch), so abandoned
                 // moves never desynchronize the in/out/aggregate
@@ -1230,6 +1613,7 @@ impl Fleet {
                 self.migrations += 1;
                 self.migration_bytes += bytes;
                 self.migration_bytes_padded += padded;
+                self.wake(tr.dest);
             } else {
                 // Shape mismatch across heterogeneous models: the
                 // payload is useless there — the sequence restarts from
@@ -1241,7 +1625,10 @@ impl Fleet {
                 }
                 let req = tr.state.request().clone();
                 self.replicas[tr.src].engine.metrics.evictions += 1;
-                self.replicas[tr.dest].engine.batcher.enqueue(req);
+                self.locations
+                    .insert(req.id, Location::Replica(tr.dest));
+                self.replicas[tr.dest].engine.adopt(req);
+                self.wake(tr.dest);
             }
         }
         Ok(())
@@ -1253,32 +1640,65 @@ impl Fleet {
     /// (never the last serving one), and move drained-empty replicas on
     /// to their next state — a respawn cool-down, or `Retired` when the
     /// autoscaler flagged them. Respawn and warm-up completion happen
-    /// inside `Replica::step_to`.
+    /// inside `Replica::step_to`. Event-driven mode judges only the
+    /// hot replicas plus the OOM watch set (idle Serving replicas whose
+    /// marks have not aged out yet) — any replica that could transition
+    /// is in one of the two.
     fn maintain(&mut self, t: f64) {
-        let mut serving = self
-            .replicas
-            .iter()
-            .filter(|r| r.accepting())
-            .count();
+        let candidates: Vec<usize> = if self.cfg.event_driven {
+            let mut c: Vec<usize> = self
+                .hot
+                .iter()
+                .chain(self.oom_watch.iter())
+                .copied()
+                .collect();
+            c.sort_unstable();
+            c.dedup();
+            c
+        } else {
+            (0..self.replicas.len()).collect()
+        };
+        if candidates.is_empty() {
+            return;
+        }
         let window = self.cfg.oom_window_secs;
         let threshold = self.cfg.oom_threshold;
-        for r in &mut self.replicas {
-            match r.state {
+        // the "never the last serving replica" gate needs the roster-
+        // wide count; skipped entirely when draining is disabled
+        let mut serving = if threshold == usize::MAX {
+            0
+        } else {
+            self.replicas.iter().filter(|r| r.accepting()).count()
+        };
+        for i in candidates {
+            match self.replicas[i].state {
                 ReplicaState::Serving => {
+                    // trim only behind the same gates the lockstep
+                    // sweep used, so the mark-expiry schedule is
+                    // identical in both modes
+                    if threshold == usize::MAX || serving <= 1 {
+                        continue;
+                    }
                     // same destructive window the replicas' private
                     // mark lists kept: drop marks older than the
                     // horizon, count the rest
-                    if threshold != usize::MAX
-                        && serving > 1
-                        && self.registry.trim_count(series::OOM, r.id,
-                                                    t - window)
-                            >= threshold
-                    {
-                        r.state = ReplicaState::Draining;
+                    let marks = self.registry.trim_count(
+                        series::OOM,
+                        self.replicas[i].id,
+                        t - window,
+                    );
+                    if marks == 0 {
+                        self.oom_watch.remove(&i);
+                    }
+                    if marks >= threshold {
+                        self.replicas[i].state =
+                            ReplicaState::Draining;
                         serving -= 1;
+                        self.wake(i);
                     }
                 }
                 ReplicaState::Draining => {
+                    let r = &mut self.replicas[i];
                     if r.engine.idle() && r.engine.parked_len() == 0 {
                         if r.retiring {
                             r.state = ReplicaState::Retired;
@@ -1288,6 +1708,7 @@ impl Fleet {
                             };
                             r.respawns += 1;
                         }
+                        self.wake(i);
                     }
                 }
                 ReplicaState::Warming { .. }
@@ -1446,6 +1867,9 @@ impl Fleet {
         }
         self.replicas.push(r);
         self.router.decisions.push(0);
+        self.sched_seq.push(0);
+        self.engaged.push(false);
+        self.wake(id);
         self.spawns += 1;
         true
     }
@@ -1471,6 +1895,7 @@ impl Fleet {
         let i = pick?;
         self.replicas[i].retiring = true;
         self.replicas[i].state = ReplicaState::Draining;
+        self.wake(i);
         self.retires += 1;
         Some(i)
     }
@@ -1491,6 +1916,7 @@ impl Fleet {
             .into_iter()
             .partition(|r| r.has_finite_arrival());
         for req in bad {
+            self.submitted += 1;
             self.note_ingress_terminal(&req, Outcome::Rejected, false);
             self.dropped += 1;
         }
@@ -1520,10 +1946,15 @@ impl Fleet {
             }
         }
         // Arrivals past the deadline were never offered to the router;
-        // count them as dropped so the report's accounting invariant
-        // (routing-histogram sum + dropped == trace length) holds even
-        // on a truncated run. Backlogged requests the run never
-        // released are terminal too: rejected at the front door.
+        // count them as dropped — and give each a terminal ingress
+        // outcome — so the report's accounting invariant (submitted ==
+        // terminal outcomes + pending) holds even on a truncated run.
+        // Backlogged requests the run never released are terminal too:
+        // rejected at the front door.
+        for req in &requests[next..] {
+            self.submitted += 1;
+            self.note_ingress_terminal(req, Outcome::Rejected, false);
+        }
         self.dropped += (requests.len() - next) as u64;
         let stranded: Vec<SubmitRequest> = self
             .backlog
@@ -1649,7 +2080,7 @@ impl Fleet {
         // Chaos recovery quality: over the SLO-carrying requests a
         // fault displaced, how many still finished inside their
         // deadline (cancels and still-unfinished ids don't count
-        // against the rate; NaN when no fault touched one).
+        // against the rate; `None` when no fault touched one).
         let mut chaos_hit = 0u64;
         let mut chaos_total = 0u64;
         for (&id, &had_deadline) in &self.chaos_ids {
@@ -1676,18 +2107,15 @@ impl Fleet {
             checkpoint_bytes,
             transfer_retries: self.transfer_retries,
             transfer_failures: self.transfer_failures,
-            recovery_p99_ttft: percentile(&chaos_ttfts, 99.0),
-            chaos_deadline_hit_rate: if chaos_total > 0 {
-                chaos_hit as f64 / chaos_total as f64
-            } else {
-                f64::NAN
-            },
+            recovery_p99_ttft: (!chaos_ttfts.is_empty())
+                .then(|| percentile(&chaos_ttfts, 99.0)),
+            chaos_deadline_hit_rate: (chaos_total > 0)
+                .then(|| chaos_hit as f64 / chaos_total as f64),
         };
-        let routed: u64 = self.router.decisions.iter().sum();
         FleetReport {
             policy: self.router.policy.name().to_string(),
             sim_secs: self.clock,
-            total_requests: routed + self.dropped,
+            total_requests: self.submitted,
             completed,
             rejected,
             evictions,

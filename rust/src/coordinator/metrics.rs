@@ -30,7 +30,7 @@ pub struct ReplicaReport {
 }
 
 /// The failure-injection and recovery ledger of one fleet run. All
-/// zeros (and NaN rates) on runs without a fault plan.
+/// zeros (and absent rates) on runs without a fault plan.
 #[derive(Clone, Debug)]
 pub struct ChaosReport {
     /// Scheduled fault events that fired.
@@ -53,12 +53,12 @@ pub struct ChaosReport {
     /// moves abandoned after the retry budget ran out.
     pub transfer_retries: u64,
     pub transfer_failures: u64,
-    /// p99 TTFT over the requests a fault displaced (NaN when none
-    /// completed).
-    pub recovery_p99_ttft: f64,
+    /// p99 TTFT over the requests a fault displaced (`None` when none
+    /// completed — serialized as `null`, never a NaN sentinel).
+    pub recovery_p99_ttft: Option<f64>,
     /// Of the SLO-carrying requests a fault displaced, the fraction
-    /// that still finished inside their deadline (NaN when none).
-    pub chaos_deadline_hit_rate: f64,
+    /// that still finished inside their deadline (`None` when none).
+    pub chaos_deadline_hit_rate: Option<f64>,
 }
 
 impl Default for ChaosReport {
@@ -73,8 +73,8 @@ impl Default for ChaosReport {
             checkpoint_bytes: 0,
             transfer_retries: 0,
             transfer_failures: 0,
-            recovery_p99_ttft: f64::NAN,
-            chaos_deadline_hit_rate: f64::NAN,
+            recovery_p99_ttft: None,
+            chaos_deadline_hit_rate: None,
         }
     }
 }
@@ -117,7 +117,10 @@ impl FleetTenantReport {
 pub struct FleetReport {
     pub policy: String,
     pub sim_secs: f64,
-    /// Arrivals handed to the router (routed + dropped).
+    /// Requests submitted at the fleet ingress — every arrival, whether
+    /// it was routed, backlogged, dropped, or rejected at the front
+    /// door. The conservation total: completed + rejected + cancelled +
+    /// deadline_missed + dropped + still-pending.
     pub total_requests: u64,
     pub completed: usize,
     /// Permanent admission rejections, summed over replicas.
@@ -178,6 +181,15 @@ fn num(x: f64) -> Json {
     if x.is_finite() { Json::Num(x) } else { Json::Null }
 }
 
+/// JSON for an optional rate: absent → null (a typed `None`, not a NaN
+/// smuggled through the serializer).
+fn opt_num(x: Option<f64>) -> Json {
+    match x {
+        Some(v) => num(v),
+        None => Json::Null,
+    }
+}
+
 impl FleetReport {
     pub fn print(&self) {
         println!("── fleet report: router={} ({} replicas, {:.0}s sim)",
@@ -212,8 +224,8 @@ impl FleetReport {
                      c.checkpoints_taken,
                      mib(c.checkpoint_bytes as usize),
                      c.transfer_retries, c.transfer_failures,
-                     zero_nan(c.recovery_p99_ttft),
-                     100.0 * zero_nan(c.chaos_deadline_hit_rate));
+                     c.recovery_p99_ttft.unwrap_or(0.0),
+                     100.0 * c.chaos_deadline_hit_rate.unwrap_or(0.0));
         }
         println!("   latency p50/p99  {:.3}s / {:.3}s   ttft p50/p99  \
                   {:.3}s / {:.3}s",
@@ -389,9 +401,9 @@ impl FleetReport {
                 ("transfer_failures",
                  Json::Num(self.chaos.transfer_failures as f64)),
                 ("recovery_p99_ttft",
-                 num(self.chaos.recovery_p99_ttft)),
+                 opt_num(self.chaos.recovery_p99_ttft)),
                 ("chaos_deadline_hit_rate",
-                 num(self.chaos.chaos_deadline_hit_rate)),
+                 opt_num(self.chaos.chaos_deadline_hit_rate)),
             ])),
             ("tenants", Json::Arr(tenants)),
             ("replicas", Json::Arr(replicas)),

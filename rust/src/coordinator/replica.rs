@@ -256,6 +256,38 @@ impl Replica {
         self.signal_cursor = completed.len();
         reg.trim(series::TTFT, self.id, t - 120.0);
     }
+
+    /// When this replica next needs to be stepped, for the fleet's
+    /// event-driven scheduler (`FleetConfig::event_driven`):
+    ///
+    ///   * `NEG_INFINITY` — always due. Any replica with resident work
+    ///     (queued, active, or parked sequences) must be stepped to
+    ///     every fleet barrier: the engine's blocked-tick clamp and the
+    ///     harvest timestamps its steps produce are barrier-sensitive,
+    ///     so skipping a busy replica would move seeded reports. A
+    ///     `Draining` replica is also always due — the maintenance pass
+    ///     has to observe the drain completing to retire or respawn it.
+    ///   * a finite time — due at that barrier: a `Warming` or
+    ///     `Respawning` replica flips back to `Serving` inside
+    ///     [`Replica::step_to`], so someone must step it once its
+    ///     cool-down elapses.
+    ///   * `INFINITY` — never due. An idle `Serving` replica's
+    ///     `step_to` is a pure clock jump (no work, no signals), and
+    ///     `Retired`/`Failed` replicas left the working set; skipping
+    ///     them is observationally free.
+    pub fn next_event_at(&self) -> f64 {
+        if !self.engine.idle() || self.engine.parked_len() > 0 {
+            return f64::NEG_INFINITY;
+        }
+        match self.state {
+            ReplicaState::Draining => f64::NEG_INFINITY,
+            ReplicaState::Warming { until }
+            | ReplicaState::Respawning { until } => until,
+            ReplicaState::Serving
+            | ReplicaState::Retired
+            | ReplicaState::Failed => f64::INFINITY,
+        }
+    }
 }
 
 /// Blueprint for one simulated replica: heterogeneous capacity,

@@ -44,6 +44,35 @@ use anyhow::{bail, Result};
 
 use super::replica::Replica;
 use crate::api::{SubmitRequest, TenantQuotas};
+use crate::util::rng::Rng;
+
+/// Replicas per routing cell in the two-tier sampling hierarchy. Small
+/// enough that refreshing one dirty cell is a bounded scan; large
+/// enough that a 1k-replica fleet has only ~32 cells.
+const CELL_SIZE: usize = 32;
+
+/// Aggregate elastic outlook for one cell, maintained lazily: the
+/// fleet marks a cell dirty whenever a member replica's schedule is
+/// recomputed ([`Router::note_dirty`]), and the sampler refreshes a
+/// dirty cell only when it is actually sampled.
+#[derive(Clone, Copy, Debug, Default)]
+struct CellAgg {
+    /// Members currently accepting new work.
+    accepting: usize,
+    /// Summed elastic headroom (bytes) across members at last refresh.
+    headroom: u64,
+}
+
+/// Power-of-d-choices placement state: pick two cells, refresh their
+/// aggregates if stale, then score `d` sampled members of the better
+/// cell with the exact RAP-aware formula. Routing touches O(d + cell)
+/// replicas instead of the whole roster.
+struct Sampler {
+    d: usize,
+    rng: Rng,
+    agg: Vec<CellAgg>,
+    dirty: Vec<bool>,
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RouterPolicy {
@@ -96,12 +125,14 @@ pub struct Router {
     /// pure RAP-aware placement).
     pub quotas: TenantQuotas,
     rr_next: usize,
+    sampler: Option<Sampler>,
 }
 
 impl Router {
     pub fn new(policy: RouterPolicy, n_replicas: usize) -> Router {
         Router { policy, decisions: vec![0; n_replicas],
-                 quotas: TenantQuotas::unlimited(), rr_next: 0 }
+                 quotas: TenantQuotas::unlimited(), rr_next: 0,
+                 sampler: None }
     }
 
     /// Install a quota table (tenant-fair fleets).
@@ -110,38 +141,156 @@ impl Router {
         self
     }
 
-    /// Stateless RAP-aware placement: the best replica for `req` right
-    /// now, without touching the histogram. `None` only when no replica
-    /// is accepting. The `RapAware` and `TenantFair` arms of
-    /// [`Router::route`] delegate here; the fleet's tenant-fair
-    /// dispatcher also calls it directly to price a backlogged head
-    /// before committing quota.
-    pub fn place(&self, req: &SubmitRequest, replicas: &[Replica],
+    /// Switch RAP-aware/tenant-fair placement to power-of-`d`-choices
+    /// sampling over the cell hierarchy (`FleetConfig::sample_d`). The
+    /// seeded RNG keeps sampled placement deterministic per run.
+    pub fn enable_sampling(&mut self, d: usize, seed: u64) {
+        let n_cells =
+            self.decisions.len().div_ceil(CELL_SIZE).max(1);
+        self.sampler = Some(Sampler {
+            d: d.max(1),
+            rng: Rng::new(seed),
+            agg: vec![CellAgg::default(); n_cells],
+            dirty: vec![true; n_cells],
+        });
+    }
+
+    /// Mark `replica`'s cell stale. The fleet calls this from `wake`
+    /// whenever a replica's schedule (and thus its accepting state or
+    /// headroom outlook) may have changed; the cell aggregate is
+    /// rebuilt the next time the sampler lands on it. No-op without
+    /// sampling.
+    pub fn note_dirty(&mut self, replica: usize) {
+        let Some(s) = self.sampler.as_mut() else { return };
+        let cell = replica / CELL_SIZE;
+        if cell >= s.agg.len() {
+            s.agg.resize(cell + 1, CellAgg::default());
+            s.dirty.resize(cell + 1, true);
+        }
+        s.dirty[cell] = true;
+    }
+
+    /// RAP-aware placement: the best replica for `req` right now,
+    /// without touching the histogram. `None` only when no replica is
+    /// accepting (a sampled miss falls back to the full scan, so the
+    /// contract holds with sampling on). The `RapAware` and
+    /// `TenantFair` arms of [`Router::route`] delegate here; the
+    /// fleet's tenant-fair dispatcher also calls it directly to price
+    /// a backlogged head before committing quota. Takes `&mut self`
+    /// for the sampler's RNG and lazy cell aggregates.
+    pub fn place(&mut self, req: &SubmitRequest, replicas: &[Replica],
                  t: f64) -> Option<usize> {
+        if self.sampler.is_some() {
+            if let Some(pick) = self.place_sampled(req, replicas, t) {
+                return Some(pick);
+            }
+            // The sampled cells held no accepting (or no sampled
+            // accepting) replica. Fall back to the full scan so the
+            // contract stays exact: `Some` iff any replica accepts.
+        }
+        self.place_full(req, replicas, t)
+    }
+
+    /// Exact RAP-aware score for one accepting replica: the shared
+    /// arithmetic of `place_full` and the sampled final pass.
+    fn rap_score(r: &Replica, req: &SubmitRequest, t: f64) -> f64 {
+        let headroom = r.elastic_headroom(t) as f64;
+        // like for like: elastic headroom vs the request's cost
+        // under the mask this replica could shrink to
+        let cost = r.engine.elastic_admission_cost(req) as f64;
+        let surplus = headroom - cost;
+        if surplus > 0.0 {
+            // feasible: quality-weighted memory surplus, discounted
+            // by queue depth — always > 0, so every feasible
+            // replica outranks every infeasible one
+            r.mask_utility() * surplus / (1.0 + r.outstanding() as f64)
+        } else {
+            // infeasible right now: rank by RAW deficit far below
+            // all feasible scores (never scale a negative surplus
+            // by utility — that inverts the preference),
+            // least-underwater first
+            surplus - 1e18
+        }
+    }
+
+    /// Full-roster RAP-aware placement — the exact baseline and the
+    /// fallback when sampling finds nothing.
+    fn place_full(&self, req: &SubmitRequest, replicas: &[Replica],
+                  t: f64) -> Option<usize> {
         let mut best: Option<(usize, f64)> = None;
         for (i, r) in replicas.iter().enumerate() {
             if !r.accepting() {
                 continue;
             }
-            let headroom = r.elastic_headroom(t) as f64;
-            // like for like: elastic headroom vs the request's cost
-            // under the mask this replica could shrink to
-            let cost = r.engine.elastic_admission_cost(req) as f64;
-            let surplus = headroom - cost;
-            let score = if surplus > 0.0 {
-                // feasible: quality-weighted memory surplus, discounted
-                // by queue depth — always > 0, so every feasible
-                // replica outranks every infeasible one
-                r.mask_utility() * surplus
-                    / (1.0 + r.outstanding() as f64)
-            } else {
-                // infeasible right now: rank by RAW deficit far below
-                // all feasible scores (never scale a negative surplus
-                // by utility — that inverts the preference),
-                // least-underwater first
-                surplus - 1e18
-            };
+            let score = Router::rap_score(r, req, t);
             if best.map_or(true, |(_, s)| score > s) {
+                best = Some((i, score));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Power-of-d-choices placement: sample two cells, refresh their
+    /// aggregates if dirty, then score `d` random members of the
+    /// better cell exactly. Returns `None` when the sampled slice of
+    /// the fleet shows nothing accepting — callers fall back to the
+    /// full scan to preserve the `Some`-iff-any-accepting contract.
+    fn place_sampled(&mut self, req: &SubmitRequest,
+                     replicas: &[Replica], t: f64) -> Option<usize> {
+        let n = replicas.len();
+        if n == 0 {
+            return None;
+        }
+        let s = self.sampler.as_mut()?;
+        let n_cells = n.div_ceil(CELL_SIZE);
+        if s.agg.len() < n_cells {
+            s.agg.resize(n_cells, CellAgg::default());
+            s.dirty.resize(n_cells, true);
+        }
+        // two-choice over cells, refreshing dirty aggregates on touch
+        let ca = s.rng.below(n_cells);
+        let cb = s.rng.below(n_cells);
+        for &c in &[ca, cb] {
+            if s.dirty[c] {
+                let lo = c * CELL_SIZE;
+                let hi = (lo + CELL_SIZE).min(n);
+                let mut agg = CellAgg::default();
+                for r in &replicas[lo..hi] {
+                    if r.accepting() {
+                        agg.accepting += 1;
+                        agg.headroom += r.elastic_headroom(t) as u64;
+                    }
+                }
+                s.agg[c] = agg;
+                s.dirty[c] = false;
+            }
+        }
+        let pick_cell = |c: usize| -> Option<(usize, u64)> {
+            (s.agg[c].accepting > 0).then(|| (c, s.agg[c].headroom))
+        };
+        let cell = match (pick_cell(ca), pick_cell(cb)) {
+            (Some((c, ha)), Some((_, hb))) if ha >= hb => c,
+            (Some(_), Some((c, _))) => c,
+            (Some((c, _)), None) | (None, Some((c, _))) => c,
+            (None, None) => return None,
+        };
+        // d samples (with replacement) inside the cell, scored with
+        // the exact RAP formula; ties break toward the lowest index
+        // regardless of sample order
+        let lo = cell * CELL_SIZE;
+        let len = (lo + CELL_SIZE).min(n) - lo;
+        let mut best: Option<(usize, f64)> = None;
+        for _ in 0..s.d {
+            let i = lo + s.rng.below(len);
+            let r = &replicas[i];
+            if !r.accepting() {
+                continue;
+            }
+            let score = Router::rap_score(r, req, t);
+            let better = best.map_or(true, |(bi, bs)| {
+                score > bs || (score == bs && i < bi)
+            });
+            if better {
                 best = Some((i, score));
             }
         }
@@ -153,6 +302,16 @@ impl Router {
     /// policy is deterministic.
     pub fn route(&mut self, req: &SubmitRequest, replicas: &[Replica],
                  t: f64) -> Option<usize> {
+        // The RAP-aware policies go straight through `place` (possibly
+        // sampled) — building a full accepting-index vec per request
+        // is exactly the O(N) scan the sampler exists to avoid.
+        if matches!(self.policy,
+                    RouterPolicy::RapAware | RouterPolicy::TenantFair)
+        {
+            let pick = self.place(req, replicas, t)?;
+            self.decisions[pick] += 1;
+            return Some(pick);
+        }
         let accepting: Vec<usize> = replicas
             .iter()
             .enumerate()
@@ -187,8 +346,9 @@ impl Router {
                      std::cmp::Reverse(i))
                 })
                 .unwrap(),
+            // handled above, before the accepting-vec scan
             RouterPolicy::RapAware | RouterPolicy::TenantFair => {
-                self.place(req, replicas, t).unwrap()
+                unreachable!("RAP-aware policies return early")
             }
         };
         self.decisions[pick] += 1;
@@ -327,6 +487,51 @@ mod tests {
         assert_eq!(router.route(&req(0), &reps, 0.0), None);
         // the stateless placer agrees
         assert_eq!(router.place(&req(0), &reps, 0.0), None);
+    }
+
+    /// With sampling on, `place` still returns `Some` iff any replica
+    /// is accepting: a sampled miss must fall back to the full scan.
+    #[test]
+    fn sampled_place_preserves_some_iff_accepting() {
+        let mut reps = fleet_of(70); // 3 cells (32 + 32 + 6)
+        let mut router = Router::new(RouterPolicy::RapAware, 70);
+        router.enable_sampling(2, 0xDEAD);
+        for i in 0..64 {
+            let pick = router.route(&req(i), &reps, 0.0)
+                .expect("everything accepting");
+            assert!(reps[pick].accepting());
+        }
+        // exactly one accepting replica, in the last (partial) cell:
+        // sampling may miss it, the fallback must not
+        for (i, r) in reps.iter_mut().enumerate() {
+            if i != 69 {
+                r.state = ReplicaState::Draining;
+            }
+        }
+        for c in 0..3 {
+            router.note_dirty(c * 32);
+        }
+        for i in 0..16 {
+            assert_eq!(router.route(&req(100 + i), &reps, 0.0),
+                       Some(69));
+        }
+        reps[69].state = ReplicaState::Draining;
+        router.note_dirty(69);
+        assert_eq!(router.route(&req(200), &reps, 0.0), None);
+    }
+
+    /// Same seed → same sampled pick sequence (the event-driven
+    /// fleet's byte-identical reports depend on this).
+    #[test]
+    fn sampled_place_is_deterministic_per_seed() {
+        let reps = fleet_of(70);
+        let run = || {
+            let mut router = Router::new(RouterPolicy::RapAware, 70);
+            router.enable_sampling(2, 42);
+            (0..64).map(|i| router.route(&req(i), &reps, 0.0))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
     }
 
     /// `place` is `route`'s RapAware arm without the histogram side

@@ -3,20 +3,30 @@
 //! sim-side requests/sec, wall-clock, and peak RSS, each with telemetry
 //! off and on (the observer-cost surface CI watches).
 //!
-//! Unlike every report/trace JSON in the repo, `BENCH_fleet.json`
-//! deliberately carries wall-clock numbers — it *measures* the host, so
-//! its bytes are not expected to be seed-deterministic. Sim-side
-//! figures (requests, completions, sim seconds, rps) still are.
+//! `rap bench fleet --scale` is the second surface: the replica-count
+//! scaling trajectory (event-driven + sampled routing vs the lockstep
+//! full-scan baseline on a generated 1M-request tenant storm), written
+//! to `BENCH_scale.json` and ratio-gated in CI.
+//!
+//! Unlike every report/trace JSON in the repo, the `BENCH_*.json`
+//! files deliberately carry wall-clock numbers — they *measure* the
+//! host, so their bytes are not expected to be seed-deterministic.
+//! Sim-side figures (requests, completions, sim seconds) still are.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::common::banner;
+use crate::api::SubmitRequest;
 use crate::coordinator::fleet::{chaos_storm_fleet, chaos_storm_trace,
-                                tenant_storm_fleet, tenant_storm_trace};
-use crate::coordinator::router::RouterPolicy;
+                                tenant_storm_fleet, tenant_storm_trace,
+                                Fleet, FleetConfig};
+use crate::coordinator::replica::{build_sim_replica, ReplicaSpec};
+use crate::coordinator::router::{Router, RouterPolicy};
+use crate::model_meta::ModelMeta;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 /// Peak resident set size in bytes, from `/proc/self/status` `VmHWM`.
 /// 0 when the file is unavailable (non-Linux hosts).
@@ -123,5 +133,146 @@ pub fn bench_fleet(seed: u64, json_path: Option<&str>) -> Result<()> {
     let path = json_path.unwrap_or("BENCH_fleet.json");
     std::fs::write(path, json.pretty())?;
     println!("bench JSON written to {path}");
+    Ok(())
+}
+
+// ---- replica-count scaling sweep (ISSUE 8) ----------------------------
+
+/// Requests in the event-driven storm at each sweep point.
+const SCALE_STORM_REQS: usize = 1_000_000;
+/// The lockstep baseline replays a truncated prefix of the same storm:
+/// a full-roster sweep per tick at 1024 replicas would take hours on
+/// a million requests, and requests/sec is wall-normalized anyway, so
+/// a shorter run measures the same per-request cost.
+const SCALE_LOCKSTEP_REQS: usize = 20_000;
+/// Tenants in the generated storm.
+const SCALE_TENANTS: usize = 8;
+/// Offered load per replica (req/s) — fixed per replica so every
+/// sweep point runs at the same utilization and the sweep isolates
+/// coordination cost, not queueing collapse.
+const SCALE_RATE_PER_REPLICA: f64 = 0.5;
+
+/// A tenant-storm trace sized for the scaling sweep: `n_requests`
+/// arrivals spread over `SCALE_TENANTS` tenants at
+/// `SCALE_RATE_PER_REPLICA × n_replicas` req/s, with prompts and
+/// generations kept tiny so wall-clock measures the *fleet's*
+/// coordination cost rather than token simulation.
+fn scale_storm_trace(seed: u64, n_requests: usize, n_replicas: usize)
+                     -> Vec<SubmitRequest> {
+    let rate = SCALE_RATE_PER_REPLICA * n_replicas as f64;
+    let mut rng = Rng::new(seed ^ 0x5CA1_E5ED);
+    let mut at = 0.0;
+    (0..n_requests)
+        .map(|i| {
+            at += rng.f64() * 2.0 / rate;
+            let tenant = format!("t{}", rng.below(SCALE_TENANTS));
+            SubmitRequest::new(8 + rng.below(9), 1 + rng.below(4))
+                .with_id(i as u64)
+                .with_arrival(at)
+                .with_tenant(&tenant)
+        })
+        .collect()
+}
+
+/// A homogeneous `n`-replica fleet on a deliberately tiny model —
+/// drain/respawn, interference, and mask motion all off, so the sweep
+/// isolates the coordination layer under test.
+fn scale_fleet(n: usize, seed: u64, event_driven: bool) -> Fleet {
+    let meta =
+        ModelMeta::synthetic("scale-sim", 2, 32, 4, 2, 64, 64, 64);
+    let spec = ReplicaSpec {
+        app_rate: 0.0,   // no interference
+        adaptive: false, // static dense: no controller churn
+        ..ReplicaSpec::heterogeneous(0)
+    };
+    let cfg = FleetConfig {
+        oom_threshold: usize::MAX, // no drain/respawn
+        max_sim_secs: 1e12,        // never truncate the storm
+        event_driven,
+        sample_d: event_driven.then_some(2),
+        ..FleetConfig::default()
+    };
+    let replicas = (0..n)
+        .map(|i| build_sim_replica(i, &meta, &spec, seed))
+        .collect();
+    Fleet::new(replicas, Router::new(RouterPolicy::RapAware, n), cfg)
+}
+
+struct ScaleRow {
+    replicas: usize,
+    mode: &'static str,
+    requests: usize,
+    completed: usize,
+    sim_secs: f64,
+    wall_secs: f64,
+    /// Wall-normalized throughput: requests replayed per wall second.
+    rps: f64,
+    /// `VmHWM` after this run — cumulative across the process, so
+    /// rows are meaningful read in sweep order (ascending N).
+    peak_rss_bytes: u64,
+}
+
+/// `rap bench fleet --scale [--points 4,64,256,1024] [--json path]`:
+/// the replica-count scaling trajectory. Each point replays the
+/// generated tenant storm twice — event-driven + sampled routing on
+/// the full `SCALE_STORM_REQS`, then the lockstep full-scan baseline
+/// on a truncated prefix — and records wall-normalized requests/sec.
+/// CI asserts event/lockstep ≥ 10× at N=1024 from `BENCH_scale.json`.
+pub fn bench_scale(seed: u64, json_path: Option<&str>,
+                   points: &[usize]) -> Result<()> {
+    banner(&format!(
+        "Bench — fleet scaling sweep, event-driven vs lockstep \
+         (seed {seed})"));
+    println!("{:<9} {:>9} {:>9} {:>9} {:>10} {:>10} {:>11} {:>9}",
+             "replicas", "mode", "requests", "completed", "sim secs",
+             "wall secs", "req/s", "rss MiB");
+    let mut rows = Vec::new();
+    for &n in points {
+        for (mode, n_req) in [("lockstep", SCALE_LOCKSTEP_REQS),
+                              ("event", SCALE_STORM_REQS)] {
+            let event = mode == "event";
+            let reqs = scale_storm_trace(seed, n_req, n);
+            let mut fleet = scale_fleet(n, seed, event);
+            let t0 = Instant::now();
+            let report = fleet.run_requests(reqs)?;
+            let wall_secs = t0.elapsed().as_secs_f64();
+            let rps = n_req as f64 / wall_secs.max(1e-9);
+            let row = ScaleRow {
+                replicas: n,
+                mode,
+                requests: n_req,
+                completed: report.completed,
+                sim_secs: report.sim_secs,
+                wall_secs,
+                rps,
+                peak_rss_bytes: peak_rss_bytes(),
+            };
+            println!("{:<9} {:>9} {:>9} {:>9} {:>10.1} {:>10.3} \
+                      {:>11.0} {:>9.1}",
+                     row.replicas, row.mode, row.requests,
+                     row.completed, row.sim_secs, row.wall_secs,
+                     row.rps,
+                     row.peak_rss_bytes as f64 / (1024.0 * 1024.0));
+            rows.push(row);
+        }
+    }
+    let json = Json::object(vec![
+        ("seed", Json::Num(seed as f64)),
+        ("runs", Json::Arr(rows.iter().map(|r| {
+            Json::object(vec![
+                ("replicas", Json::Num(r.replicas as f64)),
+                ("mode", Json::Str(r.mode.to_string())),
+                ("requests", Json::Num(r.requests as f64)),
+                ("completed", Json::Num(r.completed as f64)),
+                ("sim_secs", Json::Num(r.sim_secs)),
+                ("wall_secs", Json::Num(r.wall_secs)),
+                ("rps", Json::Num(r.rps)),
+                ("peak_rss_bytes", Json::Num(r.peak_rss_bytes as f64)),
+            ])
+        }).collect())),
+    ]);
+    let path = json_path.unwrap_or("BENCH_scale.json");
+    std::fs::write(path, json.pretty())?;
+    println!("scale bench JSON written to {path}");
     Ok(())
 }

@@ -89,8 +89,27 @@ fn main() -> Result<()> {
             if what != "fleet" {
                 bail!("unknown bench target '{what}' (try: fleet)");
             }
-            bench::bench_fleet(seed,
-                               args.get("json").map(|s| s.as_str()))
+            if args.bool("scale") {
+                let points: Vec<usize> = match args.get("points") {
+                    Some(s) => s
+                        .split(',')
+                        .map(|p| p.trim().parse::<usize>())
+                        .collect::<Result<_, _>>()
+                        .context("--points takes a comma-separated \
+                                  list of replica counts")?,
+                    None => vec![4, 64, 256, 1024],
+                };
+                if points.is_empty() || points.contains(&0) {
+                    bail!("--points needs at least one nonzero \
+                           replica count");
+                }
+                bench::bench_scale(seed,
+                                   args.get("json").map(|s| s.as_str()),
+                                   &points)
+            } else {
+                bench::bench_fleet(seed,
+                                   args.get("json").map(|s| s.as_str()))
+            }
         }
         // ("--help" never reaches here: Args::parse turns --x into a
         // flag, leaving cmd at its "help" default)
@@ -374,6 +393,12 @@ fn print_help() {
               [--request <id>]");
     println!("  bench            fleet [--json <path>]  (storm-scenario \
               throughput, telemetry off vs on)");
+    println!("                   fleet --scale [--points 4,64,256,1024] \
+              [--json <path>]");
+    println!("                    (replica-count sweep: event-driven \
+              1M-request storm vs a truncated");
+    println!("                     lockstep baseline, wall-normalized \
+              req/s + RSS to BENCH_scale.json)");
     println!("  gsi              --model <m> --remove <n>");
     println!();
     println!("FLAGS: --model rap-small|qwen-sim|rap-tiny  --seed N  \

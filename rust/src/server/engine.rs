@@ -260,6 +260,15 @@ pub struct Engine {
     /// prefill — recovered work queues like work instead of seizing a
     /// decode slot ahead of admitted higher-priority requests.
     resumable: HashMap<u64, SeqState>,
+    /// Per-tenant committed KV *tokens*: the clamped full length
+    /// (`min(prompt + max_new, max_seq)`) summed over every resident
+    /// request (queued + active + parked). Maintained incrementally at
+    /// every membership change so the fleet's tenant-fair quota check
+    /// reads committed bytes without rescanning sequences.
+    /// `kv_bytes_for_len` is exactly linear in length, so
+    /// `tokens × per-token bytes` under the current mask equals the
+    /// per-request rescan to the byte.
+    committed_tokens: HashMap<crate::api::Tenant, u64>,
 }
 
 impl Engine {
@@ -290,6 +299,7 @@ impl Engine {
             checkpoints: HashMap::new(),
             last_checkpoint_at: f64::NEG_INFINITY,
             resumable: HashMap::new(),
+            committed_tokens: HashMap::new(),
         }
     }
 
@@ -316,8 +326,96 @@ impl Engine {
         self.bus.emit(self.sim_time, Some(req.id), Some(&req.tenant),
                       || EventKind::Submit);
         self.metrics.note_submitted(&req);
+        self.ledger_add(&req);
         self.batcher.enqueue(req);
         handle
+    }
+
+    /// Re-enter a displaced request into admission (fleet requeue and
+    /// crash-recovery paths). Unlike [`Engine::submit`] this is not a
+    /// new submission — the submitted counter is untouched — but the
+    /// request becomes resident here, so the committed-bytes ledger is
+    /// charged.
+    pub fn adopt(&mut self, req: SubmitRequest) {
+        self.ledger_add(&req);
+        self.batcher.enqueue(req);
+    }
+
+    /// As [`Engine::adopt`], but at the head of the request's priority
+    /// class (evicted work keeps its place in line).
+    pub fn adopt_front(&mut self, req: SubmitRequest) {
+        self.ledger_add(&req);
+        self.batcher.requeue_front(req);
+    }
+
+    /// Tokens a resident request commits: its KV at full clamped length.
+    fn commit_tokens_of(&self, req: &SubmitRequest) -> u64 {
+        (req.prompt_len + req.max_new_tokens)
+            .min(self.rt.meta().max_seq) as u64
+    }
+
+    /// A request became resident (queued, active, or parked).
+    fn ledger_add(&mut self, req: &SubmitRequest) {
+        *self
+            .committed_tokens
+            .entry(req.tenant.clone())
+            .or_insert(0) += self.commit_tokens_of(req);
+    }
+
+    /// A resident request left (terminal, exported, or drained).
+    fn ledger_remove(&mut self, req: &SubmitRequest) {
+        let n = self.commit_tokens_of(req);
+        if let Some(v) = self.committed_tokens.get_mut(&req.tenant) {
+            debug_assert!(*v >= n, "committed-token ledger underflow");
+            *v = v.saturating_sub(n);
+            if *v == 0 {
+                self.committed_tokens.remove(&req.tenant);
+            }
+        } else {
+            debug_assert!(false,
+                          "committed-token ledger missing tenant {:?}",
+                          req.tenant);
+        }
+    }
+
+    /// Fold this engine's committed KV bytes per tenant into `acc`,
+    /// priced under the *current* mask — byte-identical to summing
+    /// [`Engine::admission_cost`] over every resident request, because
+    /// `kv_bytes_for_len` is exactly linear in length. O(tenants held),
+    /// not O(sequences held).
+    pub fn committed_kv_bytes(
+        &self, acc: &mut std::collections::BTreeMap<crate::api::Tenant,
+                                                    u64>) {
+        if self.committed_tokens.is_empty() {
+            return;
+        }
+        let per_token = self.kv_bytes_for_len(1) as u64;
+        for (tenant, tokens) in &self.committed_tokens {
+            *acc.entry(tenant.clone()).or_insert(0) +=
+                tokens * per_token;
+        }
+    }
+
+    /// The rescan oracle for [`Engine::committed_kv_bytes`]: walk every
+    /// resident request and sum admission costs (the pre-ledger
+    /// accounting). Debug assertions and the quota proptest hold the
+    /// two equal.
+    pub fn committed_kv_bytes_rescan(
+        &self, acc: &mut std::collections::BTreeMap<crate::api::Tenant,
+                                                    u64>) {
+        for req in self.batcher.waiting.iter() {
+            *acc.entry(req.tenant.clone()).or_insert(0) +=
+                self.admission_cost(req) as u64;
+        }
+        for s in self.batcher.active.iter() {
+            *acc.entry(s.req.tenant.clone()).or_insert(0) +=
+                self.admission_cost(&s.req) as u64;
+        }
+        for state in &self.parked {
+            let req = state.request();
+            *acc.entry(req.tenant.clone()).or_insert(0) +=
+                self.admission_cost(req) as u64;
+        }
     }
 
     /// Lifecycle state of a request this engine has seen: queued,
@@ -350,6 +448,7 @@ impl Engine {
             let req = self.batcher.waiting.remove(i).unwrap();
             self.drop_checkpoint(id);
             self.resumable.remove(&id);
+            self.ledger_remove(&req);
             self.bus.emit(self.sim_time, Some(id), Some(&req.tenant),
                           || EventKind::Cancel);
             self.metrics.note_terminal(&req, Outcome::Cancelled);
@@ -362,6 +461,7 @@ impl Engine {
             let seq = self.batcher.active.remove(i);
             self.kv.remove(seq.req.id);
             self.drop_checkpoint(id);
+            self.ledger_remove(&seq.req);
             self.bus.emit(self.sim_time, Some(id),
                           Some(&seq.req.tenant), || EventKind::Cancel);
             self.metrics.note_terminal(&seq.req, Outcome::Cancelled);
@@ -370,6 +470,7 @@ impl Engine {
         if let Some(i) = self.parked.iter().position(|s| s.id() == id) {
             let state = self.parked.remove(i);
             self.drop_checkpoint(id);
+            self.ledger_remove(state.request());
             self.bus.emit(self.sim_time, Some(id),
                           Some(&state.request().tenant),
                           || EventKind::Cancel);
@@ -557,6 +658,7 @@ impl Engine {
                 // exactly these).
                 self.kv.remove(seq.req.id);
                 self.drop_checkpoint(seq.req.id);
+                self.ledger_remove(&seq.req);
                 self.bus.emit(self.sim_time, Some(seq.req.id),
                               Some(&seq.req.tenant), || {
                     EventKind::DeadlineMiss { site: "pressure" }
@@ -769,6 +871,7 @@ impl Engine {
             self.flush_batch()?;
             let seq = self.batcher.active.remove(i);
             self.drop_checkpoint(id);
+            self.ledger_remove(&seq.req);
             return Ok(Some(self.export_active(seq)?));
         }
         if let Some(i) =
@@ -776,6 +879,7 @@ impl Engine {
         {
             let req = self.batcher.waiting.remove(i).unwrap();
             self.drop_checkpoint(id);
+            self.ledger_remove(&req);
             if let Some(state) = self.resumable.remove(&id) {
                 // an un-resumed restore travels as its snapshot: the
                 // recovered decode progress survives the move
@@ -817,10 +921,14 @@ impl Engine {
                    mismatched cache shape)", state.id());
         }
         match state {
-            SeqState::Queued(req) => self.batcher.enqueue(req),
+            SeqState::Queued(req) => {
+                self.ledger_add(&req);
+                self.batcher.enqueue(req)
+            }
             SeqState::Active { req, generated, next_token,
                                prefill_done_at, kv_len, k, v, .. } => {
                 self.kv.insert(req.id, k, v, kv_len, &self.mask)?;
+                self.ledger_add(&req);
                 self.batcher.push_active(ActiveSeq {
                     req,
                     generated,
@@ -852,6 +960,7 @@ impl Engine {
         }
         let req = state.request().clone();
         self.resumable.insert(req.id, state);
+        self.ledger_add(&req);
         self.batcher.requeue_front(req);
         Ok(())
     }
@@ -867,7 +976,11 @@ impl Engine {
     /// Drain the states parked by `EvictionMode::Park` (the fleet
     /// coordinator's pickup point).
     pub fn take_parked(&mut self) -> Vec<SeqState> {
-        std::mem::take(&mut self.parked)
+        let out = std::mem::take(&mut self.parked);
+        for state in &out {
+            self.ledger_remove(state.request());
+        }
+        out
     }
 
     pub fn parked_len(&self) -> usize {
@@ -883,7 +996,12 @@ impl Engine {
     /// Drain the admission queue (fleet queue-rebalancing off a
     /// pressured replica).
     pub fn take_waiting(&mut self) -> Vec<SubmitRequest> {
-        self.batcher.waiting.drain(..).collect()
+        let out: Vec<SubmitRequest> =
+            self.batcher.waiting.drain(..).collect();
+        for req in &out {
+            self.ledger_remove(req);
+        }
+        out
     }
 
     // ---- checkpoint / crash recovery ----------------------------------
@@ -992,6 +1110,7 @@ impl Engine {
                       -> (Vec<SeqState>, Vec<SubmitRequest>,
                           Vec<SubmitRequest>) {
         self.batch = None;
+        self.committed_tokens.clear();
         let mut ckpts = Vec::new();
         let mut lost = Vec::new();
         let mut queued = Vec::new();
@@ -1053,6 +1172,7 @@ impl Engine {
             let req = self.batcher.waiting.pop_front().unwrap();
             self.drop_checkpoint(req.id);
             self.resumable.remove(&req.id);
+            self.ledger_remove(&req);
             self.bus.emit(self.sim_time, Some(req.id),
                           Some(&req.tenant), || {
                 EventKind::DeadlineMiss { site: "queue" }
@@ -1102,6 +1222,7 @@ impl Engine {
             {
                 self.kv.remove(seq.req.id);
                 self.drop_checkpoint(seq.req.id);
+                self.ledger_remove(&seq.req);
                 self.bus.emit(self.sim_time, Some(seq.req.id),
                               Some(&seq.req.tenant), || {
                     EventKind::DeadlineMiss { site: "preempt" }
@@ -1189,6 +1310,7 @@ impl Engine {
                 let rejected = self.batcher.waiting.pop_front().unwrap();
                 self.drop_checkpoint(rejected.id);
                 self.resumable.remove(&rejected.id);
+                self.ledger_remove(&rejected);
                 self.metrics.rejected += 1;
                 self.bus.emit(self.sim_time, Some(rejected.id),
                               Some(&rejected.tenant), || {
@@ -1307,6 +1429,7 @@ impl Engine {
         for seq in finished {
             self.kv.remove(seq.req.id);
             self.drop_checkpoint(seq.req.id);
+            self.ledger_remove(&seq.req);
             // A finish after the deadline is still served (the tokens
             // exist) but terminates as DeadlineMissed in the ledger.
             let outcome = if seq.req.deadline_hit(self.sim_time) {

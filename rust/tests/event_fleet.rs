@@ -1,0 +1,187 @@
+//! Event-driven fleet acceptance (ISSUE 8).
+//!
+//! The tentpole contract: flipping `FleetConfig::event_driven` — the
+//! priority-queue scheduler that steps only the due replicas — must
+//! not move a single byte of any seeded report vs the lockstep full
+//! sweep, on every scenario family (PR-3 elastic, PR-4 absorbable,
+//! PR-5 tenant storm, PR-6 chaos storm). Plus: the event-queue
+//! tie-break stays deterministic under autoscaled spawn ids, and the
+//! ingress accounting fixed alongside the refactor conserves requests
+//! (submitted == terminal outcomes + pending) through the paths the
+//! old `routed + dropped` bookkeeping missed — cancel-from-backlog
+//! and drain-with-backlog.
+
+use rap::api::{Outcome, RequestHandle, RequestStatus, SubmitRequest};
+use rap::coordinator::fleet::{absorbable_spike_fleet,
+                              absorbable_spike_trace,
+                              chaos_storm_fleet, chaos_storm_trace,
+                              elastic_demo_fleet, elastic_demo_trace,
+                              tenant_storm_fleet, tenant_storm_trace,
+                              Fleet};
+use rap::coordinator::metrics::FleetReport;
+use rap::coordinator::router::RouterPolicy;
+
+fn lockstep(mut fleet: Fleet) -> Fleet {
+    assert!(fleet.cfg.event_driven, "event mode must be the default");
+    fleet.cfg.event_driven = false;
+    fleet
+}
+
+fn assert_conserved(r: &FleetReport, pending: u64, label: &str) {
+    let terminal = r.completed as u64 + r.rejected + r.cancelled
+        + r.deadline_missed + r.dropped;
+    assert_eq!(r.total_requests, terminal + pending,
+               "{label}: submitted {} != {terminal} terminal + \
+                {pending} pending",
+               r.total_requests);
+}
+
+/// The equivalence matrix: every seeded scenario family under both
+/// `event_driven` settings produces byte-identical report JSON — and
+/// each report conserves requests (every run here drains fully, so
+/// pending is 0).
+#[test]
+fn event_driven_matches_lockstep_on_every_scenario_family() {
+    let matrix: Vec<(&str, Box<dyn Fn(bool) -> FleetReport>)> = vec![
+        ("elastic", Box::new(|ev| {
+            let f = elastic_demo_fleet(7, true);
+            let mut f = if ev { f } else { lockstep(f) };
+            f.run_trace(elastic_demo_trace(7)).unwrap()
+        })),
+        ("absorbable", Box::new(|ev| {
+            let f = absorbable_spike_fleet(13, true);
+            let mut f = if ev { f } else { lockstep(f) };
+            f.run_trace(absorbable_spike_trace(13)).unwrap()
+        })),
+        ("tenant-storm", Box::new(|ev| {
+            let f = tenant_storm_fleet(42, RouterPolicy::TenantFair);
+            let mut f = if ev { f } else { lockstep(f) };
+            f.run_requests(tenant_storm_trace(42)).unwrap()
+        })),
+        ("chaos-storm", Box::new(|ev| {
+            let f = chaos_storm_fleet(42, true);
+            let mut f = if ev { f } else { lockstep(f) };
+            f.run_requests(chaos_storm_trace(42)).unwrap()
+        })),
+        ("chaos-storm-nockpt", Box::new(|ev| {
+            let f = chaos_storm_fleet(42, false);
+            let mut f = if ev { f } else { lockstep(f) };
+            f.run_requests(chaos_storm_trace(42)).unwrap()
+        })),
+    ];
+    for (label, run) in &matrix {
+        let event = run(true);
+        let lock = run(false);
+        assert_eq!(event.to_json().pretty(), lock.to_json().pretty(),
+                   "{label}: event-driven report diverged from \
+                    lockstep");
+        assert_conserved(&event, 0, label);
+    }
+}
+
+/// Same seed, two event-driven runs → byte-identical reports even
+/// when the run autoscales (spawned replicas enter the event queue
+/// mid-run, so their ids exercise the (time, replica, seq) tie-break);
+/// a different seed diverges, so the pin is real.
+#[test]
+fn event_queue_tie_break_is_deterministic_under_spawns() {
+    let run = |seed| {
+        let mut fleet = chaos_storm_fleet(seed, true);
+        let report = fleet.run_requests(chaos_storm_trace(seed))
+            .unwrap();
+        (fleet.replicas.len(), report.to_json().pretty())
+    };
+    let (roster, a) = run(42);
+    assert!(roster > 3,
+            "chaos storm no longer spawns a replacement — the \
+             tie-break is not exercised");
+    assert_eq!(a, run(42).1,
+               "same seed produced different event-driven reports");
+    assert_ne!(a, run(7).1,
+               "different seeds produced identical reports");
+}
+
+/// Cancel-from-backlog: a request cancelled out of the tenant-fair
+/// ingress backlog was submitted but never routed — under the old
+/// `routed + dropped` accounting it vanished from `total_requests`.
+/// It must now appear as a terminal cancel, and the books must close.
+#[test]
+fn conservation_holds_through_cancel_from_backlog() {
+    let mut fleet = tenant_storm_fleet(42, RouterPolicy::TenantFair);
+    // The noisy tenant's quota is 4 worst-case requests fleet-wide;
+    // submit 10 worst-case requests so the tail is quota-blocked in
+    // the ingress backlog.
+    let handles: Vec<RequestHandle> = (0..10)
+        .map(|i| {
+            fleet.submit(SubmitRequest::new(32, 48)
+                .with_id(9_000 + i)
+                .with_tenant("noisy"))
+        })
+        .collect();
+    let tail = *handles.last().unwrap();
+    assert_eq!(fleet.poll(tail), Some(RequestStatus::Queued),
+               "flood tail should be waiting at the front door");
+    assert!(fleet.cancel(tail).unwrap(), "backlog cancel must land");
+    assert_eq!(fleet.poll(tail),
+               Some(RequestStatus::Finished(Outcome::Cancelled)));
+    assert!(!fleet.cancel(tail).unwrap(),
+            "second cancel of a terminal request must be a no-op");
+    // drain: quota frees as the admitted flood completes, releasing
+    // the rest of the backlog
+    for k in 1..=1200 {
+        fleet.step(k as f64 * 0.5).unwrap();
+    }
+    let report = fleet.report();
+    assert_eq!(report.total_requests, 10);
+    assert_eq!(report.cancelled, 1,
+               "the backlog cancel must be a terminal outcome");
+    assert_eq!(report.completed, 9, "everyone else runs to completion");
+    assert_conserved(&report, 0, "cancel-from-backlog");
+    for h in handles {
+        assert!(matches!(fleet.poll(h),
+                         Some(RequestStatus::Finished(_))),
+                "request {} not terminal after drain", h.id);
+    }
+}
+
+/// Drain-with-backlog: truncating the run while the tenant-fair
+/// backlog still holds requests (and replicas still hold work) must
+/// keep the books closed — stranded and never-offered arrivals are
+/// terminal, in-flight work is pending, and submitted covers it all.
+#[test]
+fn conservation_holds_when_the_run_drains_with_a_backlog() {
+    let mut fleet = tenant_storm_fleet(42, RouterPolicy::TenantFair);
+    fleet.cfg.max_sim_secs = 6.0; // truncate mid-storm
+    let reqs = tenant_storm_trace(42);
+    let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+    let report = fleet.run_requests(reqs).unwrap();
+    assert!(report.dropped > 0,
+            "scenario no longer strands arrivals at truncation");
+    let pending = ids
+        .iter()
+        .filter(|&&id| {
+            !matches!(fleet.poll(RequestHandle { id }),
+                      Some(RequestStatus::Finished(_)))
+        })
+        .count() as u64;
+    assert!(pending > 0,
+            "scenario no longer truncates with work in flight");
+    assert_conserved(&report, pending, "drain-with-backlog");
+}
+
+/// The O(1) poll index agrees with the exhaustive fleet scan on every
+/// id of a full seeded run — including ids that migrated, crashed,
+/// restored, and resumed (the chaos storm exercises every location
+/// transition).
+#[test]
+fn poll_index_agrees_with_the_exhaustive_scan() {
+    let mut fleet = chaos_storm_fleet(42, true);
+    let reqs = chaos_storm_trace(42);
+    let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+    fleet.run_requests(reqs).unwrap();
+    for id in ids {
+        let h = RequestHandle { id };
+        assert_eq!(fleet.poll(h), fleet.poll_scan(h),
+                   "poll index diverged from the scan for id {id}");
+    }
+}

@@ -562,6 +562,14 @@ fn prop_interrupted_transfers_deliver_exactly_once() {
                 handles.push(fleet.submit(reqs[next].clone()));
                 next += 1;
             }
+            // the location index must agree with the exhaustive scan
+            // *mid-flight* too — while ids are genuinely Queued,
+            // Running, and Migrating across crashes and partitions
+            for h in &handles {
+                assert_eq!(fleet.poll(*h), fleet.poll_scan(*h),
+                           "seed {seed}: poll index diverged \
+                            mid-run for id {}", h.id);
+            }
         }
         fleet.step(t + 600.0).unwrap();
         // the scenario has teeth: the crash actually launched restores
@@ -576,6 +584,12 @@ fn prop_interrupted_transfers_deliver_exactly_once() {
                     "seed {seed}: id {} not terminal at drain: {other:?}",
                     h.id),
             }
+            // ... and the O(1) location index survived the same
+            // crash/restore/requeue churn: it must agree with the
+            // exhaustive backlog → transfers → replicas scan
+            assert_eq!(fleet.poll(*h), fleet.poll_scan(*h),
+                       "seed {seed}: poll index diverged from the \
+                        scan for id {}", h.id);
         }
         // ... and holds exactly one terminal outcome across the fleet:
         // two bookings would mean a duplicated restore, zero a request

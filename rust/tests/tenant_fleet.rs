@@ -256,6 +256,18 @@ fn prop_tenant_fair_never_exceeds_quota() {
                     *p = bytes;
                 }
             }
+            // the incremental committed-bytes ledger the dispatcher
+            // now routes on must stay byte-equal to the full rescan
+            // at every step boundary, on every engine
+            for r in &fleet.replicas {
+                let mut ledger = std::collections::BTreeMap::new();
+                let mut rescan = std::collections::BTreeMap::new();
+                r.engine.committed_kv_bytes(&mut ledger);
+                r.engine.committed_kv_bytes_rescan(&mut rescan);
+                assert_eq!(ledger, rescan,
+                           "seed {seed}: replica {} ledger drifted \
+                            from the rescan at t={t}", r.id);
+            }
             if next >= reqs.len()
                 && handles.iter().all(|h| {
                     matches!(fleet.poll(*h),

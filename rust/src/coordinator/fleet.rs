@@ -93,6 +93,7 @@ use crate::telemetry::registry::{series, FLEET};
 use crate::telemetry::{Bus, EventKind, Recorder, Registry,
                        SignalSnapshot};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::util::stats::{mean, percentile};
 use crate::workload::{Request, TraceConfig, TraceGenerator};
 
@@ -130,6 +131,14 @@ pub struct FleetConfig {
     /// reproduces the pre-outlook (current-mask) behavior for
     /// comparison runs.
     pub elastic_accounting: bool,
+    /// The KV leg of the joint lattice (`EngineConfig::kv_elastic`,
+    /// PR-9): under pressure, engines may compress resident KV caches
+    /// down to the controller's floor policy before shedding work, and
+    /// every elastic-headroom consumer prices placements against the
+    /// joint (mask × KV policy) `min_viable`. Requires
+    /// `elastic_accounting`; off restores mask-only elasticity for
+    /// comparison runs.
+    pub kv_elastic: bool,
     /// Periodic crash-recovery checkpointing on every replica engine
     /// (`EngineConfig::checkpoint_period_secs`): each period an engine
     /// snapshots the live-KV *delta* of its active sequences into
@@ -178,6 +187,7 @@ impl Default for FleetConfig {
             autoscale: None,
             warmup_secs: 0.0,
             elastic_accounting: true,
+            kv_elastic: true,
             checkpoint_period_secs: None,
             event_driven: true,
             sample_d: None,
@@ -363,6 +373,7 @@ impl Fleet {
         for r in &mut replicas {
             r.engine.cfg.eviction = cfg.eviction_mode();
             r.engine.cfg.elastic_accounting = cfg.elastic_accounting;
+            r.engine.cfg.kv_elastic = cfg.kv_elastic;
             r.engine.cfg.checkpoint_period_secs =
                 cfg.checkpoint_period_secs;
         }
@@ -713,6 +724,8 @@ impl Fleet {
         let mut rejected = 0u64;
         let mut ooms = 0u64;
         let mut absorbed = 0u64;
+        let mut compressed = 0u64;
+        let mut kv_reclaimed = 0u64;
         let mut evictions = 0u64;
         let mut cancelled = 0u64;
         let mut deadline_missed = 0u64;
@@ -726,6 +739,8 @@ impl Fleet {
             rejected += m.rejected;
             ooms += m.oom_events;
             absorbed += m.absorbed_spikes;
+            compressed += m.compressed_spikes;
+            kv_reclaimed += m.kv_bytes_reclaimed;
             evictions += m.evictions;
             cancelled += m.cancelled;
             deadline_missed += m.deadline_missed;
@@ -742,6 +757,8 @@ impl Fleet {
         reg.set_counter("rap_deadline_missed_total", deadline_missed);
         reg.set_counter("rap_oom_events_total", ooms);
         reg.set_counter("rap_absorbed_spikes_total", absorbed);
+        reg.set_counter("rap_compressed_spikes_total", compressed);
+        reg.set_counter("rap_kv_bytes_reclaimed_total", kv_reclaimed);
         reg.set_counter("rap_evictions_total", evictions);
         reg.set_counter("rap_checkpoints_total", checkpoints);
         reg.set_counter("rap_checkpoint_bytes_total", checkpoint_bytes);
@@ -1854,6 +1871,7 @@ impl Fleet {
         r.id = id;
         r.engine.cfg.eviction = self.cfg.eviction_mode();
         r.engine.cfg.elastic_accounting = self.cfg.elastic_accounting;
+        r.engine.cfg.kv_elastic = self.cfg.kv_elastic;
         r.engine.cfg.checkpoint_period_secs =
             self.cfg.checkpoint_period_secs;
         r.spawned_at = Some(t);
@@ -1990,6 +2008,8 @@ impl Fleet {
         let mut deadline_missed = 0u64;
         let mut oom_events = 0u64;
         let mut absorbed_spikes = 0u64;
+        let mut compressed_spikes = 0u64;
+        let mut kv_bytes_reclaimed = 0u64;
         let mut respawns = 0u64;
         let mut checkpoints_taken = 0u64;
         let mut checkpoint_bytes = 0u64;
@@ -2021,6 +2041,8 @@ impl Fleet {
             deadline_missed += r.engine.metrics.deadline_missed;
             oom_events += r.engine.metrics.oom_events;
             absorbed_spikes += r.engine.metrics.absorbed_spikes;
+            compressed_spikes += r.engine.metrics.compressed_spikes;
+            kv_bytes_reclaimed += r.engine.metrics.kv_bytes_reclaimed;
             respawns += r.respawns;
             checkpoints_taken += r.engine.metrics.checkpoints_taken;
             checkpoint_bytes += r.engine.metrics.checkpoint_bytes;
@@ -2124,6 +2146,8 @@ impl Fleet {
             dropped: self.dropped,
             oom_events,
             absorbed_spikes,
+            compressed_spikes,
+            kv_bytes_reclaimed,
             respawns,
             spawns: self.spawns,
             retires: self.retires,
@@ -2511,6 +2535,141 @@ pub fn absorbable_spike_trace(seed: u64) -> Vec<Request> {
             r.arrival += t0;
         }
         out.extend(reqs);
+        t0 += secs;
+    }
+    for (i, r) in out.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    out
+}
+
+/// Length of the long-context storm's arrival window plus decode tail
+/// (`longctx_storm_fleet` + `longctx_storm_trace`). The interference
+/// wall lands at [`LONGCTX_WALL_AT`], *inside* the cohort's decode
+/// phase.
+pub const LONGCTX_STORM_SECS: f64 = 20.0;
+/// When the interference wall lands on replica 0 (mid-decode).
+pub const LONGCTX_WALL_AT: f64 = 16.5;
+/// How long the wall holds.
+pub const LONGCTX_WALL_SECS: f64 = 12.0;
+/// Wall height: the fraction of the dense parameter footprint left
+/// available. Sized into the *joint-only* band — see
+/// [`longctx_storm_fleet`].
+pub const LONGCTX_AVAIL_FRAC: f64 = 0.62;
+/// Replica speed for the scenario: fast enough that the whole storm
+/// cohort prefills before the wall, slow enough that its decodes are
+/// still resident when the wall lands.
+pub const LONGCTX_FLOPS: f64 = 6.0e8;
+
+/// The PR-9 acceptance scenario: a long-context storm that mask-only
+/// elasticity *cannot* absorb but the joint (mask × KV policy) lattice
+/// can — by compressing resident caches to the KV floor instead of
+/// shedding work.
+///
+/// Two adaptive replicas behind the least-outstanding router. A dense
+/// ~1 s storm of long-prompt/long-generation requests arrives at
+/// t ≈ 13 s; every request prefills before the wall, so when the wall
+/// lands at [`LONGCTX_WALL_AT`] each replica under it holds a *closed
+/// cohort* of 5–7 mid-decode residents and an empty queue. The wall is
+/// sized (via [`LONGCTX_AVAIL_FRAC`]) so that at the first pressure
+/// instant even the min-viable mask fits the live KV — both arms
+/// absorb by mask-shrinking alone. Then the cohort keeps decoding:
+/// resident KV grows under a mask that cannot shrink further (the
+/// controller's decision grid already sits at the min-viable level in
+/// this budget band), and the live footprint crosses `Sys_avail`
+/// again.
+///
+/// At that second pressure instant the two lattices diverge:
+///   * `kv_elastic = false` (mask-only): `min_viable` prices resident
+///     KV at full length — the floor itself no longer fits, so this is
+///     a *true OOM*: work is shed, the queue migrates, the OOM-armed
+///     autoscaler spawns a replica that nothing will ever be routed
+///     to.
+///   * `kv_elastic = true` (joint): the outlook prices residents at
+///     the KV floor, so the spike is still absorbable — pressure
+///     compresses residents to the floor (window+sink eviction),
+///     books `compressed_spikes`/`kv_bytes_reclaimed`, and sheds
+///     nothing: zero migrations, zero spawns, zero OOMs, at
+///     equal-or-better p99 TTFT.
+///
+/// Both arms run mask-elastic accounting (`elastic_accounting: true`);
+/// only the KV leg differs. Deterministic per seed; seeds 42, 10 and
+/// 100 are pinned by `tests/longctx_fleet.rs` and the CI smoke.
+pub fn longctx_storm_fleet(seed: u64, kv_elastic: bool) -> Fleet {
+    use crate::server::memmon::MemoryMonitor;
+
+    let spec = ReplicaSpec {
+        flops_per_sec: LONGCTX_FLOPS,
+        app_rate: 0.0, // interference is the explicit wall below
+        adaptive: true,
+        capacity_mult: 2.5,
+        ..ReplicaSpec::heterogeneous(0)
+    };
+    let cfg = FleetConfig {
+        migrate: true,
+        // no drain/respawn: isolate the joint lattice's effect
+        oom_threshold: usize::MAX,
+        autoscale: Some(AutoscaleConfig {
+            min_replicas: 2,
+            max_replicas: 4,
+            // only the OOM signal can fire (as in the absorbable-spike
+            // scenario): every spawn here is shed pressure
+            high_queue_per_replica: 1e12,
+            low_queue_per_replica: 0.0,
+            high_p99_ttft_secs: 1e12,
+            high_oom_events: 1,
+            hold_secs: 1.0,
+            cooldown_secs: 10.0,
+            eval_every_secs: 0.5,
+            signal_window_secs: 10.0,
+            ..AutoscaleConfig::default()
+        }),
+        elastic_accounting: true,
+        kv_elastic,
+        max_sim_secs: LONGCTX_STORM_SECS + 3600.0,
+        ..FleetConfig::default()
+    };
+    let mut fleet = uniform_sim_fleet(2, seed,
+                                      RouterPolicy::LeastOutstanding,
+                                      cfg, spec);
+    for r in &mut fleet.replicas {
+        r.engine.cfg.controller_period = 30.0;
+    }
+    let params = fleet.replicas[0].engine.bytes_used();
+    let cap = fleet.replicas[0].engine.monitor.cfg.capacity;
+    let avail = (params as f64 * LONGCTX_AVAIL_FRAC) as usize;
+    fleet.replicas[0].engine.monitor = MemoryMonitor::walls(
+        cap, &[(LONGCTX_WALL_AT, LONGCTX_WALL_AT + LONGCTX_WALL_SECS,
+                cap - avail)]);
+    fleet
+}
+
+/// The trace `longctx_storm_fleet` serves: a sparse warm-up followed by
+/// a ~1 s storm of long-context requests. Prompts blow past the largest
+/// prefill bucket (128), so every resident cache sits far above the KV
+/// floor cap; generations are long (96–128 tokens) so resident KV keeps
+/// growing under the wall. Hand-rolled (not `TraceGenerator`): the
+/// joint-only pressure band depends on the cohort's length profile, so
+/// the draws are pinned here exactly.
+pub fn longctx_storm_trace(seed: u64) -> Vec<Request> {
+    let mut out: Vec<Request> = Vec::new();
+    let mut t0 = 0.0;
+    for (k, &(secs, rate)) in [(13.0, 0.25), (1.1, 18.0)].iter()
+        .enumerate()
+    {
+        let mut rng = Rng::new(
+            seed.wrapping_add(7919u64.wrapping_mul(k as u64 + 1)));
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(rate);
+            if t >= secs {
+                break;
+            }
+            let prompt = 144 + rng.below(81);
+            let gen = 96 + rng.below(33);
+            out.push(Request { id: 0, arrival: t0 + t,
+                               prompt_len: prompt, gen_len: gen });
+        }
         t0 += secs;
     }
     for (i, r) in out.iter_mut().enumerate() {

@@ -143,6 +143,13 @@ pub struct FleetReport {
     /// Memory spikes absorbed purely by mask-shrinking (no work shed,
     /// no OOM charged), summed over replicas.
     pub absorbed_spikes: u64,
+    /// Absorptions that needed the KV axis: at least one resident cache
+    /// was compressed to the floor policy (a subset of
+    /// `absorbed_spikes`), summed over replicas.
+    pub compressed_spikes: u64,
+    /// KV bytes freed by in-place compression under pressure, summed
+    /// over replicas.
+    pub kv_bytes_reclaimed: u64,
     pub respawns: u64,
     /// Replicas added / retired by the autoscaler.
     pub spawns: u64,
@@ -201,6 +208,11 @@ impl FleetReport {
                   throughput {:.2} req/s",
                  self.oom_events, self.absorbed_spikes, self.respawns,
                  self.throughput_rps);
+        if self.compressed_spikes > 0 {
+            println!("   kv compressions {} ({:.1} MiB reclaimed)",
+                     self.compressed_spikes,
+                     mib(self.kv_bytes_reclaimed as usize));
+        }
         if self.cancelled + self.deadline_missed > 0 {
             println!("   cancelled {} | deadline missed {}",
                      self.cancelled, self.deadline_missed);
@@ -306,6 +318,10 @@ impl FleetReport {
                     ("oom_events", Json::Num(r.serve.oom_events as f64)),
                     ("absorbed_spikes",
                      Json::Num(r.serve.absorbed_spikes as f64)),
+                    ("compressed_spikes",
+                     Json::Num(r.serve.compressed_spikes as f64)),
+                    ("kv_bytes_reclaimed",
+                     Json::Num(r.serve.kv_bytes_reclaimed as f64)),
                     ("mask_switches",
                      Json::Num(r.serve.mask_switches as f64)),
                     ("deadline_missed",
@@ -365,6 +381,10 @@ impl FleetReport {
             ("oom_events", Json::Num(self.oom_events as f64)),
             ("absorbed_spikes",
              Json::Num(self.absorbed_spikes as f64)),
+            ("compressed_spikes",
+             Json::Num(self.compressed_spikes as f64)),
+            ("kv_bytes_reclaimed",
+             Json::Num(self.kv_bytes_reclaimed as f64)),
             ("respawns", Json::Num(self.respawns as f64)),
             ("spawns", Json::Num(self.spawns as f64)),
             ("retires", Json::Num(self.retires as f64)),
@@ -437,6 +457,8 @@ mod tests {
             dropped: 0,
             oom_events: 0,
             absorbed_spikes: 0,
+            compressed_spikes: 0,
+            kv_bytes_reclaimed: 0,
             respawns: 0,
             spawns: 0,
             retires: 0,
@@ -519,6 +541,8 @@ mod tests {
             dropped: 0,
             oom_events: 0,
             absorbed_spikes: 0,
+            compressed_spikes: 0,
+            kv_bytes_reclaimed: 0,
             respawns: 0,
             spawns: 0,
             retires: 0,
@@ -552,7 +576,8 @@ mod tests {
         let top = [
             "router", "sim_secs", "total_requests", "completed",
             "rejected", "evictions", "cancelled", "deadline_missed",
-            "dropped", "oom_events", "absorbed_spikes", "respawns",
+            "dropped", "oom_events", "absorbed_spikes",
+            "compressed_spikes", "kv_bytes_reclaimed", "respawns",
             "spawns", "retires", "migrations", "migration_bytes",
             "migration_bytes_padded", "mean_latency", "p50_latency",
             "p99_latency", "p50_ttft", "p99_ttft", "throughput_rps",
@@ -576,7 +601,8 @@ mod tests {
                     "respawns", "migrations_out", "migrations_in",
                     "crashes", "restored_in", "completed", "rejected",
                     "evictions", "cancelled", "oom_events",
-                    "absorbed_spikes", "mask_switches",
+                    "absorbed_spikes", "compressed_spikes",
+                    "kv_bytes_reclaimed", "mask_switches",
                     "deadline_missed", "checkpoints_taken",
                     "checkpoint_bytes", "p50_latency", "p99_latency",
                     "p50_ttft", "p99_ttft", "throughput_rps"] {

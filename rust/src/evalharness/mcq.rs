@@ -16,6 +16,7 @@ use anyhow::Result;
 use crate::corpus::{Corpus, MarkovChain};
 use crate::mask::PruneMask;
 use crate::runtime::Runtime;
+use crate::server::kv::KvPolicy;
 use crate::util::rng::Rng;
 
 /// Where distractor endings come from (hardness order: Uniform <
@@ -174,6 +175,130 @@ pub fn chance(task: &TaskSpec) -> f64 {
     1.0 / task.n_choices as f64
 }
 
+// ---- KV-policy accuracy oracle (PR-9) ---------------------------------
+//
+// `accuracy` above measures the *mask* axis: the runtime's NLL moves
+// with pruned weights, but its attention is always over the full cache,
+// so it cannot see token eviction. The KV axis needs a scorer whose
+// answer depends on *which context tokens survive compression* — that
+// is exactly the true generative process (the Markov chain with its
+// copy mechanism), conditioned on the retained positions only. The
+// oracle is the model an ideal network would converge to, so the
+// accuracy delta it reports under a policy is the *information-
+// theoretic* cost of that policy's eviction, independent of this
+// particular synthetic runtime.
+
+/// The long-context member of the suite: the only task whose context
+/// (56 tokens) exceeds the default KV floor cap (52), so the floor
+/// policy genuinely evicts mid-context tokens here. The suite's other
+/// tasks fit under the cap and are untouched by compression.
+pub fn longctx_task() -> TaskSpec {
+    TaskSpec { name: "longctx-sim", ctx_len: 56, end_len: 8,
+               n_choices: 4, distractors: DistractorKind::WrongContext,
+               seed_offset: 88 }
+}
+
+/// Accuracy tolerance for the compression floor: the joint lattice's
+/// claim is that pressure compression is *quality-neutral*, because the
+/// floor's `recent` window (48) keeps every copy source (lag 4) that
+/// ending positions can reference. `policy_accuracy` under the default
+/// floor must sit within this epsilon of dense — in fact it is exactly
+/// equal; the epsilon only absorbs a future corpus re-pin.
+pub const MCQ_EPSILON: f64 = 0.01;
+
+/// Is context position `i` (of `ctx_len`) still resident after
+/// compressing under `policy`? `WindowSink` keeps the first `sink` and
+/// last `recent` positions; `Dense`/`HeadDrop` are token-complete
+/// (HeadDrop thins kv groups, not tokens — the oracle reads content,
+/// so group thinning is invisible to it).
+pub fn token_retained(policy: KvPolicy, i: usize, ctx_len: usize)
+                      -> bool {
+    match policy {
+        KvPolicy::Dense | KvPolicy::HeadDrop { .. } => true,
+        KvPolicy::WindowSink { sink, recent } => {
+            i < sink || i + recent >= ctx_len
+        }
+    }
+}
+
+/// Log-likelihood of `ending` under the true chain, conditioned on the
+/// *retained* context only. Evicted positions are unknown to the
+/// scorer: where the chain's copy mechanism points at one (distance
+/// `copy_lag` behind the predicted position), the copy term is
+/// marginalized to uniform over the vocabulary; a hidden current token
+/// likewise marginalizes the transition row. Ending tokens are
+/// appended after compression, so they are always visible.
+fn oracle_ending_loglik(chain: &MarkovChain, ctx: &[u16],
+                        policy: KvPolicy, ending: &[u16]) -> f64 {
+    let v = chain.vocab as f64;
+    let ctx_len = ctx.len();
+    let visible =
+        |i: usize| i >= ctx_len || token_retained(policy, i, ctx_len);
+    let mut hist: Vec<u16> = ctx.to_vec();
+    let mut ll = 0.0f64;
+    for &tok in ending {
+        let pos = hist.len();
+        let has_copy = pos >= chain.copy_lag;
+        let chain_w = if has_copy { 1.0 - chain.copy_p } else { 1.0 };
+        let mut p = if visible(pos - 1) {
+            chain.row(hist[pos - 1] as usize)[tok as usize] as f64
+                * chain_w
+        } else {
+            chain_w / v
+        };
+        if has_copy {
+            let s = pos - chain.copy_lag;
+            if visible(s) {
+                if hist[s] == tok {
+                    p += chain.copy_p;
+                }
+            } else {
+                p += chain.copy_p / v;
+            }
+        }
+        ll += p.max(1e-12).ln();
+        hist.push(tok);
+    }
+    ll
+}
+
+/// Score one question under a KV policy: argmax of the oracle ending
+/// log-likelihood over the retained context. Ties break toward the
+/// lower index, mirroring `score_question`.
+pub fn oracle_score_question(corpus: &Corpus, q: &Question,
+                             policy: KvPolicy) -> usize {
+    let mut best = 0usize;
+    let mut best_ll =
+        oracle_ending_loglik(&corpus.chain, &q.context, policy,
+                             &q.endings[0]);
+    for (i, e) in q.endings.iter().enumerate().skip(1) {
+        let ll = oracle_ending_loglik(&corpus.chain, &q.context, policy,
+                                      e);
+        if ll > best_ll {
+            best = i;
+            best_ll = ll;
+        }
+    }
+    best
+}
+
+/// Oracle accuracy over `n_questions` fresh questions under a KV
+/// policy (deterministic in `seed`; the question stream is identical
+/// to `accuracy`'s for the same task + seed).
+pub fn policy_accuracy(corpus: &Corpus, task: &TaskSpec,
+                       policy: KvPolicy, n_questions: usize, seed: u64)
+                       -> f64 {
+    let mut rng = Rng::new(seed.wrapping_add(task.seed_offset));
+    let mut correct = 0usize;
+    for _ in 0..n_questions {
+        let q = generate_question(corpus, task, &mut rng);
+        if oracle_score_question(corpus, &q, policy) == 0 {
+            correct += 1;
+        }
+    }
+    correct as f64 / n_questions as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -260,5 +385,94 @@ mod tests {
         let tasks = all_tasks();
         assert_eq!(chance(&tasks[0]), 0.5);
         assert_eq!(chance(&tasks[3]), 0.25);
+    }
+
+    #[test]
+    fn longctx_task_exceeds_floor_cap_and_fits_bucket() {
+        let t = longctx_task();
+        let floor = crate::server::controller::default_kv_floor();
+        assert!(t.ctx_len > floor.token_cap(),
+                "longctx context must force real eviction");
+        assert!(t.ctx_len + t.end_len <= MCQ_SEQLEN);
+        assert!(t.n_choices <= MCQ_BATCH);
+    }
+
+    #[test]
+    fn token_retained_window_geometry() {
+        let p = KvPolicy::WindowSink { sink: 4, recent: 48 };
+        // ctx 56: positions 0-3 (sink) and 8-55 (recent) survive
+        for i in 0..56 {
+            assert_eq!(token_retained(p, i, 56), i < 4 || i >= 8,
+                       "position {i}");
+        }
+        assert!(token_retained(KvPolicy::Dense, 30, 56));
+        assert!(token_retained(KvPolicy::HeadDrop { keep_groups: 1 },
+                               30, 56));
+    }
+
+    #[test]
+    fn floor_policy_accuracy_matches_dense_exactly() {
+        // The default floor keeps every copy source an ending position
+        // can reference (recent 48 >= lag 4), so the oracle's
+        // conditionals — and therefore every argmax — are identical
+        // to dense, even on the long-context task where the floor
+        // genuinely evicts mid-context tokens.
+        let c = Corpus::synthetic(64, 7);
+        let floor = crate::server::controller::default_kv_floor();
+        let mut tasks = all_tasks();
+        tasks.push(longctx_task());
+        for t in &tasks {
+            let dense =
+                policy_accuracy(&c, t, KvPolicy::Dense, 40, 42);
+            let compressed = policy_accuracy(&c, t, floor, 40, 42);
+            assert_eq!(dense, compressed, "task {}", t.name);
+            assert!((dense - compressed).abs() <= MCQ_EPSILON);
+        }
+    }
+
+    #[test]
+    fn oracle_beats_chance_on_longctx() {
+        let c = Corpus::synthetic(64, 7);
+        let t = longctx_task();
+        let acc = policy_accuracy(&c, &t, KvPolicy::Dense, 60, 42);
+        assert!(acc > chance(&t) + 0.1,
+                "oracle should beat chance: {acc}");
+    }
+
+    #[test]
+    fn evicting_the_copy_source_flips_the_argmax() {
+        // Handcrafted corpus where the answer *is* the copy evidence:
+        // a deterministic cycle chain with a strong copy mechanism
+        // (p=0.6, lag 4). The correct ending's first token copies
+        // ctx[len-4]; the distractor follows the cycle instead.
+        //   visible source:  p(copy tok) = 0.6      > p(cycle tok) = 0.4
+        //   evicted source:  p(copy tok) = 0.6/v    < p(cycle tok) = 0.4 + 0.6/v
+        // so a window too small to hold the source (recent 2 < lag 4)
+        // must flip the argmax — the teeth behind MCQ_EPSILON.
+        let v = 8;
+        let mut trans = vec![0.0f32; v * v];
+        for t in 0..v {
+            trans[t * v + (t + 1) % v] = 1.0;
+        }
+        let chain = MarkovChain::new(v, trans.clone(), 0.6, 4).unwrap();
+        let uni =
+            MarkovChain::new(v, vec![1.0 / v as f32; v * v], 0.0, 4)
+                .unwrap();
+        let corpus = Corpus { chain, chain_ptb: uni,
+                              train: vec![0; 64], wiki: vec![0; 64],
+                              ptb: vec![0; 64], alpaca: vec![0; 64] };
+        // context: 0 1 2 3 4 5 6 7; copy source for the next position
+        // is ctx[4] = 4, the cycle successor of ctx[7] = 7 is 0.
+        let context: Vec<u16> = (0..8).map(|x| x as u16).collect();
+        let q = Question {
+            context,
+            endings: vec![vec![4u16], vec![0u16]],
+        };
+        let dense = oracle_score_question(&corpus, &q, KvPolicy::Dense);
+        assert_eq!(dense, 0, "with the source visible, copy wins");
+        let tight = KvPolicy::WindowSink { sink: 0, recent: 2 };
+        let flipped = oracle_score_question(&corpus, &q, tight);
+        assert_eq!(flipped, 1,
+                   "with the source evicted, the cycle token wins");
     }
 }

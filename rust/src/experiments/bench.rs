@@ -11,7 +11,10 @@
 //! Unlike every report/trace JSON in the repo, the `BENCH_*.json`
 //! files deliberately carry wall-clock numbers — they *measure* the
 //! host, so their bytes are not expected to be seed-deterministic.
-//! Sim-side figures (requests, completions, sim seconds) still are.
+//! Sim-side figures (requests, completions, sim seconds) still are —
+//! the committed `rust/BENCH_fleet.json` baseline pins exactly those
+//! (wall-clock and observer fields zeroed), and CI diffs every fresh
+//! run's sim-side figures against it.
 
 use std::time::Instant;
 

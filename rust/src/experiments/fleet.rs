@@ -10,13 +10,20 @@ use crate::coordinator::fleet::{absorbable_spike_fleet,
                                 chaos_storm_fleet, chaos_storm_trace,
                                 default_fleet_trace, default_sim_fleet,
                                 elastic_demo_fleet, elastic_demo_trace,
+                                longctx_storm_fleet, longctx_storm_trace,
                                 tenant_storm_fcfs_trace,
                                 tenant_storm_fleet, tenant_storm_trace,
-                                CHAOS_STORM_SECS, TENANT_STORM_SECS,
+                                CHAOS_STORM_SECS, LONGCTX_STORM_SECS,
+                                TENANT_STORM_SECS,
                                 TENANT_STORM_SLO_SECS};
 use crate::coordinator::metrics::{zero_nan, FleetReport,
                                   FleetTenantReport};
 use crate::coordinator::router::RouterPolicy;
+use crate::corpus::Corpus;
+use crate::evalharness::mcq;
+use crate::server::controller::default_kv_floor;
+use crate::server::kv::KvPolicy;
+use crate::util::json::Json;
 
 /// `rap experiment fleet`: replay the same trace under every routing
 /// policy and tabulate completions, memory casualties, and tail latency.
@@ -151,6 +158,154 @@ pub fn fleet_absorbable(seed: u64) -> Result<()> {
                   {:.3}s vs {:.3}s).",
                  er.migrations, pr.migrations, er.spawns, pr.spawns,
                  er.p99_ttft, pr.p99_ttft);
+    }
+    Ok(())
+}
+
+fn longctx_row(label: &str, r: &FleetReport) {
+    println!("{:<14} {:>9} {:>8} {:>6} {:>8} {:>10} {:>11} {:>6} \
+              {:>8} {:>9}",
+             label, r.completed, r.evictions, r.oom_events,
+             r.absorbed_spikes, r.compressed_spikes,
+             format!("{:.1} KiB",
+                     r.kv_bytes_reclaimed as f64 / 1024.0),
+             r.spawns, r.migrations,
+             format!("{:.3}s", zero_nan(r.p99_ttft)));
+}
+
+/// Questions per MCQ task in the quality block — enough for a stable
+/// per-seed accuracy, small enough to keep the experiment instant.
+const LONGCTX_MCQ_QUESTIONS: usize = 40;
+/// Corpus seed for the MCQ block (matches the evalharness tests).
+const LONGCTX_MCQ_CORPUS_SEED: u64 = 7;
+
+/// `rap experiment fleet --longctx`: the PR-9 acceptance surface.
+/// One seeded long-context storm against a mid-storm interference wall
+/// sized into the joint-only band: deep enough that the controller's
+/// min-viable *mask* alone cannot hold the closed cohort's decode
+/// growth, shallow enough that the same mask plus KV compression to
+/// the floor policy can. Served twice by otherwise-identical elastic
+/// fleets: `kv_elastic = false` (mask-only, the pre-PR-9 lattice) and
+/// `kv_elastic = true` (the joint (mask × KV policy) lattice). The
+/// joint fleet must absorb the wall in place — zero migrations, zero
+/// spawns, zero OOMs, compression engaged — at an equal-or-better p99
+/// TTFT, while the mask-only fleet true-OOMs into shed work and
+/// OOM-driven spawns. The same inequalities `tests/longctx_fleet.rs`
+/// asserts.
+///
+/// The quality side of the trade: an MCQ block scores every
+/// evalharness task under the dense policy and under the compression
+/// floor with the *oracle* scorer (the true Markov chain conditioned
+/// on retained context positions — see `evalharness::mcq`), including
+/// the one task whose context genuinely exceeds the floor's token cap.
+/// Floor accuracy must sit within `MCQ_EPSILON` of dense on every
+/// task.
+///
+/// `report_out` writes the full acceptance report (both fleet reports
+/// + the MCQ block) as JSON — deterministic per seed, byte for byte.
+pub fn fleet_longctx(seed: u64, report_out: Option<&str>) -> Result<()> {
+    banner(&format!(
+        "Fleet — mask-only vs joint (mask × KV policy) elasticity on a \
+         long-context storm (seed {seed})"));
+    let reqs = longctx_storm_trace(seed);
+    println!("trace: {} requests over {:.0}s, one mid-storm wall on \
+              replica 0 sized into the joint-only band (fixed \
+              scenario — only --seed varies it)\n",
+             reqs.len(), LONGCTX_STORM_SECS);
+    println!("{:<14} {:>9} {:>8} {:>6} {:>8} {:>10} {:>11} {:>6} \
+              {:>8} {:>9}",
+             "fleet", "completed", "evicted", "OOMs", "absorbed",
+             "compressed", "reclaimed", "spawns", "migrated",
+             "p99 ttft");
+    let mut mask_only = longctx_storm_fleet(seed, false);
+    let mr = mask_only.run_trace(reqs.clone())?;
+    longctx_row("mask-only", &mr);
+    let mut joint = longctx_storm_fleet(seed, true);
+    let jr = joint.run_trace(reqs)?;
+    longctx_row("joint", &jr);
+
+    // -- quality block: dense vs compression-floor accuracy, oracle-
+    //    scored over retained context positions
+    let corpus = Corpus::synthetic(64, LONGCTX_MCQ_CORPUS_SEED);
+    let floor = default_kv_floor();
+    let mut tasks = mcq::all_tasks();
+    tasks.push(mcq::longctx_task());
+    println!("\nMCQ accuracy under KV compression (oracle scorer, \
+              {LONGCTX_MCQ_QUESTIONS} questions/task):");
+    println!("{:<16} {:>8} {:>8} {:>8} {:>8}",
+             "task", "chance", "dense", "floor", "delta");
+    let mut mcq_rows = Vec::new();
+    let mut max_delta = 0.0f64;
+    for task in &tasks {
+        let dense = mcq::policy_accuracy(&corpus, task, KvPolicy::Dense,
+                                         LONGCTX_MCQ_QUESTIONS, seed);
+        let comp = mcq::policy_accuracy(&corpus, task, floor,
+                                        LONGCTX_MCQ_QUESTIONS, seed);
+        let delta = (dense - comp).abs();
+        max_delta = max_delta.max(delta);
+        println!("{:<16} {:>8.3} {:>8.3} {:>8.3} {:>8.3}",
+                 task.name, mcq::chance(task), dense, comp, delta);
+        mcq_rows.push(Json::object(vec![
+            ("task", Json::Str(task.name.to_string())),
+            ("chance", Json::Num(mcq::chance(task))),
+            ("dense", Json::Num(dense)),
+            ("floor", Json::Num(comp)),
+            ("delta", Json::Num(delta)),
+        ]));
+    }
+
+    println!("\nshape check: the wall lands where the min-viable mask \
+              plus the cohort's decode growth no longer fits — the \
+              mask-only fleet true-OOMs into shed work and OOM-driven \
+              spawns, while the joint fleet compresses resident caches \
+              to the floor and absorbs in place; the oracle shows the \
+              floor costs within {:.2} accuracy on every task.",
+             mcq::MCQ_EPSILON);
+    println!("longctx-storm: joint migrations={} spawns={} ooms={} \
+              compressed={} reclaimed={} vs mask-only ooms={} \
+              spawns={} migrations={}; mcq max |dense - floor| = \
+              {:.3}",
+             jr.migrations, jr.spawns, jr.oom_events,
+             jr.compressed_spikes, jr.kv_bytes_reclaimed,
+             mr.oom_events, mr.spawns, mr.migrations, max_delta);
+    let joint_wins = jr.migrations == 0 && jr.spawns == 0
+        && jr.oom_events == 0 && jr.compressed_spikes > 0
+        && jr.p99_ttft <= mr.p99_ttft
+        && mr.oom_events + mr.spawns + mr.migrations >= 1
+        && max_delta <= mcq::MCQ_EPSILON;
+    if joint_wins {
+        println!("verdict: joint elasticity wins (absorbed in place \
+                  with 0 migrations / 0 spawns / 0 OOMs at p99 ttft \
+                  {:.3}s vs {:.3}s, quality within epsilon).",
+                 jr.p99_ttft, mr.p99_ttft);
+    } else {
+        println!("verdict: UNEXPECTED — joint elasticity did not win \
+                  (joint ooms={} spawns={} migrations={} \
+                  compressed={}, p99 ttft {:.3}s vs {:.3}s, mcq max \
+                  delta {:.3}).",
+                 jr.oom_events, jr.spawns, jr.migrations,
+                 jr.compressed_spikes, jr.p99_ttft, mr.p99_ttft,
+                 max_delta);
+    }
+    if let Some(path) = report_out {
+        let report = Json::object(vec![
+            ("scenario", Json::Str("longctx-storm".to_string())),
+            ("seed", Json::Num(seed as f64)),
+            ("mask_only", mr.to_json()),
+            ("joint", jr.to_json()),
+            ("mcq", Json::object(vec![
+                ("questions_per_task",
+                 Json::Num(LONGCTX_MCQ_QUESTIONS as f64)),
+                ("corpus_seed",
+                 Json::Num(LONGCTX_MCQ_CORPUS_SEED as f64)),
+                ("epsilon", Json::Num(mcq::MCQ_EPSILON)),
+                ("max_delta", Json::Num(max_delta)),
+                ("tasks", Json::Arr(mcq_rows)),
+            ])),
+            ("joint_wins", Json::Bool(joint_wins)),
+        ]);
+        std::fs::write(path, report.pretty())?;
+        println!("acceptance report written to {path}");
     }
     Ok(())
 }

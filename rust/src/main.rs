@@ -314,6 +314,13 @@ fn run_experiment(id: &str, model: &str, seed: u64, quick: bool,
                 // fixed scenario (2 replicas, one absorbable wall):
                 // current-mask vs mask-elastic accounting
                 fleet::fleet_absorbable(seed)
+            } else if args.bool("longctx") {
+                // fixed scenario (2 replicas, one joint-only wall):
+                // mask-only vs joint (mask × KV policy) elasticity;
+                // --report writes the acceptance JSON
+                fleet::fleet_longctx(seed,
+                                     args.get("report")
+                                         .map(|s| s.as_str()))
             } else if args.bool("tenants") {
                 // fixed scenario (2 replicas, two tenants, one flood):
                 // FCFS vs tenant-fair ingress
@@ -361,6 +368,10 @@ fn print_help() {
               vs mask-elastic accounting");
     println!("                   fleet takes --tenants: FCFS vs \
               tenant-fair ingress on a two-tenant storm");
+    println!("                   fleet takes --longctx: mask-only vs \
+              joint (mask x KV policy) elasticity");
+    println!("                    on a long-context storm \
+              [--report <path> writes the acceptance JSON]");
     println!("                   fleet takes --chaos: checkpointed vs \
               checkpoint-free recovery under one fault plan");
     println!("  train-agent      --model <m> --episodes <n> --seed <s>");

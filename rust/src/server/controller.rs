@@ -22,6 +22,7 @@ use crate::agent::env::{EnvConfig, PruneEnv};
 use crate::gsi::GsiEngine;
 use crate::mask::PruneMask;
 use crate::memory::{MemoryModel, Workload};
+use crate::server::kv::KvPolicy;
 use crate::model_meta::ModelMeta;
 use crate::runtime::{NllEvaluator, Runtime};
 
@@ -70,6 +71,21 @@ impl Policy {
 /// `min_viable` never *under*-estimates the cheapest real footprint.
 pub const DEFAULT_MIN_MASK_FRACTION: f64 = 0.3;
 
+/// Default KV compression floor: the most aggressive per-sequence
+/// policy pressure may deploy (the KV leg of the joint `min_viable`).
+/// Window+sink token eviction; the window is kept comfortably above the
+/// synthetic corpus's copy lag so the evalharness MCQ accuracy stays at
+/// the dense level (see `evalharness::mcq::policy_accuracy`).
+pub const DEFAULT_KV_SINK: usize = 4;
+pub const DEFAULT_KV_RECENT: usize = 48;
+
+/// The default KV floor policy (see [`DEFAULT_KV_SINK`] /
+/// [`DEFAULT_KV_RECENT`]).
+pub fn default_kv_floor() -> KvPolicy {
+    KvPolicy::WindowSink { sink: DEFAULT_KV_SINK,
+                           recent: DEFAULT_KV_RECENT }
+}
+
 pub struct Controller {
     pub policy: Policy,
     mem: MemoryModel,
@@ -79,6 +95,11 @@ pub struct Controller {
     calib_seqlen: usize,
     /// Floor on the retained-parameter fraction of the min-viable mask.
     min_mask_fraction: f64,
+    /// Compression floor on the KV axis: the most aggressive
+    /// per-sequence policy pressure may deploy. `None` disables the KV
+    /// leg of the joint lattice (mask-only elasticity, the pre-PR-9
+    /// behavior).
+    kv_floor: Option<KvPolicy>,
     /// Persistent GSI memo shared across decisions.
     memo: HashMap<u64, f64>,
     /// Decision cache keyed by (budget%, batch, seqlen-bucket).
@@ -100,6 +121,7 @@ impl Controller {
         Controller { policy, mem, calib_tokens, calib_batch: 1,
                      calib_seqlen,
                      min_mask_fraction: DEFAULT_MIN_MASK_FRACTION,
+                     kv_floor: Some(default_kv_floor()),
                      memo: HashMap::new(),
                      cache: HashMap::new(),
                      floor_cache: None,
@@ -121,6 +143,18 @@ impl Controller {
         self.min_mask_fraction = f.clamp(0.0, 1.0);
         self.floor_cache = None;
         self
+    }
+
+    /// Override (or clear) the KV compression floor.
+    pub fn with_kv_floor(mut self, floor: Option<KvPolicy>)
+                         -> Controller {
+        self.kv_floor = floor;
+        self
+    }
+
+    /// The KV compression floor pressure may deploy, if any.
+    pub fn kv_floor(&self) -> Option<KvPolicy> {
+        self.kv_floor
     }
 
     /// Whether this controller can actually move the mask at runtime.
@@ -281,6 +315,18 @@ mod tests {
         c.invalidate_outlook();
         let third = c.min_viable_mask(&mut rt, w).unwrap();
         assert_eq!(mv, third);
+    }
+
+    #[test]
+    fn kv_floor_defaults_on_and_can_be_cleared() {
+        let (_rt, mem) = parts();
+        let c = Controller::new(Policy::GsiGreedy, mem,
+                                vec![0; 128], 128);
+        assert_eq!(c.kv_floor(), Some(default_kv_floor()));
+        assert_eq!(default_kv_floor().token_cap(),
+                   DEFAULT_KV_SINK + DEFAULT_KV_RECENT);
+        let c = c.with_kv_floor(None);
+        assert_eq!(c.kv_floor(), None);
     }
 
     #[test]

@@ -52,7 +52,7 @@ use anyhow::{bail, Result};
 
 use super::batcher::{decode_bucket, prefill_bucket, ActiveSeq, Batcher};
 use super::controller::Controller;
-use super::kv::KvManager;
+use super::kv::{KvManager, KvPolicy};
 use super::memmon::MemoryMonitor;
 use super::metrics::{MemSample, Metrics, RequestRecord, ServeReport};
 use super::outlook::MemoryOutlook;
@@ -111,6 +111,13 @@ pub struct EngineConfig {
     /// reproduces the pre-outlook behavior (every current-mask
     /// transgression is an OOM) for comparison runs.
     pub elastic_accounting: bool,
+    /// The KV leg of the joint lattice: price `min_viable` with every
+    /// resident sequence compressed to the controller's KV floor, and
+    /// let `handle_memory_pressure` deploy per-sequence compression
+    /// between shrink-mask and shed-work. Off reproduces PR-4's
+    /// mask-only elasticity (requires `elastic_accounting`; inert
+    /// without it).
+    pub kv_elastic: bool,
     /// Periodically snapshot every active sequence into the portable
     /// [`SeqState`] format (the crash-recovery checkpoint), charging
     /// the modeled interconnect cost for the KV delta since the last
@@ -127,6 +134,7 @@ impl Default for EngineConfig {
                        eviction: EvictionMode::Requeue,
                        enforce_deadlines: true,
                        elastic_accounting: true,
+                       kv_elastic: true,
                        checkpoint_period_secs: None }
     }
 }
@@ -158,10 +166,16 @@ pub enum SeqState {
         /// exporting replica's mask at export time.
         kv_bytes: usize,
         /// Logical KV bytes of the live `prompt + generated` slice
-        /// under the same mask — what a migration actually ships over
-        /// the interconnect (the prefill bucket's padding rows carry no
-        /// information and are re-padded on arrival).
+        /// under the same mask *and the sequence's KV policy* — what a
+        /// migration actually ships over the interconnect (the prefill
+        /// bucket's padding rows carry no information and are re-padded
+        /// on arrival; compressed-away tokens and dropped kv groups are
+        /// gone and ship nothing).
         live_kv_bytes: usize,
+        /// The sequence's KV compression policy, carried across
+        /// migrate/checkpoint/restore so the importing engine restores
+        /// the cache into the right accounting class.
+        policy: KvPolicy,
     },
 }
 
@@ -278,7 +292,7 @@ impl Engine {
         let mem = MemoryModel::new(&meta);
         let mask = PruneMask::full(&meta);
         let dense_param_bytes = mem.param_bytes(&mask);
-        Engine {
+        let mut engine = Engine {
             kv: KvManager::new(&meta),
             batcher: Batcher::new(),
             rt,
@@ -300,7 +314,30 @@ impl Engine {
             last_checkpoint_at: f64::NEG_INFINITY,
             resumable: HashMap::new(),
             committed_tokens: HashMap::new(),
-        }
+        };
+        engine.sync_kv_floor();
+        engine
+    }
+
+    /// Whether the KV leg of the joint lattice is live: both elasticity
+    /// gates on and a compression floor installed.
+    fn kv_elastic_on(&self) -> bool {
+        self.cfg.kv_elastic && self.cfg.elastic_accounting
+            && self.kv.floor().is_some()
+    }
+
+    /// Keep the KV manager's floor in step with the config gates and
+    /// the controller's floor policy (config fields are mutated after
+    /// construction by the fleet's spawn path, so this re-syncs at
+    /// every controller/pressure entry — a no-op when unchanged).
+    fn sync_kv_floor(&mut self) {
+        let floor =
+            if self.cfg.kv_elastic && self.cfg.elastic_accounting {
+                self.controller.kv_floor()
+            } else {
+                None
+            };
+        self.kv.set_floor(floor);
     }
 
     pub fn sim_time(&self) -> f64 {
@@ -493,12 +530,15 @@ impl Engine {
         self.mem.param_bytes(mask) + self.kv.bytes_used(mask)
     }
 
-    /// The mask-elastic view of this engine's footprint: `{min_viable,
+    /// The elastic view of this engine's footprint: `{min_viable,
     /// current, dense}` bytes (see [`MemoryOutlook`]). With
-    /// `elastic_accounting` off, or before the controller has produced
-    /// a min-viable mask, the outlook is rigid at the current
-    /// footprint — every consumer then degrades to the classic
-    /// current-mask behavior.
+    /// `kv_elastic` on, `min_viable` is the *joint* minimum — the floor
+    /// mask priced with every resident sequence compressed to the KV
+    /// floor — and `kv_slack` reports the compression-only leg at the
+    /// current mask. With `elastic_accounting` off, or before the
+    /// controller has produced a min-viable mask, the outlook is rigid
+    /// at the current footprint — every consumer then degrades to the
+    /// classic current-mask behavior.
     pub fn outlook(&self) -> MemoryOutlook {
         let current = self.bytes_used();
         if !self.cfg.elastic_accounting {
@@ -507,16 +547,29 @@ impl Engine {
         // Dense footprint without re-walking the full mask: every
         // layer caches the same tokens, so dense KV is just the token
         // total times the dense per-token bytes.
-        let meta = self.rt.meta();
-        let dense = self.dense_param_bytes
-            + self.kv.total_tokens()
-                * meta.n_layers
-                * meta.kv_bytes_per_token_layer(meta.n_kv_heads);
+        let dense = self.dense_param_bytes + self.kv.dense_bytes();
+        let kv_elastic = self.kv_elastic_on();
         let min_viable = match &self.min_viable_mask {
-            Some(m) => self.bytes_used_under(m),
+            Some(m) => {
+                let kv = if kv_elastic {
+                    self.kv.floor_bytes(m)
+                } else {
+                    self.kv.bytes_used(m)
+                };
+                self.mem.param_bytes(m) + kv
+            }
             None => current,
         };
-        MemoryOutlook::new(min_viable, current, dense)
+        let outlook = MemoryOutlook::new(min_viable, current, dense);
+        if kv_elastic {
+            outlook.with_kv_slack(
+                self.kv
+                    .bytes_used(&self.mask)
+                    .saturating_sub(self.kv.floor_bytes(&self.mask)),
+            )
+        } else {
+            outlook
+        }
     }
 
     /// The workload descriptor the controller conditions on: current
@@ -537,6 +590,9 @@ impl Engine {
     }
 
     fn run_controller(&mut self, force: bool) -> Result<()> {
+        // Cheap no-op when unchanged; re-checked here because fleet
+        // spawn paths mutate the config gates after construction.
+        self.sync_kv_floor();
         if !force
             && self.sim_time - self.last_controller_at
                 < self.cfg.controller_period
@@ -626,6 +682,12 @@ impl Engine {
             if self.bytes_used() > avail {
                 self.deploy_min_viable();
             }
+            // The second elasticity axis: when the mask alone cannot
+            // absorb, compress resident sequences down to the KV floor
+            // — largest reclaim first — before any work is shed.
+            if self.bytes_used() > avail {
+                self.compress_under_pressure(avail)?;
+            }
             if self.bytes_used()
                 <= self.monitor.available_at(self.sim_time)
             {
@@ -634,8 +696,9 @@ impl Engine {
                               || EventKind::AbsorbedSpike);
                 return Ok(());
             }
-            // Even the min-viable mask did not fit (the monitor moved,
-            // or the outlook was stale): this is a true OOM after all.
+            // Even the joint (mask × KV-policy) floor did not fit (the
+            // monitor moved, or the outlook was stale): this is a true
+            // OOM after all.
             self.metrics.oom_events += 1;
             self.emit_oom();
         }
@@ -694,6 +757,56 @@ impl Engine {
         Ok(())
     }
 
+    /// The pressure path's compress step: rewrite resident caches down
+    /// to the controller's KV floor, one sequence at a time in
+    /// deterministic order (largest reclaim first, ties toward the
+    /// lowest id), until the footprint fits `avail` or every resident
+    /// sequence sits at the floor. Books `compressed_spikes` /
+    /// `kv_bytes_reclaimed` when compression engaged. A no-op when the
+    /// KV axis is off.
+    fn compress_under_pressure(&mut self, avail: usize) -> Result<()> {
+        if !self.kv_elastic_on() {
+            return Ok(());
+        }
+        let Some(floor) = self.kv.floor() else {
+            return Ok(());
+        };
+        // The persistent decode batch holds gathered cache copies; a
+        // later scatter would resurrect the pre-compression rows.
+        self.flush_batch()?;
+        let mut candidates: Vec<(usize, u64)> = self
+            .batcher
+            .active
+            .iter()
+            .map(|s| {
+                (self.kv.reclaim_estimate(s.req.id, floor, &self.mask),
+                 s.req.id)
+            })
+            .filter(|(est, _)| *est > 0)
+            .collect();
+        candidates.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let before = self.kv.bytes_used(&self.mask);
+        let mut compressed = 0u64;
+        for (_, id) in candidates {
+            if self.bytes_used() <= avail {
+                break;
+            }
+            self.kv.compress(id, floor)?;
+            compressed += 1;
+        }
+        if compressed > 0 {
+            let reclaimed =
+                before - self.kv.bytes_used(&self.mask);
+            self.metrics.compressed_spikes += 1;
+            self.metrics.kv_bytes_reclaimed += reclaimed as u64;
+            self.bus.emit(self.sim_time, None, None, || {
+                EventKind::KvCompress { seqs: compressed,
+                                        bytes: reclaimed as u64 }
+            });
+        }
+        Ok(())
+    }
+
     /// True-OOM audit: the instant event plus a flight-recorder dump —
     /// an OOM is exactly the moment a postmortem wants the ring for.
     fn emit_oom(&self) {
@@ -730,10 +843,9 @@ impl Engine {
             if !eligible(s) {
                 continue;
             }
-            let len = self.kv.seq_len(s.req.id).unwrap_or(0);
             let remaining =
                 s.req.max_new_tokens.saturating_sub(s.generated).max(1);
-            let score = self.kv_bytes_for_len(len) * remaining;
+            let score = self.resident_kv_bytes(s.req.id) * remaining;
             // measure-only mode must not let deadlines steer
             // scheduling, victim choice included
             let expired = self.cfg.enforce_deadlines
@@ -744,6 +856,18 @@ impl Engine {
             }
         }
         best.map(|(i, _)| i)
+    }
+
+    /// Logical KV bytes one *resident* sequence currently holds under
+    /// the deployed mask and its own compression policy. Zero for ids
+    /// without a cache.
+    fn resident_kv_bytes(&self, id: u64) -> usize {
+        match (self.kv.seq_len(id), self.kv.policy_of(id)) {
+            (Some(len), Some(p)) => {
+                len * self.kv.per_token_bytes(&self.mask, p)
+            }
+            _ => 0,
+        }
     }
 
     /// Logical KV bytes of one sequence of `len` cached tokens under the
@@ -808,7 +932,19 @@ impl Engine {
             Some(m) => {
                 let full_len = (req.prompt_len + req.max_new_tokens)
                     .min(self.rt.meta().max_seq);
-                self.kv_bytes_for_len_under(m, full_len).min(current)
+                let mut cost =
+                    self.kv_bytes_for_len_under(m, full_len);
+                // joint-elastic pricing: the sequence could run
+                // compressed to the KV floor (capped tokens, capped
+                // groups) on top of the floor mask
+                if self.kv_elastic_on() {
+                    let floor = self.kv.floor().unwrap();
+                    cost = cost.min(
+                        full_len.min(floor.token_cap())
+                            * self.kv.per_token_bytes(m, floor),
+                    );
+                }
+                cost.min(current)
             }
             None => current,
         }
@@ -824,7 +960,16 @@ impl Engine {
         };
         let full_len = (req.prompt_len + req.max_new_tokens)
             .min(self.rt.meta().max_seq);
-        self.mem.param_bytes(m) + self.kv.bytes_used(m)
+        // Residents are priced at the joint floor (pressure can
+        // compress them); the newcomer is priced at full length under
+        // the floor mask — it is admitted dense, so a floored price
+        // here would diverge from the actual admission check and stall.
+        let resident = if self.kv_elastic_on() {
+            self.kv.floor_bytes(m)
+        } else {
+            self.kv.bytes_used(m)
+        };
+        self.mem.param_bytes(m) + resident
             + self.kv_bytes_for_len_under(m, full_len)
             <= avail
     }
@@ -841,18 +986,23 @@ impl Engine {
         // The live slice: prompt tokens + decode writes. `cache.len` is
         // bucket-padded by prefill; the padding rows carry no
         // information, so a migration ships (and is charged for) only
-        // the live rows.
+        // the live rows. A compressed cache may be shorter than the
+        // prefill bucket, so the live slice caps at the physical length
+        // — and is priced per the sequence's policy (dropped kv groups
+        // ship nothing).
         let live_len = (seq.req.prompt_len
             + cache.len
                 .saturating_sub(prefill_bucket(seq.req.prompt_len)))
             .min(cache.len);
-        let live_kv_bytes = self.kv_bytes_for_len(live_len);
+        let live_kv_bytes =
+            live_len * self.kv.per_token_bytes(&self.mask, cache.policy);
         Ok(SeqState::Active {
             req: seq.req,
             generated: seq.generated,
             next_token: seq.next_token,
             prefill_done_at: seq.prefill_done_at,
             kv_len: cache.len,
+            policy: cache.policy,
             k: cache.k,
             v: cache.v,
             kv_bytes,
@@ -926,8 +1076,13 @@ impl Engine {
                 self.batcher.enqueue(req)
             }
             SeqState::Active { req, generated, next_token,
-                               prefill_done_at, kv_len, k, v, .. } => {
+                               prefill_done_at, kv_len, policy, k, v,
+                               .. } => {
                 self.kv.insert(req.id, k, v, kv_len, &self.mask)?;
+                // restore the sequence into its compression class —
+                // the cache data is already compressed, this re-labels
+                // the accounting (and is a data no-op)
+                self.kv.compress(req.id, policy)?;
                 self.ledger_add(&req);
                 self.batcher.push_active(ActiveSeq {
                     req,
@@ -1032,10 +1187,12 @@ impl Engine {
             next_token: seq.next_token,
             prefill_done_at: seq.prefill_done_at,
             kv_len: cache.len,
+            policy: cache.policy,
             k: cache.k.clone(),
             v: cache.v.clone(),
             kv_bytes,
-            live_kv_bytes: self.kv_bytes_for_len(live_len),
+            live_kv_bytes: live_len
+                * self.kv.per_token_bytes(&self.mask, cache.policy),
         })
     }
 
@@ -1068,13 +1225,17 @@ impl Engine {
                 .get(&seq.req.id)
                 .map(|s| s.transfer_bytes())
                 .unwrap_or(0);
-            if new_bytes > old_bytes {
-                delta_bytes += new_bytes - old_bytes;
+            // Re-snapshot on ANY size change: a compressed sequence
+            // shrinks its live slice, and the stale (larger) snapshot
+            // would otherwise be what a restore ships and re-prices.
+            // Shrinks ride the stream for free — the delta charges
+            // only growth.
+            if new_bytes != old_bytes {
+                let delta = new_bytes.saturating_sub(old_bytes);
+                delta_bytes += delta;
                 self.bus.emit(self.sim_time, Some(seq.req.id),
                               Some(&seq.req.tenant), || {
-                    EventKind::Checkpoint {
-                        bytes: (new_bytes - old_bytes) as u64,
-                    }
+                    EventKind::Checkpoint { bytes: delta as u64 }
                 });
                 snaps.push(state);
             }
@@ -1201,10 +1362,7 @@ impl Engine {
             .active
             .iter()
             .filter(|s| s.req.priority < req.priority)
-            .map(|s| {
-                self.kv_bytes_for_len(
-                    self.kv.seq_len(s.req.id).unwrap_or(0))
-            })
+            .map(|s| self.resident_kv_bytes(s.req.id))
             .sum();
         if reclaimable < shortfall {
             return Ok(false);
@@ -1328,7 +1486,8 @@ impl Engine {
         }
         let req = self.batcher.pop_for_prefill().unwrap();
         if let Some(SeqState::Active {
-            req, generated, next_token, prefill_done_at, kv_len, k, v, ..
+            req, generated, next_token, prefill_done_at, kv_len, policy,
+            k, v, ..
         }) = self.resumable.remove(&req.id)
         {
             // A restored sequence waited its turn like any admission,
@@ -1339,6 +1498,7 @@ impl Engine {
             self.bus.emit(self.sim_time, Some(req.id),
                           Some(&req.tenant), || EventKind::Resume);
             self.kv.insert(req.id, k, v, kv_len, &self.mask)?;
+            self.kv.compress(req.id, policy)?;
             self.batcher.push_active(ActiveSeq {
                 req,
                 generated,
@@ -2198,5 +2358,164 @@ mod tests {
                    Some(Outcome::DeadlineMissed));
         assert_eq!(e.metrics.prefills, 2, "measure-only must serve it");
         assert!(e.metrics.completed.iter().any(|r| r.id == 9));
+    }
+
+    // ---- joint (mask × KV policy) elasticity (PR-9) -------------------
+
+    /// PR-9 tentpole at engine level: a spike the mask alone cannot
+    /// absorb (static mask — zero mask slack) is absorbed by
+    /// compressing resident KV down to the controller's floor policy —
+    /// no OOM, no eviction — and booked to `compressed_spikes`. With
+    /// the KV axis off, the identical spike sheds work.
+    #[test]
+    fn pressure_compresses_kv_before_shedding_work() {
+        use crate::server::controller::default_kv_floor;
+        use crate::server::memmon::MemoryMonitor;
+
+        let floor_cap = default_kv_floor().token_cap(); // sink + recent
+        for kv_elastic in [true, false] {
+            let mut e = sim_engine(8.0);
+            e.cfg.kv_elastic = kv_elastic;
+            e.submit(long_req(1, 100, 40)); // 128-token prefill bucket
+            step_until_tokens(&mut e, 3);
+            let len = e.kv.seq_len(1).unwrap();
+            assert!(len > floor_cap, "scenario needs compressible KV");
+            // avail between the joint floor and the current footprint:
+            // only the KV axis can absorb (the static mask cannot move)
+            let params = e.mem.param_bytes(&e.mask);
+            let avail = params + e.kv_bytes_for_len(floor_cap + 8);
+            assert!(e.bytes_used() > avail);
+            e.monitor = MemoryMonitor::constant(avail);
+            e.step_to(e.sim_time() + 1e-4).unwrap();
+            if kv_elastic {
+                assert_eq!(e.metrics.oom_events, 0,
+                           "KV-absorbable spike booked as an OOM");
+                assert!(e.metrics.absorbed_spikes >= 1);
+                assert_eq!(e.metrics.compressed_spikes, 1);
+                assert!(e.metrics.kv_bytes_reclaimed > 0);
+                assert_eq!(e.metrics.evictions, 0);
+                assert_eq!(e.parked_len(), 0);
+                assert_eq!(e.kv.seq_len(1), Some(floor_cap));
+                assert_eq!(e.kv.policy_of(1), Some(default_kv_floor()));
+                assert!(e.bytes_used() <= avail);
+                e.kv.audit().unwrap();
+                // the sequence still completes on its compressed cache
+                e.step_to(e.sim_time() + 60.0).unwrap();
+                assert!(e.metrics.completed.iter().any(|r| r.id == 1));
+            } else {
+                assert!(e.metrics.oom_events >= 1,
+                        "mask-only accounting must shed");
+                assert_eq!(e.metrics.compressed_spikes, 0);
+                assert!(e.metrics.evictions >= 1);
+            }
+        }
+    }
+
+    /// Below the *joint* floor even compression cannot help: the spike
+    /// is a true OOM and sheds work (and the compress step is never
+    /// charged — true OOMs bypass the absorption path).
+    #[test]
+    fn pressure_below_the_joint_floor_is_a_true_oom() {
+        use crate::server::controller::default_kv_floor;
+        use crate::server::memmon::MemoryMonitor;
+
+        let floor_cap = default_kv_floor().token_cap();
+        let mut e = sim_engine(8.0);
+        e.submit(long_req(1, 100, 40));
+        step_until_tokens(&mut e, 3);
+        let params = e.mem.param_bytes(&e.mask);
+        let avail = params + e.kv_bytes_for_len(floor_cap / 2);
+        e.monitor = MemoryMonitor::constant(avail);
+        e.step_to(e.sim_time() + 1e-4).unwrap();
+        assert!(e.metrics.oom_events >= 1);
+        assert!(e.metrics.evictions >= 1);
+        assert_eq!(e.metrics.absorbed_spikes, 0);
+        assert_eq!(e.metrics.compressed_spikes, 0);
+    }
+
+    /// Satellite (a): a compressed sequence exports / checkpoints its
+    /// *post-compression* slice — the migration payload shrinks with
+    /// the cache, and the next checkpoint cycle re-snapshots the
+    /// smaller state at zero delta cost instead of keeping the stale
+    /// fat snapshot alive.
+    #[test]
+    fn compression_reprices_transfer_and_checkpoint_bytes() {
+        use crate::server::controller::default_kv_floor;
+        use crate::server::memmon::MemoryMonitor;
+
+        let floor_cap = default_kv_floor().token_cap();
+        let mut e = sim_engine(8.0);
+        e.cfg.checkpoint_period_secs = Some(1.0);
+        e.submit(long_req(1, 100, 40));
+        step_until_tokens(&mut e, 3);
+        // drive the checkpoint cycles by hand (same-module test): the
+        // serving loop would interleave decode writes and muddy the
+        // delta assertion
+        e.flush_batch().unwrap();
+        e.sim_time += 10.0;
+        e.maybe_checkpoint().unwrap();
+        let fat = e.checkpoints.get(&1).unwrap().transfer_bytes();
+        let ckpt_bytes_before = e.metrics.checkpoint_bytes;
+        let params = e.mem.param_bytes(&e.mask);
+        e.monitor = MemoryMonitor::constant(
+            params + e.kv_bytes_for_len(floor_cap + 8));
+        e.handle_memory_pressure().unwrap();
+        assert_eq!(e.metrics.compressed_spikes, 1);
+        assert_eq!(e.metrics.evictions, 0);
+        // the next cycle re-snapshots the shrunken slice — replacing
+        // the stale fat snapshot — at zero delta cost (shrinks are
+        // free; only growth charges the stream)
+        e.sim_time += 10.0;
+        e.maybe_checkpoint().unwrap();
+        let slim = e.checkpoints.get(&1).unwrap().transfer_bytes();
+        assert!(slim < fat, "stale snapshot survived: {slim} vs {fat}");
+        assert_eq!(e.metrics.checkpoint_bytes, ckpt_bytes_before);
+        // an export ships the same compressed slice, and a peer
+        // restores it into the right accounting class
+        let st = e.export_sequence(1).unwrap().unwrap();
+        let SeqState::Active { kv_len, policy, .. } = &st else {
+            panic!("expected a mid-decode export");
+        };
+        assert_eq!(*kv_len, floor_cap);
+        assert_eq!(*policy, default_kv_floor());
+        assert_eq!(st.transfer_bytes(), slim);
+        let mut b = sim_engine(8.0);
+        b.import_sequence(st).unwrap();
+        assert_eq!(b.kv.seq_len(1), Some(floor_cap));
+        assert_eq!(b.kv.policy_of(1), Some(default_kv_floor()));
+        b.kv.audit().unwrap();
+        b.step_to(120.0).unwrap();
+        assert_eq!(b.metrics.completed.len(), 1);
+        assert_eq!(b.metrics.completed[0].id, 1);
+    }
+
+    /// Placement pricing reads the joint lattice: with the KV axis on,
+    /// `elastic_admission_cost` prices a long request at the floor
+    /// policy's capped tokens — strictly cheaper than the mask-only
+    /// elastic price, which is itself no dearer than the current-mask
+    /// price.
+    #[test]
+    fn elastic_admission_cost_prices_the_kv_floor() {
+        let mut e = engine_with(4.0, true);
+        e.submit(req(1, 0.0));
+        step_until_tokens(&mut e, 2); // controller ran: floor mask cached
+        let big = long_req(9, 200, 56); // clamps to max_seq = 256
+        let joint = e.elastic_admission_cost(&big);
+        e.cfg.kv_elastic = false;
+        let mask_only = e.elastic_admission_cost(&big);
+        assert!(joint < mask_only, "{joint} vs {mask_only}");
+        assert!(mask_only <= e.admission_cost(&big));
+        // the outlook exposes the same split: kv_slack > 0 only with
+        // the KV axis on (the resident cache is tiny, so compression
+        // frees nothing here — use a long resident instead)
+        e.cfg.kv_elastic = true;
+        let mut long = sim_engine(8.0);
+        long.submit(long_req(2, 100, 40));
+        step_until_tokens(&mut long, 3);
+        let o = long.outlook();
+        assert!(o.kv_slack > 0, "long resident must have KV slack");
+        assert!(o.min_viable + o.kv_slack <= o.current);
+        long.cfg.kv_elastic = false;
+        assert_eq!(long.outlook().kv_slack, 0);
     }
 }

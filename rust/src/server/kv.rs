@@ -3,16 +3,62 @@
 //! MHA block survives — and within GQA only live kv groups — count,
 //! exactly like the paper's Eq. 4).
 //!
+//! Since PR-9 each sequence also carries a [`KvPolicy`] — the second
+//! elasticity axis next to the param mask. Compression rewrites the
+//! cache in place and breaks the old `total_tokens × per-token-bytes`
+//! linearity, so byte accounting aggregates per-(policy-class) totals
+//! incrementally: `bytes_used` stays O(layers · policy classes) and
+//! never sweeps sequences.
+//!
 //! Layouts (flattened f32, row-major):
 //!   per-sequence cache: [L, Hkv, S, Dh]   (from `prefill`, B axis removed)
 //!   decode batch cache: [L, B, Hkv, S, Dh] (what `decode_b{B}` consumes)
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use anyhow::{bail, Result};
 
 use crate::mask::PruneMask;
 use crate::model_meta::{ModelMeta, BYTES_PER_SCALAR};
+
+/// Per-sequence KV compression policy. `Ord` so policy classes live in
+/// a `BTreeMap` and every per-class walk is deterministic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KvPolicy {
+    /// Full cache — every kv group, every token.
+    Dense,
+    /// Head-adaptive eviction à la FastGen (arXiv 2310.01801): keep the
+    /// first `keep_groups` kv groups per layer, zero the rest.
+    HeadDrop { keep_groups: usize },
+    /// Window + attention-sink token eviction (arXiv 2509.03136): keep
+    /// the first `sink` tokens and the last `recent`, drop the middle.
+    WindowSink { sink: usize, recent: usize },
+}
+
+impl KvPolicy {
+    /// Max tokens a sequence bills under this policy right after
+    /// compression (it may grow past the cap again until the next
+    /// `compress`). `usize::MAX` == uncapped.
+    pub fn token_cap(&self) -> usize {
+        match self {
+            KvPolicy::Dense | KvPolicy::HeadDrop { .. } => usize::MAX,
+            KvPolicy::WindowSink { sink, recent } => sink + recent,
+        }
+    }
+
+    /// Max kv groups per layer this policy keeps materialized.
+    pub fn group_cap(&self) -> usize {
+        match self {
+            KvPolicy::Dense | KvPolicy::WindowSink { .. } => usize::MAX,
+            KvPolicy::HeadDrop { keep_groups } => *keep_groups,
+        }
+    }
+
+    /// Physical length after compressing a cache of `len` tokens.
+    pub fn compressed_len(&self, len: usize) -> usize {
+        len.min(self.token_cap())
+    }
+}
 
 /// One sequence's cached state.
 #[derive(Clone, Debug)]
@@ -21,17 +67,37 @@ pub struct SeqCache {
     pub v: Vec<f32>,
     /// Tokens currently materialized in the cache (== next write pos).
     pub len: usize,
+    /// Compression policy the cache currently satisfies.
+    pub policy: KvPolicy,
+}
+
+/// Incrementally-maintained totals for one policy class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct ClassTotals {
+    seqs: usize,
+    /// Σ len over the class's sequences.
+    tokens: usize,
+    /// Σ min(len, floor token cap) — the class's share of the
+    /// compression floor projection.
+    floor_tokens: usize,
 }
 
 pub struct KvManager {
     meta: ModelMeta,
     seqs: HashMap<u64, SeqCache>,
     /// Running total of cached tokens across live sequences (kept in
-    /// step by insert/remove/bump_lens), so the mask-aware byte
-    /// accounting is O(layers) instead of O(sequences × layers) — it
-    /// sits on the engine's pressure path and every router's scoring
-    /// path.
+    /// step by insert/remove/bump_lens/compress) — the dense-ceiling
+    /// accounting is O(layers), it sits on the engine's pressure path
+    /// and every router's scoring path.
     total_tokens: usize,
+    /// Per-policy-class totals, maintained incrementally so
+    /// `bytes_used`/`floor_bytes` are O(layers · classes), never
+    /// O(sequences).
+    classes: BTreeMap<KvPolicy, ClassTotals>,
+    /// The compression floor: the most aggressive policy pressure may
+    /// deploy. `floor_bytes` prices every resident sequence as if
+    /// compressed down to it. `None` == no compression floor (rigid KV).
+    floor: Option<KvPolicy>,
     /// High-water mark of bytes held (for reports).
     pub peak_bytes_seen: usize,
 }
@@ -39,7 +105,8 @@ pub struct KvManager {
 impl KvManager {
     pub fn new(meta: &ModelMeta) -> KvManager {
         KvManager { meta: meta.clone(), seqs: HashMap::new(),
-                    total_tokens: 0, peak_bytes_seen: 0 }
+                    total_tokens: 0, classes: BTreeMap::new(),
+                    floor: None, peak_bytes_seen: 0 }
     }
 
     pub fn seq_elems(&self) -> usize {
@@ -63,30 +130,91 @@ impl KvManager {
         self.seqs.get(&id).map(|s| s.len)
     }
 
-    /// Total cached tokens across live sequences. Because every layer
-    /// stores the same `len` tokens per sequence, `bytes_used` under
-    /// any block-level mask is this total times the mask's per-token
-    /// bytes — which lets callers price alternative masks without a
-    /// per-sequence sweep.
+    pub fn policy_of(&self, id: u64) -> Option<KvPolicy> {
+        self.seqs.get(&id).map(|s| s.policy)
+    }
+
+    /// Total cached tokens across live sequences (post-compression
+    /// physical lengths). Scales the dense ceiling: with every group
+    /// restored and no token eviction, bytes would be this total times
+    /// the dense per-token bytes.
     pub fn total_tokens(&self) -> usize {
         self.total_tokens
     }
 
+    /// The deployed compression floor, if any.
+    pub fn floor(&self) -> Option<KvPolicy> {
+        self.floor
+    }
+
+    fn floor_token_cap(&self) -> usize {
+        self.floor.map(|f| f.token_cap()).unwrap_or(usize::MAX)
+    }
+
+    fn floor_group_cap(&self) -> usize {
+        self.floor.map(|f| f.group_cap()).unwrap_or(usize::MAX)
+    }
+
+    /// Install (or clear) the compression floor. Changing the floor
+    /// re-derives every class's floor-token projection — O(sequences),
+    /// but only on a floor change, never on the accounting hot path.
+    pub fn set_floor(&mut self, floor: Option<KvPolicy>) {
+        if self.floor == floor {
+            return;
+        }
+        self.floor = floor;
+        let cap = self.floor_token_cap();
+        for t in self.classes.values_mut() {
+            t.floor_tokens = 0;
+        }
+        for s in self.seqs.values() {
+            if let Some(t) = self.classes.get_mut(&s.policy) {
+                t.floor_tokens += s.len.min(cap);
+            }
+        }
+        self.debug_audit();
+    }
+
+    fn class_add(&mut self, policy: KvPolicy, len: usize) {
+        let cap = self.floor_token_cap();
+        let t = self.classes.entry(policy).or_default();
+        t.seqs += 1;
+        t.tokens += len;
+        t.floor_tokens += len.min(cap);
+        self.total_tokens += len;
+    }
+
+    fn class_remove(&mut self, policy: KvPolicy, len: usize) {
+        let cap = self.floor_token_cap();
+        let t = self.classes.get_mut(&policy)
+            .expect("class_remove: unknown policy class");
+        t.seqs -= 1;
+        t.tokens -= len;
+        t.floor_tokens -= len.min(cap);
+        if t.seqs == 0 {
+            self.classes.remove(&policy);
+        }
+        self.total_tokens -= len;
+    }
+
     /// Admit a sequence with its prefill-produced cache
-    /// (`[L, 1, Hkv, S, Dh]` == `[L, Hkv, S, Dh]` flattened).
+    /// (`[L, 1, Hkv, S, Dh]` == `[L, Hkv, S, Dh]` flattened). New
+    /// sequences enter dense; `compress` moves them between classes.
     pub fn insert(&mut self, id: u64, k: Vec<f32>, v: Vec<f32>,
                   prompt_len: usize, mask: &PruneMask) -> Result<()> {
         if k.len() != self.seq_elems() || v.len() != self.seq_elems() {
             bail!("cache size mismatch: got {}, want {}", k.len(),
                   self.seq_elems());
         }
-        if let Some(old) =
-            self.seqs.insert(id, SeqCache { k, v, len: prompt_len })
-        {
-            self.total_tokens -= old.len;
+        if let Some(old) = self.seqs.insert(
+            id,
+            SeqCache { k, v, len: prompt_len, policy: KvPolicy::Dense },
+        ) {
+            self.class_remove(old.policy, old.len);
         }
-        self.total_tokens += prompt_len;
+        self.class_add(KvPolicy::Dense, prompt_len);
         self.note_usage(mask);
+        self.debug_audit();
         Ok(())
     }
 
@@ -99,30 +227,202 @@ impl KvManager {
     pub fn remove(&mut self, id: u64) -> Option<SeqCache> {
         let removed = self.seqs.remove(&id);
         if let Some(s) = &removed {
-            self.total_tokens -= s.len;
+            self.class_remove(s.policy, s.len);
         }
+        self.debug_audit();
         removed
     }
 
-    /// Logical KV bytes for the *active* sequences under `mask`:
-    /// Σ_seq Σ_layer 2 · kv_groups(l) · Dh · len(seq) · 4B — computed
-    /// as (total tokens) × (per-token bytes under the mask), which is
-    /// exactly equal because every layer stores the same `len` tokens
-    /// per sequence.
-    pub fn bytes_used(&self, mask: &PruneMask) -> usize {
+    /// Per-token KV bytes under `mask` with at most `group_cap` kv
+    /// groups per layer materialized.
+    fn per_token_bytes_capped(&self, mask: &PruneMask,
+                              group_cap: usize) -> usize {
         let dh = self.meta.head_dim();
         let mut per_token = 0usize;
         for l in 0..self.meta.n_layers {
-            per_token +=
-                2 * mask.active_kv_groups(l) * dh * BYTES_PER_SCALAR;
+            per_token += 2 * mask.active_kv_groups(l).min(group_cap)
+                * dh * BYTES_PER_SCALAR;
         }
-        self.total_tokens * per_token
+        per_token
+    }
+
+    /// Per-token KV bytes a sequence under `policy` pays under `mask`.
+    pub fn per_token_bytes(&self, mask: &PruneMask,
+                           policy: KvPolicy) -> usize {
+        self.per_token_bytes_capped(mask, policy.group_cap())
+    }
+
+    /// Logical KV bytes for the *active* sequences under `mask`:
+    /// Σ_class (class tokens) × (class per-token bytes under the
+    /// mask). With every sequence dense this reduces exactly to the
+    /// pre-compression `total_tokens × per-token-bytes` formula.
+    pub fn bytes_used(&self, mask: &PruneMask) -> usize {
+        self.classes
+            .iter()
+            .map(|(p, t)| {
+                t.tokens * self.per_token_bytes_capped(mask, p.group_cap())
+            })
+            .sum()
+    }
+
+    /// Logical KV bytes under `mask` if every resident sequence were
+    /// compressed down to the floor policy — the KV leg of the joint
+    /// `min_viable`. Equals `bytes_used` when no floor is installed.
+    /// O(layers · classes), maintained incrementally.
+    pub fn floor_bytes(&self, mask: &PruneMask) -> usize {
+        let fg = self.floor_group_cap();
+        self.classes
+            .iter()
+            .map(|(p, t)| {
+                t.floor_tokens
+                    * self.per_token_bytes_capped(mask,
+                                                  p.group_cap().min(fg))
+            })
+            .sum()
+    }
+
+    /// Dense ceiling: bytes the resident tokens would cost with no
+    /// pruning and no compression-restricted groups.
+    pub fn dense_bytes(&self) -> usize {
+        self.total_tokens * self.meta.n_layers
+            * self.meta.kv_bytes_per_token_layer(self.meta.n_kv_heads)
+    }
+
+    /// Bytes `compress(id, policy)` would reclaim under `mask`, without
+    /// touching the cache. Zero for unknown ids.
+    pub fn reclaim_estimate(&self, id: u64, policy: KvPolicy,
+                            mask: &PruneMask) -> usize {
+        let Some(s) = self.seqs.get(&id) else { return 0 };
+        let before = s.len * self.per_token_bytes(mask, s.policy);
+        let new_len = policy.compressed_len(s.len);
+        let new_groups = s.policy.group_cap().min(policy.group_cap());
+        let after =
+            new_len * self.per_token_bytes_capped(mask, new_groups);
+        before.saturating_sub(after)
+    }
+
+    /// Compress one sequence in place to `policy`, rewriting the cache
+    /// and its byte accounting. Compression composes: a `WindowSink`
+    /// pass over a `HeadDrop`'d sequence keeps the dropped groups
+    /// dropped (the resulting class carries the tighter of both caps).
+    /// Idempotent — re-applying a policy a sequence already satisfies
+    /// changes nothing.
+    pub fn compress(&mut self, id: u64, policy: KvPolicy) -> Result<()> {
+        let m = self.meta.clone();
+        let Some(s) = self.seqs.get_mut(&id) else {
+            bail!("compress: unknown seq {id}");
+        };
+        let old_len = s.len;
+        let old_policy = s.policy;
+        let dh = m.head_dim();
+        let row = m.max_seq * dh;
+
+        // Token eviction: keep [0, sink) and the trailing `recent`
+        // rows, compacted to [sink, sink + recent).
+        let new_len = policy.compressed_len(old_len);
+        if new_len < old_len {
+            let KvPolicy::WindowSink { sink, recent } = policy else {
+                unreachable!("only WindowSink caps tokens");
+            };
+            let keep_from = old_len - recent;
+            for l in 0..m.n_layers {
+                for h in 0..m.n_kv_heads {
+                    let base = (l * m.n_kv_heads + h) * row;
+                    for buf in [&mut s.k, &mut s.v] {
+                        buf.copy_within(
+                            base + keep_from * dh..base + old_len * dh,
+                            base + sink * dh,
+                        );
+                        for x in &mut buf
+                            [base + new_len * dh..base + old_len * dh]
+                        {
+                            *x = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Head-adaptive eviction: zero every kv group past the cap.
+        let new_groups =
+            old_policy.group_cap().min(policy.group_cap());
+        if new_groups < m.n_kv_heads
+            && new_groups < old_policy.group_cap()
+        {
+            for l in 0..m.n_layers {
+                for h in new_groups..m.n_kv_heads {
+                    let base = (l * m.n_kv_heads + h) * row;
+                    for buf in [&mut s.k, &mut s.v] {
+                        for x in &mut buf[base..base + row] {
+                            *x = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+
+        // The sequence's class carries the tighter of (old, new) caps
+        // so accounting never un-prices data that is already gone.
+        let new_policy = if new_groups < policy.group_cap() {
+            KvPolicy::HeadDrop { keep_groups: new_groups }
+        } else {
+            policy
+        };
+        s.len = new_len;
+        s.policy = new_policy;
+        self.class_remove(old_policy, old_len);
+        self.class_add(new_policy, new_len);
+        self.debug_audit();
+        Ok(())
     }
 
     fn note_usage(&mut self, mask: &PruneMask) {
         let b = self.bytes_used(mask);
         if b > self.peak_bytes_seen {
             self.peak_bytes_seen = b;
+        }
+    }
+
+    /// Exhaustive per-sequence rescan of the class totals — the oracle
+    /// the incremental books must match after any interleaving of
+    /// insert/compress/bump/evict. O(sequences); debug assertions and
+    /// proptests only, never the serving path.
+    fn rescan_classes(&self)
+                      -> (BTreeMap<KvPolicy, ClassTotals>, usize) {
+        let cap = self.floor_token_cap();
+        let mut classes: BTreeMap<KvPolicy, ClassTotals> =
+            BTreeMap::new();
+        let mut total = 0usize;
+        for s in self.seqs.values() {
+            let t = classes.entry(s.policy).or_default();
+            t.seqs += 1;
+            t.tokens += s.len;
+            t.floor_tokens += s.len.min(cap);
+            total += s.len;
+        }
+        (classes, total)
+    }
+
+    /// Check the incremental accounting against the exhaustive rescan.
+    pub fn audit(&self) -> Result<()> {
+        let (classes, total) = self.rescan_classes();
+        if classes != self.classes {
+            bail!("kv class books diverged: incremental {:?} vs \
+                   rescan {:?}",
+                  self.classes, classes);
+        }
+        if total != self.total_tokens {
+            bail!("kv total_tokens diverged: incremental {} vs \
+                   rescan {}",
+                  self.total_tokens, total);
+        }
+        Ok(())
+    }
+
+    fn debug_audit(&self) {
+        #[cfg(debug_assertions)]
+        if let Err(e) = self.audit() {
+            panic!("{e}");
         }
     }
 
@@ -189,17 +489,27 @@ impl KvManager {
     /// Advance each sequence's materialized length by one decode step.
     pub fn bump_lens(&mut self, ids: &[u64], mask: &PruneMask)
                      -> Result<()> {
+        let cap = self.floor_token_cap();
         for id in ids {
             let Some(s) = self.seqs.get_mut(id) else {
                 bail!("bump_lens: unknown seq {id}");
             };
             s.len += 1;
-            self.total_tokens += 1;
-            if s.len > self.meta.max_seq {
+            let policy = s.policy;
+            let len = s.len;
+            if len > self.meta.max_seq {
                 bail!("sequence {id} overflowed max_seq");
             }
+            let t = self.classes.get_mut(&policy)
+                .expect("bump_lens: unknown policy class");
+            t.tokens += 1;
+            if len <= cap {
+                t.floor_tokens += 1;
+            }
+            self.total_tokens += 1;
         }
         self.note_usage(mask);
+        self.debug_audit();
         Ok(())
     }
 
@@ -282,6 +592,118 @@ mod tests {
         assert_eq!(kv.total_tokens() * m.n_layers
                        * m.kv_bytes_per_token_layer(m.n_kv_heads),
                    dense);
+        assert_eq!(kv.dense_bytes(), dense);
+    }
+
+    fn tok_at(kv: &KvManager, id: u64, t: usize, dh: usize) -> f32 {
+        kv.get(id).unwrap().k[t * dh]
+    }
+
+    #[test]
+    fn window_sink_compacts_tokens_in_place() {
+        let m = meta();
+        let mask = PruneMask::full(&m);
+        let mut kv = KvManager::new(&m);
+        let dh = m.head_dim();
+        // distinct value per token position so the compaction is visible
+        let mut k1 = vec![0.0f32; kv.seq_elems()];
+        for l in 0..m.n_layers {
+            for h in 0..m.n_kv_heads {
+                for t in 0..m.max_seq {
+                    let base =
+                        ((l * m.n_kv_heads + h) * m.max_seq + t) * dh;
+                    for d in 0..dh {
+                        k1[base + d] = t as f32;
+                    }
+                }
+            }
+        }
+        let v1 = k1.clone();
+        kv.insert(5, k1, v1, 10, &mask).unwrap();
+        let policy = KvPolicy::WindowSink { sink: 2, recent: 3 };
+        kv.compress(5, policy).unwrap();
+        assert_eq!(kv.seq_len(5), Some(5));
+        assert_eq!(kv.policy_of(5), Some(policy));
+        assert_eq!(kv.total_tokens(), 5);
+        // sinks untouched, window compacted from tokens 7..10, tail 0
+        assert_eq!(tok_at(&kv, 5, 0, dh), 0.0);
+        assert_eq!(tok_at(&kv, 5, 1, dh), 1.0);
+        assert_eq!(tok_at(&kv, 5, 2, dh), 7.0);
+        assert_eq!(tok_at(&kv, 5, 3, dh), 8.0);
+        assert_eq!(tok_at(&kv, 5, 4, dh), 9.0);
+        assert_eq!(tok_at(&kv, 5, 5, dh), 0.0);
+        // idempotent: re-applying the satisfied policy changes nothing
+        kv.compress(5, policy).unwrap();
+        assert_eq!(kv.seq_len(5), Some(5));
+        assert_eq!(tok_at(&kv, 5, 2, dh), 7.0);
+        kv.audit().unwrap();
+    }
+
+    #[test]
+    fn head_drop_prices_only_kept_groups() {
+        let m = meta();
+        let full = PruneMask::full(&m);
+        let mut kv = KvManager::new(&m);
+        let (k1, v1) = filled_cache(&m, 1.0);
+        kv.insert(1, k1, v1, 4, &full).unwrap();
+        let dense = kv.bytes_used(&full);
+        kv.compress(1, KvPolicy::HeadDrop { keep_groups: 1 }).unwrap();
+        // 1 of 2 kv groups survives → half the bytes, same token count
+        assert_eq!(kv.bytes_used(&full), dense / 2);
+        assert_eq!(kv.total_tokens(), 4);
+        // dropped group is physically zeroed
+        let s = kv.get(1).unwrap();
+        let row = m.max_seq * m.head_dim();
+        assert!(s.k[row..2 * row].iter().all(|&x| x == 0.0));
+        assert!(s.k[..row].iter().any(|&x| x != 0.0));
+        kv.audit().unwrap();
+    }
+
+    #[test]
+    fn compression_composes_with_the_tighter_caps() {
+        let m = meta();
+        let full = PruneMask::full(&m);
+        let mut kv = KvManager::new(&m);
+        let (k1, v1) = filled_cache(&m, 1.0);
+        kv.insert(1, k1, v1, 12, &full).unwrap();
+        kv.compress(1, KvPolicy::HeadDrop { keep_groups: 1 }).unwrap();
+        kv.compress(1, KvPolicy::WindowSink { sink: 1, recent: 3 })
+            .unwrap();
+        // head cap survives the window pass: class keeps keep_groups=1
+        assert_eq!(kv.policy_of(1),
+                   Some(KvPolicy::HeadDrop { keep_groups: 1 }));
+        assert_eq!(kv.seq_len(1), Some(4));
+        let per_token_half = m.n_layers * m.kv_bytes_per_token_layer(1);
+        assert_eq!(kv.bytes_used(&full), 4 * per_token_half);
+        kv.audit().unwrap();
+    }
+
+    #[test]
+    fn floor_bytes_projects_every_class_to_the_floor() {
+        let m = meta();
+        let full = PruneMask::full(&m);
+        let mut kv = KvManager::new(&m);
+        let (k1, v1) = filled_cache(&m, 1.0);
+        let (k2, v2) = filled_cache(&m, 2.0);
+        kv.insert(1, k1, v1, 12, &full).unwrap();
+        kv.insert(2, k2, v2, 3, &full).unwrap();
+        // no floor: floor_bytes == bytes_used
+        assert_eq!(kv.floor_bytes(&full), kv.bytes_used(&full));
+        let floor = KvPolicy::WindowSink { sink: 1, recent: 4 };
+        kv.set_floor(Some(floor));
+        let per_token = kv.per_token_bytes(&full, KvPolicy::Dense);
+        // seq 1 caps at 5 tokens, seq 2 stays at 3
+        assert_eq!(kv.floor_bytes(&full), (5 + 3) * per_token);
+        assert_eq!(kv.bytes_used(&full), (12 + 3) * per_token);
+        // bump past the cap: bytes grow, the floor projection doesn't
+        kv.bump_lens(&[1], &full).unwrap();
+        assert_eq!(kv.bytes_used(&full), (13 + 3) * per_token);
+        assert_eq!(kv.floor_bytes(&full), (5 + 3) * per_token);
+        // deploying the floor realizes the projection exactly
+        kv.compress(1, floor).unwrap();
+        kv.compress(2, floor).unwrap();
+        assert_eq!(kv.bytes_used(&full), kv.floor_bytes(&full));
+        kv.audit().unwrap();
     }
 
     #[test]

@@ -117,6 +117,13 @@ pub struct Metrics {
     /// the current mask that fit within the min-viable footprint, so no
     /// work was shed and no OOM was charged.
     pub absorbed_spikes: u64,
+    /// Pressure spikes where absorbing required engaging the KV axis:
+    /// at least one resident cache was compressed to the floor policy
+    /// (a subset of the absorption events; mask-only spikes don't
+    /// count here).
+    pub compressed_spikes: u64,
+    /// KV bytes freed by in-place compression under pressure.
+    pub kv_bytes_reclaimed: u64,
     /// Head-of-line requests permanently rejected (admission control).
     pub rejected: u64,
     /// In-flight sequences evicted and requeued locally under memory
@@ -208,6 +215,8 @@ impl Metrics {
             completed: self.completed.len(),
             oom_events: self.oom_events,
             absorbed_spikes: self.absorbed_spikes,
+            compressed_spikes: self.compressed_spikes,
+            kv_bytes_reclaimed: self.kv_bytes_reclaimed,
             rejected: self.rejected,
             evictions: self.evictions,
             cancelled: self.cancelled,
@@ -271,6 +280,11 @@ pub struct ServeReport {
     pub oom_events: u64,
     /// Pressure spikes absorbed by mask-shrinking alone.
     pub absorbed_spikes: u64,
+    /// Absorptions that also compressed resident KV (see
+    /// `Metrics::compressed_spikes`).
+    pub compressed_spikes: u64,
+    /// KV bytes freed by in-place compression under pressure.
+    pub kv_bytes_reclaimed: u64,
     /// Permanent admission rejections.
     pub rejected: u64,
     /// Local evict-and-requeue events (see `Metrics::evictions`).
@@ -317,6 +331,10 @@ impl ServeReport {
         println!("   deadline missed  {:>10}", self.deadline_missed);
         println!("   OOM events       {:>10}", self.oom_events);
         println!("   absorbed spikes  {:>10}", self.absorbed_spikes);
+        if self.compressed_spikes > 0 {
+            println!("   kv compressions  {:>10}   ({} bytes reclaimed)",
+                     self.compressed_spikes, self.kv_bytes_reclaimed);
+        }
         println!("   prefills         {:>10}", self.prefills);
         println!("   decode steps     {:>10}", self.decode_steps);
         println!("   tokens generated {:>10}", self.tokens_generated);

@@ -29,18 +29,31 @@
 //! to take on work is its *elastic* headroom `Sys_avail(t) - min_viable`,
 //! not the headroom under whatever mask it happens to be wearing
 //! mid-shrink.
+//!
+//! Since PR-9 the lattice is *joint*: `min_viable` minimizes over
+//! (reachable mask) × (reachable KV policy per resident sequence) under
+//! the controller's compression floor, so the absorbable band covers
+//! spikes that mask-shrinking alone cannot reach. `kv_slack` reports the
+//! KV-compression leg of that band on its own — the bytes per-sequence
+//! compression could free *without* moving the mask — so pressure
+//! consumers can tell the two elasticity axes apart.
 
-/// A replica's memory footprint across the reachable mask lattice, in
-/// bytes. Invariant (enforced at construction): `min_viable <= current
-/// <= dense`.
+/// A replica's memory footprint across the reachable (mask × KV-policy)
+/// lattice, in bytes. Invariant (enforced at construction):
+/// `min_viable <= current <= dense`, `kv_slack <= slack()`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MemoryOutlook {
-    /// Footprint under the cheapest mask the controller may deploy.
+    /// Footprint under the cheapest (mask, KV policy) point the
+    /// controller may deploy: the floor mask priced with every resident
+    /// sequence compressed down to the KV floor.
     pub min_viable: usize,
-    /// Footprint under the currently deployed mask.
+    /// Footprint under the currently deployed mask and policies.
     pub current: usize,
-    /// Footprint under the full (dense) mask.
+    /// Footprint under the full (dense) mask with no compression caps.
     pub dense: usize,
+    /// Bytes KV compression alone could free at the *current* mask —
+    /// the second elasticity axis, zero when KV elasticity is off.
+    pub kv_slack: usize,
 }
 
 impl MemoryOutlook {
@@ -53,14 +66,24 @@ impl MemoryOutlook {
             min_viable: min_viable.min(current),
             current,
             dense: dense.max(current),
+            kv_slack: 0,
         }
+    }
+
+    /// Attach the KV-compression leg of the elastic band (clamped into
+    /// the lattice: compression can never free more than the full
+    /// distance down to `min_viable`).
+    pub fn with_kv_slack(mut self, kv_slack: usize) -> MemoryOutlook {
+        self.kv_slack = kv_slack.min(self.slack());
+        self
     }
 
     /// An outlook with no elasticity: all three points collapse onto
     /// the current footprint (static deployments, or mask-elastic
     /// accounting disabled).
     pub fn rigid(current: usize) -> MemoryOutlook {
-        MemoryOutlook { min_viable: current, current, dense: current }
+        MemoryOutlook { min_viable: current, current, dense: current,
+                        kv_slack: 0 }
     }
 
     /// Bytes the controller could free right now by shrinking the mask.
@@ -95,6 +118,14 @@ impl MemoryOutlook {
     /// A true OOM: pressured AND not absorbable.
     pub fn true_oom(&self, avail: usize) -> bool {
         self.pressured(avail) && !self.viable(avail)
+    }
+
+    /// The spike needs more than the mask axis alone can free: only
+    /// reachable by deploying KV compression (or not at all).
+    pub fn needs_kv_axis(&self, avail: usize) -> bool {
+        self.pressured(avail)
+            && self.current.saturating_sub(avail)
+                > self.slack().saturating_sub(self.kv_slack)
     }
 }
 
@@ -136,5 +167,25 @@ mod tests {
         // below min_viable: a true OOM
         assert!(o.true_oom(29));
         assert_eq!(o.elastic_headroom(29), 0);
+    }
+
+    #[test]
+    fn kv_slack_splits_the_elastic_band() {
+        let o = MemoryOutlook::new(30, 100, 120).with_kv_slack(40);
+        assert_eq!(o.kv_slack, 40);
+        // mask axis alone frees slack - kv_slack = 30 bytes: a spike
+        // down to avail=70 is mask-absorbable, below that the KV axis
+        // must engage
+        assert!(!o.needs_kv_axis(70));
+        assert!(o.needs_kv_axis(69));
+        assert!(o.needs_kv_axis(30));
+        // the joint floor still bounds absorbability
+        assert!(!o.true_oom(30));
+        assert!(o.true_oom(29));
+        // kv_slack clamps into the lattice
+        let c = MemoryOutlook::new(90, 100, 120).with_kv_slack(40);
+        assert_eq!(c.kv_slack, c.slack());
+        // rigid outlooks carry no kv slack
+        assert_eq!(MemoryOutlook::rigid(42).kv_slack, 0);
     }
 }

@@ -75,10 +75,14 @@ pub enum EventKind {
         retained: f64,
         forced: bool,
     },
-    /// A true OOM: pressure even the min-viable mask could not absorb.
+    /// A true OOM: pressure even the joint (mask × KV-policy) floor
+    /// could not absorb.
     Oom,
-    /// A spike absorbed purely by mask-shrinking (no work shed).
+    /// A spike absorbed by the elastic lattice (no work shed).
     AbsorbedSpike,
+    /// Per-sequence KV compression engaged under pressure: `seqs`
+    /// caches were rewritten to the floor policy, reclaiming `bytes`.
+    KvCompress { seqs: u64, bytes: u64 },
     /// The autoscaler added a replica; `trigger` names the signal that
     /// fired (`Autoscaler::explain`).
     AutoscaleSpawn {
@@ -119,6 +123,7 @@ impl EventKind {
             EventKind::MaskDeploy { .. } => "mask-deploy",
             EventKind::Oom => "oom",
             EventKind::AbsorbedSpike => "absorbed-spike",
+            EventKind::KvCompress { .. } => "kv-compress",
             EventKind::AutoscaleSpawn { .. } => "autoscale-spawn",
             EventKind::AutoscaleRetire { .. } => "autoscale-retire",
             EventKind::FaultInjected { .. } => "fault-injected",
@@ -165,6 +170,10 @@ impl EventKind {
                 vec![("site", Json::Str(site.to_string()))]
             }
             EventKind::Checkpoint { bytes } => vec![("bytes", u(*bytes))],
+            EventKind::KvCompress { seqs, bytes } => vec![
+                ("seqs", u(*seqs)),
+                ("bytes", u(*bytes)),
+            ],
             EventKind::Crash { disposition } => {
                 vec![("disposition", Json::Str(disposition.to_string()))]
             }

@@ -16,6 +16,7 @@ use rap::coordinator::fleet::{absorbable_spike_fleet,
                               absorbable_spike_trace,
                               chaos_storm_fleet, chaos_storm_trace,
                               elastic_demo_fleet, elastic_demo_trace,
+                              longctx_storm_fleet, longctx_storm_trace,
                               tenant_storm_fleet, tenant_storm_trace,
                               Fleet};
 use rap::coordinator::metrics::FleetReport;
@@ -67,6 +68,19 @@ fn event_driven_matches_lockstep_on_every_scenario_family() {
             let f = chaos_storm_fleet(42, false);
             let mut f = if ev { f } else { lockstep(f) };
             f.run_requests(chaos_storm_trace(42)).unwrap()
+        })),
+        // PR-9: the long-context storm with the KV-compression leg
+        // engaged — the scheduler refactor must not move the pressure
+        // path's compress step either
+        ("longctx-joint", Box::new(|ev| {
+            let f = longctx_storm_fleet(42, true);
+            let mut f = if ev { f } else { lockstep(f) };
+            f.run_trace(longctx_storm_trace(42)).unwrap()
+        })),
+        ("longctx-mask-only", Box::new(|ev| {
+            let f = longctx_storm_fleet(42, false);
+            let mut f = if ev { f } else { lockstep(f) };
+            f.run_trace(longctx_storm_trace(42)).unwrap()
         })),
     ];
     for (label, run) in &matrix {

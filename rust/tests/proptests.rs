@@ -12,10 +12,10 @@ use rap::coordinator::replica::{build_sim_replica, Replica, ReplicaSpec,
 use rap::coordinator::router::{Router, RouterPolicy};
 use rap::mask::PruneMask;
 use rap::memory::{MemoryModel, Workload};
-use rap::model_meta::{BlockId, ModelMeta};
+use rap::model_meta::{BlockId, ModelMeta, BYTES_PER_SCALAR};
 use rap::server::batcher::{decode_bucket, prefill_bucket, ActiveSeq,
                            Batcher, DECODE_BUCKETS, PREFILL_BUCKETS};
-use rap::server::kv::KvManager;
+use rap::server::kv::{KvManager, KvPolicy};
 use rap::server::memmon::MemoryMonitor;
 use rap::util::json::Json;
 use rap::util::rng::Rng;
@@ -611,4 +611,273 @@ fn prop_interrupted_transfers_deliver_exactly_once() {
                    n,
                    "seed {seed}: arrivals unaccounted: {r:?}");
     }
+}
+
+/// PR-9 accounting oracle: the KV manager's incremental per-class
+/// books (and the O(classes) byte formulas built on them) must match
+/// an exhaustive per-sequence oracle after *any* interleaving of
+/// insert / decode-bump / compress / evict / floor change. The oracle
+/// here is computed from the public per-sequence surface (`seq_len`,
+/// `policy_of`) and first principles (`active_kv_groups` × head_dim ×
+/// `BYTES_PER_SCALAR`), deliberately not through the manager's own
+/// per-token pricing helpers; `audit()` separately cross-checks the
+/// incremental class totals against `rescan_classes`.
+#[test]
+fn prop_kv_incremental_accounting_matches_exhaustive_oracle() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed ^ 0xACC0);
+        let meta = rand_meta(&mut rng);
+        let mask = rand_mask(&meta, &mut rng);
+        let mut kv = KvManager::new(&meta);
+        let floors = [
+            None,
+            Some(KvPolicy::WindowSink { sink: 4, recent: 48 }),
+            Some(KvPolicy::WindowSink { sink: 0, recent: 8 }),
+            Some(KvPolicy::HeadDrop { keep_groups: 1 }),
+        ];
+        kv.set_floor(floors[rng.below(floors.len())]);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..40 {
+            match rng.below(5) {
+                0 | 1 => {
+                    // admit a fresh dense sequence
+                    let len = rng.range(1, meta.max_seq);
+                    let e = kv.seq_elems();
+                    kv.insert(next_id, vec![0.0; e], vec![0.0; e], len,
+                              &mask)
+                        .unwrap();
+                    live.push(next_id);
+                    next_id += 1;
+                }
+                2 => {
+                    // decode-bump a random subset (never past max_seq)
+                    let ids: Vec<u64> = live
+                        .iter()
+                        .copied()
+                        .filter(|&id| {
+                            kv.seq_len(id).unwrap() < meta.max_seq
+                                && rng.chance(0.7)
+                        })
+                        .collect();
+                    if !ids.is_empty() {
+                        kv.bump_lens(&ids, &mask).unwrap();
+                    }
+                }
+                3 => {
+                    // compress a random resident to a random policy
+                    // (WindowSink, HeadDrop, or an idempotent Dense
+                    // re-apply) — composition with whatever class it
+                    // already carries is the interesting part
+                    if let Some(&id) =
+                        live.get(rng.below(live.len().max(1)))
+                    {
+                        let pol = match rng.below(3) {
+                            0 => KvPolicy::WindowSink {
+                                sink: rng.below(5),
+                                recent: 1 + rng.below(60),
+                            },
+                            1 => KvPolicy::HeadDrop {
+                                keep_groups:
+                                    1 + rng.below(meta.n_kv_heads),
+                            },
+                            _ => KvPolicy::Dense,
+                        };
+                        kv.compress(id, pol).unwrap();
+                    }
+                }
+                _ => {
+                    // evict
+                    if !live.is_empty() {
+                        let i = rng.below(live.len());
+                        let id = live.swap_remove(i);
+                        assert!(kv.remove(id).is_some(), "seed {seed}");
+                    }
+                }
+            }
+            if rng.chance(0.15) {
+                kv.set_floor(floors[rng.below(floors.len())]);
+            }
+
+            // incremental class totals == exhaustive rescan
+            kv.audit().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+
+            // independent byte oracle over the public per-seq surface
+            let per_tok = |group_cap: usize| -> usize {
+                (0..meta.n_layers)
+                    .map(|l| {
+                        2 * mask.active_kv_groups(l).min(group_cap)
+                            * meta.head_dim() * BYTES_PER_SCALAR
+                    })
+                    .sum()
+            };
+            let mut want_tokens = 0usize;
+            let mut want_used = 0usize;
+            let mut want_floor = 0usize;
+            for &id in &live {
+                let len = kv.seq_len(id).unwrap();
+                let pol = kv.policy_of(id).unwrap();
+                want_tokens += len;
+                want_used += len * per_tok(pol.group_cap());
+                want_floor += match kv.floor() {
+                    None => len * per_tok(pol.group_cap()),
+                    Some(f) => len.min(f.token_cap())
+                        * per_tok(pol.group_cap().min(f.group_cap())),
+                };
+            }
+            assert_eq!(kv.len(), live.len(), "seed {seed}");
+            assert_eq!(kv.total_tokens(), want_tokens, "seed {seed}");
+            assert_eq!(kv.bytes_used(&mask), want_used, "seed {seed}");
+            assert_eq!(kv.floor_bytes(&mask), want_floor, "seed {seed}");
+        }
+    }
+}
+
+/// PR-9 conservation property: in-place compression racing the rest of
+/// the lifecycle — eviction under true OOM, mid-run cancels of
+/// possibly-compressed residents, shed-migration of compressed caches,
+/// and a crash whose checkpoint restore lands *on* the pressured
+/// replica — must never leak or double-book a sequence or a KV byte.
+/// Each seed walls replica 0 at a random depth (some depths the joint
+/// lattice absorbs by compressing, some force a true-OOM shed), cancels
+/// a random subset mid-storm, and in half the seeds crashes replica 1
+/// mid-wall so checkpointed (possibly compressed) caches restore into
+/// the pressure. After the drain: every id terminal exactly once, the
+/// books close, and every engine's KV manager is empty with its
+/// incremental accounting still matching the rescan.
+#[test]
+fn prop_compression_conserves_sequences_and_kv_bytes() {
+    use rap::api::RequestStatus;
+    use rap::runtime::{FaultEvent, FaultPlan};
+
+    let mut pressured_runs = 0usize;
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed ^ 0xE1A5);
+        let wall_at = 8.0 + 4.0 * rng.f64();
+        let wall_until = wall_at + 6.0 + 4.0 * rng.f64();
+        let avail_frac = 0.35 + 0.5 * rng.f64();
+        let crash = seed % 2 == 0;
+        let crash_at = wall_at + 0.5 + 1.5 * rng.f64();
+
+        let spec = ReplicaSpec {
+            flops_per_sec: 6.0e8, // slow: residents live through the wall
+            app_rate: 0.0,
+            adaptive: true,
+            capacity_mult: 2.5,
+            ..ReplicaSpec::heterogeneous(0)
+        };
+        let cfg = FleetConfig {
+            migrate: true,
+            oom_threshold: usize::MAX,
+            elastic_accounting: true,
+            kv_elastic: true,
+            checkpoint_period_secs: crash.then_some(0.5),
+            max_sim_secs: 4000.0,
+            ..FleetConfig::default()
+        };
+        let mut fleet = uniform_sim_fleet(
+            2, seed, RouterPolicy::LeastOutstanding, cfg, spec);
+        for r in &mut fleet.replicas {
+            // one controller decision up front, then only
+            // pressure-triggered runs — the wall meets the deployed
+            // mask, not a freshly re-tuned one
+            r.engine.cfg.controller_period = 30.0;
+        }
+        if crash {
+            fleet = fleet.with_fault_plan(FaultPlan::new(vec![
+                FaultEvent::Crash { at: crash_at, replica: 1 },
+            ]));
+        }
+        let params = fleet.replicas[0].engine.bytes_used();
+        let cap = fleet.replicas[0].engine.monitor.cfg.capacity;
+        let avail = (params as f64 * avail_frac) as usize;
+        fleet.replicas[0].engine.monitor =
+            MemoryMonitor::walls(cap,
+                                 &[(wall_at, wall_until, cap - avail)]);
+
+        // long-context arrivals, all in flight before the wall lands
+        let n = rng.range(8, 16) as u64;
+        let mut reqs: Vec<SubmitRequest> = (0..n)
+            .map(|id| {
+                SubmitRequest::new(rng.range(60, 140),
+                                   rng.range(30, 90))
+                    .with_id(id)
+                    .with_arrival(rng.f64() * (wall_at - 1.0))
+            })
+            .collect();
+        reqs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        // cancel ~a quarter of them mid-wall, racing compression
+        let mut cancels: Vec<(f64, u64)> = Vec::new();
+        for id in 0..n {
+            if rng.chance(0.25) {
+                cancels.push((wall_at + rng.f64() * 4.0, id));
+            }
+        }
+        cancels.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+        let mut handles = Vec::new();
+        let mut next = 0usize;
+        let mut next_cancel = 0usize;
+        let mut t = 0.0;
+        while next < reqs.len() || t < wall_until + 1.0 {
+            t += 0.25;
+            fleet.step(t).unwrap();
+            while next < reqs.len() && reqs[next].arrival <= t {
+                handles.push(fleet.submit(reqs[next].clone()));
+                next += 1;
+            }
+            while next_cancel < cancels.len()
+                && cancels[next_cancel].0 <= t
+            {
+                let id = cancels[next_cancel].1;
+                let _ = fleet
+                    .cancel(rap::api::RequestHandle { id })
+                    .unwrap();
+                next_cancel += 1;
+            }
+            // the incremental KV books must hold *mid-race*, on every
+            // replica, in release builds too
+            for r in &fleet.replicas {
+                r.engine.kv.audit().unwrap_or_else(
+                    |e| panic!("seed {seed} t {t}: {e}"));
+            }
+        }
+        fleet.step(t + 600.0).unwrap();
+
+        let r = fleet.report();
+        if crash {
+            assert!(r.chaos.crashes >= 1,
+                    "seed {seed}: crash never landed");
+        }
+        if r.compressed_spikes + r.oom_events > 0 {
+            pressured_runs += 1;
+        }
+        // every submitted id is terminal ...
+        for h in &handles {
+            assert!(matches!(fleet.poll(*h),
+                             Some(RequestStatus::Finished(_))),
+                    "seed {seed}: id {} not terminal after drain",
+                    h.id);
+        }
+        // ... the books close ...
+        assert_eq!(r.completed as u64 + r.rejected + r.cancelled
+                       + r.deadline_missed + r.dropped,
+                   n,
+                   "seed {seed}: arrivals unaccounted: {r:?}");
+        // ... and no replica leaked a sequence or a KV byte
+        for rep in &fleet.replicas {
+            assert_eq!(rep.engine.outstanding(), 0, "seed {seed}");
+            assert_eq!(rep.engine.parked_len(), 0, "seed {seed}");
+            assert!(rep.engine.kv.is_empty(),
+                    "seed {seed}: {} caches leaked after drain",
+                    rep.engine.kv.len());
+            rep.engine.kv.audit().unwrap_or_else(
+                |e| panic!("seed {seed}: {e}"));
+        }
+    }
+    // teeth: the wall actually pressured the joint lattice somewhere
+    // across the seed sweep (absorbed-by-compression or true-OOM shed)
+    assert!(pressured_runs >= 1,
+            "no seed ever pressured the walled replica — the race \
+             scenario lost its teeth");
 }

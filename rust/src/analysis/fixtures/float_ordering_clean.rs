@@ -1,0 +1,15 @@
+//! Lint fixture — CLEAN, never compiled (not in the module tree).
+//! Scanned by `tests/lint.rs` under the virtual path
+//! `server/fixture.rs` and expected to yield exactly 1 *justified*
+//! `float-ordering` finding and 0 unjustified ones.
+
+pub fn probe_sentinel(probe: f64, sentinel: f64) -> bool {
+    // lint:allow(float-ordering): None-on-NaN is the point here — the
+    // caller treats an unordered probe as "sentinel absent"
+    probe.partial_cmp(&sentinel).is_none()
+}
+
+pub fn rank_fine(xs: &mut [f64]) {
+    // the compliant form; must NOT fire
+    xs.sort_by(|a, b| a.total_cmp(b));
+}

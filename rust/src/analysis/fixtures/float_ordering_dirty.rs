@@ -1,0 +1,22 @@
+//! Lint fixture — DIRTY on purpose, never compiled (not in the module
+//! tree). Scanned by `tests/lint.rs` under the virtual path
+//! `server/fixture.rs` and expected to yield exactly 2 unjustified
+//! `float-ordering` findings.
+
+pub fn rank_badly(xs: &mut [f64]) {
+    // plain violation: NaN placement becomes incidental
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(Ordering::Equal));
+}
+
+pub fn pick_badly(xs: &[f64]) -> Option<f64> {
+    // suppression WITHOUT a justification — still a finding
+    // lint:allow(float-ordering)
+    xs.iter()
+        .cloned()
+        .max_by(|a, b| a.partial_cmp(b).unwrap_or(Ordering::Less))
+}
+
+pub fn rank_fine(xs: &mut [f64]) {
+    // the compliant form; must NOT fire
+    xs.sort_by(|a, b| a.total_cmp(b));
+}

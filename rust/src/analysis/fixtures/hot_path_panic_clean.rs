@@ -1,0 +1,16 @@
+//! Lint fixture — CLEAN, never compiled (not in the module tree).
+//! Scanned by `tests/lint.rs` under the virtual path
+//! `server/fixture.rs` and expected to yield exactly 1 *justified*
+//! `hot-path-panic` finding and 0 unjustified ones.
+
+pub fn pop_checked(&mut self) -> u64 {
+    debug_assert!(!self.queue.is_empty(), "caller checks non-empty");
+    // lint:allow(hot-path-panic): the is_empty guard one line up makes
+    // this provably unreachable; a silent default would hide the bug
+    self.queue.pop_front().unwrap()
+}
+
+pub fn pop_fine(&mut self) -> Option<u64> {
+    // the compliant form; must NOT fire
+    self.queue.pop_front()
+}

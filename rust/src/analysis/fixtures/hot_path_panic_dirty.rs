@@ -1,0 +1,22 @@
+//! Lint fixture — DIRTY on purpose, never compiled (not in the module
+//! tree). Scanned by `tests/lint.rs` under the virtual path
+//! `server/fixture.rs` and expected to yield exactly 2 unjustified
+//! `hot-path-panic` findings — and ZERO when re-scanned under
+//! `agent/fixture.rs`, pinning the rule's scope.
+
+pub fn pop_badly(&mut self) -> u64 {
+    // plain violation: one empty queue takes the replica down
+    let head = self.queue.pop_front().unwrap();
+    head
+}
+
+pub fn meta_badly(&self, id: u64) -> &SeqMeta {
+    // suppression WITHOUT a justification — still a finding
+    // lint:allow(hot-path-panic)
+    self.meta.get(&id).expect("meta for live sequence")
+}
+
+pub fn pop_fine(&mut self) -> Option<u64> {
+    // the compliant form: degrade, don't panic; must NOT fire
+    self.queue.pop_front()
+}

@@ -1,0 +1,16 @@
+//! Lint fixture — CLEAN, never compiled (not in the module tree).
+//! Scanned by `tests/lint.rs` under the virtual path
+//! `server/fixture.rs` and expected to yield exactly 1 *justified*
+//! `raw-rng` finding and 0 unjustified ones.
+
+pub fn salted_probe(&self) -> u64 {
+    // lint:allow(raw-rng): hashing fallback only — the salt never
+    // reaches sampling, routing, or any serialized output
+    let state = RandomState::new();
+    probe_with(state, self.key)
+}
+
+pub fn draw_fine(&mut self) -> f64 {
+    // the compliant form: the seeded crate rng; must NOT fire
+    self.rng.f64()
+}

@@ -1,0 +1,21 @@
+//! Lint fixture — DIRTY on purpose, never compiled (not in the module
+//! tree). Scanned by `tests/lint.rs` under the virtual path
+//! `server/fixture.rs` and expected to yield exactly 2 unjustified
+//! `raw-rng` findings.
+
+pub fn jitter_badly(&mut self) -> f64 {
+    // plain violation: host entropy breaks run-to-run determinism
+    let r: f64 = rand::random();
+    r * self.scale
+}
+
+pub fn reseed_badly(&mut self) {
+    // suppression WITHOUT a justification — still a finding
+    // lint:allow(raw-rng)
+    self.rng = StdRng::from_entropy();
+}
+
+pub fn jitter_fine(&mut self) -> f64 {
+    // the compliant form: the seeded crate rng; must NOT fire
+    self.rng.f64() * self.scale
+}

@@ -1,0 +1,24 @@
+//! Lint fixture — CLEAN, never compiled (not in the module tree).
+//! Scanned by `tests/lint.rs` under the virtual path
+//! `coordinator/fixture.rs` and expected to yield exactly 1
+//! *justified* `unordered-iter` finding and 0 unjustified ones.
+
+use std::collections::HashMap;
+
+pub struct Scratch {
+    staging: HashMap<u64, u64>,
+    emitted: std::collections::BTreeMap<u64, u64>,
+}
+
+impl Scratch {
+    pub fn total(&self) -> u64 {
+        // lint:allow(unordered-iter): a sum is order-independent, so
+        // hash order cannot reach the result
+        self.staging.values().sum()
+    }
+
+    pub fn export(&self) -> Vec<(u64, u64)> {
+        // BTreeMap iteration is key-ordered; must NOT fire
+        self.emitted.iter().map(|(k, v)| (*k, *v)).collect()
+    }
+}

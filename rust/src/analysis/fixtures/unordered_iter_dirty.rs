@@ -1,0 +1,35 @@
+//! Lint fixture — DIRTY on purpose, never compiled (not in the module
+//! tree). Scanned by `tests/lint.rs` under the virtual path
+//! `coordinator/fixture.rs` and expected to yield exactly 2
+//! unjustified `unordered-iter` findings — and ZERO when re-scanned
+//! under `agent/fixture.rs`, pinning the rule's scope.
+
+use std::collections::HashMap;
+
+pub struct TenantBooks {
+    by_tenant: HashMap<u64, f64>,
+    ordered: Vec<(u64, f64)>,
+}
+
+impl TenantBooks {
+    pub fn report_badly(&self) -> Vec<String> {
+        let mut lines = Vec::new();
+        // plain violation: hash order reaches a serialized report
+        for (t, v) in &self.by_tenant {
+            lines.push(format!("{t}: {v}"));
+        }
+        lines
+    }
+
+    pub fn drain_badly(&mut self) -> f64 {
+        // suppression WITHOUT a justification — still a finding
+        // lint:allow(unordered-iter)
+        let total: f64 = self.by_tenant.values().sum();
+        total
+    }
+
+    pub fn walk_fine(&self) -> f64 {
+        // a Vec walk is deterministic; must NOT fire
+        self.ordered.iter().map(|(_, v)| v).sum()
+    }
+}

@@ -1,0 +1,17 @@
+//! Lint fixture — CLEAN, never compiled (not in the module tree).
+//! Scanned by `tests/lint.rs` under the virtual path
+//! `server/fixture.rs` and expected to yield exactly 1 *justified*
+//! `wall-clock` finding and 0 unjustified ones.
+
+pub fn measured_on_purpose(&mut self) -> f64 {
+    // lint:allow(wall-clock): this path meters real host latency for
+    // the operator report; nothing simulated reads the value
+    let t0 = std::time::Instant::now();
+    self.advance();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn sim_clock_path(&self) -> f64 {
+    // the compliant form: simulated time comes from the event loop
+    self.clock.now_sim_secs()
+}

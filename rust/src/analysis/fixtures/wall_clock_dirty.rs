@@ -1,0 +1,19 @@
+//! Lint fixture — DIRTY on purpose, never compiled (not in the module
+//! tree; the tree scan skips `analysis/fixtures/`). Scanned by
+//! `tests/lint.rs` under the virtual path `server/fixture.rs` and
+//! expected to yield exactly 2 unjustified `wall-clock` findings.
+
+pub fn step_badly(&mut self) -> f64 {
+    // plain violation: the sim step reads the host clock
+    let t0 = std::time::Instant::now();
+    self.advance();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn stamp_badly(&mut self) -> u64 {
+    // suppression WITHOUT a justification — still counts as a
+    // finding; the directive below must not silence it.
+    // lint:allow(wall-clock)
+    let stamp = std::time::SystemTime::now();
+    fingerprint(stamp)
+}

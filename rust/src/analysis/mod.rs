@@ -1,0 +1,750 @@
+//! `rap lint` — a determinism & invariant static-analysis pass over
+//! the crate's own source.
+//!
+//! The serving stack's contracts are source-level, not just
+//! behavioral: simulated time must never read the host clock, report
+//! and telemetry walks must never follow hash order, float selections
+//! must use a total order, the serving/coordination hot path must not
+//! panic, and all randomness must flow through `util::rng`. Each is
+//! easy to hold in review and easy to lose in a refactor — so this
+//! module scans the tree and enforces them mechanically (`rap lint`,
+//! gated in CI at zero unjustified findings).
+//!
+//! The scanner is deliberately a light line/token pass, not a `syn`
+//! parse (no new dependencies in the offline image): comments, string
+//! and char literals are blanked column-for-column, `#[cfg(test)]`
+//! regions are skipped by brace tracking, and rule tokens are matched
+//! against what remains. That trades a sliver of precision for zero
+//! dependencies and total transparency — every rule below documents
+//! its over/under-approximation.
+//!
+//! Escape hatch: a finding on a line covered by
+//! `// lint:allow(<rule>): <why>` is *justified* and does not gate.
+//! The justification text is REQUIRED — an allow without one still
+//! counts as unjustified (the whole point is an auditable reason at
+//! the site). The directive covers its own line when trailing, or the
+//! next code-bearing line when standing alone.
+//!
+//! A Python mirror of this scanner lives at
+//! `.claude/skills/verify/lint_port.py` for toolchain-less
+//! pre-verification. If you change a rule here, change it there too.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+/// One lint rule: its gate name and a one-line contract statement.
+#[derive(Clone, Copy, Debug)]
+pub struct RuleInfo {
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+/// The rule catalog (what `rap lint` enforces, in evaluation order).
+pub const RULES: [RuleInfo; 5] = [
+    RuleInfo {
+        name: "wall-clock",
+        summary: "host wall-clock (Instant::now / SystemTime) only in \
+                  util::bench and the serve-report wall module",
+    },
+    RuleInfo {
+        name: "unordered-iter",
+        summary: "no iteration over hash-ordered containers in modules \
+                  that serialize reports, emit telemetry, or pick \
+                  victims/routes",
+    },
+    RuleInfo {
+        name: "float-ordering",
+        summary: "float sorts/selections must use total_cmp, never \
+                  the partial order (NaN-dependent)",
+    },
+    RuleInfo {
+        name: "hot-path-panic",
+        summary: "no unwrap/expect/panic family in server/ and \
+                  coordinator/ non-test code",
+    },
+    RuleInfo {
+        name: "raw-rng",
+        summary: "randomness only through util::rng in non-test code",
+    },
+];
+
+const WALL_CLOCK_TOKENS: [&str; 2] = ["Instant::now", "SystemTime"];
+const WALL_CLOCK_EXEMPT: [&str; 2] =
+    ["util/bench.rs", "server/metrics.rs"];
+const ITER_TOKENS: [&str; 10] = [
+    ".iter()", ".iter_mut()", ".keys()", ".values()", ".values_mut()",
+    ".drain(", ".into_iter()", ".into_keys()", ".into_values()",
+    ".retain(",
+];
+const UNORDERED_SCOPE: [&str; 3] =
+    ["server/", "coordinator/", "telemetry/"];
+const PANIC_TOKENS: [&str; 6] = [
+    ".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(",
+    "unimplemented!(",
+];
+const PANIC_SCOPE: [&str; 2] = ["server/", "coordinator/"];
+const RNG_TOKENS: [&str; 7] = [
+    "rand::", "thread_rng", "from_entropy", "getrandom", "SeedableRng",
+    "RandomState", "rand_core",
+];
+const RNG_EXEMPT: [&str; 1] = ["util/rng.rs"];
+
+/// One scanner hit: where, which rule, and whether a justification
+/// covers it.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Path normalized to the crate-source-relative form the scopes
+    /// use (`server/engine.rs`, …).
+    pub file: String,
+    /// 1-indexed.
+    pub line: usize,
+    pub message: String,
+    /// The raw source line, trimmed.
+    pub snippet: String,
+    /// `Some` only for an allow directive WITH a justification text.
+    pub justification: Option<String>,
+}
+
+impl Finding {
+    pub fn is_justified(&self) -> bool {
+        self.justification.is_some()
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Does `pat` (ASCII) start at char index `i` of `ch`?
+fn at(ch: &[char], i: usize, pat: &str) -> bool {
+    pat.chars()
+        .enumerate()
+        .all(|(k, p)| ch.get(i + k) == Some(&p))
+}
+
+/// First char index >= `from` where `pat` starts, if any.
+fn find_from(ch: &[char], from: usize, pat: &str) -> Option<usize> {
+    let plen = pat.chars().count();
+    if plen == 0 {
+        return Some(from);
+    }
+    (from..ch.len().saturating_sub(plen - 1).max(from))
+        .find(|&i| at(ch, i, pat))
+}
+
+/// Blank comments and literal contents, preserving columns. `block`
+/// carries nested block-comment depth across lines. Returns (code,
+/// comment-text).
+fn strip_line(line: &str, block: &mut usize) -> (String, String) {
+    let ch: Vec<char> = line.chars().collect();
+    let n = ch.len();
+    let mut out = String::with_capacity(n);
+    let mut comment = String::new();
+    let mut i = 0usize;
+    while i < n {
+        let c = ch[i];
+        if *block > 0 {
+            if at(&ch, i, "*/") {
+                *block -= 1;
+                i += 2;
+                out.push_str("  ");
+                continue;
+            }
+            if at(&ch, i, "/*") {
+                *block += 1;
+                i += 2;
+                out.push_str("  ");
+                continue;
+            }
+            comment.push(c);
+            out.push(' ');
+            i += 1;
+            continue;
+        }
+        if at(&ch, i, "//") {
+            comment.extend(&ch[i..]);
+            out.extend(std::iter::repeat(' ').take(n - i));
+            break;
+        }
+        if at(&ch, i, "/*") {
+            *block += 1;
+            out.push_str("  ");
+            i += 2;
+            continue;
+        }
+        let raw_head = c == 'r'
+            && i + 1 < n
+            && (ch[i + 1] == '"' || ch[i + 1] == '#')
+            && (i == 0 || !ident_char(ch[i - 1]));
+        if c == '"' || raw_head {
+            if c == 'r' {
+                // raw string: r"..." or r#"..."# with any hash count
+                let mut j = i + 1;
+                let mut hashes = 0usize;
+                while j < n && ch[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j >= n || ch[j] != '"' {
+                    out.push(c);
+                    i += 1;
+                    continue;
+                }
+                let close: String = std::iter::once('"')
+                    .chain(std::iter::repeat('#').take(hashes))
+                    .collect();
+                let end = find_from(&ch, j + 1, &close)
+                    .map(|k| k + 1 + hashes)
+                    .unwrap_or(n);
+                out.extend(std::iter::repeat(' ').take(end - i));
+                i = end;
+                continue;
+            }
+            // plain string literal; blank its contents
+            let mut j = i + 1;
+            while j < n {
+                if ch[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if ch[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            let j = j.min(n);
+            out.push('"');
+            out.extend(
+                std::iter::repeat(' ').take((j - i).saturating_sub(2)),
+            );
+            if j - i >= 2 {
+                out.push('"');
+            }
+            i = j;
+            continue;
+        }
+        if c == '\'' {
+            // char literal vs lifetime: '\\x' escapes, then 'c' forms;
+            // anything else (a lifetime) passes through untouched
+            if i + 1 < n && ch[i + 1] == '\\' {
+                if let Some(j) = find_from(&ch, i + 2, "'") {
+                    out.extend(std::iter::repeat(' ').take(j + 1 - i));
+                    i = j + 1;
+                    continue;
+                }
+            }
+            if i + 2 < n && ch[i + 2] == '\'' {
+                out.push_str("   ");
+                i += 3;
+                continue;
+            }
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    (out, comment)
+}
+
+/// Every `lint:allow(<rule>)` directive in one comment, with its
+/// justification text (the `: <why>` tail) when present.
+fn parse_allow(comment: &str) -> Vec<(String, Option<String>)> {
+    let mut out = Vec::new();
+    let mut idx = 0usize;
+    const HEAD: &str = "lint:allow(";
+    while let Some(k) = comment[idx..].find(HEAD).map(|k| k + idx) {
+        let open = k + HEAD.len();
+        let Some(j) = comment[open..].find(')').map(|j| j + open)
+        else {
+            return out;
+        };
+        let rule = comment[open..j].trim().to_string();
+        let mut just = None;
+        if let Some(text) = comment[j + 1..].trim_start().strip_prefix(':')
+        {
+            let text = text.trim();
+            if !text.is_empty() {
+                just = Some(text.to_string());
+            }
+        }
+        out.push((rule, just));
+        idx = j + 1;
+    }
+    out
+}
+
+/// Byte offsets where `token` occurs in `code`. Tokens that begin with
+/// an identifier char require a non-identifier char before the match
+/// (so `MyInstant::now` does not fire); dot-led tokens attach to any
+/// receiver by construction.
+fn token_hits(code: &str, token: &str) -> Vec<usize> {
+    let mut hits = Vec::new();
+    let need_boundary =
+        token.as_bytes().first().is_some_and(|&b| is_ident(b));
+    let bytes = code.as_bytes();
+    let mut start = 0usize;
+    while let Some(k) = code[start..].find(token).map(|k| k + start) {
+        if !need_boundary || k == 0 || !is_ident(bytes[k - 1]) {
+            hits.push(k);
+        }
+        start = k + 1;
+    }
+    hits
+}
+
+/// The identifier immediately left of byte position `pos`, or "".
+fn ident_before(code: &str, pos: usize) -> &str {
+    let bytes = code.as_bytes();
+    let mut j = pos;
+    while j > 0 && is_ident(bytes[j - 1]) {
+        j -= 1;
+    }
+    &code[j..pos]
+}
+
+/// Names declared (or bound) as `HashMap`/`HashSet` anywhere in the
+/// file: `name: HashMap<...>` fields/params and `name = HashSet::…`
+/// bindings. File-global on purpose — a cheap over-approximation that
+/// beats missing a renamed field.
+fn hash_names(code_lines: &[String]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for code in code_lines {
+        for marker in ["HashMap", "HashSet"] {
+            for k in token_hits(code, marker) {
+                let mut before = code[..k].trim_end();
+                if let Some(p) = before.strip_suffix("std::collections::")
+                {
+                    before = p.trim_end();
+                }
+                if let Some(p) = before.strip_suffix("collections::") {
+                    before = p.trim_end();
+                }
+                loop {
+                    if let Some(p) = before.strip_suffix('&') {
+                        before = p.trim_end();
+                    } else if let Some(p) = before.strip_suffix("mut") {
+                        before = p.trim_end();
+                    } else {
+                        break;
+                    }
+                }
+                let tail = if let Some(p) = before.strip_suffix(':') {
+                    p
+                } else if let Some(p) = before.strip_suffix('=') {
+                    p
+                } else {
+                    continue;
+                };
+                let tail = tail.trim_end();
+                let name = ident_before(tail, tail.len());
+                if !name.is_empty()
+                    && !name.starts_with(|c: char| c.is_ascii_digit())
+                {
+                    names.insert(name.to_string());
+                }
+            }
+        }
+    }
+    names
+}
+
+/// The bare identifier a `for … in <expr>` loop walks, if the
+/// expression IS a bare identifier (after `&`/`mut`/`self.`).
+fn for_loop_target(code: &str) -> Option<String> {
+    let k = code.find("for ")?;
+    let j = code[k..].find(" in ").map(|j| j + k)?;
+    let mut expr = &code[j + 4..];
+    if let Some(b) = expr.find('{') {
+        expr = &expr[..b];
+    }
+    let mut expr = expr.trim();
+    while let Some(p) = expr.strip_prefix('&') {
+        expr = p.trim_start();
+    }
+    if let Some(p) = expr.strip_prefix("mut ") {
+        expr = p.trim_start();
+    }
+    if let Some(p) = expr.strip_prefix("self.") {
+        expr = p;
+    }
+    if !expr.is_empty() && expr.bytes().all(is_ident) {
+        Some(expr.to_string())
+    } else {
+        None
+    }
+}
+
+fn in_scope(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+fn braces(code: &str) -> i64 {
+    code.bytes().filter(|&b| b == b'{').count() as i64
+        - code.bytes().filter(|&b| b == b'}').count() as i64
+}
+
+/// Scan one file's source. `rel` is normalized to the text after the
+/// last `src/` so scopes match however the path was produced.
+pub fn scan_source(rel: &str, src: &str) -> Vec<Finding> {
+    let rel = rel.replace('\\', "/");
+    let rel = match rel.rfind("src/") {
+        Some(k) => rel[k + 4..].to_string(),
+        None => rel,
+    };
+
+    let raw_lines: Vec<&str> = src.split('\n').collect();
+    let nlines = raw_lines.len();
+    let mut block = 0usize;
+    let mut code_lines: Vec<String> = Vec::with_capacity(nlines);
+    let mut comments: Vec<String> = Vec::with_capacity(nlines);
+    for line in &raw_lines {
+        let (code, comment) = strip_line(line, &mut block);
+        code_lines.push(code);
+        comments.push(comment);
+    }
+
+    // Test-region marking: an armed `#[cfg(test)]` attaches to the
+    // next `mod`/`fn` item and the braced region it opens.
+    let mut is_test = vec![false; nlines];
+    let whole_file_test = rel.starts_with("tests/");
+    let mut arming = false;
+    let mut depth: i64 = 0;
+    let mut region = false;
+    for (idx, code) in code_lines.iter().enumerate() {
+        if region {
+            is_test[idx] = true;
+            depth += braces(code);
+            if depth <= 0 {
+                region = false;
+            }
+            continue;
+        }
+        if code.contains("#[cfg(test)]") {
+            arming = true;
+            is_test[idx] = true;
+            continue;
+        }
+        if arming {
+            is_test[idx] = true;
+            if (code.contains("mod ") || code.contains("fn "))
+                && code.contains('{')
+            {
+                depth = braces(code);
+                region = depth > 0;
+                if !region {
+                    arming = false;
+                }
+            }
+        }
+    }
+    if whole_file_test {
+        is_test.iter_mut().for_each(|t| *t = true);
+    }
+
+    // Allow directives: trailing covers its own line; standalone
+    // comment lines accumulate onto the next code-bearing line.
+    let mut allows: Vec<Vec<(String, Option<String>)>> =
+        vec![Vec::new(); nlines];
+    let mut pending: Vec<(String, Option<String>)> = Vec::new();
+    for idx in 0..nlines {
+        let own = parse_allow(&comments[idx]);
+        if code_lines[idx].trim().is_empty() {
+            pending.extend(own);
+        } else {
+            allows[idx] = std::mem::take(&mut pending);
+            allows[idx].extend(own);
+        }
+    }
+
+    let names = hash_names(&code_lines);
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut emit = |rule: &'static str, idx: usize, message: &str| {
+        let mut just = None;
+        let mut suppressed = false;
+        for (r, j) in &allows[idx] {
+            if r == rule {
+                suppressed = true;
+                if j.is_some() {
+                    just = j.clone();
+                }
+            }
+        }
+        let message = if suppressed && just.is_none() {
+            format!(
+                "{message} (suppression present but lacks a \
+                 justification — `lint:allow({rule}): <why>`)"
+            )
+        } else {
+            message.to_string()
+        };
+        findings.push(Finding {
+            rule,
+            file: rel.clone(),
+            line: idx + 1,
+            message,
+            snippet: raw_lines[idx].trim().to_string(),
+            justification: just,
+        });
+    };
+
+    for (idx, code) in code_lines.iter().enumerate() {
+        if is_test[idx] {
+            continue;
+        }
+        // wall-clock: reading the host clock anywhere but the metered
+        // exemptions silently couples simulated behavior to the host.
+        if !WALL_CLOCK_EXEMPT.contains(&rel.as_str())
+            && WALL_CLOCK_TOKENS
+                .iter()
+                .any(|t| !token_hits(code, t).is_empty())
+        {
+            emit(
+                "wall-clock",
+                idx,
+                "host wall-clock outside util::bench / \
+                 ServeReport::wall",
+            );
+        }
+        // unordered-iter: walking a hash-ordered container where the
+        // result reaches a report, telemetry, or a serving decision.
+        if in_scope(&rel, &UNORDERED_SCOPE) && !names.is_empty() {
+            let mut hit = ITER_TOKENS.iter().any(|t| {
+                token_hits(code, t)
+                    .into_iter()
+                    .any(|k| names.contains(ident_before(code, k)))
+            });
+            if let Some(tgt) = for_loop_target(code) {
+                hit = hit || names.contains(&tgt);
+            }
+            if hit {
+                emit(
+                    "unordered-iter",
+                    idx,
+                    "iteration over a hash-ordered container in a \
+                     report/telemetry/decision module",
+                );
+            }
+        }
+        // float-ordering: partial_cmp makes NaN ordering incidental.
+        if !token_hits(code, "partial_cmp").is_empty() {
+            emit(
+                "float-ordering",
+                idx,
+                "partial_cmp is not a total order over floats; use \
+                 total_cmp",
+            );
+        }
+        // hot-path-panic: a panic in serving/coordination code takes
+        // the whole replica down with the one bad sequence.
+        if in_scope(&rel, &PANIC_SCOPE)
+            && PANIC_TOKENS
+                .iter()
+                .any(|t| !token_hits(code, t).is_empty())
+        {
+            emit(
+                "hot-path-panic",
+                idx,
+                "panic path in serving/coordination code",
+            );
+        }
+        // raw-rng: any entropy source but the seeded util::rng breaks
+        // run-to-run determinism.
+        if !RNG_EXEMPT.contains(&rel.as_str())
+            && RNG_TOKENS
+                .iter()
+                .any(|t| !token_hits(code, t).is_empty())
+        {
+            emit(
+                "raw-rng",
+                idx,
+                "randomness outside util::rng breaks seeded \
+                 determinism",
+            );
+        }
+    }
+    findings
+}
+
+/// Recursively gather `.rs` files under `dir`, skipping build output,
+/// vendored crates, and the lint fixtures (they are dirty on purpose).
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow!("reading {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    let dir_name =
+        dir.file_name().and_then(|s| s.to_str()).unwrap_or("");
+    for p in entries {
+        let name =
+            p.file_name().and_then(|s| s.to_str()).unwrap_or("");
+        if p.is_dir() {
+            if name == "target"
+                || name == "vendor"
+                || (name == "fixtures" && dir_name == "analysis")
+            {
+                continue;
+            }
+            collect_rs(&p, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Scan a file, or every `.rs` file under a directory. Findings come
+/// back sorted by (file, line, rule).
+pub fn scan_path(path: &Path) -> Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    if path.is_dir() {
+        collect_rs(path, &mut files)?;
+    } else {
+        files.push(path.to_path_buf());
+    }
+    files.sort();
+    let mut out = Vec::new();
+    for p in &files {
+        let src = std::fs::read_to_string(p)
+            .map_err(|e| anyhow!("reading {}: {e}", p.display()))?;
+        out.extend(scan_source(&p.to_string_lossy(), &src));
+    }
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule)
+            .cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(out)
+}
+
+/// The crate's own `src/` tree — what `rap lint` scans by default and
+/// what the self-scan test holds clean.
+pub fn default_src_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strip_all(src: &str) -> Vec<(String, String)> {
+        let mut block = 0;
+        src.split('\n')
+            .map(|l| strip_line(l, &mut block))
+            .collect()
+    }
+
+    #[test]
+    fn strings_comments_and_chars_are_blanked() {
+        let out = strip_all(
+            "let a = \"Instant::now\"; // Instant::now here\n\
+             let b = 'x'; let lt: &'static str = \"\";\n\
+             /* SystemTime\n\
+             still SystemTime */ let c = 1;",
+        );
+        assert!(!out[0].0.contains("Instant"));
+        assert!(out[0].1.contains("Instant::now here"));
+        assert!(out[1].0.contains("'static"), "lifetime survives");
+        assert!(!out[1].0.contains("'x'"), "char literal blanked");
+        assert!(!out[2].0.contains("SystemTime"));
+        assert!(out[3].0.contains("let c = 1"));
+    }
+
+    #[test]
+    fn raw_strings_blank_to_the_matching_close() {
+        let out = strip_all("let s = r#\"unwrap() \"quoted\"\"#; x();");
+        assert!(!out[0].0.contains("unwrap"));
+        assert!(out[0].0.contains("x();"));
+    }
+
+    #[test]
+    fn columns_survive_stripping() {
+        let (code, _) =
+            strip_line("let t = \"pad\"; t.partial_cmp(&u);", &mut 0);
+        let k = code.find("partial_cmp").unwrap();
+        assert_eq!(ident_before(&code[..k + 11], k), "");
+        assert_eq!(
+            "let t = \"pad\"; t.partial_cmp(&u);".len(),
+            code.len()
+        );
+    }
+
+    #[test]
+    fn allow_parsing_requires_text_for_justification() {
+        let a = parse_allow("// lint:allow(wall-clock): bench timing");
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].0, "wall-clock");
+        assert_eq!(a[0].1.as_deref(), Some("bench timing"));
+        let b = parse_allow("// lint:allow(raw-rng)");
+        assert_eq!(b[0].1, None);
+        let c = parse_allow("// lint:allow(raw-rng):   ");
+        assert_eq!(c[0].1, None, "blank justification is none");
+    }
+
+    #[test]
+    fn token_boundaries_respect_identifiers() {
+        assert!(token_hits("MyInstant::now()", "Instant::now")
+            .is_empty());
+        assert_eq!(
+            token_hits("Instant::now()", "Instant::now").len(),
+            1
+        );
+        // dot-led tokens attach to any receiver
+        assert_eq!(token_hits("x.unwrap()", ".unwrap()").len(), 1);
+    }
+
+    #[test]
+    fn hash_names_sees_fields_params_and_bindings() {
+        let lines: Vec<String> = [
+            "    seqs: HashMap<u64, SeqCache>,",
+            "    let mut live = HashSet::new();",
+            "    ordered: BTreeMap<u64, u64>,",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let names = hash_names(&lines);
+        assert!(names.contains("seqs"));
+        assert!(names.contains("live"));
+        assert!(!names.contains("ordered"));
+    }
+
+    #[test]
+    fn for_loop_targets_extract_bare_idents() {
+        assert_eq!(
+            for_loop_target("for s in self.seqs {").as_deref(),
+            Some("seqs")
+        );
+        assert_eq!(
+            for_loop_target("for x in &mut table {").as_deref(),
+            Some("table")
+        );
+        assert_eq!(for_loop_target("for x in 0..n {"), None);
+    }
+
+    #[test]
+    fn cfg_test_regions_are_skipped() {
+        let src = "fn live() { x.unwrap(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { y.unwrap(); }\n\
+                   }\n";
+        let fs = scan_source("server/demo.rs", src);
+        let panics: Vec<_> = fs
+            .iter()
+            .filter(|f| f.rule == "hot-path-panic")
+            .collect();
+        assert_eq!(panics.len(), 1);
+        assert_eq!(panics[0].line, 1);
+    }
+}

@@ -214,13 +214,15 @@ impl Autoscaler {
         }
         if high
             && s.serving < self.cfg.max_replicas
-            && t - self.high_since.unwrap() >= self.cfg.hold_secs
+            && self.high_since
+                .map_or(false, |s0| t - s0 >= self.cfg.hold_secs)
         {
             return ScaleDecision::Up;
         }
         if low
             && s.serving > self.cfg.min_replicas
-            && t - self.low_since.unwrap() >= self.cfg.hold_secs
+            && self.low_since
+                .map_or(false, |s0| t - s0 >= self.cfg.hold_secs)
         {
             return ScaleDecision::Down;
         }

@@ -74,6 +74,24 @@ struct Sampler {
     dirty: Vec<bool>,
 }
 
+/// NaN-safe argmax fold shared by every float-scored selection in the
+/// coordinator (full placement, sampled placement, migration
+/// targeting): a NaN score can never become — or displace — the best
+/// candidate, and ties break toward the lowest index regardless of
+/// visit order.
+pub(crate) fn fold_best(best: &mut Option<(usize, f64)>, i: usize,
+                        score: f64) {
+    if score.is_nan() {
+        return;
+    }
+    let better = best.map_or(true, |(bi, bs)| {
+        score > bs || (score == bs && i < bi)
+    });
+    if better {
+        *best = Some((i, score));
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RouterPolicy {
     RoundRobin,
@@ -222,10 +240,7 @@ impl Router {
             if !r.accepting() {
                 continue;
             }
-            let score = Router::rap_score(r, req, t);
-            if best.map_or(true, |(_, s)| score > s) {
-                best = Some((i, score));
-            }
+            fold_best(&mut best, i, Router::rap_score(r, req, t));
         }
         best.map(|(i, _)| i)
     }
@@ -286,13 +301,7 @@ impl Router {
             if !r.accepting() {
                 continue;
             }
-            let score = Router::rap_score(r, req, t);
-            let better = best.map_or(true, |(bi, bs)| {
-                score > bs || (score == bs && i < bi)
-            });
-            if better {
-                best = Some((i, score));
-            }
+            fold_best(&mut best, i, Router::rap_score(r, req, t));
         }
         best.map(|(i, _)| i)
     }
@@ -338,6 +347,7 @@ impl Router {
             RouterPolicy::LeastOutstanding => *accepting
                 .iter()
                 .min_by_key(|&&i| (replicas[i].outstanding(), i))
+                // lint:allow(hot-path-panic): accepting non-empty
                 .unwrap(),
             RouterPolicy::KvHeadroom => *accepting
                 .iter()
@@ -345,9 +355,11 @@ impl Router {
                     (replicas[i].elastic_headroom(t),
                      std::cmp::Reverse(i))
                 })
+                // lint:allow(hot-path-panic): accepting non-empty
                 .unwrap(),
             // handled above, before the accepting-vec scan
             RouterPolicy::RapAware | RouterPolicy::TenantFair => {
+                // lint:allow(hot-path-panic): both arms return early
                 unreachable!("RAP-aware policies return early")
             }
         };
@@ -477,6 +489,34 @@ mod tests {
         let mut router = Router::new(RouterPolicy::RapAware, 2);
         assert_eq!(router.route(&r, &reps, 0.0), Some(1),
                    "picked the deeper-underwater replica");
+    }
+
+    /// Regression (ISSUE 10): a NaN score must never win — or poison —
+    /// a placement. `fold_best` is the single argmax that full
+    /// placement, sampled placement, and migration targeting all go
+    /// through; with the old `score > best` fold a first-seen NaN won
+    /// and then repelled every finite challenger (`x > NaN` is false).
+    #[test]
+    fn nan_scores_cannot_win_placement() {
+        let mut best = None;
+        fold_best(&mut best, 0, f64::NAN);
+        assert_eq!(best, None, "leading NaN became the best candidate");
+        fold_best(&mut best, 1, -3.0);
+        fold_best(&mut best, 2, f64::NAN);
+        fold_best(&mut best, 3, 7.0);
+        assert_eq!(best, Some((3, 7.0)));
+        // ties break toward the lowest index regardless of visit order
+        let mut tie = None;
+        fold_best(&mut tie, 5, 1.0);
+        fold_best(&mut tie, 2, 1.0);
+        fold_best(&mut tie, 9, 1.0);
+        assert_eq!(tie, Some((2, 1.0)));
+        // all-NaN: no candidate at all rather than an arbitrary pick
+        let mut none = None;
+        for i in 0..4 {
+            fold_best(&mut none, i, f64::NAN);
+        }
+        assert_eq!(none, None);
     }
 
     #[test]

@@ -56,9 +56,7 @@ impl MarkovChain {
         let row = &self.cdf[cur * self.vocab..(cur + 1) * self.vocab];
         let u = rng.f32();
         // binary search the cdf row
-        match row.binary_search_by(|x| {
-            x.partial_cmp(&u).unwrap_or(std::cmp::Ordering::Less)
-        }) {
+        match row.binary_search_by(|x| x.total_cmp(&u)) {
             Ok(i) | Err(i) => i.min(self.vocab - 1) as u16,
         }
     }

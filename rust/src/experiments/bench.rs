@@ -71,6 +71,9 @@ fn bench_one(scenario: &'static str, telemetry: bool, seed: u64)
         fleet.enable_metrics_sampling(1.0);
     }
     let requests = reqs.len();
+    #[allow(clippy::disallowed_methods)]
+    // lint:allow(wall-clock): the benchmark's whole point is host
+    // wall time; it is the one deliberate wall-clock artifact
     let t0 = Instant::now();
     let report = fleet.run_requests(reqs)?;
     let wall_secs = t0.elapsed().as_secs_f64();
@@ -236,6 +239,9 @@ pub fn bench_scale(seed: u64, json_path: Option<&str>,
             let event = mode == "event";
             let reqs = scale_storm_trace(seed, n_req, n);
             let mut fleet = scale_fleet(n, seed, event);
+            #[allow(clippy::disallowed_methods)]
+            // lint:allow(wall-clock): scaling sweep reports host
+            // throughput — wall time is the measured quantity
             let t0 = Instant::now();
             let report = fleet.run_requests(reqs)?;
             let wall_secs = t0.elapsed().as_secs_f64();

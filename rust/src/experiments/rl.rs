@@ -41,6 +41,9 @@ pub fn train_agent(model: &str, episodes: usize, seed: u64)
     let cfg = DqnConfig { episodes, ..DqnConfig::default() };
     let mut agent =
         DqnAgent::new(env.state_dim(), env.n_actions(), cfg, &mut rng);
+    #[allow(clippy::disallowed_methods)]
+    // lint:allow(wall-clock): reports real training wall time to the
+    // operator; nothing downstream consumes it
     let t0 = std::time::Instant::now();
     let logs = agent.train(&mut env, training_sampler(max_seq), seed)?;
     let secs = t0.elapsed().as_secs_f64();
@@ -191,6 +194,9 @@ pub fn fig11(model: &str) -> Result<()> {
     let prompt: Vec<i32> = (0..128)
         .map(|_| env_rng.below(meta.vocab) as i32)
         .collect();
+    #[allow(clippy::disallowed_methods)]
+    // lint:allow(wall-clock): Table-6-style overhead figures measure
+    // real host time by design
     let t0 = std::time::Instant::now();
     let (_, k1, v1) = s.rt.prefill(128, &prompt, &mask)?;
     let mut k = vec![0.0f32; s.rt.cache_elems(8)];
@@ -227,9 +233,14 @@ pub fn fig11(model: &str) -> Result<()> {
     let agent = DqnAgent::new(env.state_dim(), env.n_actions(), cfg,
                               &mut rng);
     let w = Workload::new(8, meta.max_seq);
+    #[allow(clippy::disallowed_methods)]
+    // lint:allow(wall-clock): cold/warm decision latency is the
+    // measured quantity (paper Table 6)
     let t1 = std::time::Instant::now();
     let _mask = crate::agent::online_prune(&agent, &mut env, w, 0.8)?;
     let cold = t1.elapsed().as_secs_f64();
+    #[allow(clippy::disallowed_methods)]
+    // lint:allow(wall-clock): warm-path half of the same measurement
     let t2 = std::time::Instant::now();
     let _mask = crate::agent::online_prune(&agent, &mut env, w, 0.8)?;
     let warm = t2.elapsed().as_secs_f64();

@@ -143,7 +143,7 @@ impl<'a, E: NllEvaluator> GsiEngine<'a, E> {
             })
             .map(|i| (BlockId::from_index(i, n_layers), imp[i]))
             .collect();
-        pairs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        pairs.sort_by(|a, b| a.1.total_cmp(&b.1));
         Ok(pairs)
     }
 }

@@ -15,9 +15,13 @@
 //!     tenant/SLO-aware request ingress (`api`), the multi-replica
 //!     fleet coordinator with memory-aware routing (`coordinator`), the
 //!     flight-recorder observability layer (`telemetry`), and
-//!     regenerates every table and figure (`experiments`).
+//!     regenerates every table and figure (`experiments`). The
+//!     source-level determinism contracts all of that relies on are
+//!     enforced mechanically by the in-tree lint pass (`analysis`,
+//!     surfaced as `rap lint`).
 
 pub mod agent;
+pub mod analysis;
 pub mod api;
 pub mod coordinator;
 pub mod corpus;

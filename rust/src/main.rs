@@ -27,6 +27,10 @@
 //!                     experiment fleet --chaos)
 //!   bench             fleet serving throughput with telemetry off vs
 //!                     on, written to BENCH_fleet.json
+//!   lint              determinism & invariant static analysis over
+//!                     the crate's own source (wall-clock, hash-order
+//!                     iteration, partial_cmp, hot-path panics, raw
+//!                     rng); nonzero exit on any unjustified finding
 //!
 //! Common flags: --model <name> --seed <n> --quick
 
@@ -80,6 +84,7 @@ fn main() -> Result<()> {
         }
         "serve-fleet" => serve_fleet(seed, &args),
         "trace" => run_trace_tool(&args),
+        "lint" => run_lint(&args),
         "bench" => {
             let what = args
                 .positional
@@ -124,6 +129,95 @@ fn main() -> Result<()> {
             bail!("unknown command '{other}'")
         }
     }
+}
+
+/// `rap lint [--json [<path>]] [paths…]`: the determinism & invariant
+/// static-analysis pass over the crate's own `src/` tree (or the given
+/// files/directories). Prints one line per finding — `FIND` for
+/// unjustified, `ALLOW` for sites suppressed with a justified
+/// `// lint:allow(<rule>): <why>` — and exits nonzero if any
+/// unjustified finding remains. Bare `--json` prints the machine
+/// report to stdout instead; `--json <path>` writes it to `<path>`
+/// (CI uploads that file as the failure artifact).
+fn run_lint(args: &Args) -> Result<()> {
+    use rap::analysis::{default_src_root, scan_path, Finding, RULES};
+    let targets: Vec<std::path::PathBuf> = if args.positional.len() > 1 {
+        args.positional[1..]
+            .iter()
+            .map(std::path::PathBuf::from)
+            .collect()
+    } else {
+        vec![default_src_root()]
+    };
+    let mut findings: Vec<Finding> = Vec::new();
+    for t in &targets {
+        findings.extend(scan_path(t)?);
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule)
+            .cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    let unjustified =
+        findings.iter().filter(|f| f.justification.is_none()).count();
+
+    let json_mode = args.get("json");
+    if json_mode.is_some() {
+        let doc = Json::object(vec![
+            ("rules", Json::Arr(RULES.iter().map(|r| {
+                Json::object(vec![
+                    ("name", Json::Str(r.name.to_string())),
+                    ("summary", Json::Str(r.summary.to_string())),
+                ])
+            }).collect())),
+            ("findings", Json::Arr(findings.iter().map(|f| {
+                Json::object(vec![
+                    ("rule", Json::Str(f.rule.to_string())),
+                    ("file", Json::Str(f.file.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("message", Json::Str(f.message.clone())),
+                    ("snippet", Json::Str(f.snippet.clone())),
+                    ("justification", match &f.justification {
+                        Some(j) => Json::Str(j.clone()),
+                        None => Json::Null,
+                    }),
+                ])
+            }).collect())),
+            ("total", Json::Num(findings.len() as f64)),
+            ("justified",
+             Json::Num((findings.len() - unjustified) as f64)),
+            ("unjustified", Json::Num(unjustified as f64)),
+        ]);
+        match json_mode {
+            // bare `--json` parses as the flag value "true"
+            Some("true") | None => println!("{}", doc.pretty()),
+            Some(path) => {
+                std::fs::write(path, doc.pretty())?;
+                println!("lint JSON written to {path}");
+            }
+        }
+    }
+    if json_mode != Some("true") {
+        for f in &findings {
+            match &f.justification {
+                Some(why) => println!(
+                    "ALLOW {}:{} [{}] {} — {}",
+                    f.file, f.line, f.rule, f.snippet, why),
+                None => println!(
+                    "FIND  {}:{} [{}] {}\n      {}",
+                    f.file, f.line, f.rule, f.snippet, f.message),
+            }
+        }
+        println!("{} findings, {} justified, {} unjustified",
+                 findings.len(), findings.len() - unjustified,
+                 unjustified);
+    }
+    if unjustified > 0 {
+        bail!("lint: {unjustified} unjustified finding(s) — fix them \
+               or add `// lint:allow(<rule>): <why>` with a real \
+               justification");
+    }
+    println!("lint clean");
+    Ok(())
 }
 
 /// `rap trace summarize <file> [--request <id>]` reconstructs one
@@ -411,6 +505,14 @@ fn print_help() {
     println!("                     lockstep baseline, wall-normalized \
               req/s + RSS to BENCH_scale.json)");
     println!("  gsi              --model <m> --remove <n>");
+    println!("  lint             [--json [<path>]] [paths...]  \
+              (determinism & invariant static analysis");
+    println!("                    over the crate's own source: \
+              wall-clock, hash-order iteration, float ordering,");
+    println!("                    hot-path panics, raw rng — nonzero \
+              exit on any unjustified finding;");
+    println!("                    suppress with `// lint:allow(<rule>): \
+              <why>` — the why is required)");
     println!();
     println!("FLAGS: --model rap-small|qwen-sim|rap-tiny  --seed N  \
               --quick");

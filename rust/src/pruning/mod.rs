@@ -168,7 +168,7 @@ fn llm_pruner_sim(ctx: &PruneContext) -> Result<PruneMask> {
             units.push((sal, Unit::Chan(l, c)));
         }
     }
-    units.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    units.sort_by(|a, b| a.0.total_cmp(&b.0));
     for (_, u) in units {
         if ctx.fits(&mask) {
             break;
@@ -197,8 +197,7 @@ fn slice_gpt_sim(ctx: &PruneContext) -> Result<PruneMask> {
             let mut hs: Vec<usize> = (0..m.n_heads).collect();
             hs.sort_by(|&a, &b| {
                 ctx.probe.head_norm[l * m.n_heads + a]
-                    .partial_cmp(&ctx.probe.head_norm[l * m.n_heads + b])
-                    .unwrap()
+                    .total_cmp(&ctx.probe.head_norm[l * m.n_heads + b])
             });
             for &h in hs.iter().take(nh) {
                 mask.set_head(l, h, false);
@@ -206,8 +205,7 @@ fn slice_gpt_sim(ctx: &PruneContext) -> Result<PruneMask> {
             let mut cs: Vec<usize> = (0..m.d_ff).collect();
             cs.sort_by(|&a, &b| {
                 ctx.probe.chan_norm[l * m.d_ff + a]
-                    .partial_cmp(&ctx.probe.chan_norm[l * m.d_ff + b])
-                    .unwrap()
+                    .total_cmp(&ctx.probe.chan_norm[l * m.d_ff + b])
             });
             for &c in cs.iter().take(nc) {
                 mask.set_ffn_channel(l, c, false);
@@ -236,7 +234,7 @@ fn short_gpt(ctx: &PruneContext) -> PruneMask {
         (ctx.probe.attn_cos[l] + ctx.probe.ffn_cos[l]) as f64
     };
     layers.sort_by(|&a, &b| {
-        redundancy(b).partial_cmp(&redundancy(a)).unwrap()
+        redundancy(b).total_cmp(&redundancy(a))
     });
     let order: Vec<BlockId> = layers
         .into_iter()
@@ -250,7 +248,7 @@ fn mha_drop(ctx: &PruneContext) -> PruneMask {
     let m = ctx.meta();
     let mut layers: Vec<usize> = (0..m.n_layers).collect();
     layers.sort_by(|&a, &b| {
-        ctx.probe.attn_cos[b].partial_cmp(&ctx.probe.attn_cos[a]).unwrap()
+        ctx.probe.attn_cos[b].total_cmp(&ctx.probe.attn_cos[a])
     });
     let order: Vec<BlockId> =
         layers.into_iter().map(BlockId::Mha).collect();
@@ -263,7 +261,7 @@ fn ffn_skip(ctx: &PruneContext) -> PruneMask {
     let m = ctx.meta();
     let mut layers: Vec<usize> = (0..m.n_layers).collect();
     layers.sort_by(|&a, &b| {
-        ctx.probe.ffn_cos[b].partial_cmp(&ctx.probe.ffn_cos[a]).unwrap()
+        ctx.probe.ffn_cos[b].total_cmp(&ctx.probe.ffn_cos[a])
     });
     let order: Vec<BlockId> =
         layers.into_iter().map(BlockId::Ffn).collect();

@@ -64,6 +64,9 @@ impl PjrtRuntime {
         }
         let spec = self.meta.entry(entry)?.clone();
         let path = self.meta.dir.join(&spec.file);
+        #[allow(clippy::disallowed_methods)]
+        // lint:allow(wall-clock): real device compile time IS the
+        // measurement here; PJRT never runs under the sim clock
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}",
@@ -107,6 +110,9 @@ impl PjrtRuntime {
         args.extend(owned.iter());
 
         let exe = self.exes.get(entry).unwrap();
+        #[allow(clippy::disallowed_methods)]
+        // lint:allow(wall-clock): real device execute time IS the
+        // measurement here; PJRT never runs under the sim clock
         let t0 = Instant::now();
         let out = exe
             .execute_b(&args)

@@ -28,6 +28,7 @@ pub fn prefill_bucket(prompt_len: usize) -> usize {
             return b;
         }
     }
+    // lint:allow(hot-path-panic): const 4-element array is non-empty
     *PREFILL_BUCKETS.last().unwrap()
 }
 
@@ -67,6 +68,7 @@ pub struct Batcher {
 impl Batcher {
     pub fn new() -> Batcher {
         Batcher { waiting: VecDeque::new(), active: Vec::new(),
+                  // lint:allow(hot-path-panic): const array non-empty
                   max_active: *DECODE_BUCKETS.last().unwrap() }
     }
 

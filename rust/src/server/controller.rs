@@ -236,6 +236,7 @@ impl Controller {
                                          seqlen: self.calib_seqlen };
         let memo = std::mem::take(&mut self.memo);
         let mask = match &self.policy {
+            // lint:allow(hot-path-panic): static masks return earlier
             Policy::Static(_) => unreachable!(),
             Policy::GsiGreedy => {
                 let mut gsi = GsiEngine::with_memo(&mut ev, memo);

@@ -46,7 +46,7 @@
 //!      Admission is priority-aware: a memory-blocked head of queue may
 //!      preempt strictly-lower-class in-flight work, never the reverse.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use anyhow::{bail, Result};
 
@@ -281,8 +281,9 @@ pub struct Engine {
     /// reads committed bytes without rescanning sequences.
     /// `kv_bytes_for_len` is exactly linear in length, so
     /// `tokens × per-token bytes` under the current mask equals the
-    /// per-request rescan to the byte.
-    committed_tokens: HashMap<crate::api::Tenant, u64>,
+    /// per-request rescan to the byte. A `BTreeMap` so the fleet-facing
+    /// aggregation walk is tenant-ordered, never hash-ordered.
+    committed_tokens: BTreeMap<crate::api::Tenant, u64>,
 }
 
 impl Engine {
@@ -313,7 +314,7 @@ impl Engine {
             checkpoints: HashMap::new(),
             last_checkpoint_at: f64::NEG_INFINITY,
             resumable: HashMap::new(),
-            committed_tokens: HashMap::new(),
+            committed_tokens: BTreeMap::new(),
         };
         engine.sync_kv_floor();
         engine
@@ -482,6 +483,8 @@ impl Engine {
         if let Some(i) =
             self.batcher.waiting.iter().position(|r| r.id == id)
         {
+            // lint:allow(hot-path-panic): i came from position() on
+            // the same deque one line up
             let req = self.batcher.waiting.remove(i).unwrap();
             self.drop_checkpoint(id);
             self.resumable.remove(&id);
@@ -602,6 +605,9 @@ impl Engine {
         self.last_controller_at = self.sim_time;
         let avail = self.monitor.available_at(self.sim_time);
         let w = self.observed_workload();
+        #[allow(clippy::disallowed_methods)]
+        // lint:allow(wall-clock): controller_secs meters real host
+        // time spent deciding; it never feeds simulated time
         let t0 = std::time::Instant::now();
         let new_mask = self.controller.decide(&mut self.rt, w, avail)?;
         // Keep the outlook's min-viable mask in step with the observed
@@ -711,7 +717,10 @@ impl Engine {
             // memory for the longest remaining run (expired deadlines
             // and lower classes first), so Requeue frees memory with
             // the fewest evictions, exactly like Park.
-            let i = self.pressure_victim().unwrap();
+            let Some(i) = self.pressure_victim() else {
+                debug_assert!(false, "no victim with active non-empty");
+                break;
+            };
             let seq = self.batcher.active.remove(i);
             if self.cfg.enforce_deadlines && seq.req.expired(self.sim_time)
             {
@@ -937,8 +946,9 @@ impl Engine {
                 // joint-elastic pricing: the sequence could run
                 // compressed to the KV floor (capped tokens, capped
                 // groups) on top of the floor mask
-                if self.kv_elastic_on() {
-                    let floor = self.kv.floor().unwrap();
+                if let Some(floor) =
+                    self.kv_elastic_on().then(|| self.kv.floor()).flatten()
+                {
                     cost = cost.min(
                         full_len.min(floor.token_cap())
                             * self.kv.per_token_bytes(m, floor),
@@ -1027,6 +1037,8 @@ impl Engine {
         if let Some(i) =
             self.batcher.waiting.iter().position(|r| r.id == id)
         {
+            // lint:allow(hot-path-panic): i came from position() on
+            // the same deque one line up
             let req = self.batcher.waiting.remove(i).unwrap();
             self.drop_checkpoint(id);
             self.ledger_remove(&req);
@@ -1330,7 +1342,9 @@ impl Engine {
             if !front.expired(self.sim_time) {
                 break;
             }
-            let req = self.batcher.waiting.pop_front().unwrap();
+            let Some(req) = self.batcher.waiting.pop_front() else {
+                break;
+            };
             self.drop_checkpoint(req.id);
             self.resumable.remove(&req.id);
             self.ledger_remove(&req);
@@ -1465,7 +1479,10 @@ impl Engine {
                     }
                     return Ok(false);
                 }
-                let rejected = self.batcher.waiting.pop_front().unwrap();
+                let Some(rejected) = self.batcher.waiting.pop_front()
+                else {
+                    return Ok(false);
+                };
                 self.drop_checkpoint(rejected.id);
                 self.resumable.remove(&rejected.id);
                 self.ledger_remove(&rejected);
@@ -1484,7 +1501,9 @@ impl Engine {
             }
             return Ok(false);
         }
-        let req = self.batcher.pop_for_prefill().unwrap();
+        let Some(req) = self.batcher.pop_for_prefill() else {
+            return Ok(false);
+        };
         if let Some(SeqState::Active {
             req, generated, next_token, prefill_done_at, kv_len, policy,
             k, v, ..
@@ -1517,6 +1536,9 @@ impl Engine {
         for t in tokens.iter_mut().take(plen) {
             *t = rng.below(vocab) as i32;
         }
+        #[allow(clippy::disallowed_methods)]
+        // lint:allow(wall-clock): PJRT-only fallback — `advance`
+        // prefers the runtime's own last_cost; sim runs never read t0
         let t0 = std::time::Instant::now();
         let (logits, k, v) = self.rt.prefill(bucket, &tokens, &self.mask)?;
         self.advance(t0.elapsed().as_secs_f64());
@@ -1563,9 +1585,16 @@ impl Engine {
         let pos = self.kv.positions(&ids)?;
         let tokens: Vec<i32> = ids
             .iter()
+            // lint:allow(hot-path-panic): decode_ids() lists only
+            // live active sequences, so seq_mut is always Some
             .map(|id| self.batcher.seq_mut(*id).unwrap().next_token)
             .collect();
+        // lint:allow(hot-path-panic): recomposed two lines up when
+        // absent — batch is Some for a non-empty id set
         let bs = self.batch.as_mut().unwrap();
+        #[allow(clippy::disallowed_methods)]
+        // lint:allow(wall-clock): PJRT-only fallback — `advance`
+        // prefers the runtime's own last_cost; sim runs never read t0
         let t0 = std::time::Instant::now();
         let logits = self.rt.decode(b, &tokens, &pos, &mut bs.k,
                                     &mut bs.v, &self.mask)?;
@@ -1576,6 +1605,8 @@ impl Engine {
         let vocab = self.rt.meta().vocab;
         for (bi, id) in ids.iter().enumerate() {
             let tok = argmax(&logits[bi * vocab..(bi + 1) * vocab]) as i32;
+            // lint:allow(hot-path-panic): same decode_ids membership
+            // as above; retire_finished runs only after this loop
             let seq = self.batcher.seq_mut(*id).unwrap();
             seq.next_token = tok;
             seq.generated += 1;
@@ -2166,6 +2197,7 @@ mod tests {
     fn sim_backend_drives_virtual_time() {
         let mut e = sim_engine(4.0);
         e.submit(req(0, 0.0));
+        #[allow(clippy::disallowed_methods)]
         let wall = std::time::Instant::now();
         e.step_to(1000.0).unwrap();
         // a single request's modeled compute is far below 1000 virtual

@@ -14,7 +14,7 @@
 //!   per-sequence cache: [L, Hkv, S, Dh]   (from `prefill`, B axis removed)
 //!   decode batch cache: [L, B, Hkv, S, Dh] (what `decode_b{B}` consumes)
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
@@ -84,7 +84,10 @@ struct ClassTotals {
 
 pub struct KvManager {
     meta: ModelMeta,
-    seqs: HashMap<u64, SeqCache>,
+    /// Keyed by sequence id; a `BTreeMap` so every whole-map walk
+    /// (floor re-derivation, audit rescans) visits sequences in id
+    /// order — hash order must never reach accounting or telemetry.
+    seqs: BTreeMap<u64, SeqCache>,
     /// Running total of cached tokens across live sequences (kept in
     /// step by insert/remove/bump_lens/compress) — the dense-ceiling
     /// accounting is O(layers), it sits on the engine's pressure path
@@ -104,7 +107,7 @@ pub struct KvManager {
 
 impl KvManager {
     pub fn new(meta: &ModelMeta) -> KvManager {
-        KvManager { meta: meta.clone(), seqs: HashMap::new(),
+        KvManager { meta: meta.clone(), seqs: BTreeMap::new(),
                     total_tokens: 0, classes: BTreeMap::new(),
                     floor: None, peak_bytes_seen: 0 }
     }
@@ -187,6 +190,8 @@ impl KvManager {
     fn class_remove(&mut self, policy: KvPolicy, len: usize) {
         let cap = self.floor_token_cap();
         let t = self.classes.get_mut(&policy)
+            // lint:allow(hot-path-panic): class books invariant — every
+            // resident sequence's policy has a class entry (audited)
             .expect("class_remove: unknown policy class");
         t.seqs -= 1;
         t.tokens -= len;
@@ -322,6 +327,8 @@ impl KvManager {
         let new_len = policy.compressed_len(old_len);
         if new_len < old_len {
             let KvPolicy::WindowSink { sink, recent } = policy else {
+                // lint:allow(hot-path-panic): only WindowSink has a
+                // finite token_cap, so new_len < old_len implies it
                 unreachable!("only WindowSink caps tokens");
             };
             let keep_from = old_len - recent;
@@ -422,6 +429,8 @@ impl KvManager {
     fn debug_audit(&self) {
         #[cfg(debug_assertions)]
         if let Err(e) = self.audit() {
+            // lint:allow(hot-path-panic): debug-build oracle check;
+            // release builds compile this block away entirely
             panic!("{e}");
         }
     }
@@ -501,6 +510,8 @@ impl KvManager {
                 bail!("sequence {id} overflowed max_seq");
             }
             let t = self.classes.get_mut(&policy)
+                // lint:allow(hot-path-panic): class books invariant —
+                // the sequence we just fetched pins its class entry
                 .expect("bump_lens: unknown policy class");
             t.tokens += 1;
             if len <= cap {

@@ -157,7 +157,7 @@ pub fn chrome_trace(events: &[Event], dumps: &[FlightDump], end_t: f64,
     }
     // stable sort by timestamp: per-tid emission order is already
     // correct (last_t clamping), ties keep control-plane causal order
-    entries.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    entries.sort_by(|a, b| a.0.total_cmp(&b.0));
 
     let mut trace_events =
         vec![meta_entry("process_name", PID_REQUESTS, None, "requests"),

@@ -84,7 +84,7 @@ impl TraceGenerator {
             let s = rng.f64() * cfg.day_secs;
             bursts.push((s, s + cfg.burst_secs));
         }
-        bursts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        bursts.sort_by(|a, b| a.0.total_cmp(&b.0));
         TraceGenerator { cfg, rng, bursts, next_id: 0 }
     }
 

@@ -1,0 +1,152 @@
+//! `rap lint` harness (ISSUE 10): the static-analysis pass scanned
+//! against its committed fixture files — every rule × {fires, clean,
+//! allowed-with-justification, allowed-without-justification-is-an-
+//! error} — plus the self-scan gate: the crate's own `src/` tree must
+//! carry ZERO unjustified findings, so a regression that reintroduces
+//! wall-clock reads, hash-order iteration, partial_cmp, hot-path
+//! panics, or raw rng fails `cargo test` before it ever reaches CI's
+//! dedicated lint job.
+
+use std::path::PathBuf;
+
+use rap::analysis::{default_src_root, scan_path, scan_source, Finding,
+                    RULES};
+
+/// (fixture stem, rule name, virtual path the harness scans it under).
+const CASES: [(&str, &str, &str); 5] = [
+    ("wall_clock", "wall-clock", "server/fixture.rs"),
+    ("unordered_iter", "unordered-iter", "coordinator/fixture.rs"),
+    ("float_ordering", "float-ordering", "server/fixture.rs"),
+    ("hot_path_panic", "hot-path-panic", "server/fixture.rs"),
+    ("raw_rng", "raw-rng", "server/fixture.rs"),
+];
+
+fn fixture(name: &str) -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("src/analysis/fixtures")
+        .join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// Findings of one rule, split (unjustified, justified).
+fn split(rule: &str, fs: &[Finding]) -> (Vec<Finding>, Vec<Finding>) {
+    fs.iter()
+        .filter(|f| f.rule == rule)
+        .cloned()
+        .partition(|f| f.justification.is_none())
+}
+
+#[test]
+fn every_rule_fires_on_its_dirty_fixture() {
+    for (stem, rule, virt) in CASES {
+        let fs = scan_source(virt, &fixture(&format!("{stem}_dirty.rs")));
+        let (bad, just) = split(rule, &fs);
+        assert_eq!(bad.len(), 2,
+                   "{stem}_dirty: want 2 unjustified {rule}, got {bad:?}");
+        assert_eq!(just.len(), 0,
+                   "{stem}_dirty: want 0 justified {rule}, got {just:?}");
+    }
+}
+
+#[test]
+fn every_rule_stays_quiet_on_its_clean_fixture() {
+    for (stem, rule, virt) in CASES {
+        let fs = scan_source(virt, &fixture(&format!("{stem}_clean.rs")));
+        let (bad, just) = split(rule, &fs);
+        assert_eq!(bad.len(), 0,
+                   "{stem}_clean: want 0 unjustified {rule}, got {bad:?}");
+        assert_eq!(just.len(), 1,
+                   "{stem}_clean: want 1 justified {rule}, got {just:?}");
+        assert!(just[0].justification.as_deref()
+                    .is_some_and(|j| !j.is_empty()),
+                "{stem}_clean: justification text must be non-empty");
+    }
+}
+
+#[test]
+fn allow_without_justification_is_still_a_finding() {
+    // every dirty fixture's second violation carries a bare
+    // `lint:allow(<rule>)` — it must stay unjustified AND say why
+    for (stem, rule, virt) in CASES {
+        let fs = scan_source(virt, &fixture(&format!("{stem}_dirty.rs")));
+        let (bad, _) = split(rule, &fs);
+        let flagged: Vec<_> = bad.iter()
+            .filter(|f| f.message.contains("lacks a justification"))
+            .collect();
+        assert_eq!(flagged.len(), 1,
+                   "{stem}_dirty: exactly one bare-suppression finding \
+                    expected, got {bad:?}");
+    }
+}
+
+#[test]
+fn scoped_rules_stay_quiet_outside_their_scope() {
+    // the same dirty sources, re-scanned under a path outside the
+    // rule's scope dirs, must produce nothing
+    for stem in ["hot_path_panic", "unordered_iter"] {
+        let (_, rule, _) =
+            CASES.iter().find(|c| c.0 == stem).copied().unwrap();
+        let fs = scan_source("agent/fixture.rs",
+                             &fixture(&format!("{stem}_dirty.rs")));
+        let (bad, just) = split(rule, &fs);
+        assert!(bad.is_empty() && just.is_empty(),
+                "{stem}_dirty out of scope: want 0 {rule} findings, \
+                 got {bad:?} {just:?}");
+    }
+}
+
+#[test]
+fn test_code_is_exempt() {
+    let src = "fn live() { x.unwrap(); }\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+                   fn t() {\n\
+                       let t0 = std::time::Instant::now();\n\
+                       y.unwrap();\n\
+                   }\n\
+               }\n";
+    let fs = scan_source("server/demo.rs", src);
+    assert_eq!(fs.iter().filter(|f| f.rule == "wall-clock").count(), 0,
+               "wall-clock inside #[cfg(test)] must not fire");
+    let panics: Vec<_> =
+        fs.iter().filter(|f| f.rule == "hot-path-panic").collect();
+    assert_eq!(panics.len(), 1, "only the live-path unwrap fires");
+    assert_eq!(panics[0].line, 1);
+}
+
+#[test]
+fn rule_catalog_matches_the_fixture_set() {
+    assert_eq!(RULES.len(), CASES.len());
+    for (_, rule, _) in CASES {
+        assert!(RULES.iter().any(|r| r.name == rule),
+                "fixture rule {rule} missing from RULES catalog");
+    }
+}
+
+/// The gate itself: the shipped tree carries zero unjustified
+/// findings, and the deliberate exceptions (benchmark wall-clock,
+/// audited hot-path expects) are present AND justified — if someone
+/// deletes a justification, or adds a violation, this fails locally
+/// before CI does.
+#[test]
+fn self_scan_holds_the_tree_clean() {
+    let findings = scan_path(&default_src_root())
+        .expect("scanning the crate's own src/ tree");
+    let bad: Vec<_> = findings.iter()
+        .filter(|f| f.justification.is_none())
+        .collect();
+    assert!(bad.is_empty(),
+            "unjustified lint findings in the shipped tree:\n{}",
+            bad.iter()
+                .map(|f| format!("  {}:{} [{}] {}", f.file, f.line,
+                                 f.rule, f.snippet))
+                .collect::<Vec<_>>()
+                .join("\n"));
+    // the deliberate, audited exceptions exist — both families
+    for rule in ["wall-clock", "hot-path-panic"] {
+        assert!(findings.iter().any(|f| f.rule == rule
+                                    && f.justification.is_some()),
+                "expected at least one justified {rule} allow in-tree");
+    }
+}
